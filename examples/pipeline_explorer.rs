@@ -1,0 +1,90 @@
+//! Interactive exploration of the Preload Pipeline theory (§4.1, App. B).
+//!
+//! Feed any [C][V] chain and see: the auxiliary sequence and partial
+//! sums, which rotations are feasible, the constructive optimum
+//! (Theorem B.1), preload counts (Theorem 4.1), and simulated timelines
+//! vs the serialized baseline.
+//!
+//! ```bash
+//! cargo run --release --example pipeline_explorer            # AMLA chain
+//! cargo run --release --example pipeline_explorer -- \
+//!     --c 4,1,1 --v 1.5,1.5,1.5 --iters 32                   # custom
+//! ```
+
+use amla::config::Args;
+use amla::pipeline::{simulate, CvChain, PipelineSchedule};
+
+fn parse_list(s: &str) -> Vec<f64> {
+    s.split(',').map(|x| x.trim().parse().expect("bad duration")).collect()
+}
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    let iters = args.get_usize("iters", 32).unwrap();
+
+    let chain = match (args.get("c"), args.get("v")) {
+        (Some(c), Some(v)) => CvChain::new(parse_list(c), parse_list(v)),
+        _ => {
+            // AMLA's n=2 instance with per-core stage times from the
+            // calibrated 910 model (M=256, KV block 512)
+            let model = amla::simulator::ascend::AscendKernelModel::default();
+            let p = model.iteration_pipes(256, 512, 1.0);
+            println!("(using AMLA's calibrated chain; pass --c/--v to \
+                      explore your own)\n");
+            CvChain::amla_instance(p.mmad / 2.0 * 1e6, p.v1 * 1e6,
+                                   p.mmad / 2.0 * 1e6)
+        }
+    };
+
+    let n = chain.n();
+    println!("chain: n = {n}, C = {:?}, V = {:?}", chain.c, chain.v);
+    println!("ΣC = {:.3}, ΣV = {:.3} → {}", chain.total_cube(),
+             chain.total_vector(),
+             if chain.cube_dominated() { "cube-dominated" }
+             else { "vector-dominated" });
+    println!("auxiliary a_i = V_i − C_(i+1): {:?}", chain.aux());
+    println!("partial sums F(l): {:?}", chain.partial_sums());
+
+    println!("\nrotation feasibility (suffix conditions, Fig 11):");
+    for p in 0..n {
+        println!("  p = {p}: {}",
+                 if chain.rotation_feasible(p) { "feasible" }
+                 else { "infeasible" });
+    }
+    let p_opt = chain.optimal_rotation();
+    println!("Theorem B.1 constructive rotation: p = {p_opt} ({})",
+             if chain.rotation_feasible(p_opt) { "verified feasible" }
+             else { "NOT feasible — vector-dominated case" });
+
+    println!("\n--- timelines over {iters} iterations ---");
+    let serial = simulate(&chain, &PipelineSchedule::serialized(&chain, iters));
+    println!("serialized: makespan {:.2}, cube util {:.1}%, vector util \
+              {:.1}%",
+             serial.makespan, serial.cube_utilization() * 100.0,
+             serial.vector_busy
+                 / (serial.vector_busy + serial.vector_bubble).max(1e-12)
+                 * 100.0);
+    if chain.rotation_feasible(p_opt) {
+        let sched = PipelineSchedule::preload(&chain, p_opt, iters);
+        let t = simulate(&chain, &sched);
+        println!("preload (p={p_opt}, preload count {} = n per Theorem \
+                  4.1): makespan {:.2}, cube util {:.1}%",
+                 sched.preload_count, t.makespan,
+                 t.cube_utilization() * 100.0);
+        println!("speedup vs serialized: {:.2}x",
+                 serial.makespan / t.makespan);
+        println!("per-iteration steady cost: {:.3} (ΣC = {:.3} — \
+                  Cube-bound ⇔ equal)",
+                 t.makespan / iters as f64, chain.total_cube());
+    }
+
+    // Fig 6-style comparison: preload counts across all feasible rotations
+    println!("\nfeasible rotations and their makespans:");
+    for p in chain.feasible_rotations() {
+        let sched = PipelineSchedule::preload(&chain, p, iters);
+        let t = simulate(&chain, &sched);
+        println!("  p = {p}: preload count {}, makespan {:.2}, cube util \
+                  {:.1}%", sched.preload_count, t.makespan,
+                 t.cube_utilization() * 100.0);
+    }
+}

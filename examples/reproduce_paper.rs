@@ -1,0 +1,89 @@
+//! Regenerate every table and figure of the paper's evaluation.
+//!
+//! ```bash
+//! cargo run --release --example reproduce_paper              # everything
+//! cargo run --release --example reproduce_paper -- --exp perf
+//! cargo run --release --example reproduce_paper -- --exp accuracy \
+//!     --samples 100 --context 8192        # the paper's full protocol
+//! ```
+//!
+//! Experiments (DESIGN.md §5): roofline (Table 2 + Fig 1), accuracy
+//! (Tables 3–4), perf (Table 5 + Fig 10), ablation (E8), pipeline
+//! (Figs 5–7), tiling (Figs 8–9).
+
+use amla::config::Args;
+use amla::hardware::Ascend910;
+use amla::report;
+use amla::tiling::{simulate_cube_stage, solve_tiling, PipeRates, StageDims,
+                   TileSpec, TilingObjective};
+
+fn render_tiling() -> String {
+    let mem = Ascend910::default().cube_mem;
+    let rates = PipeRates::ascend910_per_core();
+    let mut out = String::new();
+    out.push_str("Paper tilings (Fig 8) and their Fig-9 pipe timings per \
+                  512-row KV block, per Cube core:\n\n");
+    for (name, dims, spec) in [
+        ("[C1] QK^T", StageDims::c1(256), TileSpec::paper_c1()),
+        ("[C2] PV  ", StageDims::c2(256), TileSpec::paper_c2()),
+    ] {
+        let t = simulate_cube_stage(&dims, &spec, &rates);
+        out.push_str(&format!(
+            "{name}: single {}x{}x{}, base {}x{}x{} | MTE2 {:6.2} µs  \
+             MTE1 {:6.2} µs  MMAD {:6.2} µs  FixP {:6.2} µs → {}-bound, \
+             duty {:.0}%\n",
+            spec.single_m, spec.single_n, spec.single_k, spec.base_m,
+            spec.base_n, spec.base_k, t.mte2 * 1e6, t.mte1 * 1e6,
+            t.mmad * 1e6, t.fixp * 1e6, t.bottleneck(),
+            t.mmad_duty() * 100.0));
+    }
+    out.push_str("\nSolver verification (top candidate per stage):\n");
+    for (name, dims) in [("[C1]", StageDims::c1(256)),
+                         ("[C2]", StageDims::c2(256))] {
+        let best = &solve_tiling(&dims, &mem, 128,
+                                 TilingObjective::PaperBalanced)[0];
+        out.push_str(&format!(
+            "{name}: base {}x{}x{} (paper: 128x128x{})\n",
+            best.base_m, best.base_n, best.base_k,
+            if name == "[C1]" { 96 } else { 128 }));
+    }
+    out
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let exp = args.get("exp").map(String::as_str).unwrap_or("all");
+    let samples = args.get_usize("samples", 10)?;
+    let context = args.get_usize("context", 2048)?;
+
+    if matches!(exp, "roofline" | "all") {
+        println!("=== E1: Table 2 (arithmetic intensity) ===");
+        println!("{}", report::render_table2());
+        println!("=== E1: Fig 1 (rooflines) ===");
+        println!("{}", report::render_fig1_both());
+    }
+    if matches!(exp, "accuracy" | "all") {
+        println!("=== E2/E3: Tables 3-4 ({samples} samples, context \
+                  {context}) ===");
+        println!("{}", report::render_accuracy_tables(samples, context, 16));
+    }
+    if matches!(exp, "perf" | "all") {
+        println!("=== E4/E7: Table 5 (sim vs paper) ===");
+        println!("{}", report::render_table5());
+        println!("=== E4: Fig 10 (FU curves) ===");
+        println!("{}", report::render_fig10());
+    }
+    if matches!(exp, "ablation" | "all") {
+        println!("=== E8: AMLA vs Base ablation on the 910 model ===");
+        println!("{}", report::render_ablation());
+    }
+    if matches!(exp, "pipeline" | "all") {
+        println!("=== E5: Figs 5-7 (preload pipeline) ===");
+        println!("{}", report::render_pipeline_demo());
+    }
+    if matches!(exp, "tiling" | "all") {
+        println!("=== E6: Figs 8-9 (hierarchical tiling) ===");
+        println!("{}", render_tiling());
+    }
+    Ok(())
+}

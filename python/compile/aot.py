@@ -1,0 +1,193 @@
+"""AOT exporter: lower L2/L1 JAX functions to HLO *text* artifacts.
+
+Python's only job in this stack is to run once at build time (``make
+artifacts``) and emit:
+
+  artifacts/<name>.hlo.txt   one per (algo, S_q, KV bucket) kernel shape,
+                             plus full decode-layer artifacts
+  artifacts/manifest.json    machine-readable registry the Rust runtime
+                             (rust/src/runtime/artifacts.rs) loads to pick
+                             the right executable per request shape
+
+Interchange format is HLO **text**, not ``HloModuleProto.serialize()``:
+jax >= 0.5 emits protos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+All exported entry points take FP32 inputs (the BF16 casts happen inside
+the lowered graph) so the Rust side never has to marshal bf16 literals.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import hashlib
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .kernels import ATTENTION_KERNELS
+from .model import WEIGHT_SPECS, MlaConfig, mla_decode_step_slim
+from .shapes import (
+    DEFAULT_BUCKETS,
+    KernelShape,
+    LayerShape,
+    SERVE_N1,
+    default_kernel_shapes,
+    default_layer_shapes,
+    paper_kernel_shapes,
+)
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def to_hlo_text(lowered) -> str:
+    """jax Lowered -> XLA HLO text via stablehlo (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def lower_kernel(shape: KernelShape):
+    """Lower one attention-kernel artifact: (q, k, v, valid) -> (o,)."""
+    attn = ATTENTION_KERNELS[shape.algo]
+
+    def fn(q, k, v, valid):
+        return (attn(q, k, v, valid[0], block_kv=shape.block_kv,
+                     n1=shape.n1, sq=shape.sq,
+                     mixed_bf16=shape.mixed_bf16),)
+
+    args = [
+        _spec((shape.g, shape.dk)),
+        _spec((shape.bucket, shape.dk)),
+        _spec((shape.bucket, shape.dv)),
+        _spec((1,), I32),
+    ]
+    inputs = [
+        {"name": "q", "shape": [shape.g, shape.dk], "dtype": "f32"},
+        {"name": "k", "shape": [shape.bucket, shape.dk], "dtype": "f32"},
+        {"name": "v", "shape": [shape.bucket, shape.dv], "dtype": "f32"},
+        {"name": "valid_len", "shape": [1], "dtype": "i32"},
+    ]
+    outputs = [{"name": "o", "shape": [shape.g, shape.dv], "dtype": "f32"}]
+    return jax.jit(fn).lower(*args), inputs, outputs
+
+
+def lower_layer(shape: LayerShape):
+    """Lower one full MLA decode-layer artifact.
+
+    Signature: (x, c_cache, kr_cache, valid, w_dq, w_uq_nope, w_uq_rope,
+    w_dkv, w_kr, w_uk, w_uv, w_o) -> (y, c_new, kr_new) where c_new /
+    kr_new are only the ``sq`` freshly-written cache rows (slim outputs —
+    see ``mla_decode_step_slim``).
+    """
+    cfg = MlaConfig.from_layer_shape(shape)
+    names = list(WEIGHT_SPECS)
+
+    def fn(x, c_cache, kr_cache, valid, *ws):
+        weights = dict(zip(names, ws))
+        return mla_decode_step_slim(x, c_cache, kr_cache, valid[0],
+                                    weights, cfg)
+
+    args = [
+        _spec((cfg.sq, cfg.d_model)),
+        _spec((shape.bucket, cfg.d_latent)),
+        _spec((shape.bucket, cfg.d_rope)),
+        _spec((1,), I32),
+    ] + [_spec(WEIGHT_SPECS[n](cfg)) for n in names]
+    inputs = (
+        [{"name": "x", "shape": [cfg.sq, cfg.d_model], "dtype": "f32"},
+         {"name": "c_cache", "shape": [shape.bucket, cfg.d_latent],
+          "dtype": "f32"},
+         {"name": "kr_cache", "shape": [shape.bucket, cfg.d_rope],
+          "dtype": "f32"},
+         {"name": "valid_len", "shape": [1], "dtype": "i32"}]
+        + [{"name": n, "shape": list(WEIGHT_SPECS[n](cfg)), "dtype": "f32"}
+           for n in names]
+    )
+    outputs = [
+        {"name": "y", "shape": [cfg.sq, cfg.d_model], "dtype": "f32"},
+        {"name": "c_new", "shape": [cfg.sq, cfg.d_latent], "dtype": "f32"},
+        {"name": "kr_new", "shape": [cfg.sq, cfg.d_rope], "dtype": "f32"},
+    ]
+    return jax.jit(fn).lower(*args), inputs, outputs
+
+
+def export(out_dir: pathlib.Path, shapes, layer_shapes) -> dict:
+    out_dir.mkdir(parents=True, exist_ok=True)
+    entries = []
+    for shape in shapes:
+        lowered, inputs, outputs = lower_kernel(shape)
+        text = to_hlo_text(lowered)
+        path = out_dir / f"{shape.name}.hlo.txt"
+        path.write_text(text)
+        entries.append({
+            "kind": "kernel",
+            "file": path.name,
+            "sha256": hashlib.sha256(text.encode()).hexdigest(),
+            "inputs": inputs,
+            "outputs": outputs,
+            "flops_per_call": shape.flops(),
+            **dataclasses.asdict(shape),
+            "name": shape.name,
+        })
+        print(f"  wrote {path.name} ({len(text)} chars)")
+    for lshape in layer_shapes:
+        lowered, inputs, outputs = lower_layer(lshape)
+        text = to_hlo_text(lowered)
+        path = out_dir / f"{lshape.name}.hlo.txt"
+        path.write_text(text)
+        entries.append({
+            "kind": "layer",
+            "file": path.name,
+            "sha256": hashlib.sha256(text.encode()).hexdigest(),
+            "inputs": inputs,
+            "outputs": outputs,
+            **dataclasses.asdict(lshape),
+            "name": lshape.name,
+        })
+        print(f"  wrote {path.name} ({len(text)} chars)")
+    manifest = {
+        "format_version": 1,
+        "jax_version": jax.__version__,
+        "artifacts": entries,
+    }
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=2))
+    print(f"  wrote manifest.json ({len(entries)} artifacts)")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--n1", type=int, default=SERVE_N1,
+                    help="query heads for the serving artifacts")
+    ap.add_argument("--buckets", type=int, nargs="+",
+                    default=list(DEFAULT_BUCKETS))
+    ap.add_argument("--d-model", type=int, default=1024)
+    ap.add_argument("--no-paper-shapes", action="store_true",
+                    help="skip the N1=128 paper-config artifacts")
+    ap.add_argument("--no-layers", action="store_true",
+                    help="skip the full decode-layer artifacts")
+    args = ap.parse_args()
+
+    shapes = default_kernel_shapes(n1=args.n1, buckets=tuple(args.buckets))
+    if not args.no_paper_shapes:
+        shapes += paper_kernel_shapes()
+    layer_shapes = [] if args.no_layers else default_layer_shapes(
+        n1=args.n1, d_model=args.d_model, buckets=tuple(args.buckets))
+    export(pathlib.Path(args.out_dir), shapes, layer_shapes)
+
+
+if __name__ == "__main__":
+    main()

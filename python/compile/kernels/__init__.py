@@ -1,0 +1,36 @@
+"""L1 Pallas kernels for the AMLA reproduction.
+
+- :mod:`.amla` — Algorithm 2: MUL-by-ADD rescaling via FP32<->INT32
+  reinterpretation, with Appendix-A BF16 error compensation.
+- :mod:`.flash_base` — Algorithm 1: the "Base" FlashAttention the paper
+  compares against.
+- :mod:`.ref` — pure-jnp oracles (Golden / Base / naive Eq. 3).
+
+All kernels run in interpret mode so they lower to plain HLO executable on
+the CPU PJRT client (see DESIGN.md §Hardware adaptation).
+"""
+
+from .amla import amla_attention
+from .flash_base import base_attention
+from .ref import (
+    base_flash_attention,
+    golden_attention,
+    naive_unsafe_attention,
+    row_limits,
+)
+
+#: name -> callable registry used by model.py / aot.py / tests.
+ATTENTION_KERNELS = {
+    "amla": amla_attention,
+    "base": base_attention,
+}
+
+__all__ = [
+    "ATTENTION_KERNELS",
+    "amla_attention",
+    "base_attention",
+    "base_flash_attention",
+    "golden_attention",
+    "naive_unsafe_attention",
+    "row_limits",
+]

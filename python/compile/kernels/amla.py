@@ -1,0 +1,258 @@
+"""Pallas implementation of AMLA (Algorithm 2): MUL-by-ADD FlashAttention.
+
+The paper's core algorithmic contribution: the FlashAttention output
+rescale ``O_i <- O_{i-1} * exp(m_{i-1} - m_i) + P_i V_i`` is reformulated
+so the rescale factor is an exact power of two, which — by the IEEE-754
+bit layout (Lemma 3.1) — can be applied by *adding* ``(n_i - n_{i-1}) *
+2^23`` to the INT32 reinterpretation of each FP32 accumulator element:
+
+    n_i = round(-m_i / ln2)
+    r_i = exp(-n_i * ln2 - m_i)          # 1/sqrt(2) <= r_i <= sqrt(2)
+    Õ_i = Õ_{i-1} * 2^{n_i - n_{i-1}} + (1/r_i) P_i V_i
+
+On Ascend silicon the exponent-add is an AtomicAdd<INT32> directly in
+Global Memory, eliminating the GM<->UB round trip of the [V2] stage.  In
+this Pallas port the accumulator lives in the kernel's output ref, which
+persists across sequential grid steps (the interpret-mode analogue of a
+GM-resident tile), and the exponent-add is a ``lax.bitcast_convert_type``
+add — the *numerics* are bit-identical to the CANN kernel.
+
+Hardware adaptation (GPU/NPU -> TPU-style Pallas, see DESIGN.md):
+  * KV tiling is the grid over S2 blocks (BlockSpec), the analogue of the
+    paper's fixed 512-row KV block.
+  * Cube vs Vector concurrency has no interpret-mode counterpart; it is
+    modelled in the Rust simulator (rust/src/simulator).
+
+Error compensation (Appendix A): with BF16 P·V matmuls, ``1/r_i`` must be
+pre-multiplied into P before the BF16 cast.  Defining ``S32 = 1/r_i`` and
+``S16 = bf16(S32)``, the quantization ratio ``c_i = S32/S16`` drifts the
+accumulator scale; Algorithm 2 (lines 7-12) folds the first-order
+correction ``eps = 1.5 * (c_i/c_{i-1} - 1)`` into the very same integer
+add (using the mantissa-midpoint estimate M ~ 2^22).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import LN2, row_limits
+
+# Lower clamp for the per-step exponent delta (Algorithm 2 line 11).  A
+# delta below -30 would drag small accumulator values toward the subnormal
+# range where Lemma 3.1 no longer holds; values that small are negligible
+# in the final sum anyway.
+DELTA_CLAMP = -30
+# Tie-break epsilon added before the float->int cast (Algorithm 2 line 11)
+# so that exact .5 boundaries round the same way the CANN kernel does.
+ROUND_EPS = 1e-6
+
+EXP_ONE = 1 << 23  # one unit in the FP32 exponent field, as INT32
+
+
+def _as_int32(f):
+    return jax.lax.bitcast_convert_type(f, jnp.int32)
+
+
+def _as_fp32(i):
+    return jax.lax.bitcast_convert_type(i, jnp.float32)
+
+
+def _amla_kernel(valid_ref, q_ref, k_ref, v_ref,
+                 o_ref, m_ref, l_ref, n_ref, c_ref,
+                 *, block_kv: int, n1: int, sq: int, scale: float,
+                 mixed_bf16: bool, compensate: bool):
+    """One KV-block step of Algorithm 2.
+
+    Grid is (num_kv_blocks,); all refs except k/v map to the same block
+    every step, so o/m/l/n/c behave as the GM-resident running state.
+
+    Ref shapes:
+      valid_ref: [1]   int32   number of valid KV rows (bucket padding mask)
+      q_ref:     [G, Dk]       queries (fp32 storage; cast per mixed_bf16)
+      k_ref:     [Bkv, Dk]     KV block
+      v_ref:     [Bkv, Dv]
+      o_ref:     [G, Dv] fp32  the Õ accumulator ("GM" resident)
+      m_ref:     [G, 1]  fp32  running row max
+      l_ref:     [G, 1]  fp32  running row sum
+      n_ref:     [G, 1]  int32 running exponent n_i = round(-m_i/ln2)
+      c_ref:     [G, 1]  fp32  running compensation ratio c_i = S32/S16
+    """
+    i = pl.program_id(0)
+    g = q_ref.shape[0]
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        n_ref[...] = jnp.zeros_like(n_ref)
+        c_ref[...] = jnp.ones_like(c_ref)
+
+    # ---- [C1]: S = Q Kᵀ (Cube stage) -----------------------------------
+    q = q_ref[...]
+    k = k_ref[...]
+    if mixed_bf16:
+        s = jnp.dot(q.astype(jnp.bfloat16), k.astype(jnp.bfloat16).T,
+                    preferred_element_type=jnp.float32)
+    else:
+        s = jnp.dot(q.astype(jnp.float32), k.astype(jnp.float32).T,
+                    preferred_element_type=jnp.float32)
+
+    # ---- [V1]: online softmax with exponent tracking (Vector stage) ----
+    s = s * jnp.float32(scale)
+    limits = row_limits(g, n1, sq, valid_ref[0])
+    cols = i * block_kv + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(cols < limits[:, None], s, -jnp.inf)
+
+    m_prev = m_ref[...][:, 0]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    # Rows that are fully masked in every block so far keep m = -inf; guard
+    # the arithmetic below (their output stays 0 and l stays 0).
+    seen = jnp.isfinite(m_new)
+    m_safe = jnp.where(seen, m_new, 0.0)
+
+    n_new = jnp.round(-m_safe / jnp.float32(LN2)).astype(jnp.int32)
+    p = jnp.where(seen[:, None], jnp.exp(s - m_safe[:, None]), 0.0)
+    alpha = jnp.where(jnp.isfinite(m_prev), jnp.exp(m_prev - m_safe), 0.0)
+    l_ref[...] = (l_ref[...][:, 0] * alpha + jnp.sum(p, axis=-1))[:, None]
+
+    # S32 = 1/r_i = exp(ln2 * (n_i + m_i/ln2))  (Algorithm 2 line 7).
+    # The grouping matters: n_i + m_i/ln2 is in [-0.5, 0.5] by the
+    # rounding, so the residual is formed *before* any large-magnitude
+    # product — computing ln2*n_i + m_i instead loses ~m*2^-24 absolute
+    # and blows up exp() for |m| in the thousands.
+    s32 = jnp.exp(jnp.float32(LN2)
+                  * (n_new.astype(jnp.float32) + m_safe / jnp.float32(LN2)))
+    if compensate and mixed_bf16:
+        s16 = s32.astype(jnp.bfloat16).astype(jnp.float32)  # line 8
+        # NOTE: Algorithm 2 line 9 prints "c_i <- S32/S16", but the
+        # Appendix-A derivation defines c_i = r_i/r'_i = S16/S32 (the
+        # accumulated term is scaled by r_i/r'_i, so the *prior*
+        # accumulator must be nudged by c_i/c_{i-1} with this sign).
+        # Empirically S16/S32 restores Base-level accuracy (1.5e-3 at
+        # sigma=1) while S32/S16 *doubles* the error to 3e-3 — i.e. the
+        # printed line 9 is a typo.  See EXPERIMENTS.md §Accuracy.
+        c_new = s16 / s32
+    else:
+        s16 = s32
+        c_new = jnp.ones_like(s32)
+
+    # ---- exponent-add rescale of the accumulator (the MUL-by-ADD) ------
+    n_prev = n_ref[...][:, 0]
+    c_prev = c_ref[...][:, 0]
+    first = jnp.logical_not(jnp.isfinite(m_prev))  # per-row "i == 1"
+    delta = jnp.where(first, 0, jnp.maximum(n_new - n_prev,
+                                            jnp.int32(DELTA_CLAMP)))
+    eps = jnp.where(first, 0.0, 1.5 * (c_new / c_prev - 1.0))  # line 10-11
+    # Split exactly: the power-of-two part stays integer (bit-exact Lemma
+    # 3.1); only the compensation fraction goes through a float round.
+    add = delta * EXP_ONE + jnp.round(
+        (eps + jnp.float32(ROUND_EPS)) * jnp.float32(EXP_ONE)
+    ).astype(jnp.int32)
+
+    @pl.when(i > 0)
+    def _rescale():
+        o = o_ref[...]
+        # AtomicAdd<INT32> in GM.  Zero bit patterns must not be touched:
+        # 0x00000000 + k*2^23 would fabricate a subnormal/garbage value.
+        # (CANN sidesteps this because O is written, not added, on the
+        # first block; rows/elements that are still exactly zero carry no
+        # mass so skipping them is exact.)
+        o_i = _as_int32(o) + add[:, None]
+        o_ref[...] = jnp.where(o == 0.0, o, _as_fp32(o_i))
+
+    # ---- [C2]: T = (P / r'_i) V, accumulated into GM (AtomicAdd<FP32>) -
+    p_scaled = p * s16[:, None]  # line 10: P <- P * S16  (S16 = 1/r'_i)
+    if mixed_bf16:
+        t = jnp.dot(p_scaled.astype(jnp.bfloat16), v_ref[...].astype(jnp.bfloat16),
+                    preferred_element_type=jnp.float32)
+    else:
+        t = jnp.dot(p_scaled, v_ref[...].astype(jnp.float32),
+                    preferred_element_type=jnp.float32)
+    o_ref[...] += t
+
+    m_ref[...] = jnp.where(seen, m_new, m_prev)[:, None]
+    n_ref[...] = jnp.where(first & ~seen, n_prev, n_new)[:, None]
+    c_ref[...] = c_new[:, None]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_kv", "n1", "sq", "mixed_bf16", "compensate"),
+)
+def amla_attention(q, k, v, valid_len=None, *, block_kv=512, n1=None, sq=1,
+                   mixed_bf16=True, compensate=True):
+    """AMLA decode attention (Algorithm 2) via Pallas, interpret mode.
+
+    Args:
+      q: ``[G, Dk]`` fp32/bf16 queries, G = sq * n1 rows (position-major).
+      k: ``[S2, Dk]`` keys; S2 must be a multiple of ``block_kv``.
+      v: ``[S2, Dv]`` values.
+      valid_len: scalar int32 — valid KV rows (<= S2); rest is bucket pad.
+      block_kv: KV rows per FlashAttention iteration (paper: 512).
+      n1: query head count (default G // sq) for MTP causal masking.
+      sq: query positions (1 = decode, 2 = MTP).
+      mixed_bf16: BF16 matmul operands with FP32 accumulation (Cube-core
+        mixed precision).  False = pure FP32 (used to pin exactness).
+      compensate: apply Appendix-A BF16 error compensation.
+
+    Returns:
+      ``[G, Dv]`` fp32 attention output.
+    """
+    g, dk = q.shape
+    s2, dv = k.shape[0], v.shape[-1]
+    if n1 is None:
+        n1 = g // sq
+    assert g == n1 * sq, f"G={g} must equal n1*sq={n1 * sq}"
+    assert s2 % block_kv == 0, f"S2={s2} not a multiple of block_kv={block_kv}"
+    if valid_len is None:
+        valid_len = s2
+    valid = jnp.asarray(valid_len, jnp.int32).reshape(1)
+
+    nblk = s2 // block_kv
+    kernel = functools.partial(
+        _amla_kernel, block_kv=block_kv, n1=n1, sq=sq,
+        scale=1.0 / (dk ** 0.5), mixed_bf16=mixed_bf16, compensate=compensate)
+
+    o, m, l, n, c = pl.pallas_call(
+        kernel,
+        grid=(nblk,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((g, dk), lambda i: (0, 0)),
+            pl.BlockSpec((block_kv, dk), lambda i: (i, 0)),
+            pl.BlockSpec((block_kv, dv), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((g, dv), lambda i: (0, 0)),
+            pl.BlockSpec((g, 1), lambda i: (0, 0)),
+            pl.BlockSpec((g, 1), lambda i: (0, 0)),
+            pl.BlockSpec((g, 1), lambda i: (0, 0)),
+            pl.BlockSpec((g, 1), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((g, dv), jnp.float32),
+            jax.ShapeDtypeStruct((g, 1), jnp.float32),
+            jax.ShapeDtypeStruct((g, 1), jnp.float32),
+            jax.ShapeDtypeStruct((g, 1), jnp.int32),
+            jax.ShapeDtypeStruct((g, 1), jnp.float32),
+        ],
+        interpret=True,
+    )(valid, q, k, v)
+
+    # Final normalization (Algorithm 2 line 20, the FlashAttention-2 style
+    # deferred division): O <- O / (l_N * S16) where S16 = 1/r'_N.
+    m_f = jnp.where(jnp.isfinite(m[:, 0]), m[:, 0], 0.0)
+    n_f = n[:, 0].astype(jnp.float32)
+    # same residual-first grouping as in the kernel (see comment there)
+    s32 = jnp.exp(jnp.float32(LN2) * (n_f + m_f / jnp.float32(LN2)))
+    if compensate and mixed_bf16:
+        s16 = s32.astype(jnp.bfloat16).astype(jnp.float32)
+    else:
+        s16 = s32
+    denom = l[:, 0] * s16
+    return jnp.where(denom[:, None] > 0, o / denom[:, None], 0.0)

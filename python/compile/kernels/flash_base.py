@@ -1,0 +1,124 @@
+"""Pallas implementation of the paper's "Base": Algorithm 1 (FlashAttention).
+
+The four-stage reference pipeline [C1][V1][C2][V2] with the classical
+floating-point rescale in [V2]:
+
+    O_i <- O_{i-1} * exp(m_{i-1} - m_i) + P_i V_i
+
+This is the kernel AMLA is measured against, both for accuracy (Tables 3-4:
+Base vs AMLA vs Golden) and, in the Rust simulator, for the performance
+ablation (the [V2] GM<->UB traffic AMLA eliminates).  It shares the exact
+interface of :func:`..amla.amla_attention` so tests, the AOT exporter, and
+the Rust coordinator can swap algorithms by name.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import row_limits
+
+
+def _base_kernel(valid_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
+                 *, block_kv: int, n1: int, sq: int, scale: float,
+                 mixed_bf16: bool):
+    """One KV-block step of Algorithm 1 (see _amla_kernel for ref shapes)."""
+    i = pl.program_id(0)
+    g = q_ref.shape[0]
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # [C1]: S = Q Kᵀ
+    q = q_ref[...]
+    k = k_ref[...]
+    if mixed_bf16:
+        s = jnp.dot(q.astype(jnp.bfloat16), k.astype(jnp.bfloat16).T,
+                    preferred_element_type=jnp.float32)
+    else:
+        s = jnp.dot(q.astype(jnp.float32), k.astype(jnp.float32).T,
+                    preferred_element_type=jnp.float32)
+
+    # [V1]: online softmax
+    s = s * jnp.float32(scale)
+    limits = row_limits(g, n1, sq, valid_ref[0])
+    cols = i * block_kv + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(cols < limits[:, None], s, -jnp.inf)
+
+    m_prev = m_ref[...][:, 0]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    seen = jnp.isfinite(m_new)
+    m_safe = jnp.where(seen, m_new, 0.0)
+    p = jnp.where(seen[:, None], jnp.exp(s - m_safe[:, None]), 0.0)
+    alpha = jnp.where(jnp.isfinite(m_prev), jnp.exp(m_prev - m_safe), 0.0)
+    l_ref[...] = (l_ref[...][:, 0] * alpha + jnp.sum(p, axis=-1))[:, None]
+
+    # [C2]: T = P V
+    if mixed_bf16:
+        t = jnp.dot(p.astype(jnp.bfloat16), v_ref[...].astype(jnp.bfloat16),
+                    preferred_element_type=jnp.float32)
+    else:
+        t = jnp.dot(p, v_ref[...].astype(jnp.float32),
+                    preferred_element_type=jnp.float32)
+
+    # [V2]: the FP32-multiply rescale — on Ascend this is the GM<->UB
+    # round trip AMLA removes; here it is the fused multiply-add itself.
+    o_ref[...] = o_ref[...] * alpha[:, None] + t
+    m_ref[...] = jnp.where(seen, m_new, m_prev)[:, None]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_kv", "n1", "sq", "mixed_bf16"))
+def base_attention(q, k, v, valid_len=None, *, block_kv=512, n1=None, sq=1,
+                   mixed_bf16=True):
+    """Base FlashAttention decode (Algorithm 1) via Pallas, interpret mode.
+
+    Interface mirrors :func:`..amla.amla_attention`; see there for the
+    argument contract.
+    """
+    g, dk = q.shape
+    s2, dv = k.shape[0], v.shape[-1]
+    if n1 is None:
+        n1 = g // sq
+    assert g == n1 * sq, f"G={g} must equal n1*sq={n1 * sq}"
+    assert s2 % block_kv == 0, f"S2={s2} not a multiple of block_kv={block_kv}"
+    if valid_len is None:
+        valid_len = s2
+    valid = jnp.asarray(valid_len, jnp.int32).reshape(1)
+
+    nblk = s2 // block_kv
+    kernel = functools.partial(
+        _base_kernel, block_kv=block_kv, n1=n1, sq=sq,
+        scale=1.0 / (dk ** 0.5), mixed_bf16=mixed_bf16)
+
+    o, m, l = pl.pallas_call(
+        kernel,
+        grid=(nblk,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((g, dk), lambda i: (0, 0)),
+            pl.BlockSpec((block_kv, dk), lambda i: (i, 0)),
+            pl.BlockSpec((block_kv, dv), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((g, dv), lambda i: (0, 0)),
+            pl.BlockSpec((g, 1), lambda i: (0, 0)),
+            pl.BlockSpec((g, 1), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((g, dv), jnp.float32),
+            jax.ShapeDtypeStruct((g, 1), jnp.float32),
+            jax.ShapeDtypeStruct((g, 1), jnp.float32),
+        ],
+        interpret=True,
+    )(valid, q, k, v)
+
+    l_f = l[:, 0]
+    return jnp.where(l_f[:, None] > 0, o / l_f[:, None], 0.0)

@@ -1,0 +1,144 @@
+"""Pure-jnp reference oracles for the AMLA kernels.
+
+This module is the *correctness anchor* of the whole stack:
+
+- :func:`golden_attention` — the paper's "Golden" baseline: high-precision
+  (FP32, optionally FP64) softmax attention computed without any tiling or
+  online-softmax tricks.  Every kernel (Pallas AMLA, Pallas Base, the Rust
+  ``numerics`` ports) is validated against it.
+- :func:`base_flash_attention` — the paper's "Base": Algorithm 1
+  (FlashAttention-2 style online softmax) with optional BF16-mixed matmuls,
+  written in plain jnp so it can be diffed against the Pallas kernels
+  step-for-step.
+- :func:`naive_unsafe_attention` — Eq. (3), the overflow-prone variant that
+  motivates AMLA (Section 3.1 "Naive Optimization and Its Pitfall").
+- :func:`row_limits` — causal row limits for MTP decoding (S_q >= 1).
+
+Everything here is build/test-time only; nothing from this module is on the
+Rust request path.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+LN2 = 0.6931471805599453
+
+
+def row_limits(g: int, n1: int, sq: int, valid_len):
+    """Number of attendable KV positions for each of the ``g`` query rows.
+
+    Query rows are laid out as ``row = q_pos * n1 + head`` (position-major),
+    matching the paper's M = S_q x N1 block rows.  With multi-token
+    prediction the later query position sees one more KV entry than the
+    earlier one: row limit = valid_len - (sq - 1) + q_pos.
+
+    ``valid_len`` may be a traced scalar; the result broadcasts to ``(g,)``.
+    """
+    q_pos = jnp.arange(g, dtype=jnp.int32) // jnp.int32(n1)
+    return jnp.asarray(valid_len, jnp.int32) - jnp.int32(sq - 1) + q_pos
+
+
+def _mask_scores(s, limits):
+    """Mask attention scores past each row's causal limit with -inf."""
+    cols = jnp.arange(s.shape[-1], dtype=jnp.int32)
+    return jnp.where(cols[None, :] < limits[:, None], s, -jnp.inf)
+
+
+def golden_attention(q, k, v, *, n1=None, sq=1, valid_len=None,
+                     compute_dtype=jnp.float32):
+    """Ground-truth attention: softmax(q kᵀ / sqrt(Dk)) v at high precision.
+
+    Args:
+      q: ``[G, Dk]`` query rows (G = S_q * N1 for MTP decode).
+      k: ``[S2, Dk]`` keys (for MLA these are latent+RoPE rows).
+      v: ``[S2, Dv]`` values (for MLA the latent rows, Dv <= Dk).
+      n1: head count used for MTP causal masking; defaults to G (sq=1).
+      sq: query context length (1 = plain decode, 2 = MTP).
+      valid_len: number of valid KV rows; defaults to S2 (no padding).
+      compute_dtype: jnp.float32 or jnp.float64 for the whole computation.
+    """
+    g = q.shape[0]
+    if n1 is None:
+        n1 = g // sq
+    if valid_len is None:
+        valid_len = k.shape[0]
+    q = q.astype(compute_dtype)
+    k = k.astype(compute_dtype)
+    v = v.astype(compute_dtype)
+    scale = 1.0 / (q.shape[-1] ** 0.5)
+    s = (q @ k.T) * scale
+    s = _mask_scores(s, row_limits(g, n1, sq, valid_len))
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    return ((p / jnp.sum(p, axis=-1, keepdims=True)) @ v).astype(jnp.float32)
+
+
+def base_flash_attention(q, k, v, *, block_kv=512, n1=None, sq=1,
+                         valid_len=None, mixed_bf16=False):
+    """Algorithm 1 (the paper's "Base") in plain jnp.
+
+    Online softmax over KV blocks with the classical [V2] rescale
+    ``O_i <- O_{i-1} * exp(m_{i-1} - m_i) + P_i V_i``.  With
+    ``mixed_bf16=True`` the P·V matmul consumes BF16 operands and
+    accumulates in FP32, mirroring Cube-core mixed precision.
+    """
+    g, dk = q.shape
+    s2, dv = k.shape[0], v.shape[-1]
+    if n1 is None:
+        n1 = g // sq
+    if valid_len is None:
+        valid_len = s2
+    assert s2 % block_kv == 0, "KV length must be a multiple of block_kv"
+    limits = row_limits(g, n1, sq, valid_len)
+    scale = jnp.float32(1.0 / (dk ** 0.5))
+    qf = q.astype(jnp.float32)
+    cols = jnp.arange(block_kv, dtype=jnp.int32)
+
+    def step(carry, blk):
+        o, m, l = carry
+        kb, vb, base = blk
+        s = (qf @ kb.astype(jnp.float32).T) * scale
+        s = jnp.where((base + cols)[None, :] < limits[:, None], s, -jnp.inf)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        if mixed_bf16:
+            t = jnp.dot(p.astype(jnp.bfloat16), vb.astype(jnp.bfloat16),
+                        preferred_element_type=jnp.float32)
+        else:
+            t = p @ vb.astype(jnp.float32)
+        o_new = o * alpha[:, None] + t
+        return (o_new, m_new, l_new), None
+
+    nblk = s2 // block_kv
+    kb = k.reshape(nblk, block_kv, dk)
+    vb = v.reshape(nblk, block_kv, dv)
+    bases = jnp.arange(nblk, dtype=jnp.int32) * block_kv
+    init = (jnp.zeros((g, dv), jnp.float32),
+            jnp.full((g,), -jnp.inf, jnp.float32),
+            jnp.zeros((g,), jnp.float32))
+    (o, m, l), _ = jax.lax.scan(step, init, (kb, vb, bases))
+    return o / l[:, None]
+
+
+def naive_unsafe_attention(q, k, v):
+    """Eq. (3): the numerically *unsafe* in-place variant (no running max).
+
+    Accumulates ``exp(s)`` directly.  Overflows to inf for scores > ~88,
+    demonstrating why AMLA's power-of-two reformulation (Eq. 4) is needed.
+    Kept as a first-class reference so tests can pin the failure mode.
+    """
+    qf = q.astype(jnp.float32)
+    s = (qf @ k.astype(jnp.float32).T) * jnp.float32(1.0 / (q.shape[-1] ** 0.5))
+    p = jnp.exp(s)  # no max subtraction: overflow risk by design
+    return (p @ v.astype(jnp.float32)) / jnp.sum(p, axis=-1, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("block_kv",))
+def base_flash_jit(q, k, v, block_kv=512):
+    return base_flash_attention(q, k, v, block_kv=block_kv)

@@ -1,0 +1,227 @@
+"""L2: MLA decode layer in JAX, calling the L1 Pallas kernels.
+
+Implements the decode-phase Multi-head Latent Attention layer of
+DeepSeek-V2 (§2.2) with *matrix absorption*: the KV up-projections
+``W_UK``/``W_UV`` are folded into the query / output paths so attention
+runs entirely in the latent space — queries of width ``D_K = 576``
+(512 latent + 64 decoupled RoPE) against the cached latent rows, values
+of width ``D_LATENT = 512``.  This is exactly the computation AMLA's
+kernel accelerates: one MQA-shaped attention with a very wide head.
+
+The layer is AOT-lowered by :mod:`.aot` with weights as *runtime inputs*
+(not baked constants) so the Rust coordinator can serve any checkpoint.
+
+Cache layout: one latent row per token, ``[S2, 512]`` plus RoPE keys
+``[S2, 64]``, stored padded to the shape bucket; ``valid_len`` masks the
+padding inside the kernel.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import ATTENTION_KERNELS
+from .shapes import D_K, D_LATENT, D_ROPE, LayerShape
+
+
+@dataclasses.dataclass(frozen=True)
+class MlaConfig:
+    """Dimensions of one MLA decode layer (absorbed form)."""
+
+    d_model: int = 1024
+    n1: int = 16            # query heads
+    d_head: int = 128       # per-head nope dim (uncompressed)
+    q_rank: int = 192       # query LoRA rank
+    d_latent: int = D_LATENT
+    d_rope: int = D_ROPE
+    sq: int = 1
+    algo: str = "amla"
+    block_kv: int = 256
+
+    @classmethod
+    def from_layer_shape(cls, s: LayerShape) -> "MlaConfig":
+        return cls(d_model=s.d_model, n1=s.n1, sq=s.sq, algo=s.algo,
+                   block_kv=s.block_kv, d_head=s.d_head, q_rank=s.q_rank)
+
+
+#: Ordered weight signature: name -> shape-fn(cfg).  The AOT manifest and
+#: the Rust side both iterate this order, so keep it stable.
+WEIGHT_SPECS = {
+    # query path: x -> q_rank -> heads x (d_head nope + d_rope rope)
+    "w_dq": lambda c: (c.d_model, c.q_rank),
+    "w_uq_nope": lambda c: (c.q_rank, c.n1 * c.d_head),
+    "w_uq_rope": lambda c: (c.q_rank, c.n1 * c.d_rope),
+    # kv path: x -> latent (cached) and x -> shared rope key (cached)
+    "w_dkv": lambda c: (c.d_model, c.d_latent),
+    "w_kr": lambda c: (c.d_model, c.d_rope),
+    # absorbed up-projections: per-head d_head <-> d_latent
+    "w_uk": lambda c: (c.n1, c.d_latent, c.d_head),
+    "w_uv": lambda c: (c.n1, c.d_latent, c.d_head),
+    # output projection
+    "w_o": lambda c: (c.n1 * c.d_head, c.d_model),
+}
+
+
+def init_weights(cfg: MlaConfig, seed: int = 0) -> Dict[str, jax.Array]:
+    """Scaled-gaussian init, fp32 (cast to bf16 inside the kernel path)."""
+    rng = np.random.default_rng(seed)
+    out = {}
+    for name, shape_fn in WEIGHT_SPECS.items():
+        shape = shape_fn(cfg)
+        fan_in = shape[-2] if len(shape) > 1 else shape[0]
+        out[name] = jnp.asarray(
+            rng.standard_normal(shape) / np.sqrt(fan_in), jnp.float32)
+    return out
+
+
+def rope_tables(positions, d_rope: int):
+    """Rotary embedding cos/sin tables for the given positions ([T])."""
+    half = d_rope // 2
+    inv_freq = 1.0 / (10000.0 ** (jnp.arange(half, dtype=jnp.float32) / half))
+    angles = positions.astype(jnp.float32)[:, None] * inv_freq[None, :]
+    return jnp.cos(angles), jnp.sin(angles)
+
+
+def apply_rope(x, cos, sin):
+    """Rotate pairs (x1, x2) -> (x1 cos - x2 sin, x1 sin + x2 cos).
+
+    ``x``: [..., T, d_rope]; ``cos``/``sin``: [T, d_rope/2].
+    """
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+
+
+def mla_decode_layer(x, c_cache, kr_cache, valid_len, weights,
+                     cfg: MlaConfig):
+    """One MLA decode step (absorbed form).
+
+    Args:
+      x: ``[sq, d_model]`` hidden states of the new token(s).
+      c_cache: ``[S2, d_latent]`` latent cache, rows ``< valid_len`` valid;
+        the *new* tokens' latents must already be written at positions
+        ``valid_len - sq .. valid_len - 1`` — see :func:`project_kv`.
+      kr_cache: ``[S2, d_rope]`` RoPE-key cache, same layout.
+      valid_len: scalar int32, number of valid cache rows incl. new tokens.
+      weights: dict per :data:`WEIGHT_SPECS`.
+      cfg: layer dimensions.
+
+    Returns:
+      ``[sq, d_model]`` attention block output.
+    """
+    n1, dh, dr = cfg.n1, cfg.d_head, cfg.d_rope
+    sq = cfg.sq
+
+    # ---- query path -----------------------------------------------------
+    q_lat = x @ weights["w_dq"]                                   # [sq, r]
+    q_nope = (q_lat @ weights["w_uq_nope"]).reshape(sq, n1, dh)
+    q_rope = (q_lat @ weights["w_uq_rope"]).reshape(sq, n1, dr)
+
+    positions = valid_len - sq + jnp.arange(sq, dtype=jnp.int32)
+    cos, sin = rope_tables(positions, dr)
+    q_rope = apply_rope(q_rope.transpose(1, 0, 2), cos, sin).transpose(1, 0, 2)
+
+    # absorb W_UK: q_c[h] = q_nope[h] @ W_UK[h]^T  -> latent-space query
+    q_c = jnp.einsum("shd,hcd->shc", q_nope, weights["w_uk"])     # [sq,n1,dc]
+    q_full = jnp.concatenate([q_c, q_rope], axis=-1)              # [sq,n1,Dk]
+    # kernel row layout is position-major: row = q_pos * n1 + head
+    q_rows = q_full.reshape(sq * n1, D_K)
+
+    # ---- latent attention (the AMLA kernel) ------------------------------
+    k_full = jnp.concatenate([c_cache, kr_cache], axis=-1)        # [S2, Dk]
+    attn = ATTENTION_KERNELS[cfg.algo]
+    o_lat = attn(q_rows, k_full, c_cache, valid_len,
+                 block_kv=cfg.block_kv, n1=n1, sq=sq)             # [sq*n1,dc]
+
+    # ---- absorbed output path -------------------------------------------
+    o_lat = o_lat.reshape(sq, n1, cfg.d_latent)
+    o_heads = jnp.einsum("shc,hcd->shd", o_lat, weights["w_uv"])  # [sq,n1,dh]
+    return o_heads.reshape(sq, n1 * dh) @ weights["w_o"]          # [sq,dm]
+
+
+def project_kv(x, valid_len, weights, cfg: MlaConfig):
+    """Compute the latent + RoPE-key rows to append to the caches.
+
+    Returns ``(c_new [sq, d_latent], kr_new [sq, d_rope])`` for the new
+    token(s) ``x`` at positions ``valid_len - sq .. valid_len - 1``.
+    """
+    c_new = x @ weights["w_dkv"]
+    kr = x @ weights["w_kr"]
+    positions = valid_len - cfg.sq + jnp.arange(cfg.sq, dtype=jnp.int32)
+    cos, sin = rope_tables(positions, cfg.d_rope)
+    return c_new, apply_rope(kr, cos, sin)
+
+
+def mla_decode_step(x, c_cache, kr_cache, valid_len, weights,
+                    cfg: MlaConfig):
+    """Full decode step: project new KV, scatter into cache, attend.
+
+    This is the function the AOT exporter lowers for the serving layer
+    artifacts.  Returns ``(y, c_cache', kr_cache')`` with the caches
+    updated in the padded buffers (donated at lowering time).
+    """
+    c_new, kr_new = project_kv(x, valid_len, weights, cfg)
+    start = valid_len - cfg.sq
+    c_cache = jax.lax.dynamic_update_slice(c_cache, c_new, (start, 0))
+    kr_cache = jax.lax.dynamic_update_slice(kr_cache, kr_new, (start, 0))
+    y = mla_decode_layer(x, c_cache, kr_cache, valid_len, weights, cfg)
+    return y, c_cache, kr_cache
+
+
+def mla_decode_step_slim(x, c_cache, kr_cache, valid_len, weights,
+                         cfg: MlaConfig):
+    """Decode step returning only ``(y, c_new, kr_new)`` — the ``sq`` new
+    cache rows instead of the full updated caches.
+
+    This is the serving-path lowering: returning the whole padded caches
+    costs a device→host copy of ``bucket × (512+64) × 4`` bytes per layer
+    call (≈ 4.7 MB at the 2048 bucket) that the Rust engine would
+    immediately throw away, since it re-materializes from the paged pool
+    each step.  See EXPERIMENTS.md §Perf (L3 step 1).
+    """
+    c_new, kr_new = project_kv(x, valid_len, weights, cfg)
+    start = valid_len - cfg.sq
+    c_cache = jax.lax.dynamic_update_slice(c_cache, c_new, (start, 0))
+    kr_cache = jax.lax.dynamic_update_slice(kr_cache, kr_new, (start, 0))
+    y = mla_decode_layer(x, c_cache, kr_cache, valid_len, weights, cfg)
+    return y, c_new, kr_new
+
+
+def reference_decode_layer(x, c_cache, kr_cache, valid_len, weights,
+                           cfg: MlaConfig):
+    """Non-absorbed, non-flash reference of the same layer (test oracle).
+
+    Materializes full K/V per head from the latent cache (``K[h] = c W_UK[h]``
+    etc.) and runs dense softmax attention in fp32 — the way the MLA paper
+    *defines* the layer, before any kernel optimization.
+    """
+    n1, dh, dr, sq = cfg.n1, cfg.d_head, cfg.d_rope, cfg.sq
+    s2 = c_cache.shape[0]
+
+    q_lat = x @ weights["w_dq"]
+    q_nope = (q_lat @ weights["w_uq_nope"]).reshape(sq, n1, dh)
+    q_rope = (q_lat @ weights["w_uq_rope"]).reshape(sq, n1, dr)
+    positions = valid_len - sq + jnp.arange(sq, dtype=jnp.int32)
+    cos, sin = rope_tables(positions, dr)
+    q_rope = apply_rope(q_rope.transpose(1, 0, 2), cos, sin).transpose(1, 0, 2)
+
+    # materialize per-head K (nope) and V from the latent cache
+    k_nope = jnp.einsum("sc,hcd->hsd", c_cache, weights["w_uk"])  # [n1,S2,dh]
+    v_full = jnp.einsum("sc,hcd->hsd", c_cache, weights["w_uv"])  # [n1,S2,dh]
+
+    scale = 1.0 / np.sqrt(D_K)  # kernel scales by sqrt(Dk of latent query)
+    s_nope = jnp.einsum("shd,htd->hst", q_nope, k_nope)
+    s_rope = jnp.einsum("shd,td->hst", q_rope, kr_cache)
+    s = (s_nope + s_rope) * scale
+
+    cols = jnp.arange(s2, dtype=jnp.int32)
+    lim = valid_len - (sq - 1) + jnp.arange(sq, dtype=jnp.int32)  # per q_pos
+    mask = cols[None, :] < lim[:, None]                           # [sq, S2]
+    s = jnp.where(mask[None, :, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("hst,htd->shd", p, v_full)                     # [sq,n1,dh]
+    return o.reshape(sq, n1 * dh) @ weights["w_o"]

@@ -1,0 +1,102 @@
+"""Shape buckets and model dimensions shared by aot.py, tests and (via
+manifest.json) the Rust runtime.
+
+HLO artifacts are shape-static, so the serving stack compiles one
+executable per (algorithm, S_q, KV bucket) and pads the latent cache to
+the bucket; a ``valid_len`` scalar input masks the padding inside the
+kernel.  This is the standard bucketed-decode scheme (vLLM/MaxText do the
+same for XLA backends).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+# DeepSeek-V2/V3 MLA dimensions used throughout the paper.
+D_LATENT = 512   # D_c: latent (nope) dimension == Dv
+D_ROPE = 64      # decoupled RoPE dimension
+D_K = D_LATENT + D_ROPE  # 576: latent attention Dk
+
+#: Default KV-length buckets compiled to artifacts.  Must be multiples of
+#: the kernel KV block.
+DEFAULT_BUCKETS = (256, 512, 1024, 2048)
+
+#: Paper decode configuration (DeepSeek-V3: 128 query heads, 1 KV head).
+PAPER_N1 = 128
+#: CPU-friendly head count for the serving examples.
+SERVE_N1 = 16
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelShape:
+    """Static shape signature of one attention artifact."""
+
+    algo: str          # "amla" | "base"
+    n1: int            # query heads
+    sq: int            # query positions (1 = decode, 2 = MTP)
+    bucket: int        # padded KV length S2
+    block_kv: int      # KV rows per FlashAttention iteration
+    dk: int = D_K
+    dv: int = D_LATENT
+    mixed_bf16: bool = True
+
+    @property
+    def g(self) -> int:
+        return self.n1 * self.sq
+
+    @property
+    def name(self) -> str:
+        return (f"attn_{self.algo}_n{self.n1}_sq{self.sq}"
+                f"_kv{self.bucket}_b{self.block_kv}")
+
+    def flops(self, valid_len: int | None = None) -> int:
+        """Attention FLOPs (mul+add) for this shape (§2.4)."""
+        s2 = self.bucket if valid_len is None else valid_len
+        return 2 * self.n1 * self.sq * s2 * (self.dk + self.dv)
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerShape:
+    """Static shape signature of one full MLA decode-layer artifact."""
+
+    n1: int
+    sq: int
+    bucket: int
+    block_kv: int
+    d_model: int
+    algo: str = "amla"
+    d_head: int = 128       # per-head nope dim of the uncompressed V
+    q_rank: int = 192       # query LoRA rank (scaled-down DeepSeek 1536)
+
+    @property
+    def name(self) -> str:
+        return (f"layer_{self.algo}_d{self.d_model}_n{self.n1}"
+                f"_sq{self.sq}_kv{self.bucket}")
+
+
+def default_kernel_shapes(n1: int = SERVE_N1,
+                          buckets=DEFAULT_BUCKETS) -> List[KernelShape]:
+    """The artifact matrix built by ``make artifacts``."""
+    shapes = []
+    for algo in ("amla", "base"):
+        for sq in (1, 2):
+            for bucket in buckets:
+                shapes.append(KernelShape(
+                    algo=algo, n1=n1, sq=sq, bucket=bucket,
+                    block_kv=min(256, bucket)))
+    return shapes
+
+
+def paper_kernel_shapes() -> List[KernelShape]:
+    """Paper-configuration (N1=128) artifacts for quickstart validation."""
+    return [
+        KernelShape(algo="amla", n1=PAPER_N1, sq=1, bucket=1024, block_kv=512),
+        KernelShape(algo="amla", n1=PAPER_N1, sq=2, bucket=1024, block_kv=512),
+    ]
+
+
+def default_layer_shapes(n1: int = SERVE_N1, d_model: int = 1024,
+                         buckets=DEFAULT_BUCKETS) -> List[LayerShape]:
+    return [LayerShape(n1=n1, sq=1, bucket=b, block_kv=min(256, b),
+                       d_model=d_model) for b in buckets]

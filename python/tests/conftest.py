@@ -1,0 +1,22 @@
+"""Shared fixtures for the kernel test-suite."""
+
+import os
+import sys
+
+import numpy as np
+import pytest
+
+# Make `compile` importable whether pytest runs from python/ or repo root.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def rel_err(a, b, eps=1e-10):
+    """Paper's relative Frobenius error E(A, B) = |A-B|_F / (|B|_F + eps)."""
+    a = np.asarray(a, np.float64)
+    b = np.asarray(b, np.float64)
+    return float(np.linalg.norm(a - b) / (np.linalg.norm(b) + eps))

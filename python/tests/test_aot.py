@@ -1,0 +1,66 @@
+"""AOT exporter tests: manifest consistency and HLO-text well-formedness.
+
+Runs the real lowering path on one small shape (fast) and, if
+``artifacts/manifest.json`` already exists from ``make artifacts``,
+validates the full manifest against the files on disk.
+"""
+
+import hashlib
+import json
+import pathlib
+
+import pytest
+
+from compile.aot import export, lower_kernel, lower_layer, to_hlo_text
+from compile.shapes import KernelShape, LayerShape
+
+ARTIFACTS = pathlib.Path(__file__).resolve().parents[2] / "artifacts"
+
+SMALL = KernelShape(algo="amla", n1=2, sq=1, bucket=128, block_kv=64,
+                    dk=64, dv=64)
+
+
+def test_lower_kernel_produces_parseable_hlo():
+    lowered, inputs, outputs = lower_kernel(SMALL)
+    text = to_hlo_text(lowered)
+    assert text.startswith("HloModule")
+    assert "ENTRY" in text
+    # one parameter per declared input
+    assert sum(l.count("parameter(") for l in text.splitlines()) >= len(inputs)
+
+
+def test_lower_layer_produces_parseable_hlo():
+    s = LayerShape(n1=2, sq=1, bucket=128, block_kv=64, d_model=64,
+                   d_head=16, q_rank=32)
+    lowered, inputs, outputs = lower_layer(s)
+    text = to_hlo_text(lowered)
+    assert text.startswith("HloModule")
+    assert len(inputs) == 4 + 8  # x, caches, valid + 8 weights
+
+
+def test_export_writes_manifest(tmp_path):
+    manifest = export(tmp_path, [SMALL], [])
+    assert (tmp_path / "manifest.json").exists()
+    entry = manifest["artifacts"][0]
+    assert entry["name"] == SMALL.name
+    text = (tmp_path / entry["file"]).read_text()
+    assert hashlib.sha256(text.encode()).hexdigest() == entry["sha256"]
+    assert entry["flops_per_call"] == SMALL.flops()
+
+
+@pytest.mark.skipif(not (ARTIFACTS / "manifest.json").exists(),
+                    reason="run `make artifacts` first")
+def test_existing_manifest_consistent():
+    manifest = json.loads((ARTIFACTS / "manifest.json").read_text())
+    assert manifest["format_version"] == 1
+    names = set()
+    for e in manifest["artifacts"]:
+        f = ARTIFACTS / e["file"]
+        assert f.exists(), e["file"]
+        assert hashlib.sha256(f.read_bytes()).hexdigest() == e["sha256"]
+        assert e["name"] not in names, "duplicate artifact name"
+        names.add(e["name"])
+        if e["kind"] == "kernel":
+            g = e["n1"] * e["sq"]
+            assert e["inputs"][0]["shape"] == [g, e["dk"]]
+            assert e["outputs"][0]["shape"] == [g, e["dv"]]

@@ -1,0 +1,67 @@
+"""Hypothesis sweeps: shapes / scales / valid-lengths for the AMLA kernel.
+
+Property: for any admissible configuration, AMLA(fp32) is allclose to the
+Golden oracle, and AMLA(bf16) tracks Base(bf16) — i.e. the MUL-by-ADD
+rescale introduces no error beyond mixed-precision matmuls.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import amla_attention, base_attention, golden_attention
+from tests.conftest import rel_err
+
+
+def _inputs(seed, g, s2, dk, dv, scale):
+    rng = np.random.default_rng(seed)
+    return (jnp.asarray(rng.standard_normal((g, dk)) * scale, jnp.float32),
+            jnp.asarray(rng.standard_normal((s2, dk)) * scale, jnp.float32),
+            jnp.asarray(rng.standard_normal((s2, dv)) * scale, jnp.float32))
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    n1=st.sampled_from([2, 4, 8]),
+    sq=st.sampled_from([1, 2]),
+    nblk=st.integers(1, 4),
+    block=st.sampled_from([64, 128]),
+    dk=st.sampled_from([64, 192, 576]),
+    dv=st.sampled_from([64, 512]),
+    scale=st.sampled_from([0.1, 1.0, 5.0]),
+)
+def test_amla_fp32_vs_golden(seed, n1, sq, nblk, block, dk, dv, scale):
+    g, s2 = n1 * sq, nblk * block
+    q, k, v = _inputs(seed, g, s2, dk, dv, scale)
+    out = amla_attention(q, k, v, block_kv=block, n1=n1, sq=sq,
+                         mixed_bf16=False)
+    gold = golden_attention(q, k, v, n1=n1, sq=sq)
+    assert rel_err(out, gold) < 1e-5
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    valid_frac=st.floats(0.05, 1.0),
+    nblk=st.integers(2, 4),
+)
+def test_amla_valid_len_property(seed, valid_frac, nblk):
+    g, block, dk, dv = 8, 128, 192, 128
+    s2 = nblk * block
+    valid = max(1, int(valid_frac * s2))
+    q, k, v = _inputs(seed, g, s2, dk, dv, 1.0)
+    out = amla_attention(q, k, v, valid, block_kv=block, mixed_bf16=False)
+    gold = golden_attention(q[:, :], k[:valid], v[:valid])
+    assert rel_err(out, gold) < 1e-5
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), scale=st.sampled_from([0.5, 2.0]))
+def test_amla_tracks_base_bf16(seed, scale):
+    q, k, v = _inputs(seed, 8, 512, 576, 512, scale)
+    a = amla_attention(q, k, v, block_kv=128, mixed_bf16=True)
+    b = base_attention(q, k, v, block_kv=128, mixed_bf16=True)
+    # both carry BF16 matmul noise; they must agree within that noise
+    assert rel_err(a, b) < 5e-3

@@ -1,0 +1,98 @@
+"""Tests for Lemma 3.1: F * 2^n == AS_FP32(AS_INT32(F) + n * 2^23).
+
+The lemma is the paper's load-bearing numerical fact; we pin it both with
+targeted cases and a hypothesis sweep over floats and exponent offsets,
+including the boundary conditions (-E < n < 255 - E) it requires.
+"""
+
+import math
+import struct
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+EXP_ONE = 1 << 23
+
+
+def as_int32(f: float) -> int:
+    return struct.unpack("<i", struct.pack("<f", np.float32(f)))[0]
+
+
+def as_fp32(i: int) -> float:
+    return struct.unpack("<f", struct.pack("<i", np.int32(i)))[0]
+
+
+def exponent_field(f: float) -> int:
+    return (as_int32(f) >> 23) & 0xFF
+
+
+def lemma_mul(f: float, n: int) -> float:
+    """Multiply by 2^n via the INT32 exponent add (Eq. 8)."""
+    return as_fp32(as_int32(f) + n * EXP_ONE)
+
+
+@pytest.mark.parametrize("f", [1.0, -1.0, 3.14159, -2.5e-3, 1e20, -7e-15,
+                               1.9999998807907104, 0.333251953125])
+@pytest.mark.parametrize("n", [-30, -10, -1, 0, 1, 10, 30])
+def test_lemma_exact_cases(f, n):
+    e = exponent_field(f)
+    if not (-e < n < 255 - e):
+        pytest.skip("n outside lemma validity range")
+    expected = np.float32(f) * np.float32(2.0 ** n)
+    assert lemma_mul(f, n) == expected
+    # bit-pattern equality, not just value equality
+    assert as_int32(lemma_mul(f, n)) == as_int32(float(expected))
+
+
+@settings(max_examples=500, deadline=None)
+@given(
+    f=st.floats(min_value=1.0000000031710769e-30, max_value=1.0000000150474662e+30, allow_nan=False,
+                allow_infinity=False, allow_subnormal=False, width=32),
+    sign=st.sampled_from([1.0, -1.0]),
+    n=st.integers(min_value=-60, max_value=60),
+)
+def test_lemma_hypothesis(f, sign, n):
+    f = sign * f
+    e = exponent_field(f)
+    if not (0 < e + n < 255):
+        return  # outside the lemma's validity range
+    got = lemma_mul(f, n)
+    expected = float(np.float32(f) * np.float32(math.ldexp(1.0, n)))
+    assert as_int32(got) == as_int32(expected)
+
+
+def test_lemma_validity_boundary():
+    """Outside -E < n < 255 - E the trick must NOT be trusted: adding past
+    the exponent range walks into inf/NaN or subnormal bit patterns."""
+    f = 1.0  # E = 127
+    # n = 128 pushes E to 255 -> inf bit pattern territory
+    corrupted = lemma_mul(f, 128)
+    assert math.isinf(corrupted) or math.isnan(corrupted)
+
+
+def test_zero_is_not_rescalable():
+    """0x00000000 has E = 0; an exponent add fabricates a bogus value.
+    This pins why the kernel guards zero accumulator elements."""
+    assert lemma_mul(0.0, 3) != 0.0
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.floats(min_value=9.999999682655225e-21, max_value=1.0000000200408773e+20, allow_nan=False,
+                 allow_infinity=False, allow_subnormal=False, width=32),
+       st.integers(min_value=-20, max_value=20))
+def test_lemma_vectorized_matches_scalar(f, n):
+    """The jnp bitcast path used by the kernel agrees with struct packing."""
+    import jax
+    import jax.numpy as jnp
+    arr = jnp.array([f, -f, f * 3], jnp.float32)
+    e_min = min(exponent_field(float(x)) for x in np.asarray(arr))
+    e_max = max(exponent_field(float(x)) for x in np.asarray(arr))
+    if not (0 < e_min + n and e_max + n < 255):
+        return
+    i = jax.lax.bitcast_convert_type(arr, jnp.int32) + n * EXP_ONE
+    got = np.asarray(jax.lax.bitcast_convert_type(i, jnp.float32))
+    want = np.asarray([lemma_mul(float(x), n) for x in np.asarray(arr)],
+                      np.float32)
+    assert np.array_equal(got, want)

@@ -1,0 +1,112 @@
+"""L2 model tests: absorbed MLA decode layer vs the dense non-absorbed
+reference, cache-update semantics, RoPE properties."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.model import (
+    MlaConfig,
+    WEIGHT_SPECS,
+    apply_rope,
+    init_weights,
+    mla_decode_layer,
+    mla_decode_step,
+    project_kv,
+    reference_decode_layer,
+    rope_tables,
+)
+from tests.conftest import rel_err
+
+CFG = MlaConfig(d_model=256, n1=4, sq=1, block_kv=128)
+
+
+def make_state(cfg, s2=256, seed=5, scale=0.1):
+    rng = np.random.default_rng(seed)
+    w = init_weights(cfg, seed)
+    x = jnp.asarray(rng.standard_normal((cfg.sq, cfg.d_model)), jnp.float32)
+    c = jnp.asarray(rng.standard_normal((s2, cfg.d_latent)) * scale,
+                    jnp.float32)
+    kr = jnp.asarray(rng.standard_normal((s2, cfg.d_rope)) * scale,
+                     jnp.float32)
+    return w, x, c, kr
+
+
+@pytest.mark.parametrize("sq", [1, 2])
+@pytest.mark.parametrize("valid", [60, 100, 256])
+def test_layer_matches_dense_reference(sq, valid):
+    cfg = MlaConfig(d_model=256, n1=4, sq=sq, block_kv=128)
+    w, x, c, kr = make_state(cfg)
+    y, c2, kr2 = mla_decode_step(x, c, kr, jnp.int32(valid), w, cfg)
+    y_ref = reference_decode_layer(x, c2, kr2, jnp.int32(valid), w, cfg)
+    assert rel_err(y, y_ref) < 1e-2  # bf16 kernel vs fp32 dense
+
+
+def test_layer_algo_swap_consistency():
+    """amla and base kernels must be interchangeable inside the layer."""
+    w, x, c, kr = make_state(CFG)
+    valid = jnp.int32(200)
+    y_a, _, _ = mla_decode_step(x, c, kr, valid, w, CFG)
+    cfg_b = MlaConfig(**{**CFG.__dict__, "algo": "base"})
+    y_b, _, _ = mla_decode_step(x, c, kr, valid, w, cfg_b)
+    assert rel_err(y_a, y_b) < 5e-3
+
+
+def test_cache_update_writes_only_new_rows():
+    w, x, c, kr = make_state(CFG)
+    valid = 100
+    _, c2, kr2 = mla_decode_step(x, c, kr, jnp.int32(valid), w, CFG)
+    c2, kr2 = np.asarray(c2), np.asarray(kr2)
+    # all rows except valid-1 unchanged
+    np.testing.assert_array_equal(c2[: valid - 1], np.asarray(c)[: valid - 1])
+    np.testing.assert_array_equal(c2[valid:], np.asarray(c)[valid:])
+    assert not np.array_equal(c2[valid - 1], np.asarray(c)[valid - 1])
+    np.testing.assert_array_equal(kr2[valid:], np.asarray(kr)[valid:])
+
+
+def test_project_kv_matches_step_rows():
+    w, x, c, kr = make_state(CFG)
+    valid = jnp.int32(77)
+    c_new, kr_new = project_kv(x, valid, w, CFG)
+    _, c2, kr2 = mla_decode_step(x, c, kr, valid, w, CFG)
+    np.testing.assert_allclose(np.asarray(c2)[76], np.asarray(c_new)[0],
+                               rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(kr2)[76], np.asarray(kr_new)[0],
+                               rtol=1e-6)
+
+
+def test_rope_preserves_norm():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((5, 64)), jnp.float32)
+    cos, sin = rope_tables(jnp.arange(5, dtype=jnp.int32) * 17, 64)
+    y = apply_rope(x, cos, sin)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(y), axis=-1),
+                               np.linalg.norm(np.asarray(x), axis=-1),
+                               rtol=1e-5)
+
+
+def test_rope_relative_position_property():
+    """<rope(q, p1), rope(k, p2)> depends only on p1 - p2."""
+    rng = np.random.default_rng(2)
+    q = jnp.asarray(rng.standard_normal((1, 64)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 64)), jnp.float32)
+
+    def dot_at(p1, p2):
+        cq, sq_ = rope_tables(jnp.array([p1], jnp.int32), 64)
+        ck, sk = rope_tables(jnp.array([p2], jnp.int32), 64)
+        return float(jnp.sum(apply_rope(q, cq, sq_) * apply_rope(k, ck, sk)))
+
+    assert abs(dot_at(10, 3) - dot_at(27, 20)) < 1e-3
+
+
+def test_weight_specs_shapes():
+    w = init_weights(CFG)
+    for name, shape_fn in WEIGHT_SPECS.items():
+        assert w[name].shape == shape_fn(CFG), name
+
+
+def test_layer_deterministic():
+    w, x, c, kr = make_state(CFG)
+    y1, _, _ = mla_decode_step(x, c, kr, jnp.int32(100), w, CFG)
+    y2, _, _ = mla_decode_step(x, c, kr, jnp.int32(100), w, CFG)
+    np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2))

@@ -1,0 +1,53 @@
+"""Pin the §3.1 motivation: the naive Eq. (3) transformation overflows.
+
+``exp(m)`` exceeds FP32 range for m > ~88, so the unsafe accumulation
+produces inf/NaN on inputs AMLA and Base handle exactly.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+from compile.kernels import (
+    amla_attention,
+    golden_attention,
+    naive_unsafe_attention,
+)
+from tests.conftest import rel_err
+
+
+def big_inputs(seed=0, g=8, s2=256, dk=576, dv=512):
+    rng = np.random.default_rng(seed)
+    # score ~ q.k/sqrt(dk); with entries ~ U(10,12) scores far exceed 88
+    q = jnp.asarray(rng.uniform(10, 12, (g, dk)), jnp.float32)
+    k = jnp.asarray(rng.uniform(10, 12, (s2, dk)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((s2, dv)), jnp.float32)
+    return q, k, v
+
+
+def test_naive_overflows():
+    q, k, v = big_inputs()
+    out = np.asarray(naive_unsafe_attention(q, k, v))
+    assert not np.all(np.isfinite(out)), \
+        "naive Eq.(3) should overflow on large scores"
+
+
+def test_amla_survives_where_naive_fails():
+    q, k, v = big_inputs()
+    out = amla_attention(q, k, v, block_kv=128, mixed_bf16=False)
+    assert np.all(np.isfinite(np.asarray(out)))
+    # Scores here are ~2900, where even the fp32 QK^T of the *golden*
+    # carries ~1e-3 absolute score noise; 5e-3 output tolerance is the
+    # fp32 floor for this regime, not an AMLA artifact.
+    assert rel_err(out, golden_attention(q, k, v)) < 5e-3
+
+
+def test_naive_ok_on_small_scores():
+    """On benign inputs all three agree — the failure is strictly a range
+    issue, not a math error in Eq. (3)."""
+    rng = np.random.default_rng(1)
+    q = jnp.asarray(rng.standard_normal((8, 64)) * 0.1, jnp.float32)
+    k = jnp.asarray(rng.standard_normal((128, 64)) * 0.1, jnp.float32)
+    v = jnp.asarray(rng.standard_normal((128, 32)), jnp.float32)
+    naive = naive_unsafe_attention(q, k, v)
+    gold = golden_attention(q, k, v)
+    assert rel_err(naive, gold) < 1e-5

@@ -1,0 +1,112 @@
+//! L3 coordinator benchmarks: serving throughput across batch/worker
+//! configurations (host substrate — no PJRT variance), paged-cache
+//! operations, and batcher overhead.
+//!
+//! This is the §Perf L3 target: the coordinator must not be the
+//! bottleneck; the serving loop's non-kernel overhead per token is the
+//! number to watch.
+
+use amla::bench_util::{bb, Bench};
+use amla::config::{Algo, ServeConfig};
+use amla::coordinator::{serve, Batcher, DecodeEngine, DecodeRequest,
+                        HostLayerExecutor};
+use amla::kvcache::{PagePool, SequenceCache};
+use amla::numerics::mla::MlaDims;
+
+fn dims() -> MlaDims {
+    MlaDims { d_model: 64, n1: 2, d_head: 16, q_rank: 32, d_latent: 24,
+              d_rope: 8, sq: 1 }
+}
+
+fn engine() -> DecodeEngine<HostLayerExecutor> {
+    DecodeEngine::new(
+        HostLayerExecutor::new(dims(), 2, Algo::Amla, 64, vec![64, 128], 3),
+        512, 16)
+}
+
+fn main() {
+    let mut b = Bench::new("coordinator");
+
+    // serving throughput across (batch, workers)
+    println!("host-substrate serving throughput:");
+    for (max_batch, workers) in [(1usize, 1usize), (4, 1), (4, 4), (8, 4)] {
+        let eng = engine();
+        let cfg = ServeConfig { max_batch, workers, pool_pages: 512,
+                                page_size: 16, ..ServeConfig::default() };
+        let reqs: Vec<_> = (0..8u64)
+            .map(|i| DecodeRequest::new(i, vec![1, 2, 3], 6))
+            .collect();
+        let t0 = std::time::Instant::now();
+        let report = serve(&eng, reqs, &cfg).unwrap();
+        println!("  batch {max_batch} workers {workers}: {:.0} tok/s \
+                  ({} tokens in {:.2?})",
+                 report.metrics.tokens_generated as f64
+                     / t0.elapsed().as_secs_f64(),
+                 report.metrics.tokens_generated, t0.elapsed());
+    }
+
+    // single decode step cost (host substrate)
+    {
+        let eng = engine();
+        let mut rt = amla::coordinator::engine::SeqRuntime::new(2);
+        let mut tok = 5u32;
+        b.bench("decode_step_host", || {
+            // reset when nearing the bucket limit
+            if rt.caches[0].len() > 100 {
+                let mut pool = eng.pool.lock().unwrap();
+                rt.free(&mut pool);
+                drop(pool);
+                rt = amla::coordinator::engine::SeqRuntime::new(2);
+            }
+            tok = eng.step(&mut rt, bb(tok)).unwrap();
+            tok
+        });
+    }
+
+    // paged cache operations
+    {
+        let mut pool = PagePool::new(4096, 64, 512, 64);
+        let mut seq = SequenceCache::new();
+        let latent = vec![0.5f32; 512];
+        let rope = vec![0.25f32; 64];
+        b.bench("kvcache_append", || {
+            if seq.len() >= 2048 {
+                seq.free(&mut pool);
+            }
+            seq.append(&mut pool, bb(&latent), bb(&rope)).unwrap()
+        });
+        // ensure some content for materialize
+        while seq.len() < 1500 {
+            seq.append(&mut pool, &latent, &rope).unwrap();
+        }
+        let mut c = vec![0f32; 2048 * 512];
+        let mut kr = vec![0f32; 2048 * 64];
+        b.bench_throughput("kvcache_materialize/kv2048",
+                           (2048 * 512) as u64, || {
+            seq.materialize(&pool, 2048, &mut c, &mut kr);
+            c[0]
+        });
+    }
+
+    // batcher admission overhead
+    {
+        b.bench("batcher_admit_reap_cycle", || {
+            let mut batcher = Batcher::new(8, 100_000);
+            for i in 0..64u64 {
+                batcher.enqueue(DecodeRequest::new(i, vec![1, 2], 1));
+            }
+            let mut total = 0;
+            while !batcher.idle() {
+                total += batcher.admit();
+                for st in batcher.active_mut() {
+                    st.generated.push(1);
+                }
+                batcher.note_step();
+                batcher.reap();
+            }
+            total
+        });
+    }
+
+    b.finish();
+}

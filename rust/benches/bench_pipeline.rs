@@ -1,0 +1,41 @@
+//! E5 regenerator: preload-pipeline schedules (Figs 5–7) and the cost of
+//! schedule construction/simulation (it runs inside the kernel
+//! simulator's inner loop, so it must stay cheap).
+
+use amla::bench_util::{bb, Bench};
+use amla::pipeline::{simulate, CvChain, PipelineSchedule};
+use amla::report;
+
+fn main() {
+    println!("{}", report::render_pipeline_demo());
+
+    // Fig 5/6-style comparison across chain sizes
+    println!("makespan: serialized vs preload (32 iterations):");
+    for n in [2usize, 3, 4, 6] {
+        let c: Vec<f64> = (0..n).map(|i| 8.0 + i as f64).collect();
+        let v: Vec<f64> = (0..n).map(|i| 2.0 + 0.3 * i as f64).collect();
+        let ch = CvChain::new(c, v);
+        let ser = simulate(&ch, &PipelineSchedule::serialized(&ch, 32));
+        let p = ch.optimal_rotation();
+        let pre = simulate(&ch, &PipelineSchedule::preload(&ch, p, 32));
+        println!("  n={n}: serialized {:8.1}  preload {:8.1}  speedup \
+                  {:.2}x  (preload count {})",
+                 ser.makespan, pre.makespan, ser.makespan / pre.makespan,
+                 PipelineSchedule::preload(&ch, p, 32).preload_count);
+    }
+
+    let mut b = Bench::new("pipeline");
+    let amla_chain = CvChain::amla_instance(10.0, 4.0, 9.0);
+    b.bench("optimal_rotation/n2", || {
+        bb(&amla_chain).optimal_rotation()
+    });
+    let big: CvChain = CvChain::new((0..16).map(|i| 5.0 + i as f64).collect(),
+                                    (0..16).map(|i| 1.0 + i as f64 * 0.1).collect());
+    b.bench("optimal_rotation/n16", || bb(&big).optimal_rotation());
+    b.bench("build_schedule/n2_iters256", || {
+        PipelineSchedule::preload(bb(&amla_chain), 1, 256)
+    });
+    let sched = PipelineSchedule::preload(&amla_chain, 1, 256);
+    b.bench("simulate/n2_iters256", || simulate(bb(&amla_chain), bb(&sched)));
+    b.finish();
+}

@@ -1,0 +1,75 @@
+//! Microbenchmark of the paper's core trick: output-block rescaling by
+//! integer addition (Lemma 3.1) vs floating-point multiplication.
+//!
+//! On Ascend the win is *architectural* (AtomicAdd in GM eliminates the
+//! GM↔UB round trip); on a CPU the integer add is at best on par with
+//! the FP multiply per element — what this bench pins is that the
+//! MUL-by-ADD path costs no more than the multiply while enabling the
+//! in-memory update, plus the cost of the guarded (zero-safe) variant
+//! and the full AMLA-vs-Base recurrence at paper shape.
+
+use amla::bench_util::{bb, Bench};
+use amla::numerics::flash_base::{base_flash_attention, FlashConfig};
+use amla::numerics::fp32::{mul_pow2_by_add, rescale_add, rescale_row, EXP_ONE};
+use amla::numerics::amla::amla_attention;
+use amla::numerics::Rng;
+
+fn main() {
+    let mut b = Bench::new("rescale");
+    let mut rng = Rng::new(1);
+
+    for size in [512usize, 128 * 512] {
+        let base: Vec<f32> =
+            (0..size).map(|_| rng.gaussian().abs() + 0.1).collect();
+
+        // FP32 multiply (what [V2] does arithmetically)
+        let mut buf = base.clone();
+        b.bench_throughput(&format!("fp32_mul/{size}"), size as u64, || {
+            let alpha = bb(0.4406868f32); // exp(m_prev - m_new) style
+            for x in buf.iter_mut() {
+                *x *= alpha;
+            }
+            buf[0]
+        });
+
+        // unguarded integer exponent add (pure Lemma 3.1)
+        let mut buf = base.clone();
+        b.bench_throughput(&format!("int_add_unguarded/{size}"),
+                           size as u64, || {
+            let add = bb(-1i32) * EXP_ONE;
+            for x in buf.iter_mut() {
+                *x = mul_pow2_by_add(*x, add / EXP_ONE);
+            }
+            buf[0]
+        });
+
+        // production guarded rescale (zero-safe, as in the kernel)
+        let mut buf = base.clone();
+        b.bench_throughput(&format!("rescale_row_guarded/{size}"),
+                           size as u64, || {
+            rescale_row(&mut buf, bb(-1) * EXP_ONE);
+            buf[0]
+        });
+    }
+
+    // compensation-add computation itself
+    b.bench("rescale_add_compensated", || {
+        rescale_add(bb(-2), bb(0.0031f32))
+    });
+
+    // full recurrences at one paper-shaped head group, 1K context
+    let mut rng = Rng::new(2);
+    let q = rng.gaussian_matrix(128, 576, 1.0);
+    let k = rng.gaussian_matrix(1024, 576, 1.0);
+    let v = rng.gaussian_matrix(1024, 512, 1.0);
+    let cfg = FlashConfig { block_kv: 512, n1: 128, sq: 1, valid_len: 1024,
+                            mixed_bf16: false };
+    b.bench("amla_recurrence/g128_kv1024", || {
+        amla_attention(bb(&q), bb(&k), bb(&v), &cfg)
+    });
+    b.bench("base_recurrence/g128_kv1024", || {
+        base_flash_attention(bb(&q), bb(&k), bb(&v), &cfg)
+    });
+
+    b.finish();
+}

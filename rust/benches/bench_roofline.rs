@@ -1,0 +1,29 @@
+//! E1 regenerator: Table 2 + Fig 1 (arithmetic intensity / rooflines).
+
+use amla::bench_util::{bb, Bench};
+use amla::hardware::{Ascend910, GpuModel};
+use amla::report;
+use amla::roofline::{roofline_curve, roofline_points, AttentionVariant};
+
+fn main() {
+    println!("{}", report::render_table2());
+    println!("{}", report::render_fig1_both());
+
+    // Fig 1 curve data (for external plotting)
+    let acc = Ascend910::accelerator();
+    println!("roofline curve (Ascend 910), intensity -> TFLOPS:");
+    for (x, y) in roofline_curve(&acc, 16) {
+        println!("  {x:8.2} -> {:7.1}", y / 1e12);
+    }
+
+    let mut b = Bench::new("roofline");
+    b.bench("points_910", || roofline_points(&bb(Ascend910::accelerator())));
+    b.bench("points_gpu", || roofline_points(&bb(GpuModel::accelerator())));
+    b.bench("table2_intensities", || {
+        AttentionVariant::table2()
+            .iter()
+            .map(|v| v.intensity())
+            .sum::<f64>()
+    });
+    b.finish();
+}

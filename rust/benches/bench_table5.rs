@@ -1,0 +1,58 @@
+//! E4/E7 regenerator: Table 5 + Fig 10 from the performance simulators,
+//! plus (when artifacts exist) measured wall times of the actual
+//! CPU-PJRT kernels — the "our testbed" numbers EXPERIMENTS.md records
+//! alongside the simulated Ascend/GPU cells.
+
+use amla::bench_util::{bb, Bench};
+use amla::numerics::Rng;
+use amla::report;
+use amla::runtime::{Engine, TensorView};
+use amla::simulator::{simulate_910, KernelConfig};
+use amla::config::Algo;
+
+fn main() {
+    println!("{}", report::render_table5());
+    println!("{}", report::render_fig10());
+
+    let mut b = Bench::new("table5");
+    // simulator throughput itself (it sits on the coordinator's planning
+    // path, so it must be cheap)
+    b.bench("simulate_910/sq2_sk16384", || {
+        simulate_910(&KernelConfig::paper(2, 16384), bb(Algo::Amla))
+    });
+
+    // measured CPU-PJRT kernel wall times per bucket (real execution of
+    // the AOT artifacts; absolute numbers are CPU-bound, the *ratio*
+    // AMLA:Base is the claim)
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        let engine = Engine::new("artifacts").expect("engine");
+        let mut rng = Rng::new(3);
+        for bucket in [256usize, 512, 1024, 2048] {
+            if engine.registry().kernel_buckets("amla", 16, 1)
+                .iter().all(|&x| x != bucket) {
+                continue;
+            }
+            let q = rng.gaussian_matrix(16, 576, 1.0);
+            let k = rng.gaussian_matrix(bucket, 576, 1.0);
+            let v = rng.gaussian_matrix(bucket, 512, 1.0);
+            let valid = [bucket as i32];
+            for algo in ["amla", "base"] {
+                let kernel =
+                    engine.load_kernel_for(algo, 16, 1, bucket).unwrap();
+                b.bench(&format!("pjrt_{algo}/kv{bucket}"), || {
+                    kernel
+                        .run(&[
+                            TensorView::F32(&q.data, &[16, 576]),
+                            TensorView::F32(&k.data, &[bucket, 576]),
+                            TensorView::F32(&v.data, &[bucket, 512]),
+                            TensorView::I32(&valid, &[1]),
+                        ])
+                        .unwrap()
+                });
+            }
+        }
+    } else {
+        eprintln!("artifacts/ missing — skipping measured-PJRT section");
+    }
+    b.finish();
+}

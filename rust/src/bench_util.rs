@@ -1,0 +1,154 @@
+//! Mini benchmark harness — in-tree stand-in for `criterion`
+//! (offline build; see Cargo.toml note).
+//!
+//! Provides warmup + timed iterations with mean / median / p99 /
+//! throughput reporting, an allocation-free measurement loop, and a
+//! criterion-like fluent API so the bench files read conventionally:
+//!
+//! ```no_run
+//! let mut b = amla::bench_util::Bench::new("bench_rescale");
+//! b.bench("rescale_add/4096", || { /* hot code */ });
+//! b.finish();
+//! ```
+
+use std::hint::black_box;
+use std::time::{Duration, Instant};
+
+pub use std::hint::black_box as bb;
+
+/// One benchmark group; prints results as it goes and a summary table at
+/// the end (also written to `target/bench_results/<group>.txt`).
+pub struct Bench {
+    group: String,
+    warmup: Duration,
+    measure: Duration,
+    min_iters: u32,
+    results: Vec<(String, Stats)>,
+}
+
+/// Timing statistics over the measured iterations, in nanoseconds.
+#[derive(Debug, Clone, Copy)]
+pub struct Stats {
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub p99_ns: f64,
+    pub min_ns: f64,
+}
+
+impl Stats {
+    fn from_samples(mut ns: Vec<f64>) -> Self {
+        ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = ns.len();
+        Self {
+            iters: n as u64,
+            mean_ns: ns.iter().sum::<f64>() / n as f64,
+            median_ns: ns[n / 2],
+            p99_ns: ns[((n as f64 * 0.99) as usize).min(n - 1)],
+            min_ns: ns[0],
+        }
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1_000.0 {
+        format!("{ns:7.1} ns")
+    } else if ns < 1_000_000.0 {
+        format!("{:7.2} µs", ns / 1_000.0)
+    } else if ns < 1_000_000_000.0 {
+        format!("{:7.2} ms", ns / 1_000_000.0)
+    } else {
+        format!("{:7.2} s ", ns / 1_000_000_000.0)
+    }
+}
+
+impl Bench {
+    pub fn new(group: &str) -> Self {
+        // fast mode for CI smoke runs: AMLA_BENCH_FAST=1
+        let fast = std::env::var("AMLA_BENCH_FAST").is_ok();
+        Self {
+            group: group.to_string(),
+            warmup: if fast { Duration::from_millis(50) } else { Duration::from_millis(500) },
+            measure: if fast { Duration::from_millis(200) } else { Duration::from_secs(2) },
+            min_iters: 10,
+            results: Vec::new(),
+        }
+    }
+
+    /// Benchmark a closure; the closure's return value is black-boxed.
+    pub fn bench<R>(&mut self, name: &str, mut f: impl FnMut() -> R) {
+        // warmup
+        let t0 = Instant::now();
+        while t0.elapsed() < self.warmup {
+            black_box(f());
+        }
+        // measure
+        let mut samples = Vec::new();
+        let t1 = Instant::now();
+        while t1.elapsed() < self.measure || samples.len() < self.min_iters as usize {
+            let s = Instant::now();
+            black_box(f());
+            samples.push(s.elapsed().as_nanos() as f64);
+            if samples.len() > 2_000_000 {
+                break;
+            }
+        }
+        let stats = Stats::from_samples(samples);
+        println!("{:<44} mean {}  median {}  p99 {}  ({} iters)",
+                 format!("{}/{}", self.group, name), fmt_ns(stats.mean_ns),
+                 fmt_ns(stats.median_ns), fmt_ns(stats.p99_ns), stats.iters);
+        self.results.push((name.to_string(), stats));
+    }
+
+    /// Benchmark with a reported throughput denominator (elements/call).
+    pub fn bench_throughput<R>(&mut self, name: &str, elems: u64,
+                               f: impl FnMut() -> R) {
+        self.bench(name, f);
+        if let Some((_, s)) = self.results.last() {
+            let gops = elems as f64 / s.median_ns;
+            println!("{:<44} throughput {gops:.3} Gelem/s",
+                     format!("{}/{}", self.group, name));
+        }
+    }
+
+    /// Last result (for in-bench assertions / comparisons).
+    pub fn last_stats(&self) -> Option<&Stats> {
+        self.results.last().map(|(_, s)| s)
+    }
+
+    /// Write the summary file and return the results.
+    pub fn finish(self) -> Vec<(String, Stats)> {
+        let dir = std::path::Path::new("target/bench_results");
+        let _ = std::fs::create_dir_all(dir);
+        let mut out = String::new();
+        out.push_str(&format!("# {}\n", self.group));
+        for (name, s) in &self.results {
+            out.push_str(&format!(
+                "{name}\tmean_ns={:.1}\tmedian_ns={:.1}\tp99_ns={:.1}\tmin_ns={:.1}\titers={}\n",
+                s.mean_ns, s.median_ns, s.p99_ns, s.min_ns, s.iters));
+        }
+        let _ = std::fs::write(dir.join(format!("{}.txt", self.group)), out);
+        self.results
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_ordering() {
+        let s = Stats::from_samples(vec![3.0, 1.0, 2.0, 10.0]);
+        assert_eq!(s.min_ns, 1.0);
+        assert!(s.median_ns >= s.min_ns);
+        assert!(s.p99_ns >= s.median_ns);
+        assert_eq!(s.iters, 4);
+    }
+
+    #[test]
+    fn fmt_scales() {
+        assert!(fmt_ns(12.0).contains("ns"));
+        assert!(fmt_ns(12_000.0).contains("µs"));
+        assert!(fmt_ns(12_000_000.0).contains("ms"));
+    }
+}

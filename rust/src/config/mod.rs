@@ -1,0 +1,202 @@
+//! Serving/runtime configuration and a dependency-free CLI parser.
+//!
+//! The launcher (`amla serve|simulate|reproduce|accuracy|roofline|
+//! pipeline`) reads flags of the form `--key value` / `--flag`; this
+//! module owns the schema.  In-tree stand-in for `clap` (offline build).
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+/// Which attention algorithm the engine serves.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Algo {
+    Amla,
+    Base,
+}
+
+impl Algo {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Algo::Amla => "amla",
+            Algo::Base => "base",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "amla" => Ok(Algo::Amla),
+            "base" => Ok(Algo::Base),
+            other => bail!("unknown algo `{other}` (expected amla|base)"),
+        }
+    }
+}
+
+/// Configuration of the decode-serving stack.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Directory containing `manifest.json` + HLO artifacts.
+    pub artifact_dir: String,
+    /// Attention algorithm to serve.
+    pub algo: Algo,
+    /// Query heads (must match an artifact family).
+    pub n1: usize,
+    /// Query positions per step (1 = decode, 2 = MTP).
+    pub sq: usize,
+    /// Max concurrent sequences in one batch step.
+    pub max_batch: usize,
+    /// Page size (rows) of the latent-KV pool.
+    pub page_size: usize,
+    /// Total pages in the latent-KV pool.
+    pub pool_pages: usize,
+    /// Worker threads executing attention calls.
+    pub workers: usize,
+    /// Per-request cap on generated tokens.
+    pub max_new_tokens: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self {
+            artifact_dir: "artifacts".into(),
+            algo: Algo::Amla,
+            n1: 16,
+            sq: 1,
+            max_batch: 8,
+            page_size: 64,
+            pool_pages: 512,
+            workers: std::thread::available_parallelism()
+                .map(|n| n.get().min(8))
+                .unwrap_or(4),
+            max_new_tokens: 64,
+        }
+    }
+}
+
+impl ServeConfig {
+    /// Apply `--key value` overrides from parsed CLI args.
+    pub fn apply_args(&mut self, args: &Args) -> Result<()> {
+        if let Some(v) = args.get("artifacts") {
+            self.artifact_dir = v.clone();
+        }
+        if let Some(v) = args.get("algo") {
+            self.algo = Algo::parse(v)?;
+        }
+        macro_rules! num_field {
+            ($key:literal, $field:expr) => {
+                if let Some(v) = args.get($key) {
+                    $field = v.parse()
+                        .map_err(|_| anyhow!("--{}: bad number `{v}`", $key))?;
+                }
+            };
+        }
+        num_field!("n1", self.n1);
+        num_field!("sq", self.sq);
+        num_field!("max-batch", self.max_batch);
+        num_field!("page-size", self.page_size);
+        num_field!("pool-pages", self.pool_pages);
+        num_field!("workers", self.workers);
+        num_field!("max-new-tokens", self.max_new_tokens);
+        self.validate()
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if !(1..=2).contains(&self.sq) {
+            bail!("sq must be 1 or 2");
+        }
+        if self.max_batch == 0 || self.page_size == 0 || self.pool_pages == 0 {
+            bail!("max_batch, page_size, pool_pages must be positive");
+        }
+        Ok(())
+    }
+}
+
+/// Parsed command line: positional words + `--key value` / `--flag` pairs.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argv tokens (without the binary name).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Self {
+        let mut out = Args::default();
+        let mut iter = argv.into_iter().peekable();
+        while let Some(tok) = iter.next() {
+            if let Some(key) = tok.strip_prefix("--") {
+                match iter.peek() {
+                    Some(next) if !next.starts_with("--") => {
+                        out.options.insert(key.to_string(),
+                                           iter.next().unwrap());
+                    }
+                    _ => out.flags.push(key.to_string()),
+                }
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&String> {
+        self.options.get(key)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.options.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{key}: bad number `{v}`")),
+        }
+    }
+
+    pub fn has_flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn parses_positional_options_flags() {
+        let a = args("serve --algo base --max-batch 16 --verbose");
+        assert_eq!(a.positional, vec!["serve"]);
+        assert_eq!(a.get("algo").unwrap(), "base");
+        assert_eq!(a.get_usize("max-batch", 1).unwrap(), 16);
+        assert!(a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn serve_config_overrides() {
+        let mut cfg = ServeConfig::default();
+        cfg.apply_args(&args("--algo base --n1 32 --max-batch 4")).unwrap();
+        assert_eq!(cfg.algo, Algo::Base);
+        assert_eq!(cfg.n1, 32);
+        assert_eq!(cfg.max_batch, 4);
+    }
+
+    #[test]
+    fn rejects_bad_values() {
+        let mut cfg = ServeConfig::default();
+        assert!(cfg.apply_args(&args("--algo nope")).is_err());
+        assert!(cfg.apply_args(&args("--sq 3")).is_err());
+        assert!(cfg.apply_args(&args("--max-batch abc")).is_err());
+    }
+
+    #[test]
+    fn negative_numbers_are_values_not_flags() {
+        let a = args("--offset -5");
+        assert_eq!(a.get("offset").unwrap(), "-5");
+    }
+}

@@ -1,0 +1,193 @@
+//! Continuous batcher: admission control over active decode slots.
+//!
+//! Classic continuous batching (Orca/vLLM): a bounded set of active
+//! sequences steps together; whenever one finishes, the next queued
+//! request is admitted immediately — no waiting for a full batch to
+//! drain.  Admission also respects the latent-pool budget: a request is
+//! only admitted if the pool can hold its prompt plus max generation.
+
+use std::collections::VecDeque;
+
+use crate::coordinator::request::{DecodeRequest, RequestState};
+
+/// Occupancy/throughput counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct BatcherStats {
+    pub admitted: u64,
+    pub completed: u64,
+    pub queued_peak: usize,
+    /// Sum over steps of active-batch sizes (for mean occupancy).
+    pub active_area: u64,
+    pub steps: u64,
+}
+
+impl BatcherStats {
+    pub fn mean_occupancy(&self) -> f64 {
+        if self.steps == 0 {
+            0.0
+        } else {
+            self.active_area as f64 / self.steps as f64
+        }
+    }
+}
+
+/// Admission queue + active set.
+pub struct Batcher {
+    max_batch: usize,
+    /// Pages still unreserved in the latent pool (admission budget).
+    free_rows: usize,
+    queue: VecDeque<DecodeRequest>,
+    active: Vec<RequestState>,
+    stats: BatcherStats,
+}
+
+impl Batcher {
+    pub fn new(max_batch: usize, pool_rows: usize) -> Self {
+        Self { max_batch, free_rows: pool_rows, queue: VecDeque::new(),
+               active: Vec::new(), stats: BatcherStats::default() }
+    }
+
+    pub fn enqueue(&mut self, req: DecodeRequest) {
+        self.queue.push_back(req);
+        self.stats.queued_peak = self.stats.queued_peak.max(self.queue.len());
+    }
+
+    fn rows_needed(req: &DecodeRequest) -> usize {
+        req.prompt.len() + req.max_new_tokens
+    }
+
+    /// Move queued requests into the active set while slots + pool rows
+    /// allow.  Returns how many were admitted.
+    pub fn admit(&mut self) -> usize {
+        let mut n = 0;
+        while self.active.len() < self.max_batch {
+            let Some(front) = self.queue.front() else { break };
+            let need = Self::rows_needed(front);
+            if need > self.free_rows {
+                break; // head-of-line blocking by design: FIFO fairness
+            }
+            let req = self.queue.pop_front().unwrap();
+            self.free_rows -= need;
+            let mut st = RequestState::new(req);
+            st.started_at = Some(std::time::Instant::now());
+            self.active.push(st);
+            self.stats.admitted += 1;
+            n += 1;
+        }
+        n
+    }
+
+    /// Current active sequences (mutable for the step loop).
+    pub fn active_mut(&mut self) -> &mut [RequestState] {
+        &mut self.active
+    }
+
+    pub fn active_len(&self) -> usize {
+        self.active.len()
+    }
+
+    pub fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Record one global step over the current active set.
+    pub fn note_step(&mut self) {
+        self.stats.steps += 1;
+        self.stats.active_area += self.active.len() as u64;
+    }
+
+    /// Remove finished sequences, returning them; their pool budget is
+    /// released for future admissions.
+    pub fn reap(&mut self) -> Vec<RequestState> {
+        let mut done = Vec::new();
+        let mut i = 0;
+        while i < self.active.len() {
+            if self.active[i].done() {
+                let st = self.active.swap_remove(i);
+                self.free_rows += Self::rows_needed(&st.request);
+                self.stats.completed += 1;
+                done.push(st);
+            } else {
+                i += 1;
+            }
+        }
+        done
+    }
+
+    pub fn idle(&self) -> bool {
+        self.active.is_empty() && self.queue.is_empty()
+    }
+
+    pub fn stats(&self) -> BatcherStats {
+        self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, prompt: usize, gen: usize) -> DecodeRequest {
+        DecodeRequest::new(id, vec![1; prompt], gen)
+    }
+
+    #[test]
+    fn admits_up_to_max_batch() {
+        let mut b = Batcher::new(2, 1000);
+        for i in 0..5 {
+            b.enqueue(req(i, 4, 4));
+        }
+        assert_eq!(b.admit(), 2);
+        assert_eq!(b.active_len(), 2);
+        assert_eq!(b.queue_len(), 3);
+    }
+
+    #[test]
+    fn continuous_refill_on_completion() {
+        let mut b = Batcher::new(2, 1000);
+        for i in 0..3 {
+            b.enqueue(req(i, 2, 1));
+        }
+        b.admit();
+        // finish one sequence
+        b.active_mut()[0].generated.push(7);
+        let done = b.reap();
+        assert_eq!(done.len(), 1);
+        assert_eq!(b.admit(), 1); // slot refilled immediately
+        assert_eq!(b.active_len(), 2);
+    }
+
+    #[test]
+    fn pool_budget_blocks_admission() {
+        let mut b = Batcher::new(8, 10);
+        b.enqueue(req(0, 4, 4)); // needs 8
+        b.enqueue(req(1, 4, 4)); // needs 8 > remaining 2
+        assert_eq!(b.admit(), 1);
+        assert_eq!(b.queue_len(), 1);
+        // finishing the first releases budget
+        b.active_mut()[0].generated.extend([1, 1, 1, 1]);
+        b.reap();
+        assert_eq!(b.admit(), 1);
+    }
+
+    #[test]
+    fn fifo_order_preserved() {
+        let mut b = Batcher::new(1, 1000);
+        b.enqueue(req(10, 2, 1));
+        b.enqueue(req(11, 2, 1));
+        b.admit();
+        assert_eq!(b.active_mut()[0].request.id, 10);
+    }
+
+    #[test]
+    fn occupancy_accounting() {
+        let mut b = Batcher::new(4, 1000);
+        for i in 0..4 {
+            b.enqueue(req(i, 2, 2));
+        }
+        b.admit();
+        b.note_step();
+        b.note_step();
+        assert_eq!(b.stats().mean_occupancy(), 4.0);
+    }
+}

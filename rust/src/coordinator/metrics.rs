@@ -1,0 +1,125 @@
+//! Serving metrics: counters + latency histogram, dumped in a
+//! Prometheus-like text format.
+
+use std::time::Duration;
+
+/// Fixed log-scale latency histogram (1 µs … ~134 s).
+#[derive(Debug, Clone)]
+pub struct LatencyHisto {
+    /// bucket i counts samples in [2^i, 2^{i+1}) µs
+    buckets: Vec<u64>,
+    count: u64,
+    sum_us: f64,
+}
+
+impl LatencyHisto {
+    pub fn new() -> Self {
+        Self { buckets: vec![0; 28], count: 0, sum_us: 0.0 }
+    }
+
+    pub fn record(&mut self, d: Duration) {
+        let us = d.as_secs_f64() * 1e6;
+        self.sum_us += us;
+        self.count += 1;
+        let idx = (us.max(1.0).log2() as usize).min(self.buckets.len() - 1);
+        self.buckets[idx] += 1;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        if self.count == 0 { 0.0 } else { self.sum_us / self.count as f64 }
+    }
+
+    /// Approximate quantile from the log buckets (upper bound of bucket).
+    pub fn quantile_us(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = (q * self.count as f64).ceil() as u64;
+        let mut acc = 0;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return 2f64.powi(i as i32 + 1);
+            }
+        }
+        f64::INFINITY
+    }
+}
+
+impl Default for LatencyHisto {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Aggregate serving metrics.
+#[derive(Debug, Default, Clone)]
+pub struct Metrics {
+    pub requests_completed: u64,
+    pub tokens_generated: u64,
+    pub steps: u64,
+    pub step_latency: LatencyHisto,
+    pub token_latency: LatencyHisto,
+    pub wall_time: Duration,
+}
+
+impl Metrics {
+    pub fn tokens_per_sec(&self) -> f64 {
+        let secs = self.wall_time.as_secs_f64();
+        if secs == 0.0 { 0.0 } else { self.tokens_generated as f64 / secs }
+    }
+
+    /// Prometheus-style exposition text.
+    pub fn render(&self) -> String {
+        format!(
+            "# TYPE amla_requests_completed counter\n\
+             amla_requests_completed {}\n\
+             # TYPE amla_tokens_generated counter\n\
+             amla_tokens_generated {}\n\
+             # TYPE amla_steps counter\n\
+             amla_steps {}\n\
+             # TYPE amla_step_latency_us summary\n\
+             amla_step_latency_us{{q=\"0.5\"}} {:.0}\n\
+             amla_step_latency_us{{q=\"0.99\"}} {:.0}\n\
+             amla_step_latency_us_mean {:.0}\n\
+             # TYPE amla_throughput_tokens_per_s gauge\n\
+             amla_throughput_tokens_per_s {:.2}\n",
+            self.requests_completed, self.tokens_generated, self.steps,
+            self.step_latency.quantile_us(0.5),
+            self.step_latency.quantile_us(0.99),
+            self.step_latency.mean_us(),
+            self.tokens_per_sec())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_quantiles_ordered() {
+        let mut h = LatencyHisto::new();
+        for us in [10u64, 20, 40, 80, 5000, 100, 60, 30] {
+            h.record(Duration::from_micros(us));
+        }
+        assert_eq!(h.count(), 8);
+        assert!(h.quantile_us(0.5) <= h.quantile_us(0.99));
+        assert!(h.mean_us() > 0.0);
+    }
+
+    #[test]
+    fn render_contains_counters() {
+        let mut m = Metrics::default();
+        m.requests_completed = 3;
+        m.tokens_generated = 120;
+        m.wall_time = Duration::from_secs(2);
+        let text = m.render();
+        assert!(text.contains("amla_requests_completed 3"));
+        assert!(text.contains("amla_tokens_generated 120"));
+        assert!(text.contains("amla_throughput_tokens_per_s 60.00"));
+    }
+}

@@ -1,0 +1,36 @@
+//! L3 decode-serving coordinator.
+//!
+//! The serving shape of the paper's contribution: AMLA is a decode
+//! kernel, so the coordinator is a vLLM-style decode loop with the
+//! kernel as its hot path:
+//!
+//! ```text
+//! requests → [batcher: admission + continuous batching]
+//!          → [scheduler: worker threads, one decode step per sequence]
+//!          → [engine: N-layer MLA model over PJRT layer executables]
+//!          → [kvcache: paged latent pool, bucket materialization]
+//!          → streamed tokens + metrics
+//! ```
+//!
+//! Python never appears here — the executables were AOT-compiled by
+//! `make artifacts`.  The stack is generic over [`engine::LayerExecutor`]
+//! so integration tests can run the identical coordinator against the
+//! bit-exact Rust numerics instead of PJRT (mock-substrate testing), and
+//! the std-thread scheduler stands in for the unavailable tokio runtime
+//! (offline build; see Cargo.toml note).
+
+pub mod batcher;
+pub mod engine;
+pub mod metrics;
+pub mod request;
+pub mod scheduler;
+pub mod workload;
+
+pub use batcher::{Batcher, BatcherStats};
+pub use engine::{DecodeEngine, HostLayerExecutor, LayerExecutor,
+                 PjrtLayerExecutor};
+pub use metrics::Metrics;
+pub use request::{DecodeRequest, DecodeResult, RequestId, RequestState};
+pub use scheduler::{serve, ServeReport};
+pub use workload::{generate_trace, requests_of, LenDist, TracedRequest,
+                   WorkloadSpec};

@@ -1,0 +1,115 @@
+//! Request / result types of the decode service.
+
+use std::time::Instant;
+
+pub type RequestId = u64;
+
+/// An inbound decode request.  The serving demo has no tokenizer; a
+/// "prompt" is a list of token ids that the engine embeds
+/// deterministically (hash-based), which is all the attention stack
+/// cares about.
+#[derive(Debug, Clone)]
+pub struct DecodeRequest {
+    pub id: RequestId,
+    pub prompt: Vec<u32>,
+    pub max_new_tokens: usize,
+}
+
+impl DecodeRequest {
+    pub fn new(id: RequestId, prompt: Vec<u32>, max_new_tokens: usize) -> Self {
+        assert!(!prompt.is_empty(), "empty prompt");
+        Self { id, prompt, max_new_tokens }
+    }
+}
+
+/// Lifecycle of a request inside the coordinator.
+#[derive(Debug)]
+pub struct RequestState {
+    pub request: DecodeRequest,
+    pub generated: Vec<u32>,
+    pub enqueued_at: Instant,
+    pub started_at: Option<Instant>,
+    /// Per-token decode latencies (s).
+    pub token_latencies: Vec<f64>,
+}
+
+impl RequestState {
+    pub fn new(request: DecodeRequest) -> Self {
+        Self { request, generated: Vec::new(), enqueued_at: Instant::now(),
+               started_at: None, token_latencies: Vec::new() }
+    }
+
+    pub fn done(&self) -> bool {
+        self.generated.len() >= self.request.max_new_tokens
+    }
+
+    /// Context length after prefill + generation so far.
+    pub fn context_len(&self) -> usize {
+        self.request.prompt.len() + self.generated.len()
+    }
+}
+
+/// Final outcome returned to the client.
+#[derive(Debug, Clone)]
+pub struct DecodeResult {
+    pub id: RequestId,
+    pub tokens: Vec<u32>,
+    /// Queueing delay before the first decode step (s).
+    pub queue_delay: f64,
+    /// Time-to-first-token from enqueue (s).
+    pub ttft: f64,
+    /// Mean inter-token latency (s).
+    pub mean_tpot: f64,
+    pub p99_tpot: f64,
+}
+
+impl DecodeResult {
+    pub fn from_state(st: &RequestState) -> Self {
+        let mut lats = st.token_latencies.clone();
+        lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = if lats.is_empty() { 0.0 } else {
+            lats.iter().sum::<f64>() / lats.len() as f64
+        };
+        let p99 = lats
+            .get(((lats.len() as f64 * 0.99) as usize).min(lats.len().saturating_sub(1)))
+            .copied()
+            .unwrap_or(0.0);
+        let started = st.started_at.unwrap_or(st.enqueued_at);
+        Self {
+            id: st.request.id,
+            tokens: st.generated.clone(),
+            queue_delay: started.duration_since(st.enqueued_at).as_secs_f64(),
+            ttft: st.token_latencies.first().copied().unwrap_or(0.0)
+                + started.duration_since(st.enqueued_at).as_secs_f64(),
+            mean_tpot: mean,
+            p99_tpot: p99,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn state_lifecycle() {
+        let mut st = RequestState::new(DecodeRequest::new(1, vec![1, 2, 3], 2));
+        assert!(!st.done());
+        assert_eq!(st.context_len(), 3);
+        st.generated.push(42);
+        st.token_latencies.push(0.01);
+        st.generated.push(43);
+        st.token_latencies.push(0.02);
+        assert!(st.done());
+        assert_eq!(st.context_len(), 5);
+        let res = DecodeResult::from_state(&st);
+        assert_eq!(res.tokens, vec![42, 43]);
+        assert!((res.mean_tpot - 0.015).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic(expected = "empty prompt")]
+    fn empty_prompt_rejected() {
+        DecodeRequest::new(1, vec![], 4);
+    }
+}

@@ -1,0 +1,232 @@
+//! The serving loop: continuous batching over worker threads.
+//!
+//! Each global step, every active sequence advances one token; steps of
+//! distinct sequences are independent (separate caches), so they fan out
+//! across a scoped thread pool — the std-thread analogue of the async
+//! worker pool a tokio deployment would use (offline build; see
+//! Cargo.toml note).  After the join, finished sequences are reaped,
+//! their pages released, and the batcher refills slots from the queue
+//! (continuous batching).
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::config::ServeConfig;
+use crate::coordinator::batcher::{Batcher, BatcherStats};
+use crate::coordinator::engine::{DecodeEngine, LayerExecutor, SeqRuntime};
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::request::{DecodeRequest, DecodeResult, RequestId};
+
+/// Outcome of a full [`serve`] run.
+#[derive(Debug)]
+pub struct ServeReport {
+    pub results: Vec<DecodeResult>,
+    pub metrics: Metrics,
+    pub batcher: BatcherStats,
+}
+
+impl ServeReport {
+    pub fn summary(&self) -> String {
+        format!(
+            "{} requests, {} tokens in {:.2}s — {:.1} tok/s, \
+             step p50 {:.1} ms p99 {:.1} ms, mean batch {:.2}",
+            self.metrics.requests_completed,
+            self.metrics.tokens_generated,
+            self.metrics.wall_time.as_secs_f64(),
+            self.metrics.tokens_per_sec(),
+            self.metrics.step_latency.quantile_us(0.5) / 1e3,
+            self.metrics.step_latency.quantile_us(0.99) / 1e3,
+            self.batcher.mean_occupancy())
+    }
+}
+
+/// Drive all `requests` to completion on `engine` and return the report.
+pub fn serve<E: LayerExecutor>(engine: &DecodeEngine<E>,
+                               requests: Vec<DecodeRequest>,
+                               cfg: &ServeConfig) -> Result<ServeReport> {
+    let n_layers = engine.executor.n_layers();
+    // budget is per-layer: a token consumes one row in every layer
+    let pool_rows = cfg.pool_pages * cfg.page_size;
+    let mut batcher = Batcher::new(cfg.max_batch,
+                                   pool_rows / n_layers.max(1));
+    for r in requests {
+        batcher.enqueue(r);
+    }
+
+    let mut metrics = Metrics::default();
+    let mut results = Vec::new();
+    let mut runtimes: HashMap<RequestId, SeqRuntime> = HashMap::new();
+    let t0 = Instant::now();
+
+    while !batcher.idle() {
+        batcher.admit();
+        for st in batcher.active_mut().iter() {
+            runtimes
+                .entry(st.request.id)
+                .or_insert_with(|| SeqRuntime::new(n_layers));
+        }
+
+        // ---- one global step over the active set ---------------------
+        let step_t0 = Instant::now();
+        let states = batcher.active_mut();
+        // job inputs: (request id, this step's token or full prompt)
+        let jobs: Vec<(RequestId, Option<u32>, Vec<u32>)> = states
+            .iter()
+            .map(|st| (st.request.id,
+                       st.generated.last().copied(),
+                       st.request.prompt.clone()))
+            .collect();
+        // hand each job exclusive access to its runtime
+        let mut job_rts: Vec<(usize, RequestId, SeqRuntime)> = Vec::new();
+        for (i, (id, _, _)) in jobs.iter().enumerate() {
+            job_rts.push((i, *id, runtimes.remove(id).unwrap()));
+        }
+        let out_slot: Mutex<Vec<(usize, RequestId, SeqRuntime,
+                                 Result<u32>, f64)>> = Mutex::new(Vec::new());
+        let workers = cfg.workers.max(1).min(jobs.len().max(1));
+        let job_queue: Mutex<Vec<(usize, RequestId, SeqRuntime)>> =
+            Mutex::new(job_rts);
+
+        std::thread::scope(|scope| {
+            for _ in 0..workers {
+                scope.spawn(|| loop {
+                    let Some((i, id, mut rt)) =
+                        job_queue.lock().unwrap().pop()
+                    else {
+                        break;
+                    };
+                    let tok_t0 = Instant::now();
+                    let out = match jobs[i].1 {
+                        None => engine.prefill(&mut rt, &jobs[i].2),
+                        Some(tok) => engine.step(&mut rt, tok),
+                    };
+                    let dt = tok_t0.elapsed().as_secs_f64();
+                    out_slot.lock().unwrap().push((i, id, rt, out, dt));
+                });
+            }
+        });
+
+        let mut step_results = out_slot.into_inner().unwrap();
+        step_results.sort_by_key(|(i, ..)| *i);
+        for (i, id, rt, out, dt) in step_results {
+            runtimes.insert(id, rt);
+            let st = &mut batcher.active_mut()[i];
+            debug_assert_eq!(st.request.id, id);
+            match out {
+                Ok(token) => {
+                    st.generated.push(token);
+                    st.token_latencies.push(dt);
+                    metrics.tokens_generated += 1;
+                    metrics
+                        .token_latency
+                        .record(std::time::Duration::from_secs_f64(dt));
+                }
+                Err(e) => {
+                    eprintln!("[serve] request {id} aborted: {e:#}");
+                    st.request.max_new_tokens = st.generated.len();
+                }
+            }
+        }
+        metrics.steps += 1;
+        metrics.step_latency.record(step_t0.elapsed());
+        batcher.note_step();
+
+        // ---- reap + release pages -------------------------------------
+        for st in batcher.reap() {
+            if let Some(mut rt) = runtimes.remove(&st.request.id) {
+                let mut pool = engine.pool.lock().unwrap();
+                rt.free(&mut pool);
+            }
+            results.push(DecodeResult::from_state(&st));
+            metrics.requests_completed += 1;
+        }
+    }
+
+    metrics.wall_time = t0.elapsed();
+    Ok(ServeReport { results, metrics, batcher: batcher.stats() })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Algo;
+    use crate::coordinator::engine::HostLayerExecutor;
+    use crate::numerics::mla::MlaDims;
+
+    fn small_engine() -> DecodeEngine<HostLayerExecutor> {
+        let dims = MlaDims { d_model: 48, n1: 2, d_head: 12, q_rank: 24,
+                             d_latent: 16, d_rope: 8, sq: 1 };
+        let exec = HostLayerExecutor::new(dims, 2, Algo::Amla, 32,
+                                          vec![32, 64], 11);
+        DecodeEngine::new(exec, 256, 8)
+    }
+
+    fn cfg(max_batch: usize, workers: usize) -> ServeConfig {
+        ServeConfig { max_batch, workers, pool_pages: 256, page_size: 8,
+                      ..ServeConfig::default() }
+    }
+
+    #[test]
+    fn serves_all_requests_to_completion() {
+        let engine = small_engine();
+        let reqs: Vec<_> = (0..6)
+            .map(|i| DecodeRequest::new(i, vec![i as u32 + 1, 2, 3], 5))
+            .collect();
+        let report = serve(&engine, reqs, &cfg(3, 2)).unwrap();
+        assert_eq!(report.results.len(), 6);
+        for r in &report.results {
+            assert_eq!(r.tokens.len(), 5);
+        }
+        assert_eq!(report.metrics.requests_completed, 6);
+        assert_eq!(report.metrics.tokens_generated, 6 * 5);
+        // all pages returned to the pool
+        let pool = engine.pool.lock().unwrap();
+        assert_eq!(pool.stats().allocated_pages, 0);
+    }
+
+    #[test]
+    fn single_worker_matches_parallel_tokens() {
+        let reqs = |n: u64| -> Vec<DecodeRequest> {
+            (0..n).map(|i| DecodeRequest::new(i, vec![7, 8, 9 + i as u32], 4))
+                .collect()
+        };
+        let seq_tokens = {
+            let engine = small_engine();
+            let mut r = serve(&engine, reqs(4), &cfg(1, 1)).unwrap().results;
+            r.sort_by_key(|x| x.id);
+            r.into_iter().map(|x| x.tokens).collect::<Vec<_>>()
+        };
+        let par_tokens = {
+            let engine = small_engine();
+            let mut r = serve(&engine, reqs(4), &cfg(4, 4)).unwrap().results;
+            r.sort_by_key(|x| x.id);
+            r.into_iter().map(|x| x.tokens).collect::<Vec<_>>()
+        };
+        assert_eq!(seq_tokens, par_tokens,
+                   "batching/parallelism must not change outputs");
+    }
+
+    #[test]
+    fn continuous_batching_keeps_occupancy_high() {
+        let engine = small_engine();
+        let reqs: Vec<_> = (0..8)
+            .map(|i| DecodeRequest::new(i, vec![1, 2], 3))
+            .collect();
+        let report = serve(&engine, reqs, &cfg(2, 2)).unwrap();
+        assert!(report.batcher.mean_occupancy() > 1.5,
+                "occupancy {}", report.batcher.mean_occupancy());
+    }
+
+    #[test]
+    fn report_summary_renders() {
+        let engine = small_engine();
+        let reqs = vec![DecodeRequest::new(0, vec![1], 2)];
+        let report = serve(&engine, reqs, &cfg(1, 1)).unwrap();
+        let s = report.summary();
+        assert!(s.contains("1 requests"));
+        assert!(report.metrics.render().contains("amla_tokens_generated 2"));
+    }
+}

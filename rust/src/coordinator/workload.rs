@@ -1,0 +1,140 @@
+//! Workload generation for the serving benchmarks: synthetic request
+//! traces with Poisson arrivals and configurable prompt/generation
+//! length distributions — the standard serving-eval methodology
+//! (vLLM/Orca-style) applied to the decode-only AMLA stack.
+
+use crate::numerics::Rng;
+use crate::coordinator::request::DecodeRequest;
+
+/// Distribution of a length parameter.
+#[derive(Debug, Clone, Copy)]
+pub enum LenDist {
+    Fixed(usize),
+    /// Uniform in [lo, hi].
+    Uniform(usize, usize),
+    /// Geometric-ish with the given mean (clamped to [1, cap]).
+    Geometric { mean: f64, cap: usize },
+}
+
+impl LenDist {
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        match *self {
+            LenDist::Fixed(n) => n,
+            LenDist::Uniform(lo, hi) => {
+                lo + (rng.next_u64() as usize) % (hi - lo + 1)
+            }
+            LenDist::Geometric { mean, cap } => {
+                let u = rng.uniform().max(1e-12);
+                let v = (-u.ln() * mean).ceil() as usize;
+                v.clamp(1, cap)
+            }
+        }
+    }
+}
+
+/// One synthetic trace entry: a request plus its arrival offset.
+#[derive(Debug, Clone)]
+pub struct TracedRequest {
+    pub request: DecodeRequest,
+    /// Arrival time offset from trace start (s).
+    pub arrival: f64,
+}
+
+/// Trace generator configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct WorkloadSpec {
+    pub requests: usize,
+    /// Mean arrival rate (req/s) for the Poisson process.
+    pub rate: f64,
+    pub prompt_len: LenDist,
+    pub gen_len: LenDist,
+    pub seed: u64,
+}
+
+impl Default for WorkloadSpec {
+    fn default() -> Self {
+        Self { requests: 16, rate: 4.0, prompt_len: LenDist::Uniform(3, 10),
+               gen_len: LenDist::Geometric { mean: 12.0, cap: 48 },
+               seed: 0xA17A }
+    }
+}
+
+/// Generate a deterministic trace: exponential inter-arrivals at `rate`,
+/// lengths per the configured distributions.
+pub fn generate_trace(spec: &WorkloadSpec) -> Vec<TracedRequest> {
+    let mut rng = Rng::new(spec.seed);
+    let mut t = 0.0;
+    (0..spec.requests as u64)
+        .map(|id| {
+            let gap = -rng.uniform().max(1e-12).ln() / spec.rate;
+            t += gap;
+            let p_len = spec.prompt_len.sample(&mut rng);
+            let g_len = spec.gen_len.sample(&mut rng);
+            let prompt =
+                (0..p_len as u32).map(|i| 7 + 131 * id as u32 + i).collect();
+            TracedRequest {
+                request: DecodeRequest::new(id, prompt, g_len),
+                arrival: t,
+            }
+        })
+        .collect()
+}
+
+/// Strip arrivals (for closed-loop benchmarks that enqueue everything
+/// up front).
+pub fn requests_of(trace: &[TracedRequest]) -> Vec<DecodeRequest> {
+    trace.iter().map(|t| t.request.clone()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::run_prop;
+
+    #[test]
+    fn trace_is_deterministic() {
+        let spec = WorkloadSpec::default();
+        let a = generate_trace(&spec);
+        let b = generate_trace(&spec);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.request.prompt, y.request.prompt);
+            assert_eq!(x.arrival, y.arrival);
+        }
+    }
+
+    #[test]
+    fn arrivals_are_monotone_and_rate_plausible() {
+        let spec = WorkloadSpec { requests: 2000, rate: 10.0,
+                                  ..WorkloadSpec::default() };
+        let trace = generate_trace(&spec);
+        for w in trace.windows(2) {
+            assert!(w[1].arrival > w[0].arrival);
+        }
+        let span = trace.last().unwrap().arrival;
+        let measured_rate = spec.requests as f64 / span;
+        assert!((measured_rate - 10.0).abs() < 1.5,
+                "rate {measured_rate}");
+    }
+
+    #[test]
+    fn prop_length_distributions_in_range() {
+        run_prop("len_dists", 200, |rng| {
+            assert_eq!(LenDist::Fixed(7).sample(rng), 7);
+            let u = LenDist::Uniform(3, 9).sample(rng);
+            assert!((3..=9).contains(&u));
+            let g = LenDist::Geometric { mean: 5.0, cap: 20 }.sample(rng);
+            assert!((1..=20).contains(&g));
+        });
+    }
+
+    #[test]
+    fn geometric_mean_roughly_right() {
+        let mut rng = crate::numerics::Rng::new(3);
+        let d = LenDist::Geometric { mean: 8.0, cap: 1000 };
+        let n = 20_000;
+        let sum: usize = (0..n).map(|_| d.sample(&mut rng)).sum();
+        let mean = sum as f64 / n as f64;
+        assert!((mean - 8.0).abs() < 0.8, "mean {mean}");
+    }
+}

@@ -1,0 +1,152 @@
+//! Ascend 910 (Da Vinci V220) parameters — §2.3, Table 1, Fig 2.
+//!
+//! Dual-die NPU; per die: 24 Cube cores, 48 Vector cores, 64 GB HBM at
+//! 1.6 TB/s, 192 MB L2.  Per Cube core: 512 KB L1, 64+64 KB L0A/L0B,
+//! 128 KB L0C.  Per Vector core: 192 KB Unified Buffer.
+//!
+//! The §4.2 tiling analysis uses the *aggregate* machine (48 Cube cores,
+//! 3.2 TB/s), which is what [`Ascend910::accelerator`] exposes; per-core
+//! cache sizes feed the tiling-constraint solver in [`crate::tiling`].
+
+use super::Accelerator;
+
+/// Per-Cube-core scratchpad capacities (bytes).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CubeCoreMem {
+    pub l1: usize,
+    pub l0a: usize,
+    pub l0b: usize,
+    pub l0c: usize,
+}
+
+/// Per-Vector-core scratchpad capacity (bytes).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct VectorCoreMem {
+    pub ub: usize,
+}
+
+/// The full Ascend 910 description used across the reproduction.
+#[derive(Debug, Clone, Copy)]
+pub struct Ascend910 {
+    pub dies: usize,
+    pub cube_cores_per_die: usize,
+    pub vector_cores_per_die: usize,
+    pub hbm_per_die_bytes: u64,
+    pub hbm_bw_per_die: f64,
+    pub l2_per_die_bytes: u64,
+    pub cube_mem: CubeCoreMem,
+    pub vector_mem: VectorCoreMem,
+    /// Aggregate peak BF16 FLOP/s (both dies).  Derived from Table 5:
+    /// 614 TFLOPS at 86.8 % utilization ⇒ 707 TFLOPS peak.
+    pub peak_bf16_flops: f64,
+}
+
+pub const KB: usize = 1024;
+
+impl Default for Ascend910 {
+    fn default() -> Self {
+        Self {
+            dies: 2,
+            cube_cores_per_die: 24,
+            vector_cores_per_die: 48,
+            hbm_per_die_bytes: 64 * (1 << 30),
+            hbm_bw_per_die: 1.6e12,
+            l2_per_die_bytes: 192 * (1 << 20),
+            cube_mem: CubeCoreMem { l1: 512 * KB, l0a: 64 * KB,
+                                    l0b: 64 * KB, l0c: 128 * KB },
+            vector_mem: VectorCoreMem { ub: 192 * KB },
+            peak_bf16_flops: 707e12,
+        }
+    }
+}
+
+impl Ascend910 {
+    pub fn accelerator() -> Accelerator {
+        let hw = Self::default();
+        Accelerator {
+            name: "Ascend 910",
+            peak_bf16_flops: hw.peak_bf16_flops,
+            hbm_bandwidth: hw.hbm_bw_per_die * hw.dies as f64,
+            matrix_cores: hw.cube_cores_per_die * hw.dies,
+            vector_cores: hw.vector_cores_per_die * hw.dies,
+        }
+    }
+
+    /// Total Cube cores across dies (the `n_c = 48` of §4.2).
+    pub fn cube_cores(&self) -> usize {
+        self.cube_cores_per_die * self.dies
+    }
+
+    /// Total Vector cores across dies.
+    pub fn vector_cores(&self) -> usize {
+        self.vector_cores_per_die * self.dies
+    }
+
+    /// Peak BF16 FLOP/s of a *single* Cube core.
+    pub fn peak_per_cube_core(&self) -> f64 {
+        self.peak_bf16_flops / self.cube_cores() as f64
+    }
+
+    /// Aggregate HBM bandwidth (the 3.2 TB/s of §4.2).
+    pub fn hbm_bandwidth(&self) -> f64 {
+        self.hbm_bw_per_die * self.dies as f64
+    }
+
+    /// UB capacity check for a resident FP32 output tile `[rows, cols]`
+    /// per Vector core (§3.1: G x Dv x 4 bytes against 192 KB, shared
+    /// 1 Cube : 2 Vector so each Vector core owns half the tile rows).
+    pub fn output_tile_fits_ub(&self, rows: usize, cols: usize) -> bool {
+        // each of the 2 Vector cores paired with a Cube core holds half
+        let bytes_per_vcore = rows * cols * 4 / 2;
+        bytes_per_vcore <= self.vector_mem.ub
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_capacities() {
+        let hw = Ascend910::default();
+        assert_eq!(hw.cube_mem.l1, 512 * 1024);
+        assert_eq!(hw.cube_mem.l0a, 64 * 1024);
+        assert_eq!(hw.cube_mem.l0b, 64 * 1024);
+        assert_eq!(hw.cube_mem.l0c, 128 * 1024);
+        assert_eq!(hw.vector_mem.ub, 192 * 1024);
+        assert_eq!(hw.cube_cores(), 48);
+        assert_eq!(hw.vector_cores(), 96);
+    }
+
+    #[test]
+    fn paper_motivation_output_tile_does_not_fit() {
+        // §3.1: O in R^{128x512} FP32 = 256 KB; per Vector core 128 KB
+        // against 192 KB UB *shared with other operands* — the paper calls
+        // residency infeasible; with MTP (256 rows) it overflows outright.
+        let hw = Ascend910::default();
+        assert!(hw.output_tile_fits_ub(128, 512)); // fits in isolation...
+        assert!(!hw.output_tile_fits_ub(256, 512)); // ...MTP does not
+        // and with >= 64 KB of other operands resident, 128 rows don't
+        // fit either: 128*512*4/2 + 64K = 192K + ... boundary case the
+        // paper resolves by not keeping O resident at all.
+        let other_operands = 64 * 1024;
+        assert!(128 * 512 * 4 / 2 + other_operands >= hw.vector_mem.ub,
+                "no UB headroom left for residency");
+    }
+
+    #[test]
+    fn peak_matches_table5_backout() {
+        // Table 5, Sq=2, Sk=16384: FLOPS = 2*B*N1*Sq*Sk*(Dk+Dv)
+        let flops = 2.0 * 96.0 * 128.0 * 2.0 * 16384.0 * 1088.0;
+        let fu = flops / (1427e-6 * Ascend910::default().peak_bf16_flops);
+        assert!((fu - 0.868).abs() < 0.01, "backed-out FU {fu}");
+    }
+
+    #[test]
+    fn ridge_point_around_221() {
+        // 707 TFLOPS / 3.2 TB/s ~ 221 FLOP/byte: MLA-128 (intensity 242)
+        // lands compute-bound, GQA (intensity 8) memory-bound (Fig 1).
+        let ridge = Ascend910::accelerator().ridge_point();
+        assert!((200.0..240.0).contains(&ridge), "ridge {ridge}");
+    }
+}

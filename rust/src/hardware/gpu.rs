@@ -1,0 +1,72 @@
+//! The paper's GPU comparator: an H800-SXM5-class device running
+//! FlashMLA (§2.5, §5.2).
+//!
+//! Quoted figures: 989 TFLOPS BF16, 3.35 TB/s HBM, 132 SMs, 256 KB
+//! registers per SM.  FlashMLA's schedule constants (BLOCK_SIZE_M = 64,
+//! column-split "seesaw" overlap) live here too, consumed by
+//! [`crate::simulator::flashmla`].
+
+use super::Accelerator;
+
+/// H800-class GPU description.
+#[derive(Debug, Clone, Copy)]
+pub struct GpuModel {
+    pub sm_count: usize,
+    pub regfile_per_sm_bytes: usize,
+    pub peak_bf16_flops: f64,
+    pub hbm_bandwidth: f64,
+    /// FlashMLA row-block size (rows of O per iteration).
+    pub flashmla_block_m: usize,
+}
+
+impl Default for GpuModel {
+    fn default() -> Self {
+        Self {
+            sm_count: 132,
+            regfile_per_sm_bytes: 256 * 1024,
+            peak_bf16_flops: 989e12,
+            hbm_bandwidth: 3.35e12,
+            flashmla_block_m: 64,
+        }
+    }
+}
+
+impl GpuModel {
+    pub fn accelerator() -> Accelerator {
+        let hw = Self::default();
+        Accelerator {
+            name: "H800-class GPU",
+            peak_bf16_flops: hw.peak_bf16_flops,
+            hbm_bandwidth: hw.hbm_bandwidth,
+            matrix_cores: hw.sm_count,
+            vector_cores: hw.sm_count, // CUDA cores co-located per SM
+        }
+    }
+
+    /// §2.5: a full 128x512 FP32 O block (256 KB) exactly fills the SM
+    /// register file, so rescale-at-once forbids concurrent tensor-core
+    /// use; FlashMLA halves the block (64 rows).
+    pub fn full_block_fills_regfile(&self) -> bool {
+        128 * 512 * 4 >= self.regfile_per_sm_bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn regfile_motivation() {
+        let gpu = GpuModel::default();
+        assert!(gpu.full_block_fills_regfile());
+        // the 64-row block leaves half the registers for overlap
+        assert_eq!(gpu.flashmla_block_m * 512 * 4 * 2,
+                   gpu.regfile_per_sm_bytes);
+    }
+
+    #[test]
+    fn ridge_point_around_295() {
+        let ridge = GpuModel::accelerator().ridge_point();
+        assert!((270.0..320.0).contains(&ridge), "ridge {ridge}");
+    }
+}

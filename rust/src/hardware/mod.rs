@@ -1,0 +1,72 @@
+//! Hardware models of the paper's two testbeds (§2.3, §5.2).
+//!
+//! These parameter sets drive the roofline analysis (Fig 1, Table 2) and
+//! the kernel performance simulator (Table 5, Fig 10).  Peaks are derived
+//! from the paper itself: 614 TFLOPS at 86.8 % FU ⇒ ~707 TFLOPS BF16 peak
+//! for the Ascend 910 (dual die); the GPU comparator is quoted directly
+//! as 989 TFLOPS / 3.35 TB/s (H800-SXM5-class).
+
+pub mod ascend910;
+pub mod gpu;
+
+pub use ascend910::{Ascend910, CubeCoreMem, VectorCoreMem};
+pub use gpu::GpuModel;
+
+/// Common accelerator description consumed by roofline + simulator.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Accelerator {
+    pub name: &'static str,
+    /// Peak dense BF16 throughput, FLOP/s (mul+add counted separately).
+    pub peak_bf16_flops: f64,
+    /// Aggregate HBM bandwidth, bytes/s.
+    pub hbm_bandwidth: f64,
+    /// Matrix-unit cores ("Cube" / SM count analogue).
+    pub matrix_cores: usize,
+    /// Vector/elementwise cores sharing the die.
+    pub vector_cores: usize,
+}
+
+impl Accelerator {
+    /// Arithmetic intensity (FLOP/byte) at which compute == bandwidth:
+    /// the roofline ridge point.
+    pub fn ridge_point(&self) -> f64 {
+        self.peak_bf16_flops / self.hbm_bandwidth
+    }
+
+    /// Attainable FLOP/s at a given arithmetic intensity (the roofline).
+    pub fn attainable_flops(&self, intensity: f64) -> f64 {
+        (intensity * self.hbm_bandwidth).min(self.peak_bf16_flops)
+    }
+
+    /// Ideal kernel duration (s) for `flops` of work moving `bytes`:
+    /// max of the compute-bound and memory-bound times.
+    pub fn ideal_duration(&self, flops: f64, bytes: f64) -> f64 {
+        (flops / self.peak_bf16_flops).max(bytes / self.hbm_bandwidth)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ridge_point_is_consistent() {
+        let a = Ascend910::accelerator();
+        let ridge = a.ridge_point();
+        // below the ridge: bandwidth-limited; above: compute-limited
+        assert!(a.attainable_flops(ridge * 0.5) < a.peak_bf16_flops);
+        assert!((a.attainable_flops(ridge * 2.0) - a.peak_bf16_flops).abs()
+                    < 1e-3);
+    }
+
+    #[test]
+    fn ideal_duration_picks_binding_constraint() {
+        let a = Ascend910::accelerator();
+        // tiny compute, huge bytes -> memory bound
+        let t_mem = a.ideal_duration(1.0, 1e9);
+        assert!((t_mem - 1e9 / a.hbm_bandwidth).abs() / t_mem < 1e-9);
+        // huge compute, tiny bytes -> compute bound
+        let t_cmp = a.ideal_duration(1e12, 1.0);
+        assert!((t_cmp - 1e12 / a.peak_bf16_flops).abs() / t_cmp < 1e-9);
+    }
+}

@@ -1,0 +1,14 @@
+//! Paged latent-KV cache — the serving substrate under the coordinator.
+//!
+//! MLA's whole point is that the per-token cache is one latent row
+//! (512 fp32 here) plus one RoPE-key row (64), shared by all heads.
+//! [`paged::PagePool`] manages those rows in fixed-size pages with a
+//! free list and per-page reference counts (vLLM-style block tables, so
+//! prefix sharing is possible); [`paged::SequenceCache`] is one
+//! sequence's view: a block table plus a logical length, with
+//! `materialize` gathering the pages into the padded bucket buffers the
+//! shape-static HLO executables consume.
+
+pub mod paged;
+
+pub use paged::{PageId, PagePool, PoolStats, SequenceCache};

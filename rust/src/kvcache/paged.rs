@@ -1,0 +1,327 @@
+//! Page pool + per-sequence block tables for the latent KV cache.
+
+use anyhow::{bail, Result};
+
+/// Index of a page in the pool.
+pub type PageId = u32;
+
+/// Pool-wide occupancy statistics.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PoolStats {
+    pub total_pages: usize,
+    pub free_pages: usize,
+    pub allocated_pages: usize,
+}
+
+/// Fixed-capacity pool of latent+rope row pages.
+///
+/// Each page stores `page_size` rows of `d_latent + d_rope` f32 values,
+/// laid out row-major `[latent | rope]` so a row copy is one memcpy.
+#[derive(Debug)]
+pub struct PagePool {
+    page_size: usize,
+    d_latent: usize,
+    d_rope: usize,
+    data: Vec<f32>,
+    free: Vec<PageId>,
+    refcount: Vec<u32>,
+}
+
+impl PagePool {
+    pub fn new(pages: usize, page_size: usize, d_latent: usize,
+               d_rope: usize) -> Self {
+        let row = d_latent + d_rope;
+        Self {
+            page_size,
+            d_latent,
+            d_rope,
+            data: vec![0.0; pages * page_size * row],
+            free: (0..pages as PageId).rev().collect(),
+            refcount: vec![0; pages],
+        }
+    }
+
+    pub fn page_size(&self) -> usize {
+        self.page_size
+    }
+
+    pub fn row_width(&self) -> usize {
+        self.d_latent + self.d_rope
+    }
+
+    pub fn stats(&self) -> PoolStats {
+        PoolStats {
+            total_pages: self.refcount.len(),
+            free_pages: self.free.len(),
+            allocated_pages: self.refcount.len() - self.free.len(),
+        }
+    }
+
+    /// Allocate one page (refcount 1).
+    pub fn alloc(&mut self) -> Result<PageId> {
+        match self.free.pop() {
+            Some(id) => {
+                debug_assert_eq!(self.refcount[id as usize], 0);
+                self.refcount[id as usize] = 1;
+                Ok(id)
+            }
+            None => bail!("latent-KV pool exhausted ({} pages)",
+                          self.refcount.len()),
+        }
+    }
+
+    /// Share a page (copy-on-write prefix sharing).
+    pub fn retain(&mut self, id: PageId) {
+        assert!(self.refcount[id as usize] > 0, "retain of free page");
+        self.refcount[id as usize] += 1;
+    }
+
+    /// Drop one reference; frees the page at zero.
+    pub fn release(&mut self, id: PageId) {
+        let rc = &mut self.refcount[id as usize];
+        assert!(*rc > 0, "double free of page {id}");
+        *rc -= 1;
+        if *rc == 0 {
+            self.free.push(id);
+        }
+    }
+
+    pub fn refcount(&self, id: PageId) -> u32 {
+        self.refcount[id as usize]
+    }
+
+    #[inline]
+    fn row_slice(&self, page: PageId, slot: usize) -> &[f32] {
+        let row = self.row_width();
+        let base = (page as usize * self.page_size + slot) * row;
+        &self.data[base..base + row]
+    }
+
+    #[inline]
+    fn row_slice_mut(&mut self, page: PageId, slot: usize) -> &mut [f32] {
+        let row = self.row_width();
+        let base = (page as usize * self.page_size + slot) * row;
+        &mut self.data[base..base + row]
+    }
+}
+
+/// One sequence's latent cache: block table + logical length.
+#[derive(Debug)]
+pub struct SequenceCache {
+    pages: Vec<PageId>,
+    len: usize,
+}
+
+impl SequenceCache {
+    pub fn new() -> Self {
+        Self { pages: Vec::new(), len: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn pages(&self) -> &[PageId] {
+        &self.pages
+    }
+
+    /// Append one token's latent+rope row.
+    pub fn append(&mut self, pool: &mut PagePool, latent: &[f32],
+                  rope: &[f32]) -> Result<()> {
+        assert_eq!(latent.len(), pool.d_latent);
+        assert_eq!(rope.len(), pool.d_rope);
+        let slot = self.len % pool.page_size();
+        if slot == 0 {
+            self.pages.push(pool.alloc()?);
+        }
+        let page = *self.pages.last().unwrap();
+        let row = pool.row_slice_mut(page, slot);
+        row[..latent.len()].copy_from_slice(latent);
+        row[latent.len()..].copy_from_slice(rope);
+        self.len += 1;
+        Ok(())
+    }
+
+    /// Gather this sequence's rows into padded bucket buffers:
+    /// `c_out` is `[bucket, d_latent]`, `kr_out` is `[bucket, d_rope]`
+    /// (both zero-padded past `len`).
+    pub fn materialize(&self, pool: &PagePool, bucket: usize,
+                       c_out: &mut [f32], kr_out: &mut [f32]) {
+        let dl = pool.d_latent;
+        let dr = pool.d_rope;
+        assert!(self.len <= bucket, "sequence longer than bucket");
+        assert_eq!(c_out.len(), bucket * dl);
+        assert_eq!(kr_out.len(), bucket * dr);
+        c_out[self.len * dl..].fill(0.0);
+        kr_out[self.len * dr..].fill(0.0);
+        for i in 0..self.len {
+            let row = pool.row_slice(self.pages[i / pool.page_size()],
+                                     i % pool.page_size());
+            c_out[i * dl..(i + 1) * dl].copy_from_slice(&row[..dl]);
+            kr_out[i * dr..(i + 1) * dr].copy_from_slice(&row[dl..]);
+        }
+    }
+
+    /// Read back one row (for write-back verification).
+    pub fn row(&self, pool: &PagePool, i: usize) -> (Vec<f32>, Vec<f32>) {
+        assert!(i < self.len);
+        let row = pool.row_slice(self.pages[i / pool.page_size()],
+                                 i % pool.page_size());
+        (row[..pool.d_latent].to_vec(), row[pool.d_latent..].to_vec())
+    }
+
+    /// Overwrite row `i` (used when the layer executable returns the
+    /// updated cache and the new row must be persisted to the pool).
+    pub fn write_row(&mut self, pool: &mut PagePool, i: usize,
+                     latent: &[f32], rope: &[f32]) {
+        assert!(i < self.len);
+        let dl = pool.d_latent;
+        let row = pool.row_slice_mut(self.pages[i / pool.page_size()],
+                                     i % pool.page_size());
+        row[..dl].copy_from_slice(latent);
+        row[dl..].copy_from_slice(rope);
+    }
+
+    /// Release all pages back to the pool.
+    pub fn free(&mut self, pool: &mut PagePool) {
+        for &p in &self.pages {
+            pool.release(p);
+        }
+        self.pages.clear();
+        self.len = 0;
+    }
+}
+
+impl Default for SequenceCache {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{gen_usize, run_prop};
+
+    fn pool() -> PagePool {
+        PagePool::new(8, 4, 6, 2)
+    }
+
+    #[test]
+    fn alloc_free_roundtrip() {
+        let mut p = pool();
+        assert_eq!(p.stats().free_pages, 8);
+        let a = p.alloc().unwrap();
+        let b = p.alloc().unwrap();
+        assert_ne!(a, b);
+        assert_eq!(p.stats().allocated_pages, 2);
+        p.release(a);
+        p.release(b);
+        assert_eq!(p.stats().free_pages, 8);
+    }
+
+    #[test]
+    fn pool_exhaustion_errors() {
+        let mut p = PagePool::new(2, 4, 6, 2);
+        p.alloc().unwrap();
+        p.alloc().unwrap();
+        assert!(p.alloc().is_err());
+    }
+
+    #[test]
+    fn refcount_sharing() {
+        let mut p = pool();
+        let a = p.alloc().unwrap();
+        p.retain(a);
+        p.release(a);
+        assert_eq!(p.refcount(a), 1); // still held
+        assert_eq!(p.stats().allocated_pages, 1);
+        p.release(a);
+        assert_eq!(p.stats().allocated_pages, 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "double free")]
+    fn double_free_panics() {
+        let mut p = pool();
+        let a = p.alloc().unwrap();
+        p.release(a);
+        p.release(a);
+    }
+
+    #[test]
+    fn append_and_materialize() {
+        let mut p = pool();
+        let mut seq = SequenceCache::new();
+        for i in 0..10 {
+            let latent = vec![i as f32; 6];
+            let rope = vec![-(i as f32); 2];
+            seq.append(&mut p, &latent, &rope).unwrap();
+        }
+        assert_eq!(seq.len(), 10);
+        assert_eq!(seq.pages().len(), 3); // ceil(10/4)
+        let mut c = vec![0f32; 16 * 6];
+        let mut kr = vec![0f32; 16 * 2];
+        seq.materialize(&p, 16, &mut c, &mut kr);
+        for i in 0..10 {
+            assert_eq!(c[i * 6], i as f32);
+            assert_eq!(kr[i * 2], -(i as f32));
+        }
+        assert!(c[10 * 6..].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn free_returns_pages() {
+        let mut p = pool();
+        let mut seq = SequenceCache::new();
+        for _ in 0..9 {
+            seq.append(&mut p, &[0.0; 6], &[0.0; 2]).unwrap();
+        }
+        assert_eq!(p.stats().allocated_pages, 3);
+        seq.free(&mut p);
+        assert_eq!(p.stats().allocated_pages, 0);
+        assert_eq!(seq.len(), 0);
+    }
+
+    #[test]
+    fn prop_pool_conservation() {
+        run_prop("pool_conservation", 100, |rng| {
+            let mut p = PagePool::new(16, 4, 6, 2);
+            let mut seqs: Vec<SequenceCache> = Vec::new();
+            for _ in 0..gen_usize(rng, 1, 20) {
+                match gen_usize(rng, 0, 3) {
+                    0 => seqs.push(SequenceCache::new()),
+                    1 if !seqs.is_empty() => {
+                        let i = gen_usize(rng, 0, seqs.len());
+                        // append may fail on exhaustion: acceptable
+                        let _ = seqs[i].append(&mut p, &[1.0; 6], &[2.0; 2]);
+                    }
+                    _ if !seqs.is_empty() => {
+                        let i = gen_usize(rng, 0, seqs.len());
+                        seqs[i].free(&mut p);
+                    }
+                    _ => {}
+                }
+            }
+            let used: usize =
+                seqs.iter().map(|s| s.len().div_ceil(4)).sum();
+            assert_eq!(p.stats().allocated_pages, used);
+            assert_eq!(p.stats().free_pages, 16 - used);
+        });
+    }
+
+    #[test]
+    fn write_row_roundtrip() {
+        let mut p = pool();
+        let mut seq = SequenceCache::new();
+        seq.append(&mut p, &[0.0; 6], &[0.0; 2]).unwrap();
+        seq.write_row(&mut p, 0, &[9.0; 6], &[8.0; 2]);
+        let (l, r) = seq.row(&p, 0);
+        assert_eq!(l, vec![9.0; 6]);
+        assert_eq!(r, vec![8.0; 2]);
+    }
+}

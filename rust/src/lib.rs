@@ -1,0 +1,37 @@
+//! # AMLA — MUL by ADD in FlashAttention Rescaling
+//!
+//! Full-stack reproduction of the AMLA paper (Liao et al., 2025): a
+//! decode-phase Multi-head Latent Attention kernel whose FlashAttention
+//! output rescale is reformulated as an **integer addition** on the FP32
+//! bit pattern (Lemma 3.1), plus the **Preload Pipeline** and
+//! **hierarchical tiling** that make the kernel Cube-bound on Ascend 910.
+//!
+//! The crate is the Layer-3 coordinator of a three-layer stack:
+//!
+//! * **L1/L2 (build time)** — `python/compile/`: Pallas kernels
+//!   (Algorithm 2 and the Algorithm-1 "Base") and the absorbed MLA decode
+//!   layer, AOT-lowered to HLO text artifacts.
+//! * **L3 (this crate)** — loads the artifacts via PJRT ([`runtime`]),
+//!   serves batched decode requests ([`coordinator`], [`kvcache`]), and
+//!   hosts the paper's analytical/simulation substrate: bit-exact
+//!   numerics ([`numerics`]), hardware models ([`hardware`]), roofline
+//!   analysis ([`roofline`]), the Preload-Pipeline theory ([`pipeline`]),
+//!   hierarchical tiling ([`tiling`]) and the performance simulator that
+//!   regenerates Table 5 / Fig 10 ([`simulator`]).
+//!
+//! See `DESIGN.md` for the system inventory and per-experiment index, and
+//! `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod bench_util;
+pub mod config;
+pub mod coordinator;
+pub mod hardware;
+pub mod kvcache;
+pub mod numerics;
+pub mod pipeline;
+pub mod report;
+pub mod roofline;
+pub mod runtime;
+pub mod simulator;
+pub mod tiling;
+pub mod util;

@@ -1,0 +1,177 @@
+//! `amla` — the L3 coordinator CLI.
+//!
+//! ```text
+//! amla serve      [--algo amla|base] [--requests N] [--max-batch B] ...
+//! amla reproduce  [--exp roofline|accuracy|perf|ablation|pipeline|all]
+//! amla simulate   [--sq 1|2] [--sk N] [--algo amla|base]
+//! amla accuracy   [--samples N] [--context S2]
+//! amla roofline
+//! amla pipeline
+//! amla artifacts  [--artifacts DIR]        # list the manifest
+//! ```
+
+use anyhow::{bail, Result};
+
+use amla::config::{Algo, Args, ServeConfig};
+use amla::coordinator::{serve, DecodeEngine, DecodeRequest,
+                        PjrtLayerExecutor};
+use amla::numerics::mla::MlaDims;
+use amla::report;
+use amla::simulator::{simulate_910, simulate_flashmla, FlashMlaModel,
+                      KernelConfig};
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let args = Args::from_env();
+    match args.positional.first().map(String::as_str) {
+        Some("serve") => cmd_serve(&args),
+        Some("reproduce") => cmd_reproduce(&args),
+        Some("simulate") => cmd_simulate(&args),
+        Some("accuracy") => cmd_accuracy(&args),
+        Some("roofline") => {
+            println!("{}", report::render_table2());
+            println!("{}", report::render_fig1_both());
+            Ok(())
+        }
+        Some("pipeline") => {
+            println!("{}", report::render_pipeline_demo());
+            Ok(())
+        }
+        Some("artifacts") => cmd_artifacts(&args),
+        other => {
+            if let Some(cmd) = other {
+                eprintln!("unknown command `{cmd}`\n");
+            }
+            print!("{}", HELP);
+            Ok(())
+        }
+    }
+}
+
+const HELP: &str = "\
+amla — AMLA reproduction coordinator
+
+USAGE:
+  amla serve      [--requests N] [--algo amla|base] [--max-batch B]
+                  [--workers W] [--max-new-tokens T] [--artifacts DIR]
+  amla reproduce  [--exp roofline|accuracy|perf|ablation|pipeline|all]
+                  [--samples N] [--context S2]
+  amla simulate   [--sq 1|2] [--sk N] [--algo amla|base] [--batch B]
+  amla accuracy   [--samples N] [--context S2]
+  amla roofline
+  amla pipeline
+  amla artifacts  [--artifacts DIR]
+";
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let mut cfg = ServeConfig::default();
+    cfg.apply_args(args)?;
+    let n_requests = args.get_usize("requests", 8)?;
+    let n_layers = args.get_usize("layers", 2)?;
+    let dims = MlaDims { n1: cfg.n1, sq: cfg.sq, ..MlaDims::default() };
+
+    eprintln!("[serve] loading PJRT engine from {} (algo {}, {} layers)",
+              cfg.artifact_dir, cfg.algo.as_str(), n_layers);
+    let exec = PjrtLayerExecutor::new(&cfg, dims, n_layers, 42)?;
+    let compiled = exec.warmup()?;
+    eprintln!("[serve] compiled {compiled} layer executables");
+    let engine = DecodeEngine::new(exec, cfg.pool_pages, cfg.page_size);
+
+    let requests: Vec<DecodeRequest> = (0..n_requests as u64)
+        .map(|i| {
+            let prompt: Vec<u32> =
+                (0..4 + (i % 5) as u32).map(|t| 100 + 17 * i as u32 + t).collect();
+            DecodeRequest::new(i, prompt, cfg.max_new_tokens)
+        })
+        .collect();
+    let report = serve(&engine, requests, &cfg)?;
+    println!("{}", report.summary());
+    println!("{}", report.metrics.render());
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let sq = args.get_usize("sq", 1)?;
+    let sk = args.get_usize("sk", 4096)?;
+    let batch = args.get_usize("batch", 96)?;
+    let algo = match args.get("algo") {
+        Some(a) => Algo::parse(a)?,
+        None => Algo::Amla,
+    };
+    let cfg = KernelConfig { batch, n1: 128, sq, sk, block_kv: 512 };
+    let r910 = simulate_910(&cfg, algo);
+    let rgpu = simulate_flashmla(&FlashMlaModel::default(), &cfg);
+    println!("config: batch={batch} n1=128 sq={sq} sk={sk} algo={}",
+             algo.as_str());
+    println!("Ascend 910 ({}): {:.0} µs, FU {:.1}%, bound by {}",
+             algo.as_str(), r910.duration_us, r910.fu * 100.0,
+             r910.bound_by);
+    println!("H800-class (FlashMLA): {:.0} µs, FU {:.1}%, bound by {}",
+             rgpu.duration_us, rgpu.fu * 100.0, rgpu.bound_by);
+    Ok(())
+}
+
+fn cmd_accuracy(args: &Args) -> Result<()> {
+    let samples = args.get_usize("samples", 10)?;
+    let context = args.get_usize("context", 2048)?;
+    let heads = args.get_usize("heads", 16)?;
+    println!("protocol: {samples} samples, context {context}, {heads} query \
+              rows, BF16 inputs\n");
+    println!("{}", report::render_accuracy_tables(samples, context, heads));
+    Ok(())
+}
+
+fn cmd_reproduce(args: &Args) -> Result<()> {
+    let exp = args.get("exp").map(String::as_str).unwrap_or("all");
+    let samples = args.get_usize("samples", 10)?;
+    let context = args.get_usize("context", 2048)?;
+    let mut any = false;
+    if matches!(exp, "roofline" | "all") {
+        println!("=== E1: Table 2 + Fig 1 (roofline) ===");
+        println!("{}", report::render_table2());
+        println!("{}", report::render_fig1_both());
+        any = true;
+    }
+    if matches!(exp, "accuracy" | "all") {
+        println!("=== E2/E3: Tables 3-4 (accuracy vs Golden) ===");
+        println!("{}", report::render_accuracy_tables(samples, context, 16));
+        any = true;
+    }
+    if matches!(exp, "perf" | "all") {
+        println!("=== E4/E7: Table 5 + Fig 10 (duration & FU) ===");
+        println!("{}", report::render_table5());
+        println!("{}", report::render_fig10());
+        any = true;
+    }
+    if matches!(exp, "ablation" | "all") {
+        println!("=== E8: ablation — AMLA vs Base on the 910 model ===");
+        println!("{}", report::render_ablation());
+        any = true;
+    }
+    if matches!(exp, "pipeline" | "all") {
+        println!("=== E5: Figs 5-7 (preload pipeline) ===");
+        println!("{}", report::render_pipeline_demo());
+        any = true;
+    }
+    if !any {
+        bail!("unknown experiment `{exp}`");
+    }
+    Ok(())
+}
+
+fn cmd_artifacts(args: &Args) -> Result<()> {
+    let dir = args.get("artifacts").map(String::as_str).unwrap_or("artifacts");
+    let reg = amla::runtime::ArtifactRegistry::load(dir)?;
+    println!("{} artifacts in {dir}:", reg.entries().len());
+    for e in reg.entries() {
+        println!("  {:<44} {:?} algo={} n1={} sq={} bucket={}",
+                 e.name, e.kind, e.algo, e.n1, e.sq, e.bucket);
+    }
+    Ok(())
+}

@@ -1,0 +1,268 @@
+//! Algorithm 2 — AMLA with BF16 error compensation, in Rust.
+//!
+//! Bit-faithful port of the Pallas kernel (`python/compile/kernels/amla.py`),
+//! sharing its conventions:
+//!
+//! * exponent tracking `n_i = round(-m_i/ln2)` with the residual-first
+//!   grouping `S32 = exp(ln2 (n_i + m_i/ln2))` (avoids the catastrophic
+//!   cancellation of `ln2·n_i + m_i` for |m| in the thousands);
+//! * compensation ratio `c_i = S16/S32 = r_i/r'_i` per the Appendix-A
+//!   derivation (Algorithm 2's printed line 9 has the ratio inverted —
+//!   see EXPERIMENTS.md §Accuracy);
+//! * the combined rescale increment `Δn·2²³ + round((1.5(c_i/c_{i-1}-1)
+//!   + 1e-6)·2²³)` applied as a guarded integer add over the accumulator
+//!   (the "AtomicAdd⟨INT32⟩ in GM");
+//! * final normalization `O ← O / (ℓ_N · S16)`.
+
+use super::bf16::{bf16_round, matmul_nn_bf16};
+use super::flash_base::{score_block, FlashConfig};
+use super::fp32::{exponent_of_max, rescale_add, rescale_row};
+use super::golden::row_limits;
+use super::Matrix;
+
+const LN2: f32 = std::f32::consts::LN_2;
+
+/// Per-row running state of the AMLA recurrence.
+#[derive(Debug, Clone)]
+pub struct AmlaState {
+    pub m: Vec<f32>,
+    pub l: Vec<f32>,
+    pub n: Vec<i32>,
+    pub c: Vec<f32>,
+    pub seen: Vec<bool>,
+}
+
+impl AmlaState {
+    pub fn new(g: usize) -> Self {
+        Self { m: vec![f32::NEG_INFINITY; g], l: vec![0.0; g],
+               n: vec![0; g], c: vec![1.0; g], seen: vec![false; g] }
+    }
+}
+
+/// Statistics of one full AMLA run, used by tests and the simulator to
+/// account for the vector-stage work the algorithm performs.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct AmlaStats {
+    /// Number of integer rescale adds actually applied (rows x blocks
+    /// where Δ state changed after the first contribution).
+    pub rescale_adds: usize,
+    /// Number of KV blocks processed.
+    pub blocks: usize,
+}
+
+/// Algorithm 2 over the full KV range.  Interface mirrors
+/// [`super::flash_base::base_flash_attention`].
+pub fn amla_attention(q: &Matrix, k: &Matrix, v: &Matrix,
+                      cfg: &FlashConfig) -> Matrix {
+    amla_attention_stats(q, k, v, cfg).0
+}
+
+pub fn amla_attention_stats(q: &Matrix, k: &Matrix, v: &Matrix,
+                            cfg: &FlashConfig) -> (Matrix, AmlaStats) {
+    let (g, s2, dv) = (q.rows, k.rows, v.cols);
+    assert_eq!(s2 % cfg.block_kv, 0, "S2 must be a multiple of block_kv");
+    let n1 = if cfg.n1 == 0 { g } else { cfg.n1 };
+    let limits = row_limits(g, n1, cfg.sq, cfg.valid_len);
+    let scale = 1.0 / (q.cols as f32).sqrt();
+
+    let mut o = Matrix::zeros(g, dv); // the "GM-resident" Õ accumulator
+    let mut st = AmlaState::new(g);
+    let mut stats = AmlaStats::default();
+    let mut p = vec![0f32; g * cfg.block_kv];
+    let mut t = vec![0f32; g * dv];
+    let mut s16_final = vec![1f32; g];
+
+    for base in (0..s2).step_by(cfg.block_kv) {
+        let bs = cfg.block_kv;
+        stats.blocks += 1;
+        // [C1] + mask
+        let s = score_block(q, k, base, bs, scale, &limits, cfg.mixed_bf16);
+
+        // [V1]: online softmax + exponent/compensation bookkeeping
+        for r in 0..g {
+            let row = &s.data[r * bs..(r + 1) * bs];
+            let blk_max = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+            let m_new = st.m[r].max(blk_max);
+            if m_new == f32::NEG_INFINITY {
+                for x in &mut p[r * bs..(r + 1) * bs] {
+                    *x = 0.0;
+                }
+                continue;
+            }
+            let n_new = exponent_of_max(m_new);
+            let alpha =
+                if st.m[r].is_finite() { (st.m[r] - m_new).exp() } else { 0.0 };
+            let mut rowsum = 0f32;
+            for (j, &sv) in row.iter().enumerate() {
+                let pv = if sv == f32::NEG_INFINITY { 0.0 } else { (sv - m_new).exp() };
+                p[r * bs + j] = pv;
+                rowsum += pv;
+            }
+            st.l[r] = st.l[r] * alpha + rowsum;
+
+            // S32 = exp(ln2 (n + m/ln2)) — residual-first grouping
+            let s32 = (LN2 * (n_new as f32 + m_new / LN2)).exp();
+            let (s16, c_new) = if cfg.mixed_bf16 {
+                let s16 = bf16_round(s32);
+                (s16, s16 / s32) // c = r/r' (Appendix A convention)
+            } else {
+                (s32, 1.0f32)
+            };
+
+            if st.seen[r] {
+                // the MUL-by-ADD: rescale Õ row in place in "GM"
+                let eps = 1.5 * (c_new / st.c[r] - 1.0);
+                let add = rescale_add(n_new - st.n[r], eps);
+                rescale_row(o.row_mut(r), add);
+                stats.rescale_adds += 1;
+            }
+            // P <- P * S16 (line 10): fold 1/r'_i into P pre-cast
+            for x in &mut p[r * bs..(r + 1) * bs] {
+                *x *= s16;
+            }
+            st.m[r] = m_new;
+            st.n[r] = n_new;
+            st.c[r] = c_new;
+            st.seen[r] = true;
+            s16_final[r] = s16;
+        }
+
+        // [C2]: T = P V accumulated into O ("AtomicAdd<FP32> in GM")
+        let vblk = &v.data[base * dv..(base + bs) * dv];
+        if cfg.mixed_bf16 {
+            matmul_nn_bf16(&p[..g * bs], vblk, g, bs, dv, &mut t);
+        } else {
+            for x in t.iter_mut() {
+                *x = 0.0;
+            }
+            for r in 0..g {
+                for j in 0..bs {
+                    let pv = p[r * bs + j];
+                    if pv == 0.0 {
+                        continue;
+                    }
+                    let vrow = &vblk[j * dv..(j + 1) * dv];
+                    let orow = &mut t[r * dv..(r + 1) * dv];
+                    for c in 0..dv {
+                        orow[c] += pv * vrow[c];
+                    }
+                }
+            }
+        }
+        for (x, &tv) in o.data.iter_mut().zip(&t) {
+            *x += tv;
+        }
+    }
+
+    // Last [V]: O <- O / (l_N * S16)  (Algorithm 2 line 20)
+    for r in 0..g {
+        let denom = st.l[r] * s16_final[r];
+        if denom > 0.0 {
+            let inv = 1.0 / denom;
+            for x in o.row_mut(r) {
+                *x *= inv;
+            }
+        }
+    }
+    (o, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::numerics::flash_base::base_flash_attention;
+    use crate::numerics::golden::golden_full;
+    use crate::numerics::{rel_frobenius_error, Rng};
+    use crate::util::prop::{gen_choice, gen_usize, run_prop};
+
+    fn inputs(seed: u64, g: usize, s2: usize, dk: usize,
+              dv: usize, sigma: f32) -> (Matrix, Matrix, Matrix) {
+        let mut rng = Rng::new(seed);
+        (rng.gaussian_matrix(g, dk, sigma),
+         rng.gaussian_matrix(s2, dk, sigma),
+         rng.gaussian_matrix(s2, dv, sigma))
+    }
+
+    #[test]
+    fn fp32_matches_golden() {
+        let (q, k, v) = inputs(1, 8, 512, 64, 32, 1.0);
+        let cfg = FlashConfig { block_kv: 128, n1: 8, sq: 1, valid_len: 512,
+                                mixed_bf16: false };
+        let out = amla_attention(&q, &k, &v, &cfg);
+        let gold = golden_full(&q, &k, &v);
+        assert!(rel_frobenius_error(&out.data, &gold.data) < 1e-5);
+    }
+
+    #[test]
+    fn tracks_base_in_bf16() {
+        let (q, k, v) = inputs(2, 16, 1024, 576, 512, 1.0);
+        let cfg = FlashConfig { block_kv: 256, n1: 16, sq: 1,
+                                valid_len: 1024, mixed_bf16: true };
+        let gold = golden_full(&q, &k, &v);
+        let a = amla_attention(&q, &k, &v, &cfg);
+        let b = base_flash_attention(&q, &k, &v, &cfg);
+        let ea = rel_frobenius_error(&a.data, &gold.data);
+        let eb = rel_frobenius_error(&b.data, &gold.data);
+        // paper Tables 3-4: errors agree to displayed precision
+        assert!((ea - eb).abs() <= 0.15 * eb, "amla {ea} vs base {eb}");
+    }
+
+    #[test]
+    fn extreme_scores_no_overflow() {
+        let mut rng = Rng::new(3);
+        let q = rng.uniform_matrix(4, 576, 10.0, 12.0);
+        let k = rng.uniform_matrix(256, 576, 10.0, 12.0);
+        let v = rng.gaussian_matrix(256, 64, 1.0);
+        let cfg = FlashConfig { block_kv: 64, n1: 4, sq: 1, valid_len: 256,
+                                mixed_bf16: false };
+        let out = amla_attention(&q, &k, &v, &cfg);
+        assert!(out.data.iter().all(|x| x.is_finite()));
+        let gold = golden_full(&q, &k, &v);
+        assert!(rel_frobenius_error(&out.data, &gold.data) < 5e-3);
+    }
+
+    #[test]
+    fn stats_count_rescales() {
+        let (q, k, v) = inputs(4, 4, 256, 32, 16, 1.0);
+        let cfg = FlashConfig { block_kv: 64, n1: 4, sq: 1, valid_len: 256,
+                                mixed_bf16: false };
+        let (_, stats) = amla_attention_stats(&q, &k, &v, &cfg);
+        assert_eq!(stats.blocks, 4);
+        // every row rescales on blocks 2..4 (first block only initializes)
+        assert_eq!(stats.rescale_adds, 4 * 3);
+    }
+
+    #[test]
+    fn prop_amla_equals_base_fp32() {
+        run_prop("amla_eq_base_fp32", 24, |rng| {
+            let seed = rng.next_u64();
+            let nblk = gen_usize(rng, 1, 5);
+            let scale = *gen_choice(rng, &[0.1f32, 1.0, 4.0, 10.0]);
+            let s2 = nblk * 64;
+            let (q, k, v) = inputs(seed, 4, s2, 48, 24, scale);
+            let cfg = FlashConfig { block_kv: 64, n1: 4, sq: 1,
+                                    valid_len: s2, mixed_bf16: false };
+            let a = amla_attention(&q, &k, &v, &cfg);
+            let b = base_flash_attention(&q, &k, &v, &cfg);
+            assert!(rel_frobenius_error(&a.data, &b.data) < 1e-5,
+                    "seed={seed} nblk={nblk} scale={scale}");
+        });
+    }
+
+    #[test]
+    fn prop_amla_valid_len_prefix() {
+        run_prop("amla_valid_prefix", 24, |rng| {
+            let seed = rng.next_u64();
+            let valid = gen_usize(rng, 1, 256);
+            let (q, k, v) = inputs(seed, 4, 256, 32, 16, 1.0);
+            let cfg = FlashConfig { block_kv: 64, n1: 4, sq: 1,
+                                    valid_len: valid, mixed_bf16: false };
+            let out = amla_attention(&q, &k, &v, &cfg);
+            let kp = Matrix::from_vec(valid, 32, k.data[..valid * 32].to_vec());
+            let vp = Matrix::from_vec(valid, 16, v.data[..valid * 16].to_vec());
+            let gold = golden_full(&q, &kp, &vp);
+            assert!(rel_frobenius_error(&out.data, &gold.data) < 1e-4,
+                    "seed={seed} valid={valid}");
+        });
+    }
+}

@@ -1,0 +1,129 @@
+//! Software BF16 with round-to-nearest-even, matching XLA/Cube semantics.
+//!
+//! BF16 is the top 16 bits of FP32 (1 sign, 8 exponent, 7 mantissa).
+//! Mixed-precision matmul contract (Appendix A): operands quantized to
+//! BF16, products and accumulation in FP32 — exactly what
+//! [`matmul_nt_bf16`] implements and what the Pallas kernels' `astype`
+//! pairs lower to.
+
+/// Round an f32 to the nearest BF16-representable value (ties to even),
+/// returned as f32.  NaN payloads are normalized to a quiet NaN.
+#[inline]
+pub fn bf16_round(x: f32) -> f32 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        return f32::from_bits(0x7FC0_0000);
+    }
+    // round-to-nearest-even on bit 16
+    let rounding_bias = 0x7FFF + ((bits >> 16) & 1);
+    f32::from_bits(((bits.wrapping_add(rounding_bias)) >> 16) << 16)
+}
+
+/// Quantize a slice in place.
+pub fn bf16_round_slice(xs: &mut [f32]) {
+    for x in xs.iter_mut() {
+        *x = bf16_round(*x);
+    }
+}
+
+/// `a[m,k] @ b[n,k]^T` with BF16 operands, FP32 accumulation.
+pub fn matmul_nt_bf16(a: &[f32], b: &[f32], m: usize, n: usize, k: usize,
+                      out: &mut [f32]) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), n * k);
+    assert_eq!(out.len(), m * n);
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0f32;
+            for p in 0..k {
+                acc += bf16_round(a[i * k + p]) * bf16_round(b[j * k + p]);
+            }
+            out[i * n + j] = acc;
+        }
+    }
+}
+
+/// `a[m,k] @ b[k,n]` (row-major b) with BF16 operands, FP32 accumulation.
+pub fn matmul_nn_bf16(a: &[f32], b: &[f32], m: usize, k: usize, n: usize,
+                      out: &mut [f32]) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(out.len(), m * n);
+    for v in out.iter_mut() {
+        *v = 0.0;
+    }
+    for i in 0..m {
+        for p in 0..k {
+            let av = bf16_round(a[i * k + p]);
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[p * n..(p + 1) * n];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for j in 0..n {
+                orow[j] += av * bf16_round(brow[j]);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{gen_normal_f32, run_prop};
+
+    #[test]
+    fn exactly_representable_pass_through() {
+        for &x in &[0.0f32, 1.0, -2.0, 0.5, 1.5, 256.0, -0.0078125] {
+            assert_eq!(bf16_round(x), x);
+        }
+    }
+
+    #[test]
+    fn known_roundings() {
+        // 1 + 2^-8 rounds to even mantissa (1.0); 1 + 3*2^-9 rounds up
+        assert_eq!(bf16_round(1.0 + 1.0 / 256.0), 1.0);
+        assert_eq!(bf16_round(1.0 + 3.0 / 512.0), 1.0 + 1.0 / 128.0);
+    }
+
+    #[test]
+    fn nan_stays_nan() {
+        assert!(bf16_round(f32::NAN).is_nan());
+    }
+
+    #[test]
+    fn inf_preserved() {
+        assert_eq!(bf16_round(f32::INFINITY), f32::INFINITY);
+        assert_eq!(bf16_round(f32::NEG_INFINITY), f32::NEG_INFINITY);
+    }
+
+    #[test]
+    fn prop_relative_error_bounded() {
+        run_prop("bf16_rel_err", 2000, |rng| {
+            let x = gen_normal_f32(rng, 15);
+            let r = bf16_round(x);
+            // bf16 has 8 mantissa bits incl. hidden one -> rel err < 2^-8
+            assert!(((r - x) / x).abs() <= 1.0 / 256.0, "x={x} r={r}");
+        });
+    }
+
+    #[test]
+    fn prop_idempotent() {
+        run_prop("bf16_idempotent", 2000, |rng| {
+            let once = bf16_round(gen_normal_f32(rng, 20));
+            assert_eq!(once.to_bits(), bf16_round(once).to_bits());
+        });
+    }
+
+    #[test]
+    fn prop_monotone() {
+        run_prop("bf16_monotone", 2000, |rng| {
+            let (mut a, mut b) = (rng.uniform_in(-1e20, 1e20),
+                                  rng.uniform_in(-1e20, 1e20));
+            if a > b {
+                std::mem::swap(&mut a, &mut b);
+            }
+            assert!(bf16_round(a) <= bf16_round(b), "a={a} b={b}");
+        });
+    }
+}

@@ -1,0 +1,208 @@
+//! Algorithm 1 — the paper's "Base" FlashAttention, in Rust.
+//!
+//! Four-stage recurrence per KV block:
+//! `[C1]` S = Q Kᵀ, `[V1]` online softmax, `[C2]` T = P V,
+//! `[V2]` O ← O · exp(m₋ − m) + T.
+//!
+//! The `mixed_bf16` flag reproduces the Cube-core contract of Appendix A:
+//! BF16 matmul operands, FP32 accumulation, P cast to BF16 before [C2].
+//! Used as the accuracy baseline for Tables 3–4 and as the semantic
+//! reference the AMLA port must track.
+
+use super::bf16::{matmul_nn_bf16, matmul_nt_bf16};
+use super::golden::row_limits;
+use super::Matrix;
+
+/// Configuration shared by the Base and AMLA recurrences.
+#[derive(Debug, Clone, Copy)]
+pub struct FlashConfig {
+    /// KV rows per FlashAttention iteration (paper: 512).
+    pub block_kv: usize,
+    /// Query heads (for MTP causal masking).
+    pub n1: usize,
+    /// Query positions (1 = decode, 2 = MTP).
+    pub sq: usize,
+    /// Valid KV rows (bucket padding is masked beyond this).
+    pub valid_len: usize,
+    /// BF16 matmul operands + BF16 P (true = paper's mixed precision).
+    pub mixed_bf16: bool,
+}
+
+impl FlashConfig {
+    pub fn dense(valid_len: usize) -> Self {
+        Self { block_kv: 512, n1: 0, sq: 1, valid_len, mixed_bf16: false }
+    }
+}
+
+/// Compute the masked score block `[G, bs]` starting at KV row `base`.
+pub(crate) fn score_block(q: &Matrix, k: &Matrix, base: usize, bs: usize,
+                          scale: f32, limits: &[usize],
+                          mixed_bf16: bool) -> Matrix {
+    let g = q.rows;
+    let dk = q.cols;
+    let mut s = Matrix::zeros(g, bs);
+    if mixed_bf16 {
+        matmul_nt_bf16(&q.data, &k.data[base * dk..(base + bs) * dk], g, bs,
+                       dk, &mut s.data);
+    } else {
+        for i in 0..g {
+            let a = q.row(i);
+            for j in 0..bs {
+                let b = &k.data[(base + j) * dk..(base + j + 1) * dk];
+                let mut acc = 0f32;
+                for p in 0..dk {
+                    acc += a[p] * b[p];
+                }
+                s.data[i * bs + j] = acc;
+            }
+        }
+    }
+    for i in 0..g {
+        let lim = limits[i];
+        for j in 0..bs {
+            let e = &mut s.data[i * bs + j];
+            *e = if base + j < lim { *e * scale } else { f32::NEG_INFINITY };
+        }
+    }
+    s
+}
+
+/// Algorithm 1 over the full KV range.  `q`: `[G, Dk]`, `k`: `[S2, Dk]`,
+/// `v`: `[S2, Dv]` with `S2 % block_kv == 0`.
+pub fn base_flash_attention(q: &Matrix, k: &Matrix, v: &Matrix,
+                            cfg: &FlashConfig) -> Matrix {
+    let (g, s2, dv) = (q.rows, k.rows, v.cols);
+    assert_eq!(s2 % cfg.block_kv, 0, "S2 must be a multiple of block_kv");
+    let n1 = if cfg.n1 == 0 { g } else { cfg.n1 };
+    let limits = row_limits(g, n1, cfg.sq, cfg.valid_len);
+    let scale = 1.0 / (q.cols as f32).sqrt();
+
+    let mut o = Matrix::zeros(g, dv);
+    let mut m = vec![f32::NEG_INFINITY; g];
+    let mut l = vec![0f32; g];
+    let mut p_bf = vec![0f32; g * cfg.block_kv];
+    let mut t = vec![0f32; g * dv];
+
+    for base in (0..s2).step_by(cfg.block_kv) {
+        let bs = cfg.block_kv;
+        // [C1] + mask
+        let s = score_block(q, k, base, bs, scale, &limits, cfg.mixed_bf16);
+        // [V1] online softmax
+        for r in 0..g {
+            let row = &s.data[r * bs..(r + 1) * bs];
+            let blk_max = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+            let m_new = m[r].max(blk_max);
+            if m_new == f32::NEG_INFINITY {
+                continue; // row fully masked so far
+            }
+            let alpha = if m[r].is_finite() { (m[r] - m_new).exp() } else { 0.0 };
+            let mut rowsum = 0f32;
+            for (j, &sv) in row.iter().enumerate() {
+                let p = if sv == f32::NEG_INFINITY { 0.0 } else { (sv - m_new).exp() };
+                p_bf[r * bs + j] = p;
+                rowsum += p;
+            }
+            l[r] = l[r] * alpha + rowsum;
+            // [V2] rescale of O (the stage AMLA eliminates)
+            for x in o.row_mut(r) {
+                *x *= alpha;
+            }
+            m[r] = m_new;
+        }
+        // [C2] T = P V, accumulate into O
+        let vblk = &v.data[base * dv..(base + bs) * dv];
+        if cfg.mixed_bf16 {
+            matmul_nn_bf16(&p_bf[..g * bs], vblk, g, bs, dv, &mut t);
+        } else {
+            for x in t.iter_mut() {
+                *x = 0.0;
+            }
+            for r in 0..g {
+                for j in 0..bs {
+                    let p = p_bf[r * bs + j];
+                    if p == 0.0 {
+                        continue;
+                    }
+                    let vrow = &vblk[j * dv..(j + 1) * dv];
+                    let orow = &mut t[r * dv..(r + 1) * dv];
+                    for c in 0..dv {
+                        orow[c] += p * vrow[c];
+                    }
+                }
+            }
+        }
+        for (x, &tv) in o.data.iter_mut().zip(&t) {
+            *x += tv;
+        }
+    }
+    for r in 0..g {
+        if l[r] > 0.0 {
+            let inv = 1.0 / l[r];
+            for x in o.row_mut(r) {
+                *x *= inv;
+            }
+        }
+    }
+    o
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::numerics::golden::golden_full;
+    use crate::numerics::{rel_frobenius_error, Rng};
+
+    fn inputs(seed: u64, g: usize, s2: usize, dk: usize,
+              dv: usize) -> (Matrix, Matrix, Matrix) {
+        let mut rng = Rng::new(seed);
+        (rng.gaussian_matrix(g, dk, 1.0), rng.gaussian_matrix(s2, dk, 1.0),
+         rng.gaussian_matrix(s2, dv, 1.0))
+    }
+
+    #[test]
+    fn fp32_matches_golden() {
+        let (q, k, v) = inputs(1, 8, 512, 64, 32);
+        let cfg = FlashConfig { block_kv: 128, n1: 8, sq: 1, valid_len: 512,
+                                mixed_bf16: false };
+        let out = base_flash_attention(&q, &k, &v, &cfg);
+        let gold = golden_full(&q, &k, &v);
+        assert!(rel_frobenius_error(&out.data, &gold.data) < 1e-5);
+    }
+
+    #[test]
+    fn bf16_error_at_expected_level() {
+        let (q, k, v) = inputs(2, 8, 512, 64, 32);
+        let cfg = FlashConfig { block_kv: 128, n1: 8, sq: 1, valid_len: 512,
+                                mixed_bf16: true };
+        let out = base_flash_attention(&q, &k, &v, &cfg);
+        let gold = golden_full(&q, &k, &v);
+        let e = rel_frobenius_error(&out.data, &gold.data);
+        assert!(e > 1e-5 && e < 2e-2, "bf16 err {e}");
+    }
+
+    #[test]
+    fn valid_len_masks_tail() {
+        let (q, k, v) = inputs(3, 4, 256, 32, 16);
+        let cfg = FlashConfig { block_kv: 64, n1: 4, sq: 1, valid_len: 100,
+                                mixed_bf16: false };
+        let out = base_flash_attention(&q, &k, &v, &cfg);
+        let k100 = Matrix::from_vec(100, 32, k.data[..100 * 32].to_vec());
+        let v100 = Matrix::from_vec(100, 16, v.data[..100 * 16].to_vec());
+        let gold = golden_full(&q, &k100, &v100);
+        assert!(rel_frobenius_error(&out.data, &gold.data) < 1e-5);
+    }
+
+    #[test]
+    fn mtp_rows_respect_causality() {
+        let (q, k, v) = inputs(4, 8, 256, 32, 16); // n1=4, sq=2
+        let cfg = FlashConfig { block_kv: 64, n1: 4, sq: 2, valid_len: 200,
+                                mixed_bf16: false };
+        let out = base_flash_attention(&q, &k, &v, &cfg);
+        // q_pos 0 rows == attention over 199 rows
+        let q0 = Matrix::from_vec(4, 32, q.data[..4 * 32].to_vec());
+        let k199 = Matrix::from_vec(199, 32, k.data[..199 * 32].to_vec());
+        let v199 = Matrix::from_vec(199, 16, v.data[..199 * 16].to_vec());
+        let gold0 = golden_full(&q0, &k199, &v199);
+        assert!(rel_frobenius_error(&out.data[..4 * 16], &gold0.data) < 1e-5);
+    }
+}

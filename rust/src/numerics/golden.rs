@@ -1,0 +1,119 @@
+//! The paper's "Golden" reference: dense safe-softmax attention in high
+//! precision (FP32 inputs, F64 softmax accumulation), no tiling.
+//!
+//! Used as ground truth for Tables 3–4 and as the coordinator's
+//! verification oracle in integration tests.
+
+use super::Matrix;
+
+/// Per-row causal limits for MTP decode (row = q_pos * n1 + head).
+pub fn row_limits(g: usize, n1: usize, sq: usize, valid_len: usize) -> Vec<usize> {
+    (0..g)
+        .map(|r| {
+            let q_pos = r / n1;
+            (valid_len + 1 + q_pos).saturating_sub(sq)
+        })
+        .collect()
+}
+
+/// Dense attention `softmax(q kᵀ / sqrt(Dk)) v` with F64 softmax.
+///
+/// * `q`: `[G, Dk]`, `k`: `[S2, Dk]`, `v`: `[S2, Dv]`.
+/// * `limits[r]` = number of attendable KV rows for query row `r`
+///   (see [`row_limits`]); rows beyond are masked.
+pub fn golden_attention(q: &Matrix, k: &Matrix, v: &Matrix,
+                        limits: &[usize]) -> Matrix {
+    assert_eq!(q.cols, k.cols, "Dk mismatch");
+    assert_eq!(k.rows, v.rows, "S2 mismatch");
+    assert_eq!(limits.len(), q.rows);
+    let scale = 1.0 / (q.cols as f64).sqrt();
+    let s = q.matmul_nt(k); // [G, S2] f32 scores
+    let mut out = Matrix::zeros(q.rows, v.cols);
+    for r in 0..q.rows {
+        let lim = limits[r].min(k.rows);
+        if lim == 0 {
+            continue;
+        }
+        let row = &s.data[r * k.rows..r * k.rows + lim];
+        let m = row.iter().fold(f64::NEG_INFINITY, |a, &b| {
+            a.max(b as f64 * scale)
+        });
+        let mut denom = 0f64;
+        let mut acc = vec![0f64; v.cols];
+        for (j, &sv) in row.iter().enumerate() {
+            let p = ((sv as f64) * scale - m).exp();
+            denom += p;
+            let vrow = v.row(j);
+            for (a, &vv) in acc.iter_mut().zip(vrow) {
+                *a += p * vv as f64;
+            }
+        }
+        for (o, a) in out.row_mut(r).iter_mut().zip(&acc) {
+            *o = (a / denom) as f32;
+        }
+    }
+    out
+}
+
+/// Convenience: no masking (valid = S2, sq = 1).
+pub fn golden_full(q: &Matrix, k: &Matrix, v: &Matrix) -> Matrix {
+    let limits = vec![k.rows; q.rows];
+    golden_attention(q, k, v, &limits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::numerics::Rng;
+
+    #[test]
+    fn uniform_scores_average_values() {
+        // q ⟂ k (zero q) -> uniform softmax -> output = column mean of v
+        let q = Matrix::zeros(2, 4);
+        let mut rng = Rng::new(1);
+        let k = rng.gaussian_matrix(8, 4, 1.0);
+        let v = rng.gaussian_matrix(8, 3, 1.0);
+        let out = golden_full(&q, &k, &v);
+        for c in 0..3 {
+            let mean: f32 = (0..8).map(|r| v.data[r * 3 + c]).sum::<f32>() / 8.0;
+            assert!((out.data[c] - mean).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn one_hot_attention_selects_row() {
+        // a huge score on one key makes softmax a delta
+        let mut q = Matrix::zeros(1, 4);
+        q.data[0] = 100.0;
+        let mut k = Matrix::zeros(4, 4);
+        k.data[2 * 4] = 100.0; // key row 2 aligned with q
+        let mut rng = Rng::new(2);
+        let v = rng.gaussian_matrix(4, 3, 1.0);
+        let out = golden_full(&q, &k, &v);
+        for c in 0..3 {
+            assert!((out.data[c] - v.data[2 * 3 + c]).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn row_limits_mtp() {
+        // sq=2, n1=3, valid=10: q_pos 0 rows see 9, q_pos 1 rows see 10
+        assert_eq!(row_limits(6, 3, 2, 10), vec![9, 9, 9, 10, 10, 10]);
+        // sq=1: all rows see valid
+        assert_eq!(row_limits(3, 3, 1, 7), vec![7, 7, 7]);
+    }
+
+    #[test]
+    fn masked_rows_ignore_tail() {
+        let mut rng = Rng::new(3);
+        let q = rng.gaussian_matrix(2, 4, 1.0);
+        let k = rng.gaussian_matrix(8, 4, 1.0);
+        let v = rng.gaussian_matrix(8, 3, 1.0);
+        let masked = golden_attention(&q, &k, &v, &[5, 5]);
+        // equal to attention over the 5-row prefix
+        let k5 = Matrix::from_vec(5, 4, k.data[..20].to_vec());
+        let v5 = Matrix::from_vec(5, 3, v.data[..15].to_vec());
+        let prefix = golden_full(&q, &k5, &v5);
+        assert_eq!(masked.data, prefix.data);
+    }
+}

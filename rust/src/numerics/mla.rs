@@ -1,0 +1,310 @@
+//! Absorbed MLA decode-layer math on the host (reference + weight gen).
+//!
+//! The serving path executes the AOT-compiled layer artifact; this module
+//! provides (a) deterministic weight generation matching
+//! `python/compile/model.py::init_weights` shape-for-shape, and (b) a
+//! host-side reference forward used by integration tests to verify the
+//! PJRT executables end-to-end.
+
+use super::{Matrix, Rng};
+
+/// Layer dimensions — mirror of `python/compile/model.py::MlaConfig`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MlaDims {
+    pub d_model: usize,
+    pub n1: usize,
+    pub d_head: usize,
+    pub q_rank: usize,
+    pub d_latent: usize,
+    pub d_rope: usize,
+    pub sq: usize,
+}
+
+impl Default for MlaDims {
+    fn default() -> Self {
+        Self { d_model: 1024, n1: 16, d_head: 128, q_rank: 192,
+               d_latent: 512, d_rope: 64, sq: 1 }
+    }
+}
+
+impl MlaDims {
+    pub fn dk(&self) -> usize {
+        self.d_latent + self.d_rope
+    }
+
+    /// Ordered weight shapes, identical to python's `WEIGHT_SPECS`.
+    pub fn weight_shapes(&self) -> Vec<(&'static str, Vec<usize>)> {
+        vec![
+            ("w_dq", vec![self.d_model, self.q_rank]),
+            ("w_uq_nope", vec![self.q_rank, self.n1 * self.d_head]),
+            ("w_uq_rope", vec![self.q_rank, self.n1 * self.d_rope]),
+            ("w_dkv", vec![self.d_model, self.d_latent]),
+            ("w_kr", vec![self.d_model, self.d_rope]),
+            ("w_uk", vec![self.n1, self.d_latent, self.d_head]),
+            ("w_uv", vec![self.n1, self.d_latent, self.d_head]),
+            ("w_o", vec![self.n1 * self.d_head, self.d_model]),
+        ]
+    }
+}
+
+/// One layer's weights as flat row-major buffers, in `WEIGHT_SPECS` order.
+#[derive(Debug, Clone)]
+pub struct MlaWeights {
+    pub dims: MlaDims,
+    pub tensors: Vec<(String, Vec<usize>, Vec<f32>)>,
+}
+
+impl MlaWeights {
+    /// Scaled-gaussian init: `N(0, 1/fan_in)` with fan_in = second-to-last
+    /// dim — statistically matching the python init (not bit-identical;
+    /// the integration tests generate weights on one side and feed them
+    /// to both paths).
+    pub fn init(dims: MlaDims, seed: u64) -> Self {
+        let mut rng = Rng::new(seed.wrapping_add(0xA11A));
+        let tensors = dims
+            .weight_shapes()
+            .into_iter()
+            .map(|(name, shape)| {
+                let fan_in = if shape.len() > 1 { shape[shape.len() - 2] } else { shape[0] };
+                let n: usize = shape.iter().product();
+                let scale = 1.0 / (fan_in as f32).sqrt();
+                let data = (0..n).map(|_| rng.gaussian() * scale).collect();
+                (name.to_string(), shape, data)
+            })
+            .collect();
+        Self { dims, tensors }
+    }
+
+    pub fn get(&self, name: &str) -> (&[usize], &[f32]) {
+        let (_, shape, data) = self
+            .tensors
+            .iter()
+            .find(|(n, _, _)| n == name)
+            .unwrap_or_else(|| panic!("unknown weight {name}"));
+        (shape, data)
+    }
+}
+
+/// RoPE rotation of `x: [T, d]` rows at the given absolute positions.
+pub fn apply_rope(x: &mut [f32], t: usize, d: usize, positions: &[i64]) {
+    assert_eq!(x.len(), t * d);
+    assert_eq!(positions.len(), t);
+    let half = d / 2;
+    for (row, &pos) in (0..t).zip(positions) {
+        for i in 0..half {
+            let inv_freq = 1.0f64 / 10000f64.powf(i as f64 / half as f64);
+            let angle = pos as f64 * inv_freq;
+            let (sin, cos) = (angle.sin() as f32, angle.cos() as f32);
+            let a = x[row * d + i];
+            let b = x[row * d + half + i];
+            x[row * d + i] = a * cos - b * sin;
+            x[row * d + half + i] = a * sin + b * cos;
+        }
+    }
+}
+
+/// `x[m,k] @ w[k,n]` (row-major), f32.
+fn matmul(x: &[f32], w: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut out = vec![0f32; m * n];
+    for i in 0..m {
+        for p in 0..k {
+            let xv = x[i * k + p];
+            if xv == 0.0 {
+                continue;
+            }
+            let wrow = &w[p * n..(p + 1) * n];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for j in 0..n {
+                orow[j] += xv * wrow[j];
+            }
+        }
+    }
+    out
+}
+
+/// Host-side absorbed decode step: projects the new token(s), updates the
+/// caches in place, and returns the attention-block output `[sq, d_model]`.
+///
+/// `attend` abstracts the latent-attention kernel so the same driver runs
+/// against the Rust recurrences (tests) or a PJRT executable (runtime).
+pub fn decode_step_with<F>(x: &[f32], c_cache: &mut Matrix,
+                           kr_cache: &mut Matrix, valid_len: usize,
+                           w: &MlaWeights, mut attend: F) -> Vec<f32>
+where
+    F: FnMut(&Matrix, &Matrix, &Matrix, usize) -> Matrix,
+{
+    let d = w.dims;
+    assert_eq!(x.len(), d.sq * d.d_model);
+    assert!(valid_len >= d.sq && valid_len <= c_cache.rows);
+
+    // project + RoPE the new latent/key rows, write into the caches
+    let (_, w_dkv) = w.get("w_dkv");
+    let (_, w_kr) = w.get("w_kr");
+    let c_new = matmul(x, w_dkv, d.sq, d.d_model, d.d_latent);
+    let mut kr_new = matmul(x, w_kr, d.sq, d.d_model, d.d_rope);
+    let positions: Vec<i64> =
+        (0..d.sq).map(|i| (valid_len - d.sq + i) as i64).collect();
+    apply_rope(&mut kr_new, d.sq, d.d_rope, &positions);
+    for i in 0..d.sq {
+        let row = valid_len - d.sq + i;
+        c_cache.row_mut(row)
+            .copy_from_slice(&c_new[i * d.d_latent..(i + 1) * d.d_latent]);
+        kr_cache.row_mut(row)
+            .copy_from_slice(&kr_new[i * d.d_rope..(i + 1) * d.d_rope]);
+    }
+
+    // query path with absorption
+    let (_, w_dq) = w.get("w_dq");
+    let (_, w_uq_nope) = w.get("w_uq_nope");
+    let (_, w_uq_rope) = w.get("w_uq_rope");
+    let (_, w_uk) = w.get("w_uk");
+    let q_lat = matmul(x, w_dq, d.sq, d.d_model, d.q_rank);
+    let q_nope = matmul(&q_lat, w_uq_nope, d.sq, d.q_rank, d.n1 * d.d_head);
+    let mut q_rope = matmul(&q_lat, w_uq_rope, d.sq, d.q_rank, d.n1 * d.d_rope);
+    // RoPE per head: view as [sq, n1, d_rope] and rotate each head row
+    for s in 0..d.sq {
+        for h in 0..d.n1 {
+            let off = (s * d.n1 + h) * d.d_rope;
+            apply_rope(&mut q_rope[off..off + d.d_rope], 1, d.d_rope,
+                       &positions[s..s + 1]);
+        }
+    }
+
+    // absorbed latent query: q_c[s,h,:] = q_nope[s,h,:] @ W_UK[h]^T
+    let g = d.sq * d.n1;
+    let mut q_rows = Matrix::zeros(g, d.dk());
+    for s in 0..d.sq {
+        for h in 0..d.n1 {
+            let r = s * d.n1 + h; // position-major kernel layout
+            let qn = &q_nope[(s * d.n1 + h) * d.d_head..][..d.d_head];
+            let wuk = &w_uk[h * d.d_latent * d.d_head..][..d.d_latent * d.d_head];
+            for c in 0..d.d_latent {
+                let mut acc = 0f32;
+                for e in 0..d.d_head {
+                    acc += qn[e] * wuk[c * d.d_head + e];
+                }
+                q_rows.data[r * d.dk() + c] = acc;
+            }
+            q_rows.row_mut(r)[d.d_latent..]
+                .copy_from_slice(&q_rope[(s * d.n1 + h) * d.d_rope..][..d.d_rope]);
+        }
+    }
+
+    // K = [c_cache | kr_cache], V = c_cache
+    let s2 = c_cache.rows;
+    let mut k_full = Matrix::zeros(s2, d.dk());
+    for rrow in 0..s2 {
+        k_full.row_mut(rrow)[..d.d_latent].copy_from_slice(c_cache.row(rrow));
+        k_full.row_mut(rrow)[d.d_latent..].copy_from_slice(kr_cache.row(rrow));
+    }
+    let o_lat = attend(&q_rows, &k_full, c_cache, valid_len); // [g, d_latent]
+
+    // absorbed output: o_heads[s,h,:] = o_lat[s,h,:] @ W_UV[h]
+    let (_, w_uv) = w.get("w_uv");
+    let (_, w_o) = w.get("w_o");
+    let mut o_heads = vec![0f32; d.sq * d.n1 * d.d_head];
+    for s in 0..d.sq {
+        for h in 0..d.n1 {
+            let r = s * d.n1 + h;
+            let ol = o_lat.row(r);
+            let wuv = &w_uv[h * d.d_latent * d.d_head..][..d.d_latent * d.d_head];
+            let dst = &mut o_heads[(s * d.n1 + h) * d.d_head..][..d.d_head];
+            for c in 0..d.d_latent {
+                let ov = ol[c];
+                if ov == 0.0 {
+                    continue;
+                }
+                let wrow = &wuv[c * d.d_head..(c + 1) * d.d_head];
+                for e in 0..d.d_head {
+                    dst[e] += ov * wrow[e];
+                }
+            }
+        }
+    }
+    matmul(&o_heads, w_o, d.sq, d.n1 * d.d_head, d.d_model)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::numerics::flash_base::FlashConfig;
+    use crate::numerics::golden::{golden_attention, row_limits};
+    use crate::numerics::rel_frobenius_error;
+
+    fn small_dims(sq: usize) -> MlaDims {
+        MlaDims { d_model: 64, n1: 2, d_head: 16, q_rank: 32, d_latent: 24,
+                  d_rope: 8, sq }
+    }
+
+    fn golden_attend(dims: MlaDims)
+        -> impl FnMut(&Matrix, &Matrix, &Matrix, usize) -> Matrix {
+        move |q, k, v, valid| {
+            let limits = row_limits(q.rows, dims.n1, dims.sq, valid);
+            golden_attention(q, k, v, &limits)
+        }
+    }
+
+    #[test]
+    fn weights_have_declared_shapes() {
+        let w = MlaWeights::init(small_dims(1), 0);
+        for (name, shape, data) in &w.tensors {
+            assert_eq!(data.len(), shape.iter().product::<usize>(), "{name}");
+        }
+        assert_eq!(w.tensors.len(), 8);
+    }
+
+    #[test]
+    fn decode_step_runs_and_updates_cache() {
+        let dims = small_dims(1);
+        let w = MlaWeights::init(dims, 1);
+        let mut rng = Rng::new(9);
+        let mut c = rng.gaussian_matrix(64, dims.d_latent, 0.1);
+        let mut kr = rng.gaussian_matrix(64, dims.d_rope, 0.1);
+        let before = c.row(39).to_vec();
+        let x: Vec<f32> = (0..dims.d_model).map(|_| rng.gaussian()).collect();
+        let y = decode_step_with(&x, &mut c, &mut kr, 40, &w,
+                                 golden_attend(dims));
+        assert_eq!(y.len(), dims.d_model);
+        assert!(y.iter().all(|v| v.is_finite()));
+        assert_ne!(c.row(39), &before[..], "new latent row written");
+    }
+
+    #[test]
+    fn amla_and_golden_attend_agree_in_layer() {
+        let dims = small_dims(2);
+        let w = MlaWeights::init(dims, 2);
+        let mut rng = Rng::new(10);
+        let mut c1 = rng.gaussian_matrix(64, dims.d_latent, 0.1);
+        let mut kr1 = rng.gaussian_matrix(64, dims.d_rope, 0.1);
+        let mut c2 = c1.clone();
+        let mut kr2 = kr1.clone();
+        let x: Vec<f32> =
+            (0..2 * dims.d_model).map(|_| rng.gaussian()).collect();
+
+        let y_gold = decode_step_with(&x, &mut c1, &mut kr1, 40, &w,
+                                      golden_attend(dims));
+        let y_amla = decode_step_with(&x, &mut c2, &mut kr2, 40, &w,
+            |q, k, v, valid| {
+                let cfg = FlashConfig { block_kv: 32, n1: dims.n1,
+                                        sq: dims.sq, valid_len: valid,
+                                        mixed_bf16: false };
+                crate::numerics::amla::amla_attention(q, k, v, &cfg)
+            });
+        assert!(rel_frobenius_error(&y_amla, &y_gold) < 1e-4);
+    }
+
+    #[test]
+    fn rope_preserves_row_norms() {
+        let mut rng = Rng::new(11);
+        let mut x: Vec<f32> = (0..4 * 8).map(|_| rng.gaussian()).collect();
+        let norms: Vec<f32> = (0..4)
+            .map(|r| x[r * 8..(r + 1) * 8].iter().map(|v| v * v).sum::<f32>())
+            .collect();
+        apply_rope(&mut x, 4, 8, &[3, 17, 200, 4096]);
+        for (r, &n0) in norms.iter().enumerate() {
+            let n1: f32 =
+                x[r * 8..(r + 1) * 8].iter().map(|v| v * v).sum();
+            assert!((n1 - n0).abs() / n0 < 1e-5);
+        }
+    }
+}

@@ -1,0 +1,194 @@
+//! Bit-exact Rust ports of the paper's numerics.
+//!
+//! These are not toy mirrors: the accuracy experiments (Tables 3–4) run
+//! on these implementations at the paper's full protocol (8 K context,
+//! 100 samples), the coordinator uses [`golden`] as its online
+//! verification oracle, and the property-test suite pins every numerical
+//! claim of Section 3 / Appendix A against them.
+//!
+//! * [`fp32`] — Lemma 3.1: multiply-by-2ⁿ as an INT32 exponent add, plus
+//!   the Appendix-A first-order compensation add.
+//! * [`bf16`] — software BF16 (round-to-nearest-even) matching the
+//!   Cube-core mixed-precision contract (BF16 operands, FP32 accumulate).
+//! * [`golden`] — the paper's "Golden": dense softmax attention in FP32
+//!   (optionally F64 accumulation).
+//! * [`flash_base`] — Algorithm 1 (the "Base"), with optional BF16 P·V.
+//! * [`amla`] — Algorithm 2 with compensation, bit-faithful to the Pallas
+//!   kernel in `python/compile/kernels/amla.py`.
+//! * [`naive`] — the unsafe Eq. (3) variant whose overflow motivates AMLA.
+//! * [`mla`] — the absorbed MLA decode layer math (host-side reference for
+//!   the serving path and the integration tests).
+
+pub mod amla;
+pub mod bf16;
+pub mod flash_base;
+pub mod fp32;
+pub mod golden;
+pub mod mla;
+pub mod naive;
+
+/// Relative Frobenius error `E(A,B) = |A-B|_F / (|B|_F + eps)` (§5.1).
+pub fn rel_frobenius_error(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len(), "rel_frobenius_error: shape mismatch");
+    let mut num = 0f64;
+    let mut den = 0f64;
+    for (&x, &y) in a.iter().zip(b) {
+        num += (x as f64 - y as f64).powi(2);
+        den += (y as f64).powi(2);
+    }
+    num.sqrt() / (den.sqrt() + 1e-10)
+}
+
+/// Row-major matrix view used across the numerics modules.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        Self { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// `self @ other^T` in f32 with f32 accumulation.
+    pub fn matmul_nt(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.cols);
+        let mut out = Matrix::zeros(self.rows, other.rows);
+        for i in 0..self.rows {
+            let a = self.row(i);
+            for j in 0..other.rows {
+                let b = other.row(j);
+                let mut acc = 0f32;
+                for k in 0..self.cols {
+                    acc += a[k] * b[k];
+                }
+                out.data[i * other.rows + j] = acc;
+            }
+        }
+        out
+    }
+}
+
+/// Deterministic xorshift RNG so experiments are reproducible without a
+/// `rand` dependency (the paper's protocol only needs gaussian/uniform).
+#[derive(Debug, Clone)]
+pub struct Rng(u64);
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        Self(seed.wrapping_mul(0x9E3779B97F4A7C15).max(1))
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        // xorshift64*
+        let mut x = self.0;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.0 = x;
+        x.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn uniform(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Uniform in [lo, hi).
+    #[inline]
+    pub fn uniform_in(&mut self, lo: f64, hi: f64) -> f32 {
+        (lo + (hi - lo) * self.uniform()) as f32
+    }
+
+    /// Standard normal via Box–Muller.
+    pub fn gaussian(&mut self) -> f32 {
+        let u1 = self.uniform().max(1e-300);
+        let u2 = self.uniform();
+        ((-2.0 * u1.ln()).sqrt()
+            * (2.0 * std::f64::consts::PI * u2).cos()) as f32
+    }
+
+    pub fn gaussian_matrix(&mut self, rows: usize, cols: usize,
+                           sigma: f32) -> Matrix {
+        let data = (0..rows * cols).map(|_| self.gaussian() * sigma).collect();
+        Matrix::from_vec(rows, cols, data)
+    }
+
+    pub fn uniform_matrix(&mut self, rows: usize, cols: usize, lo: f32,
+                          hi: f32) -> Matrix {
+        let data =
+            (0..rows * cols).map(|_| self.uniform_in(lo as f64, hi as f64)).collect();
+        Matrix::from_vec(rows, cols, data)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rel_error_zero_for_identical() {
+        let a = vec![1.0, 2.0, 3.0];
+        assert!(rel_frobenius_error(&a, &a) < 1e-12);
+    }
+
+    #[test]
+    fn rel_error_matches_hand_computation() {
+        let a = vec![1.0, 0.0];
+        let b = vec![0.0, 0.0];
+        // |a-b| = 1, |b| = 0 -> 1 / (0 + 1e-10) = 1e10
+        assert!((rel_frobenius_error(&a, &b) - 1e10).abs() / 1e10 < 1e-6);
+    }
+
+    #[test]
+    fn matmul_nt_small() {
+        let a = Matrix::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Matrix::from_vec(2, 2, vec![1.0, 0.0, 0.0, 1.0]);
+        let c = a.matmul_nt(&b); // a @ b^T = a (b = I)
+        assert_eq!(c.data, vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn rng_is_deterministic() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn gaussian_moments_roughly_correct() {
+        let mut rng = Rng::new(7);
+        let n = 200_000;
+        let (mut sum, mut sq) = (0f64, 0f64);
+        for _ in 0..n {
+            let x = rng.gaussian() as f64;
+            sum += x;
+            sq += x * x;
+        }
+        let mean = sum / n as f64;
+        let var = sq / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.01, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.02, "var {var}");
+    }
+}

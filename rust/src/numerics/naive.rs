@@ -1,0 +1,70 @@
+//! Eq. (3) — the naive in-place transformation and its overflow pitfall.
+//!
+//! `Ô_i ← Ô_{i-1} + exp(m_i) P̂_i V_i` with `Ô = exp(m) O` removes the
+//! rescale entirely, but `exp(m)` leaves FP32 range for `m > ~88`.  This
+//! module exists so the failure mode that motivates AMLA (§3.1) is an
+//! executable, tested fact rather than prose.
+
+use super::Matrix;
+
+/// Unsafe softmax attention: accumulates `exp(s)` without max tracking.
+/// Returns the output matrix; entries become inf/NaN when any score
+/// exceeds the FP32 exp range.
+pub fn naive_unsafe_attention(q: &Matrix, k: &Matrix, v: &Matrix) -> Matrix {
+    let scale = 1.0 / (q.cols as f32).sqrt();
+    let s = q.matmul_nt(k);
+    let mut out = Matrix::zeros(q.rows, v.cols);
+    for r in 0..q.rows {
+        let mut denom = 0f32;
+        let mut acc = vec![0f32; v.cols];
+        for j in 0..k.rows {
+            let p = (s.data[r * k.rows + j] * scale).exp(); // overflow here
+            denom += p;
+            for (a, &vv) in acc.iter_mut().zip(v.row(j)) {
+                *a += p * vv;
+            }
+        }
+        for (o, a) in out.row_mut(r).iter_mut().zip(&acc) {
+            *o = a / denom;
+        }
+    }
+    out
+}
+
+/// The largest score magnitude Eq. (3) survives: `exp(88.72) ~ f32::MAX`.
+pub const FP32_EXP_LIMIT: f32 = 88.72;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::numerics::golden::golden_full;
+    use crate::numerics::{rel_frobenius_error, Rng};
+
+    #[test]
+    fn overflows_on_large_scores() {
+        let mut rng = Rng::new(1);
+        let q = rng.uniform_matrix(2, 64, 10.0, 12.0);
+        let k = rng.uniform_matrix(32, 64, 10.0, 12.0);
+        let v = rng.gaussian_matrix(32, 8, 1.0);
+        let out = naive_unsafe_attention(&q, &k, &v);
+        assert!(out.data.iter().any(|x| !x.is_finite()),
+                "expected inf/NaN from unsafe exp");
+    }
+
+    #[test]
+    fn fine_on_small_scores() {
+        let mut rng = Rng::new(2);
+        let q = rng.gaussian_matrix(2, 64, 0.1);
+        let k = rng.gaussian_matrix(32, 64, 0.1);
+        let v = rng.gaussian_matrix(32, 8, 1.0);
+        let out = naive_unsafe_attention(&q, &k, &v);
+        let gold = golden_full(&q, &k, &v);
+        assert!(rel_frobenius_error(&out.data, &gold.data) < 1e-5);
+    }
+
+    #[test]
+    fn exp_limit_constant_is_right() {
+        assert!((FP32_EXP_LIMIT).exp().is_finite());
+        assert!((FP32_EXP_LIMIT + 1.0).exp().is_infinite());
+    }
+}

@@ -1,0 +1,35 @@
+//! The Preload Pipeline — §4.1 and Appendix B.
+//!
+//! A FlashAttention-style kernel iteration is a dependency chain of
+//! alternating Cube and Vector stages `[C1]→[V1]→…→[Cn]→[Vn]` executed on
+//! two physically separate units.  Naive in-order execution serializes
+//! the units; the paper's two-phase architecture (*Preload* then *Steady
+//! Pipeline Loop*) reorders stage instances across iterations so that,
+//! once warm, both units run back-to-back and the kernel is bound by
+//! whichever unit carries more total work (Cube, for AMLA).
+//!
+//! The theory implemented here:
+//!
+//! * **Lemma B.1** — `Preload count = (2n−1) − s` where `s` is the number
+//!   of intra-cycle dependency edges ("internal chains").
+//! * **Lemma B.2** — an adversarial stage-duration assignment for which
+//!   no pipeline achieves more than `s = n−1` internal chains
+//!   ([`chain::adversarial_chain`] constructs it; tests verify no
+//!   rotation beats the bound).
+//! * **Theorem B.1** — when `ΣV ≤ ΣC` a rotation with exactly `n−1`
+//!   internal chains always exists, found constructively at the minimum
+//!   partial sum of `a_i = V_i − C_{i+1}` ([`chain::CvChain::optimal_rotation`]).
+//! * **Theorem 4.1** — consequently the minimal Preload count is exactly
+//!   `n` ([`schedule::PipelineSchedule`] realizes it and the timeline
+//!   simulator confirms zero steady-state Cube bubbles).
+//!
+//! [`schedule::simulate`] is a two-unit list-schedule simulator used both
+//! to validate the theory on random chains (property tests) and by the
+//! kernel performance simulator ([`crate::simulator`]) to time AMLA's
+//! `n = 2` instance ([C1]→[V1]→[C2], V2 = 0).
+
+pub mod chain;
+pub mod schedule;
+
+pub use chain::{adversarial_chain, CvChain};
+pub use schedule::{simulate, PipelineSchedule, Stage, StageInstance, Timeline};

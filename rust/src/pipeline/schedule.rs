@@ -1,0 +1,375 @@
+//! Two-phase pipeline schedules and their timeline simulation.
+//!
+//! A schedule assigns every stage *instance* (iteration `j`, stage
+//! `C_i`/`V_i`) an issue position on its unit's in-order queue.  The
+//! simulator plays both queues against the dependency chain
+//! `C_i(j) → V_i(j) → C_{i+1}(j)` and reports makespan, per-unit busy
+//! time, and steady-state bubbles — the empirical check behind
+//! Theorem 4.1's "stall-free Steady Loop" claim and the timing model the
+//! kernel simulator ([`crate::simulator`]) builds on.
+
+use super::chain::CvChain;
+
+/// Stage identity within one iteration's chain.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stage {
+    /// `C_{i+1}` (0-indexed `i`).
+    Cube(usize),
+    /// `V_{i+1}`.
+    Vector(usize),
+}
+
+/// One schedulable unit of work: stage `stage` of iteration `iter`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StageInstance {
+    pub iter: usize,
+    pub stage: Stage,
+}
+
+/// A complete two-queue schedule.
+#[derive(Debug, Clone)]
+pub struct PipelineSchedule {
+    pub cube_queue: Vec<StageInstance>,
+    pub vector_queue: Vec<StageInstance>,
+    /// Number of `[C1]` instances issued before the steady loop — the
+    /// paper's *Preload count* metric.
+    pub preload_count: usize,
+}
+
+impl PipelineSchedule {
+    /// Naive serialized schedule: each iteration's chain issued in
+    /// dependency order with no cross-iteration overlap.
+    pub fn serialized(chain: &CvChain, iterations: usize) -> Self {
+        let n = chain.n();
+        let mut cube = Vec::new();
+        let mut vector = Vec::new();
+        for j in 0..iterations {
+            for i in 0..n {
+                cube.push(StageInstance { iter: j, stage: Stage::Cube(i) });
+                vector.push(StageInstance { iter: j, stage: Stage::Vector(i) });
+            }
+        }
+        Self { cube_queue: cube, vector_queue: vector, preload_count: 0 }
+    }
+
+    /// The paper's two-phase pipeline for rotation `p` (see
+    /// [`CvChain::rotation_feasible`]): per-stage cycle offsets are
+    ///
+    /// ```text
+    /// off(C_{p+i}) = i            (cube order within a cycle)
+    /// off(V_{p+i}) = i            (consumed in-cycle: internal C→V edge)
+    /// off(V_{p+n-1}) = n          (the wrap V crosses the cycle boundary)
+    /// ```
+    ///
+    /// Stage `X` with offset `d` of iteration `j` executes in cycle
+    /// `j + d`; the Preload phase is cycles `0..max_off` restricted to
+    /// instances with `iter < 0` shifted — equivalently, cycle `t` simply
+    /// executes instance `iter = t − off(X)` of each stage when that is
+    /// `≥ 0`.  The number of `[C1]`-bearing warm-up cycles equals
+    /// `off(V_{p+n−1}) − off(C1) = n` minus the cycles where C1 has not
+    /// yet issued — matching Preload count = n (Theorem 4.1).
+    pub fn preload(chain: &CvChain, p: usize, iterations: usize) -> Self {
+        let n = chain.n();
+        // The stage whose C→V edge crosses the cycle boundary is the last
+        // of the rotation order: wrap = p − 1 (mod n).  Offsets accumulate
+        // along the *chain* order (C_1 → V_1 → C_2 → …): every V→C edge is
+        // external (+1 cycle), every C→V edge internal (same cycle) except
+        // at `wrap`.
+        let wrap = (p + n - 1) % n;
+        let mut off_c = vec![0usize; n];
+        let mut off_v = vec![0usize; n];
+        for i in 0..n {
+            off_c[i] = i + usize::from(i > wrap);
+            off_v[i] = off_c[i] + usize::from(i == wrap);
+        }
+        let max_off = n; // = max(off_v)
+
+        let total_cycles = iterations + max_off;
+        let mut cube = Vec::new();
+        let mut vector = Vec::new();
+        for t in 0..total_cycles {
+            // within a cycle, both units issue in rotation order
+            for i in 0..n {
+                let s = (p + i) % n;
+                if t >= off_c[s] && t - off_c[s] < iterations {
+                    cube.push(StageInstance { iter: t - off_c[s],
+                                              stage: Stage::Cube(s) });
+                }
+            }
+            // Vector issues the cross-cycle V (the `wrap` stage) first —
+            // it is dependency-ready at cycle start, so running it in the
+            // vector unit's initial idle window is what makes the suffix
+            // conditions sufficient for a stall-free steady state
+            // (finish ≤ max(ΣV, suffix bounds) ≤ ΣC).
+            for i in 0..n {
+                let s = (wrap + i) % n;
+                if t >= off_v[s] && t - off_v[s] < iterations {
+                    vector.push(StageInstance { iter: t - off_v[s],
+                                                stage: Stage::Vector(s) });
+                }
+            }
+        }
+        // Preload count: [C1] instances issued during warm-up cycles
+        // 0..n-1 (off_c[0] = 0, so exactly n of them) — Theorem 4.1.
+        let preload_count = max_off.min(iterations);
+        Self { cube_queue: cube, vector_queue: vector, preload_count }
+    }
+}
+
+/// Result of playing a schedule against the chain durations.
+#[derive(Debug, Clone)]
+pub struct Timeline {
+    pub makespan: f64,
+    pub cube_busy: f64,
+    pub vector_busy: f64,
+    /// Idle time on the Cube unit *between* its first and last stage —
+    /// the pipeline-bubble metric (0 ⇒ Cube-bound stall-free execution).
+    pub cube_bubble: f64,
+    pub vector_bubble: f64,
+    /// Per-instance (start, end), keyed by (iter, stage-kind, index).
+    pub spans: Vec<(StageInstance, f64, f64)>,
+}
+
+impl Timeline {
+    /// Cube utilization over the span it is active.
+    pub fn cube_utilization(&self) -> f64 {
+        self.cube_busy / (self.cube_busy + self.cube_bubble)
+    }
+}
+
+/// Play `schedule` on two in-order units.  Dependencies:
+/// `V_i(j)` needs `C_i(j)`; `C_{i+1}(j)` needs `V_i(j)`; `C_1(j)` is free.
+/// Panics if a queue references an instance that can never become ready
+/// (dependency missing from the schedule) — schedules must be complete.
+pub fn simulate(chain: &CvChain, schedule: &PipelineSchedule) -> Timeline {
+    let n = chain.n();
+    let dur = |s: Stage| match s {
+        Stage::Cube(i) => chain.c[i],
+        Stage::Vector(i) => chain.v[i],
+    };
+    // finish times of completed instances
+    let key = |inst: &StageInstance| -> (usize, usize) {
+        match inst.stage {
+            Stage::Cube(i) => (inst.iter, i),
+            Stage::Vector(i) => (inst.iter, n + i),
+        }
+    };
+    let mut finish: std::collections::HashMap<(usize, usize), f64> =
+        std::collections::HashMap::new();
+
+    let dep_of = |inst: &StageInstance| -> Option<(usize, usize)> {
+        match inst.stage {
+            Stage::Cube(0) => None,
+            Stage::Cube(i) => Some((inst.iter, n + i - 1)), // V_{i-1}(j)
+            Stage::Vector(i) => Some((inst.iter, i)),       // C_i(j)
+        }
+    };
+
+    let mut spans = Vec::new();
+    let (mut qc, mut qv) = (0usize, 0usize);
+    let (mut tc, mut tv) = (0f64, 0f64); // unit-available times
+    let (mut busy_c, mut busy_v) = (0f64, 0f64);
+    let (mut first_c, mut last_c) = (f64::INFINITY, 0f64);
+    let (mut first_v, mut last_v) = (f64::INFINITY, 0f64);
+
+    let mut progress = true;
+    while progress {
+        progress = false;
+        // try to advance each queue head whose dependency is satisfied
+        for _ in 0..2 {
+            if qc < schedule.cube_queue.len() {
+                let inst = schedule.cube_queue[qc];
+                let ready = dep_of(&inst)
+                    .map(|d| finish.get(&d).copied())
+                    .map_or(Some(0.0), |f| f);
+                if let Some(dep_t) = ready {
+                    let start = tc.max(dep_t);
+                    let end = start + dur(inst.stage);
+                    finish.insert(key(&inst), end);
+                    spans.push((inst, start, end));
+                    busy_c += end - start;
+                    first_c = first_c.min(start);
+                    last_c = last_c.max(end);
+                    tc = end;
+                    qc += 1;
+                    progress = true;
+                }
+            }
+            if qv < schedule.vector_queue.len() {
+                let inst = schedule.vector_queue[qv];
+                let ready = dep_of(&inst)
+                    .map(|d| finish.get(&d).copied())
+                    .map_or(Some(0.0), |f| f);
+                if let Some(dep_t) = ready {
+                    let start = tv.max(dep_t);
+                    let end = start + dur(inst.stage);
+                    finish.insert(key(&inst), end);
+                    spans.push((inst, start, end));
+                    busy_v += end - start;
+                    first_v = first_v.min(start);
+                    last_v = last_v.max(end);
+                    tv = end;
+                    qv += 1;
+                    progress = true;
+                }
+            }
+        }
+    }
+    assert!(qc == schedule.cube_queue.len() && qv == schedule.vector_queue.len(),
+            "schedule deadlocked: cube {qc}/{}, vector {qv}/{}",
+            schedule.cube_queue.len(), schedule.vector_queue.len());
+
+    let makespan = last_c.max(last_v);
+    Timeline {
+        makespan,
+        cube_busy: busy_c,
+        vector_busy: busy_v,
+        cube_bubble: if first_c.is_finite() { (last_c - first_c) - busy_c } else { 0.0 },
+        vector_bubble: if first_v.is_finite() { (last_v - first_v) - busy_v } else { 0.0 },
+        spans,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{gen_usize, run_prop};
+
+    fn amla_chain() -> CvChain {
+        CvChain::amla_instance(10.0, 4.0, 9.0)
+    }
+
+    #[test]
+    fn serialized_has_big_bubbles() {
+        let ch = amla_chain();
+        let t = simulate(&ch, &PipelineSchedule::serialized(&ch, 16));
+        // serialized: cube waits for every vector stage
+        assert!(t.cube_bubble > 0.0);
+        assert!(t.makespan >= 16.0 * (ch.total_cube() + 4.0) - 1e-6);
+    }
+
+    #[test]
+    fn preload_pipeline_is_cube_bound_stall_free() {
+        let ch = amla_chain();
+        let p = ch.optimal_rotation();
+        assert!(ch.rotation_feasible(p));
+        let sched = PipelineSchedule::preload(&ch, p, 64);
+        let t = simulate(&ch, &sched);
+        // Theorem 4.1: steady loop has no cube stalls; allow the warm-up
+        // cycles to contribute at most ~n cycles of bubble.
+        let warmup_allowance = 2.0 * (ch.total_vector() + ch.total_cube());
+        assert!(t.cube_bubble <= warmup_allowance,
+                "cube bubble {} exceeds warm-up allowance", t.cube_bubble);
+        // makespan approaches N * sum(C): within warm-up + drain slack
+        let ideal = 64.0 * ch.total_cube();
+        assert!(t.makespan <= ideal + warmup_allowance + ch.total_vector(),
+                "makespan {} vs ideal {ideal}", t.makespan);
+        assert_eq!(sched.preload_count, 2); // AMLA: Preload count = n = 2
+    }
+
+    #[test]
+    fn preload_count_equals_n() {
+        for n in 2..6 {
+            let c: Vec<f64> = (0..n).map(|i| 5.0 + i as f64).collect();
+            let v: Vec<f64> = (0..n).map(|i| 1.0 + 0.1 * i as f64).collect();
+            let ch = CvChain::new(c, v);
+            let sched =
+                PipelineSchedule::preload(&ch, ch.optimal_rotation(), 32);
+            assert_eq!(sched.preload_count, n, "n={n}");
+        }
+    }
+
+    #[test]
+    fn all_instances_executed_exactly_once() {
+        let ch = amla_chain();
+        let sched = PipelineSchedule::preload(&ch, ch.optimal_rotation(), 10);
+        let t = simulate(&ch, &sched);
+        assert_eq!(t.spans.len(), 10 * 2 * 2); // 10 iters x n=2 x {C,V}
+        let mut seen = std::collections::HashSet::new();
+        for (inst, start, end) in &t.spans {
+            assert!(end >= start);
+            assert!(seen.insert((inst.iter, format!("{:?}", inst.stage))));
+        }
+    }
+
+    #[test]
+    fn dependencies_respected_in_time() {
+        let ch = CvChain::new(vec![3.0, 2.0, 4.0], vec![1.0, 2.0, 1.5]);
+        let sched = PipelineSchedule::preload(&ch, ch.optimal_rotation(), 12);
+        let t = simulate(&ch, &sched);
+        let find = |iter: usize, stage: Stage| {
+            t.spans.iter().find(|(i, _, _)| i.iter == iter && i.stage == stage)
+                .map(|(_, s, e)| (*s, *e)).unwrap()
+        };
+        for j in 0..12 {
+            for i in 0..3 {
+                let (cs, ce) = find(j, Stage::Cube(i));
+                let (vs, _) = find(j, Stage::Vector(i));
+                assert!(vs >= ce - 1e-9, "V{i}({j}) started before C{i}({j})");
+                if i > 0 {
+                    let (_, ve_prev) = find(j, Stage::Vector(i - 1));
+                    assert!(cs >= ve_prev - 1e-9);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn prop_preload_beats_serialized() {
+        run_prop("preload_speedup", 100, |rng| {
+            let n = gen_usize(rng, 2, 6);
+            let c: Vec<f64> =
+                (0..n).map(|_| rng.uniform() * 8.0 + 1.0).collect();
+            let cs: f64 = c.iter().sum();
+            let mut v: Vec<f64> =
+                (0..n).map(|_| rng.uniform() * 4.0 + 0.1).collect();
+            let vs: f64 = v.iter().sum();
+            if vs > cs {
+                let sc = cs / vs * 0.95;
+                for x in &mut v {
+                    *x *= sc;
+                }
+            }
+            let ch = CvChain::new(c, v);
+            let iters = 32;
+            let t_ser = simulate(&ch, &PipelineSchedule::serialized(&ch, iters));
+            let p = ch.optimal_rotation();
+            if !ch.rotation_feasible(p) {
+                return; // only guaranteed in the cube-dominated case
+            }
+            let t_pre =
+                simulate(&ch, &PipelineSchedule::preload(&ch, p, iters));
+            assert!(t_pre.makespan <= t_ser.makespan + 1e-6,
+                    "preload slower: {} vs {}", t_pre.makespan, t_ser.makespan);
+        });
+    }
+
+    #[test]
+    fn prop_steady_state_cube_bound(
+    ) {
+        run_prop("steady_cube_bound", 80, |rng| {
+            let n = gen_usize(rng, 2, 5);
+            let c: Vec<f64> =
+                (0..n).map(|_| rng.uniform() * 8.0 + 2.0).collect();
+            let cs: f64 = c.iter().sum();
+            let mut v: Vec<f64> =
+                (0..n).map(|_| rng.uniform() * 4.0 + 0.1).collect();
+            let vs: f64 = v.iter().sum();
+            let sc = (cs * 0.9) / vs;
+            if sc < 1.0 {
+                for x in &mut v {
+                    *x *= sc;
+                }
+            }
+            let ch = CvChain::new(c, v);
+            let p = ch.optimal_rotation();
+            assert!(ch.rotation_feasible(p));
+            let iters = 64;
+            let t = simulate(&ch, &PipelineSchedule::preload(&ch, p, iters));
+            // amortized per-iteration cost approaches sum(C)
+            let per_iter = t.makespan / iters as f64;
+            assert!(per_iter <= ch.total_cube() * 1.08 + 1e-6,
+                    "per-iter {per_iter} vs sumC {}", ch.total_cube());
+        });
+    }
+}

@@ -1,0 +1,313 @@
+//! Table/figure rendering shared by the CLI, examples and benches.
+//!
+//! Every paper artifact (Tables 2–5, Figs 1/10, the pipeline figures)
+//! has a `render_*` function here producing aligned plain-text that the
+//! regeneration drivers print and EXPERIMENTS.md quotes.
+
+use crate::config::Algo;
+use crate::hardware::{Accelerator, Ascend910, GpuModel};
+use crate::numerics::flash_base::FlashConfig;
+use crate::numerics::{amla, flash_base, golden, rel_frobenius_error, Rng};
+use crate::pipeline::{simulate, CvChain, PipelineSchedule};
+use crate::roofline::{roofline_points, AttentionVariant};
+use crate::simulator::{table5_rows, simulate_910, KernelConfig};
+
+/// Simple fixed-width table builder.
+pub struct TextTable {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl TextTable {
+    pub fn new<S: Into<String>>(header: Vec<S>) -> Self {
+        Self { header: header.into_iter().map(Into::into).collect(),
+               rows: Vec::new() }
+    }
+
+    pub fn row<S: Into<String>>(&mut self, cells: Vec<S>) {
+        let cells: Vec<String> = cells.into_iter().map(Into::into).collect();
+        assert_eq!(cells.len(), self.header.len());
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths = vec![0usize; ncol];
+        for (i, h) in self.header.iter().enumerate() {
+            widths[i] = h.len();
+        }
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let fmt_row = |cells: &[String]| -> String {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:>w$}", c, w = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        let mut out = fmt_row(&self.header);
+        out.push('\n');
+        out.push_str(&"-".repeat(out.len().saturating_sub(1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Table 2: arithmetic intensity of attention variants.
+pub fn render_table2() -> String {
+    let mut t = TextTable::new(vec!["Variant", "Q_head", "KV_head", "S_q",
+                                    "Intensity (FLOP/B)"]);
+    for v in AttentionVariant::table2() {
+        t.row(vec![v.name.to_string(), v.q_heads.to_string(),
+                   v.kv_heads.to_string(), v.sq.to_string(),
+                   format!("{:.1}", v.intensity())]);
+    }
+    t.render()
+}
+
+/// Fig 1: roofline points on a device.
+pub fn render_fig1(acc: &Accelerator) -> String {
+    let mut t = TextTable::new(vec!["Variant", "Intensity", "Attainable",
+                                    "Regime"]);
+    for p in roofline_points(acc) {
+        t.row(vec![
+            p.variant.to_string(),
+            format!("{:.1}", p.intensity),
+            format!("{:.0} TFLOPS", p.attainable_flops / 1e12),
+            if p.compute_bound { "compute-bound" } else { "memory-bound" }
+                .to_string(),
+        ]);
+    }
+    format!("{} (peak {:.0} TFLOPS, ridge {:.0} FLOP/B)\n{}",
+            acc.name, acc.peak_bf16_flops / 1e12, acc.ridge_point(),
+            t.render())
+}
+
+/// Both rooflines of Fig 1.
+pub fn render_fig1_both() -> String {
+    format!("{}\n{}", render_fig1(&Ascend910::accelerator()),
+            render_fig1(&GpuModel::accelerator()))
+}
+
+/// One accuracy table row: mean errors of Base and AMLA vs Golden over
+/// `samples` draws (the Rust twin of the paper's Tables 3–4 protocol).
+pub fn accuracy_row(dist: &str, param: f64, samples: usize, s2: usize,
+                    g: usize) -> (f64, f64) {
+    let (dk, dv, block) = (576, 512, 512);
+    let (mut base_sum, mut amla_sum) = (0.0, 0.0);
+    for s in 0..samples {
+        let mut rng = Rng::new(1000 * s as u64 + param as u64 * 7 + 13);
+        let (q, k, v) = match dist {
+            "normal" => (rng.gaussian_matrix(g, dk, param as f32),
+                         rng.gaussian_matrix(s2, dk, param as f32),
+                         rng.gaussian_matrix(s2, dv, param as f32)),
+            _ => (rng.uniform_matrix(g, dk, -param as f32, param as f32),
+                  rng.uniform_matrix(s2, dk, -param as f32, param as f32),
+                  rng.uniform_matrix(s2, dv, -param as f32, param as f32)),
+        };
+        // paper protocol: inputs quantized to BF16
+        let bf = |m: &crate::numerics::Matrix| {
+            let mut m = m.clone();
+            crate::numerics::bf16::bf16_round_slice(&mut m.data);
+            m
+        };
+        let (q, k, v) = (bf(&q), bf(&k), bf(&v));
+        let gold = golden::golden_full(&q, &k, &v);
+        let cfg = FlashConfig { block_kv: block, n1: g, sq: 1,
+                                valid_len: s2, mixed_bf16: true };
+        let b = flash_base::base_flash_attention(&q, &k, &v, &cfg);
+        let a = amla::amla_attention(&q, &k, &v, &cfg);
+        base_sum += rel_frobenius_error(&b.data, &gold.data);
+        amla_sum += rel_frobenius_error(&a.data, &gold.data);
+    }
+    (base_sum / samples as f64, amla_sum / samples as f64)
+}
+
+/// Tables 3 & 4 at a configurable sample count / context.
+pub fn render_accuracy_tables(samples: usize, s2: usize, g: usize)
+                              -> String {
+    let mut out = String::new();
+    let mut t3 = TextTable::new(vec!["E(.,Golden)", "N(0,1)", "N(0,4)",
+                                     "N(0,9)", "N(0,16)", "N(0,25)",
+                                     "N(0,100)"]);
+    let sigmas = [1.0, 2.0, 3.0, 4.0, 5.0, 10.0];
+    let mut base_row = vec!["Base".to_string()];
+    let mut amla_row = vec!["AMLA".to_string()];
+    for sigma in sigmas {
+        let (b, a) = accuracy_row("normal", sigma, samples, s2, g);
+        base_row.push(format!("{b:.2e}"));
+        amla_row.push(format!("{a:.2e}"));
+    }
+    t3.row(base_row);
+    t3.row(amla_row);
+    out.push_str("Table 3 — Gaussian inputs\n");
+    out.push_str(&t3.render());
+
+    let mut t4 = TextTable::new(vec!["E(.,Golden)", "U(-1,1)", "U(-3,3)",
+                                     "U(-5,5)", "U(-10,10)", "U(-20,20)",
+                                     "U(-60,60)"]);
+    let bounds = [1.0, 3.0, 5.0, 10.0, 20.0, 60.0];
+    let mut base_row = vec!["Base".to_string()];
+    let mut amla_row = vec!["AMLA".to_string()];
+    for b0 in bounds {
+        let (b, a) = accuracy_row("uniform", b0, samples, s2, g);
+        base_row.push(format!("{b:.2e}"));
+        amla_row.push(format!("{a:.2e}"));
+    }
+    t4.row(base_row);
+    t4.row(amla_row);
+    out.push_str("\nTable 4 — Uniform inputs\n");
+    out.push_str(&t4.render());
+    out
+}
+
+/// Table 5 + Fig 10: simulated vs paper.
+pub fn render_table5() -> String {
+    let mut t = TextTable::new(vec!["S_q", "S_k", "HW", "sim µs", "sim FU",
+                                    "paper µs", "paper FU", "|ΔFU|",
+                                    "bound by"]);
+    for r in table5_rows() {
+        t.row(vec![
+            r.sq.to_string(),
+            r.sk.to_string(),
+            r.hw.to_string(),
+            format!("{:.0}", r.sim.duration_us),
+            format!("{:.1}%", r.sim.fu * 100.0),
+            format!("{:.0}", r.paper_duration_us),
+            format!("{:.1}%", r.paper_fu * 100.0),
+            format!("{:.1}", r.fu_abs_err() * 100.0),
+            r.sim.bound_by.clone(),
+        ]);
+    }
+    t.render()
+}
+
+/// The §3.3 ablation: AMLA vs Base (serialized) vs Base (pipelined).
+pub fn render_ablation() -> String {
+    use crate::simulator::ascend::{simulate_ascend_variant,
+                                   AscendKernelModel, AscendVariant};
+    let model = AscendKernelModel::default();
+    let mut t = TextTable::new(vec!["S_q", "S_k", "AMLA FU",
+                                    "Base+pipeline FU", "Base serial FU",
+                                    "AMLA speedup"]);
+    for sq in [1, 2] {
+        for sk in [1024, 4096, 16384] {
+            let cfg = KernelConfig::paper(sq, sk);
+            let a = simulate_ascend_variant(&model, &cfg, AscendVariant::Amla);
+            let bp = simulate_ascend_variant(&model, &cfg,
+                                             AscendVariant::BasePipelined);
+            let bs = simulate_ascend_variant(&model, &cfg,
+                                             AscendVariant::BaseSerialized);
+            t.row(vec![
+                sq.to_string(),
+                sk.to_string(),
+                format!("{:.1}%", a.fu * 100.0),
+                format!("{:.1}%", bp.fu * 100.0),
+                format!("{:.1}%", bs.fu * 100.0),
+                format!("{:.2}x", bs.duration_us / a.duration_us),
+            ]);
+        }
+    }
+    t.render()
+}
+
+/// Figs 5–7: preload pipeline schedules on AMLA's stage chain.
+pub fn render_pipeline_demo() -> String {
+    let model = crate::simulator::ascend::AscendKernelModel::default();
+    let p = model.iteration_pipes(256, 512, 1.0);
+    let chain = CvChain::amla_instance(p.mte2.max(p.mmad / 2.0),
+                                       p.v1, p.mmad / 2.0);
+    let iters = 32;
+    let rot = chain.optimal_rotation();
+    let serial = simulate(&chain, &PipelineSchedule::serialized(&chain, iters));
+    let sched = PipelineSchedule::preload(&chain, rot, iters);
+    let pre = simulate(&chain, &sched);
+    let mut out = String::new();
+    out.push_str(&format!(
+        "AMLA chain (per-iteration, per-core): C1 {:.2} µs, V1 {:.2} µs, \
+         C2 {:.2} µs; V2 = 0 (eliminated)\n",
+        chain.c[0] * 1e6, chain.v[0] * 1e6, chain.c[1] * 1e6));
+    out.push_str(&format!(
+        "rotation p = {rot}, preload count = {} (Theorem 4.1: n = 2)\n",
+        sched.preload_count));
+    out.push_str(&format!(
+        "serialized: {:.1} µs, cube util {:.1}%\n",
+        serial.makespan * 1e6, serial.cube_utilization() * 100.0));
+    out.push_str(&format!(
+        "preload pipeline: {:.1} µs, cube util {:.1}% — {:.2}x speedup\n",
+        pre.makespan * 1e6, pre.cube_utilization() * 100.0,
+        serial.makespan / pre.makespan));
+    out
+}
+
+/// Fig 10 as two aligned FU-vs-S_k series per S_q.
+pub fn render_fig10() -> String {
+    let mut out = String::new();
+    for sq in [1, 2] {
+        out.push_str(&format!("S_q = {sq}: FU vs S_k\n"));
+        let mut t = TextTable::new(vec!["S_k", "910 (AMLA)", "GPU (FlashMLA)"]);
+        for sk in [1024, 2048, 3072, 4096, 6144, 8192, 12288, 16384] {
+            let cfg = KernelConfig::paper(sq, sk);
+            let a = simulate_910(&cfg, Algo::Amla);
+            let g = crate::simulator::simulate_flashmla(
+                &crate::simulator::FlashMlaModel::default(), &cfg);
+            t.row(vec![sk.to_string(), format!("{:.1}%", a.fu * 100.0),
+                       format!("{:.1}%", g.fu * 100.0)]);
+        }
+        out.push_str(&t.render());
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renderer_aligns() {
+        let mut t = TextTable::new(vec!["a", "long-header"]);
+        t.row(vec!["1", "2"]);
+        t.row(vec!["333", "4"]);
+        let s = t.render();
+        assert!(s.contains("long-header"));
+        assert_eq!(s.lines().count(), 4);
+    }
+
+    #[test]
+    fn table2_renders_all_variants() {
+        let s = render_table2();
+        for name in ["MHA", "GQA", "MLA-64", "MLA-128", "MLA-128(Sq=2)"] {
+            assert!(s.contains(name), "{name} missing");
+        }
+    }
+
+    #[test]
+    fn accuracy_row_bf16_scale() {
+        // tiny protocol: errors at BF16 level and AMLA ~ Base
+        let (b, a) = accuracy_row("normal", 1.0, 2, 512, 8);
+        assert!(b > 1e-5 && b < 1e-2, "base {b}");
+        assert!((a - b).abs() < 0.3 * b + 1e-5, "amla {a} vs base {b}");
+    }
+
+    #[test]
+    fn table5_render_contains_headline() {
+        let s = render_table5();
+        assert!(s.contains("16384"));
+        assert!(s.contains("910"));
+    }
+
+    #[test]
+    fn pipeline_demo_shows_speedup() {
+        let s = render_pipeline_demo();
+        assert!(s.contains("preload count = 2"));
+    }
+}

@@ -1,0 +1,185 @@
+//! Arithmetic intensity & roofline analysis — §2.4, Table 2, Fig 1.
+//!
+//! Decode-phase attention moves the whole KV cache once per step, so
+//!
+//! ```text
+//! FLOPs      = 2 · N1 · S1 · S2 · (Dk + Dv)
+//! KV bytes   = 2 · N2 · S2 · (Dk + Dv)      (MHA/GQA, BF16)
+//!            = 2 · S2 · Dk                  (MLA: latent shared by heads)
+//! intensity  = N1 · S1                      (MHA/GQA)
+//!            = N1 · S1 · (Dk + Dv) / Dk     (MLA)
+//! ```
+//!
+//! [`AttentionVariant`] encodes the five columns of Table 2;
+//! [`roofline_points`] produces the Fig 1 scatter against any
+//! [`Accelerator`]'s roofline.
+
+use crate::hardware::Accelerator;
+
+/// One attention configuration (a column of Table 2).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AttentionVariant {
+    pub name: &'static str,
+    /// Query heads (N1).
+    pub q_heads: usize,
+    /// KV heads (N2); for MLA the latent is a single shared "head".
+    pub kv_heads: usize,
+    /// Query length per step (S1; 2 with MTP).
+    pub sq: usize,
+    /// K head dim (for MLA: latent 512 + rope 64 = 576).
+    pub dk: usize,
+    /// V head dim (for MLA: latent 512).
+    pub dv: usize,
+    /// Latent attention (MLA) vs per-head KV (MHA/GQA).
+    pub latent: bool,
+}
+
+impl AttentionVariant {
+    /// The five variants of Table 2.
+    pub fn table2() -> Vec<AttentionVariant> {
+        vec![
+            AttentionVariant { name: "MHA", q_heads: 64, kv_heads: 64,
+                               sq: 1, dk: 128, dv: 128, latent: false },
+            AttentionVariant { name: "GQA", q_heads: 64, kv_heads: 8,
+                               sq: 1, dk: 128, dv: 128, latent: false },
+            AttentionVariant { name: "MLA-64", q_heads: 64, kv_heads: 1,
+                               sq: 1, dk: 576, dv: 512, latent: true },
+            AttentionVariant { name: "MLA-128", q_heads: 128, kv_heads: 1,
+                               sq: 1, dk: 576, dv: 512, latent: true },
+            AttentionVariant { name: "MLA-128(Sq=2)", q_heads: 128,
+                               kv_heads: 1, sq: 2, dk: 576, dv: 512,
+                               latent: true },
+        ]
+    }
+
+    /// Attention FLOPs for a context of `s2` (mul+add counted).
+    pub fn flops(&self, s2: usize) -> f64 {
+        2.0 * self.q_heads as f64 * self.sq as f64 * s2 as f64
+            * (self.dk + self.dv) as f64
+    }
+
+    /// KV bytes moved from HBM per decode step (BF16 = 2 bytes).
+    pub fn kv_bytes(&self, s2: usize) -> f64 {
+        if self.latent {
+            2.0 * s2 as f64 * self.dk as f64
+        } else {
+            2.0 * self.kv_heads as f64 * s2 as f64
+                * (self.dk + self.dv) as f64
+        }
+    }
+
+    /// Arithmetic intensity (FLOP/byte); independent of S2.
+    pub fn intensity(&self) -> f64 {
+        if self.latent {
+            self.q_heads as f64 * self.sq as f64
+                * (self.dk + self.dv) as f64 / self.dk as f64
+        } else {
+            // MHA/GQA: (Dk+Dv) cancels between FLOPs and bytes
+            self.q_heads as f64 * self.sq as f64 / self.kv_heads as f64
+        }
+    }
+
+    /// Whether this variant is compute-bound on `acc`.
+    pub fn compute_bound(&self, acc: &Accelerator) -> bool {
+        self.intensity() >= acc.ridge_point()
+    }
+}
+
+/// One point of the Fig 1 scatter.
+#[derive(Debug, Clone)]
+pub struct RooflinePoint {
+    pub variant: &'static str,
+    pub intensity: f64,
+    /// Attainable FLOP/s on the roofline at this intensity.
+    pub attainable_flops: f64,
+    pub compute_bound: bool,
+}
+
+/// Fig 1: evaluate every Table-2 variant against an accelerator roofline.
+pub fn roofline_points(acc: &Accelerator) -> Vec<RooflinePoint> {
+    AttentionVariant::table2()
+        .into_iter()
+        .map(|v| RooflinePoint {
+            variant: v.name,
+            intensity: v.intensity(),
+            attainable_flops: acc.attainable_flops(v.intensity()),
+            compute_bound: v.compute_bound(acc),
+        })
+        .collect()
+}
+
+/// The roofline curve itself (for plotting/reporting): a log-spaced sweep
+/// of intensities with the attainable performance on `acc`.
+pub fn roofline_curve(acc: &Accelerator, points: usize) -> Vec<(f64, f64)> {
+    (0..points)
+        .map(|i| {
+            // 2^-1 .. 2^11 FLOP/byte, log-spaced
+            let x = 2f64.powf(-1.0 + 12.0 * i as f64 / (points - 1) as f64);
+            (x, acc.attainable_flops(x))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hardware::{Ascend910, GpuModel};
+
+    #[test]
+    fn table2_intensities_match_paper() {
+        let t = AttentionVariant::table2();
+        // MHA: 1, GQA: 8, MLA-64: ~121, MLA-128: ~242, MLA-128(Sq=2): ~484
+        assert_eq!(t[0].intensity(), 1.0);
+        assert_eq!(t[1].intensity(), 8.0);
+        assert!((t[2].intensity() - 120.9).abs() < 0.5, "{}", t[2].intensity());
+        assert!((t[3].intensity() - 241.8).abs() < 1.0);
+        assert!((t[4].intensity() - 483.6).abs() < 2.0);
+    }
+
+    #[test]
+    fn fig1_boundedness() {
+        let ascend = Ascend910::accelerator();
+        let pts = roofline_points(&ascend);
+        let by_name = |n: &str| pts.iter().find(|p| p.variant == n).unwrap();
+        assert!(!by_name("MHA").compute_bound);
+        assert!(!by_name("GQA").compute_bound);
+        // MLA-64 (121) sits below the 910 ridge (~221): still memory-bound
+        assert!(!by_name("MLA-64").compute_bound);
+        assert!(by_name("MLA-128").compute_bound);
+        assert!(by_name("MLA-128(Sq=2)").compute_bound);
+    }
+
+    #[test]
+    fn gpu_ridge_makes_mla128_borderline() {
+        // On the H800-class roofline (ridge ~295) MLA-128 at 242 is just
+        // below the ridge — matching the paper's note that MTP pushes MLA
+        // firmly into the compute-bound regime.
+        let gpu = GpuModel::accelerator();
+        let pts = roofline_points(&gpu);
+        let mla128 = pts.iter().find(|p| p.variant == "MLA-128").unwrap();
+        let mtp = pts.iter().find(|p| p.variant == "MLA-128(Sq=2)").unwrap();
+        assert!(!mla128.compute_bound);
+        assert!(mtp.compute_bound);
+    }
+
+    #[test]
+    fn flops_and_bytes_formulae() {
+        let mla = &AttentionVariant::table2()[3];
+        let s2 = 1024;
+        assert_eq!(mla.flops(s2), 2.0 * 128.0 * 1024.0 * 1088.0);
+        assert_eq!(mla.kv_bytes(s2), 2.0 * 1024.0 * 576.0);
+        // intensity == flops/bytes for the latent case
+        assert!((mla.intensity() - mla.flops(s2) / mla.kv_bytes(s2)).abs()
+                    < 1e-9);
+    }
+
+    #[test]
+    fn curve_is_monotone_then_flat() {
+        let acc = Ascend910::accelerator();
+        let curve = roofline_curve(&acc, 64);
+        for w in curve.windows(2) {
+            assert!(w[1].1 >= w[0].1 - 1.0);
+        }
+        assert_eq!(curve.last().unwrap().1, acc.peak_bf16_flops);
+    }
+}

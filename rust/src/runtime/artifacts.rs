@@ -1,0 +1,280 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and
+//! the Rust runtime.
+//!
+//! `make artifacts` writes `artifacts/manifest.json` describing every
+//! compiled HLO module (shapes, dtypes, algorithm, KV bucket, FLOPs).
+//! [`ArtifactRegistry`] indexes it and answers the serving-time routing
+//! question: *which executable handles a request with this algorithm,
+//! S_q and KV length?* — always the smallest bucket that fits.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// One tensor signature in the manifest.
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    fn from_json(v: &Json) -> Result<Self> {
+        Ok(Self {
+            name: v.req_str("name")?.to_string(),
+            shape: v
+                .req("shape")?
+                .as_arr()
+                .ok_or_else(|| anyhow!("shape not an array"))?
+                .iter()
+                .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+                .collect::<Result<_>>()?,
+            dtype: v.req_str("dtype")?.to_string(),
+        })
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Artifact kind: bare attention kernel or full decode layer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArtifactKind {
+    Kernel,
+    Layer,
+}
+
+/// One manifest entry (superset of kernel/layer fields).
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub kind: ArtifactKind,
+    pub name: String,
+    pub file: String,
+    pub sha256: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub algo: String,
+    pub n1: usize,
+    pub sq: usize,
+    pub bucket: usize,
+    pub block_kv: usize,
+    pub dk: usize,
+    pub dv: usize,
+    pub d_model: usize,
+    pub flops_per_call: u64,
+}
+
+impl ArtifactMeta {
+    fn from_json(v: &Json) -> Result<Self> {
+        let kind = match v.req_str("kind")? {
+            "kernel" => ArtifactKind::Kernel,
+            "layer" => ArtifactKind::Layer,
+            other => bail!("unknown artifact kind `{other}`"),
+        };
+        let specs = |key: &str| -> Result<Vec<TensorSpec>> {
+            v.req(key)?
+                .as_arr()
+                .ok_or_else(|| anyhow!("{key} not an array"))?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect()
+        };
+        Ok(Self {
+            kind,
+            name: v.req_str("name")?.to_string(),
+            file: v.req_str("file")?.to_string(),
+            sha256: v.req_str("sha256")?.to_string(),
+            inputs: specs("inputs")?,
+            outputs: specs("outputs")?,
+            algo: v.get("algo").and_then(Json::as_str).unwrap_or("amla").to_string(),
+            n1: v.req_usize("n1")?,
+            sq: v.req_usize("sq")?,
+            bucket: v.req_usize("bucket")?,
+            block_kv: v.req_usize("block_kv")?,
+            dk: v.opt_usize("dk", 0),
+            dv: v.opt_usize("dv", 0),
+            d_model: v.opt_usize("d_model", 0),
+            flops_per_call: v.get("flops_per_call").and_then(Json::as_u64).unwrap_or(0),
+        })
+    }
+}
+
+/// Index over the artifact directory.
+#[derive(Debug)]
+pub struct ArtifactRegistry {
+    dir: PathBuf,
+    entries: Vec<ArtifactMeta>,
+    /// (algo, n1, sq) -> sorted [(bucket, index)] for kernels.
+    kernel_index: BTreeMap<(String, usize, usize), Vec<(usize, usize)>>,
+    /// (algo, d_model, n1, sq) -> sorted [(bucket, index)] for layers.
+    layer_index: BTreeMap<(String, usize, usize, usize), Vec<(usize, usize)>>,
+}
+
+impl ArtifactRegistry {
+    /// Load and index `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        let raw = std::fs::read_to_string(&manifest_path).with_context(
+            || format!("reading {manifest_path:?} — run `make artifacts`"))?;
+        let root = Json::parse(&raw).context("parsing manifest.json")?;
+        if root.req_usize("format_version")? != 1 {
+            bail!("unsupported manifest format_version");
+        }
+        let entries: Vec<ArtifactMeta> = root
+            .req("artifacts")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("artifacts not an array"))?
+            .iter()
+            .map(ArtifactMeta::from_json)
+            .collect::<Result<_>>()?;
+
+        let mut kernel_index: BTreeMap<_, Vec<(usize, usize)>> = BTreeMap::new();
+        let mut layer_index: BTreeMap<_, Vec<(usize, usize)>> = BTreeMap::new();
+        for (i, e) in entries.iter().enumerate() {
+            match e.kind {
+                ArtifactKind::Kernel => kernel_index
+                    .entry((e.algo.clone(), e.n1, e.sq))
+                    .or_default()
+                    .push((e.bucket, i)),
+                ArtifactKind::Layer => layer_index
+                    .entry((e.algo.clone(), e.d_model, e.n1, e.sq))
+                    .or_default()
+                    .push((e.bucket, i)),
+            }
+        }
+        for v in kernel_index.values_mut().chain(layer_index.values_mut()) {
+            v.sort_unstable();
+        }
+        Ok(Self { dir, entries, kernel_index, layer_index })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn entries(&self) -> &[ArtifactMeta] {
+        &self.entries
+    }
+
+    pub fn by_name(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+
+    /// Absolute path of an artifact's HLO text file.
+    pub fn path_of(&self, meta: &ArtifactMeta) -> PathBuf {
+        self.dir.join(&meta.file)
+    }
+
+    /// Smallest kernel bucket that fits `kv_len` for (algo, n1, sq).
+    pub fn select_kernel(&self, algo: &str, n1: usize, sq: usize,
+                         kv_len: usize) -> Result<&ArtifactMeta> {
+        let buckets = self
+            .kernel_index
+            .get(&(algo.to_string(), n1, sq))
+            .ok_or_else(|| anyhow!("no kernel artifacts for algo={algo} n1={n1} sq={sq}"))?;
+        let (_, idx) = buckets
+            .iter()
+            .find(|(bucket, _)| *bucket >= kv_len)
+            .ok_or_else(|| {
+                anyhow!("kv_len {kv_len} exceeds largest bucket {} for {algo}/n1={n1}/sq={sq}",
+                        buckets.last().map(|(b, _)| *b).unwrap_or(0))
+            })?;
+        Ok(&self.entries[*idx])
+    }
+
+    /// Smallest layer bucket that fits `kv_len`.
+    pub fn select_layer(&self, algo: &str, d_model: usize, n1: usize,
+                        sq: usize, kv_len: usize) -> Result<&ArtifactMeta> {
+        let buckets = self
+            .layer_index
+            .get(&(algo.to_string(), d_model, n1, sq))
+            .ok_or_else(|| {
+                anyhow!("no layer artifacts for algo={algo} d_model={d_model} n1={n1} sq={sq}")
+            })?;
+        let (_, idx) = buckets
+            .iter()
+            .find(|(bucket, _)| *bucket >= kv_len)
+            .ok_or_else(|| anyhow!("kv_len {kv_len} exceeds largest layer bucket"))?;
+        Ok(&self.entries[*idx])
+    }
+
+    /// All distinct kernel buckets for (algo, n1, sq), ascending.
+    pub fn kernel_buckets(&self, algo: &str, n1: usize, sq: usize) -> Vec<usize> {
+        self.kernel_index
+            .get(&(algo.to_string(), n1, sq))
+            .map(|v| v.iter().map(|(b, _)| *b).collect())
+            .unwrap_or_default()
+    }
+
+    /// Distinct (d_model, n1, sq) layer families available.
+    pub fn layer_families(&self) -> Vec<(String, usize, usize, usize)> {
+        self.layer_index.keys().cloned().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_entry(name: &str, algo: &str, bucket: usize) -> String {
+        format!(
+            r#"{{"kind":"kernel","name":"{name}","file":"{name}.hlo.txt",
+               "sha256":"x","inputs":[],"outputs":[],"algo":"{algo}",
+               "n1":16,"sq":1,"bucket":{bucket},"block_kv":256,
+               "dk":576,"dv":512,"mixed_bf16":true,"flops_per_call":1}}"#
+        )
+    }
+
+    fn registry_with(entries: &[String], tag: &str) -> ArtifactRegistry {
+        let tmp = std::env::temp_dir().join(format!("amla_registry_{tag}"));
+        std::fs::create_dir_all(&tmp).unwrap();
+        let body = format!(r#"{{"format_version":1,"artifacts":[{}]}}"#,
+                           entries.join(","));
+        std::fs::write(tmp.join("manifest.json"), body).unwrap();
+        ArtifactRegistry::load(&tmp).unwrap()
+    }
+
+    #[test]
+    fn selects_smallest_fitting_bucket() {
+        let reg = registry_with(&[
+            fake_entry("a512", "amla", 512),
+            fake_entry("a2048", "amla", 2048),
+            fake_entry("a1024", "amla", 1024),
+        ], "buckets");
+        assert_eq!(reg.select_kernel("amla", 16, 1, 100).unwrap().name, "a512");
+        assert_eq!(reg.select_kernel("amla", 16, 1, 512).unwrap().name, "a512");
+        assert_eq!(reg.select_kernel("amla", 16, 1, 513).unwrap().name, "a1024");
+        assert_eq!(reg.select_kernel("amla", 16, 1, 2048).unwrap().name, "a2048");
+        assert!(reg.select_kernel("amla", 16, 1, 4096).is_err());
+        assert!(reg.select_kernel("base", 16, 1, 100).is_err());
+        assert_eq!(reg.kernel_buckets("amla", 16, 1), vec![512, 1024, 2048]);
+    }
+
+    #[test]
+    fn rejects_unknown_version() {
+        let tmp = std::env::temp_dir().join("amla_registry_v2");
+        std::fs::create_dir_all(&tmp).unwrap();
+        std::fs::write(tmp.join("manifest.json"),
+                       r#"{"format_version":2,"artifacts":[]}"#).unwrap();
+        assert!(ArtifactRegistry::load(&tmp).is_err());
+    }
+
+    #[test]
+    fn parses_tensor_specs() {
+        let e = r#"{"kind":"kernel","name":"k","file":"k.hlo.txt","sha256":"s",
+            "inputs":[{"name":"q","shape":[16,576],"dtype":"f32"}],
+            "outputs":[{"name":"o","shape":[16,512],"dtype":"f32"}],
+            "algo":"amla","n1":16,"sq":1,"bucket":512,"block_kv":256}"#;
+        let reg = registry_with(&[e.to_string()], "specs");
+        let m = reg.by_name("k").unwrap();
+        assert_eq!(m.inputs[0].name, "q");
+        assert_eq!(m.inputs[0].element_count(), 16 * 576);
+        assert_eq!(m.outputs[0].shape, vec![16, 512]);
+    }
+}

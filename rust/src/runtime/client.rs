@@ -1,0 +1,243 @@
+//! PJRT engine: compile-once / execute-many wrapper over the `xla` crate.
+//!
+//! The hot-path contract: [`Engine::load`] parses HLO text and compiles a
+//! [`LoadedKernel`] (cached by artifact name); [`LoadedKernel::run`]
+//! marshals row-major f32/i32 host buffers into literals, executes, and
+//! unpacks the result tuple.  Nothing here allocates per-call beyond the
+//! input literals (see EXPERIMENTS.md §Perf for the literal-reuse
+//! optimization history).
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::artifacts::{ArtifactMeta, ArtifactRegistry};
+
+/// Borrowed host tensor handed to [`LoadedKernel::run`].
+#[derive(Debug, Clone, Copy)]
+pub enum TensorView<'a> {
+    F32(&'a [f32], &'a [usize]),
+    I32(&'a [i32], &'a [usize]),
+}
+
+impl TensorView<'_> {
+    fn element_count(&self) -> usize {
+        match self {
+            TensorView::F32(d, _) => d.len(),
+            TensorView::I32(d, _) => d.len(),
+        }
+    }
+
+    fn shape(&self) -> &[usize] {
+        match self {
+            TensorView::F32(_, s) => s,
+            TensorView::I32(_, s) => s,
+        }
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            TensorView::F32(d, _) => xla::Literal::vec1(d),
+            TensorView::I32(d, _) => xla::Literal::vec1(d),
+        };
+        Ok(lit.reshape(&dims)?)
+    }
+}
+
+/// One compiled executable plus its manifest metadata.
+pub struct LoadedKernel {
+    pub meta: ArtifactMeta,
+    exe: xla::PjRtLoadedExecutable,
+    /// Cumulative number of calls (for FLOPS-utilization accounting).
+    calls: Mutex<u64>,
+}
+
+impl LoadedKernel {
+    /// Execute with positional inputs matching `meta.inputs` order.
+    /// Returns one row-major `Vec<f32>` per declared output.
+    pub fn run(&self, inputs: &[TensorView<'_>]) -> Result<Vec<Vec<f32>>> {
+        if inputs.len() != self.meta.inputs.len() {
+            return Err(anyhow!("{}: expected {} inputs, got {}", self.meta.name,
+                             self.meta.inputs.len(), inputs.len()));
+        }
+        for (tv, spec) in inputs.iter().zip(&self.meta.inputs) {
+            let expect: usize = spec.shape.iter().product();
+            if tv.element_count() != expect {
+                return Err(anyhow!("{}: input `{}` has {} elements, expected {}",
+                                 self.meta.name, spec.name,
+                                 tv.element_count(), expect));
+            }
+        }
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|tv| tv.to_literal())
+            .collect::<Result<_>>()?;
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0]
+            .to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        if parts.len() != self.meta.outputs.len() {
+            return Err(anyhow!("{}: got {} outputs, manifest declares {}",
+                             self.meta.name, parts.len(),
+                             self.meta.outputs.len()));
+        }
+        *self.calls.lock().unwrap() += 1;
+        parts.iter().map(|l| Ok(l.to_vec::<f32>()?)).collect()
+    }
+
+    pub fn calls(&self) -> u64 {
+        *self.calls.lock().unwrap()
+    }
+
+    /// Execute with pre-built literals (hot path: callers cache literals
+    /// for tensors that do not change between calls, e.g. model weights —
+    /// see EXPERIMENTS.md §Perf L3 step 2).  Count must match the
+    /// manifest; shapes are the caller's responsibility.
+    pub fn run_refs(&self, inputs: &[&xla::Literal]) -> Result<Vec<Vec<f32>>> {
+        if inputs.len() != self.meta.inputs.len() {
+            return Err(anyhow!("{}: expected {} inputs, got {}",
+                               self.meta.name, self.meta.inputs.len(),
+                               inputs.len()));
+        }
+        let result = self.exe.execute::<&xla::Literal>(inputs)?[0][0]
+            .to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        if parts.len() != self.meta.outputs.len() {
+            return Err(anyhow!("{}: got {} outputs, manifest declares {}",
+                               self.meta.name, parts.len(),
+                               self.meta.outputs.len()));
+        }
+        *self.calls.lock().unwrap() += 1;
+        parts.iter().map(|l| Ok(l.to_vec::<f32>()?)).collect()
+    }
+
+    /// Build a literal from a host tensor (for caching across calls).
+    pub fn literal_of(tv: &TensorView<'_>) -> Result<xla::Literal> {
+        tv.to_literal()
+    }
+
+    /// Execute with device-resident buffers (hottest path: weights are
+    /// uploaded once via [`Engine::upload`] and only the small dynamic
+    /// tensors cross the host boundary per call — §Perf L3 step 4).
+    pub fn run_buffers(&self, inputs: &[&xla::PjRtBuffer])
+                       -> Result<Vec<Vec<f32>>> {
+        if inputs.len() != self.meta.inputs.len() {
+            return Err(anyhow!("{}: expected {} inputs, got {}",
+                               self.meta.name, self.meta.inputs.len(),
+                               inputs.len()));
+        }
+        let result = self.exe.execute_b::<&xla::PjRtBuffer>(inputs)?[0][0]
+            .to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        if parts.len() != self.meta.outputs.len() {
+            return Err(anyhow!("{}: got {} outputs, manifest declares {}",
+                               self.meta.name, parts.len(),
+                               self.meta.outputs.len()));
+        }
+        *self.calls.lock().unwrap() += 1;
+        parts.iter().map(|l| Ok(l.to_vec::<f32>()?)).collect()
+    }
+}
+
+/// PJRT CPU client + executable cache.
+pub struct Engine {
+    client: xla::PjRtClient,
+    registry: ArtifactRegistry,
+    cache: Mutex<HashMap<String, Arc<LoadedKernel>>>,
+}
+
+impl Engine {
+    /// Create a CPU engine over an artifact directory.
+    pub fn new(artifact_dir: impl AsRef<std::path::Path>) -> Result<Self> {
+        let registry = ArtifactRegistry::load(artifact_dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Self { client, registry, cache: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn registry(&self) -> &ArtifactRegistry {
+        &self.registry
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Upload a host tensor to a device-resident buffer (for weights and
+    /// other tensors reused across calls; pair with
+    /// [`LoadedKernel::run_buffers`]).
+    pub fn upload(&self, tv: &TensorView<'_>) -> Result<xla::PjRtBuffer> {
+        Ok(match tv {
+            TensorView::F32(d, s) => {
+                self.client.buffer_from_host_buffer::<f32>(d, s, None)?
+            }
+            TensorView::I32(d, s) => {
+                self.client.buffer_from_host_buffer::<i32>(d, s, None)?
+            }
+        })
+    }
+
+    /// Compile (or fetch from cache) the artifact with this name.
+    pub fn load(&self, name: &str) -> Result<Arc<LoadedKernel>> {
+        if let Some(k) = self.cache.lock().unwrap().get(name) {
+            return Ok(k.clone());
+        }
+        let meta = self
+            .registry
+            .by_name(name)
+            .ok_or_else(|| anyhow!("unknown artifact `{name}`"))?
+            .clone();
+        let path = self.registry.path_of(&meta);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?)
+            .with_context(|| format!("parsing {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)
+            .with_context(|| format!("compiling {name}"))?;
+        let kernel = Arc::new(LoadedKernel {
+            meta, exe, calls: Mutex::new(0),
+        });
+        eprintln!("[engine] compiled {name} in {:.1?}", t0.elapsed());
+        self.cache.lock().unwrap().insert(name.to_string(), kernel.clone());
+        Ok(kernel)
+    }
+
+    /// Load the best kernel artifact for a request shape.
+    pub fn load_kernel_for(&self, algo: &str, n1: usize, sq: usize,
+                           kv_len: usize) -> Result<Arc<LoadedKernel>> {
+        let name =
+            self.registry.select_kernel(algo, n1, sq, kv_len)?.name.clone();
+        self.load(&name)
+    }
+
+    /// Load the best layer artifact for a request shape.
+    pub fn load_layer_for(&self, algo: &str, d_model: usize, n1: usize,
+                          sq: usize, kv_len: usize) -> Result<Arc<LoadedKernel>> {
+        let name = self
+            .registry
+            .select_layer(algo, d_model, n1, sq, kv_len)?
+            .name
+            .clone();
+        self.load(&name)
+    }
+
+    /// Eagerly compile every kernel artifact for (algo, n1) so the serving
+    /// loop never pays JIT latency.
+    pub fn warmup(&self, algo: &str, n1: usize) -> Result<usize> {
+        let mut count = 0;
+        for sq in [1, 2] {
+            for bucket in self.registry.kernel_buckets(algo, n1, sq) {
+                let name = self
+                    .registry
+                    .select_kernel(algo, n1, sq, bucket)?
+                    .name
+                    .clone();
+                self.load(&name)?;
+                count += 1;
+            }
+        }
+        Ok(count)
+    }
+}

@@ -1,0 +1,20 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them on
+//! the request path.
+//!
+//! Python runs once at build time (`make artifacts`); afterwards this
+//! module is the only thing that touches the compiled graphs:
+//!
+//! ```text
+//! manifest.json ──> [`artifacts::ArtifactRegistry`] (shape routing)
+//! *.hlo.txt     ──> [`client::Engine`] (compile once, execute many)
+//! ```
+//!
+//! The interchange format is HLO **text** — xla_extension 0.5.1 rejects
+//! jax≥0.5's 64-bit-id serialized protos, while the text parser reassigns
+//! ids (see DESIGN.md and /opt/xla-example/README.md).
+
+pub mod artifacts;
+pub mod client;
+
+pub use artifacts::{ArtifactKind, ArtifactMeta, ArtifactRegistry};
+pub use client::{Engine, LoadedKernel, TensorView};

@@ -1,0 +1,108 @@
+//! Table 5 / Fig 10 sweep driver, plus the paper's published numbers for
+//! side-by-side comparison in reports and tests.
+
+use super::{simulate_910, simulate_flashmla, FlashMlaModel, KernelConfig,
+            SimResult};
+use crate::config::Algo;
+
+/// The paper's Table 5 (duration µs, FU) — `(sq, sk, hw, dur_us, fu)`.
+pub const PAPER_TABLE5: &[(usize, usize, &str, f64, f64)] = &[
+    (1, 1024, "910", 95.0, 0.409),
+    (1, 1024, "GPU", 85.0, 0.326),
+    (1, 2048, "910", 140.0, 0.551),
+    (1, 2048, "GPU", 128.0, 0.433),
+    (1, 3072, "910", 186.0, 0.624),
+    (1, 3072, "GPU", 173.0, 0.480),
+    (1, 4096, "910", 241.0, 0.641),
+    (1, 4096, "GPU", 215.0, 0.515),
+    (1, 6144, "910", 331.0, 0.702),
+    (1, 6144, "GPU", 316.0, 0.526),
+    (1, 16384, "910", 830.0, 0.745),
+    (1, 16384, "GPU", 766.0, 0.578),
+    (2, 1024, "910", 135.0, 0.573),
+    (2, 1024, "GPU", 115.0, 0.481),
+    (2, 2048, "910", 219.0, 0.707),
+    (2, 2048, "GPU", 196.0, 0.565),
+    (2, 3072, "910", 306.0, 0.758),
+    (2, 3072, "GPU", 278.0, 0.598),
+    (2, 4096, "910", 388.0, 0.797),
+    (2, 4096, "GPU", 374.0, 0.592),
+    (2, 6144, "910", 565.0, 0.822),
+    (2, 6144, "GPU", 527.0, 0.630),
+    (2, 16384, "910", 1427.0, 0.868),
+    (2, 16384, "GPU", 1314.0, 0.674),
+];
+
+/// One regenerated row next to the paper's.
+#[derive(Debug, Clone)]
+pub struct Table5Row {
+    pub sq: usize,
+    pub sk: usize,
+    pub hw: &'static str,
+    pub sim: SimResult,
+    pub paper_duration_us: f64,
+    pub paper_fu: f64,
+}
+
+impl Table5Row {
+    pub fn fu_abs_err(&self) -> f64 {
+        (self.sim.fu - self.paper_fu).abs()
+    }
+}
+
+/// Regenerate every Table 5 cell from the simulators.
+pub fn table5_rows() -> Vec<Table5Row> {
+    PAPER_TABLE5
+        .iter()
+        .map(|&(sq, sk, hw, dur, fu)| {
+            let cfg = KernelConfig::paper(sq, sk);
+            let sim = match hw {
+                "910" => simulate_910(&cfg, Algo::Amla),
+                _ => simulate_flashmla(&FlashMlaModel::default(), &cfg),
+            };
+            Table5Row { sq, sk, hw, sim, paper_duration_us: dur,
+                        paper_fu: fu }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_cell_within_tolerance() {
+        // The shape requirement of DESIGN.md E4: each FU within 8 points
+        // absolute of the paper (durations follow from FU by identity).
+        for row in table5_rows() {
+            assert!(row.fu_abs_err() < 0.08,
+                    "sq={} sk={} {}: sim {:.3} vs paper {:.3}",
+                    row.sq, row.sk, row.hw, row.sim.fu, row.paper_fu);
+        }
+    }
+
+    #[test]
+    fn ascend_beats_gpu_fu_everywhere() {
+        let rows = table5_rows();
+        for sq in [1, 2] {
+            for sk in [1024, 2048, 3072, 4096, 6144, 16384] {
+                let f = |hw: &str| {
+                    rows.iter()
+                        .find(|r| r.sq == sq && r.sk == sk && r.hw == hw)
+                        .unwrap()
+                        .sim
+                        .fu
+                };
+                assert!(f("910") > f("GPU"), "sq={sq} sk={sk}");
+            }
+        }
+    }
+
+    #[test]
+    fn mean_fu_error_small() {
+        let rows = table5_rows();
+        let mean: f64 = rows.iter().map(|r| r.fu_abs_err()).sum::<f64>()
+            / rows.len() as f64;
+        assert!(mean < 0.04, "mean |ΔFU| = {mean:.4}");
+    }
+}

@@ -1,0 +1,174 @@
+//! Four-pipe Cube-stage simulation (Fig 9): MTE2 → MTE1 → MMAD → FixP.
+//!
+//! Models one Cube core executing one stage (`[C1]` or `[C2]`) of one
+//! FlashAttention iteration under a [`TileSpec`]: base tiles stream
+//! through the pipes with double-buffered L0 and triple-buffered L1, so
+//! steady-state stage time is governed by the slowest pipe (bottleneck
+//! law) plus a fill/drain term.  [`crate::simulator`] multiplies this out
+//! over cores and KV blocks to produce Table 5.
+
+use super::spec::{StageDims, TileSpec, BYTES_BF16, BYTES_FP32};
+
+/// Per-core pipe bandwidths (bytes/s) and compute rate (FLOP/s).
+#[derive(Debug, Clone, Copy)]
+pub struct PipeRates {
+    /// GM→L1 (HBM/L2 read bandwidth share of one core).
+    pub mte2_bw: f64,
+    /// L1→L0A/B.
+    pub mte1_bw: f64,
+    /// L0C→GM writeback.
+    pub fixp_bw: f64,
+    /// MMAD throughput of one Cube core.
+    pub mmad_flops: f64,
+}
+
+impl PipeRates {
+    /// Rates for the aggregate Ascend 910 split per Cube core.  MTE1 and
+    /// FixP are on-die fabrics, modelled at multiples of the HBM share
+    /// (they never bind in the paper's regime; the constants keep them
+    /// comfortably above MTE2 without making them free).
+    pub fn ascend910_per_core() -> Self {
+        let hw = crate::hardware::Ascend910::default();
+        let mte2 = hw.hbm_bandwidth() / hw.cube_cores() as f64;
+        Self {
+            mte2_bw: mte2,
+            mte1_bw: 8.0 * mte2,
+            fixp_bw: 4.0 * mte2,
+            mmad_flops: hw.peak_per_cube_core(),
+        }
+    }
+}
+
+/// Timing breakdown of one Cube stage execution.
+#[derive(Debug, Clone, Copy)]
+pub struct CubePipeTiming {
+    /// Total per-pipe busy times (s).
+    pub mte2: f64,
+    pub mte1: f64,
+    pub mmad: f64,
+    pub fixp: f64,
+    /// Pipe fill/drain overhead (s).
+    pub fill_drain: f64,
+    /// Stage duration under pipelined overlap (s).
+    pub duration: f64,
+}
+
+impl CubePipeTiming {
+    /// Which pipe binds the stage.
+    pub fn bottleneck(&self) -> &'static str {
+        let m = self.mte2.max(self.mte1).max(self.mmad).max(self.fixp);
+        if m == self.mmad {
+            "MMAD"
+        } else if m == self.mte2 {
+            "MTE2"
+        } else if m == self.mte1 {
+            "MTE1"
+        } else {
+            "FixP"
+        }
+    }
+
+    /// Compute-boundedness of the stage (1.0 = perfectly MMAD-bound).
+    pub fn mmad_duty(&self) -> f64 {
+        self.mmad / self.duration
+    }
+}
+
+/// Simulate one Cube core processing `dims` under `spec` and `rates`.
+///
+/// * MTE2 moves the K/V `single_n × single_k` tiles (Q/P excluded per
+///   §4.2: resident in L1 / served from L2 after first load).
+/// * MTE1 moves every base tile of both operands L1→L0.
+/// * MMAD performs the base-tile matmuls.
+/// * FixP writes the `m × n` FP32 results back, amortized by
+///   accumulating `k_steps` partials in L0C before one bulk transfer.
+pub fn simulate_cube_stage(dims: &StageDims, spec: &TileSpec,
+                           rates: &PipeRates) -> CubePipeTiming {
+    let m = dims.m as f64;
+    let n = dims.n as f64;
+    let k = dims.k as f64;
+
+    // ---- per-pipe totals -------------------------------------------------
+    // KV operand bytes (BF16), streamed GM→L1 once per stage
+    let mte2_bytes = n * k * BYTES_BF16 as f64;
+    let mte2 = mte2_bytes / rates.mte2_bw;
+
+    // L1→L0: both operands per base-tile pass; the A operand (Q/P rows)
+    // is re-fetched per N-tile column, B per M-tile row.
+    let n_tiles_m = (m / spec.base_m as f64).ceil();
+    let n_tiles_n = (n / spec.base_n as f64).ceil();
+    let a_bytes = n_tiles_n * m * k * BYTES_BF16 as f64;
+    let b_bytes = n_tiles_m * n * k * BYTES_BF16 as f64;
+    let mte1 = (a_bytes + b_bytes) / rates.mte1_bw;
+
+    // MMAD: full matmul work
+    let mmad = dims.flops() / rates.mmad_flops;
+
+    // FixP: one FP32 writeback of the m×n result after K accumulation
+    let fixp_bytes = m * n * BYTES_FP32 as f64;
+    let fixp = fixp_bytes / rates.fixp_bw;
+
+    // ---- pipeline composition --------------------------------------------
+    // Bottleneck law with fill/drain: the first base tile must traverse
+    // MTE2→MTE1→MMAD before steady state; the last result drains FixP.
+    let base_tiles =
+        n_tiles_m * n_tiles_n * (k / spec.base_k as f64).ceil();
+    let per_tile_mte2 = mte2 / base_tiles;
+    let per_tile_mte1 = mte1 / base_tiles;
+    let per_tile_mmad = mmad / base_tiles;
+    let fill_drain = per_tile_mte2 + per_tile_mte1 + per_tile_mmad
+        + fixp / n_tiles_m.max(1.0);
+    let duration = mte2.max(mte1).max(mmad).max(fixp) + fill_drain;
+
+    CubePipeTiming { mte2, mte1, mmad, fixp, fill_drain, duration }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rates() -> PipeRates {
+        PipeRates::ascend910_per_core()
+    }
+
+    #[test]
+    fn paper_c1_is_mmad_bound() {
+        let t = simulate_cube_stage(&StageDims::c1(256),
+                                    &TileSpec::paper_c1(), &rates());
+        assert_eq!(t.bottleneck(), "MMAD",
+                   "mte2={} mmad={}", t.mte2, t.mmad);
+        assert!(t.mmad_duty() > 0.8, "duty {}", t.mmad_duty());
+    }
+
+    #[test]
+    fn paper_c2_is_mmad_bound() {
+        let t = simulate_cube_stage(&StageDims::c2(256),
+                                    &TileSpec::paper_c2(), &rates());
+        assert_eq!(t.bottleneck(), "MMAD");
+    }
+
+    #[test]
+    fn small_m_becomes_memory_bound() {
+        // §4.2: M below the ridge (~221) cannot hide the KV transfer
+        let t = simulate_cube_stage(&StageDims::c1(64),
+                                    &TileSpec::paper_c1(), &rates());
+        assert_eq!(t.bottleneck(), "MTE2");
+    }
+
+    #[test]
+    fn duration_scales_with_m() {
+        let t256 = simulate_cube_stage(&StageDims::c1(256),
+                                       &TileSpec::paper_c1(), &rates());
+        let t512 = simulate_cube_stage(&StageDims::c1(512),
+                                       &TileSpec::paper_c1(), &rates());
+        assert!(t512.duration > t256.duration * 1.7);
+    }
+
+    #[test]
+    fn fill_drain_small_vs_duration() {
+        let t = simulate_cube_stage(&StageDims::c1(256),
+                                    &TileSpec::paper_c1(), &rates());
+        assert!(t.fill_drain < 0.25 * t.duration,
+                "fill {} vs {}", t.fill_drain, t.duration);
+    }
+}

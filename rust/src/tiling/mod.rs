@@ -1,0 +1,26 @@
+//! Hierarchical tiling of the Cube stages — §4.2, Figs 8–9.
+//!
+//! Each Cube stage (`[C1]` = QKᵀ, `[C2]` = PV) streams tiles through four
+//! pipes:
+//!
+//! ```text
+//! MTE2 (GM→L1)  →  MTE1 (L1→L0A/L0B)  →  MMAD (L0→L0C)  →  FixP (L0C→GM)
+//! ```
+//!
+//! with two tiling levels: `single{M,N,K}` tiles GM→L1, `base{M,N,K}`
+//! tiles L1→L0.  The module provides
+//!
+//! * [`spec::TileSpec`] / [`spec::StageDims`] — the §4.2 constants and
+//!   the L0/L1 capacity constraints they must satisfy;
+//! * [`solver`] — a constraint solver that searches admissible tilings
+//!   and (test-verified) reproduces the paper's choices for both stages;
+//! * [`cube_pipe`] — a tile-granular event simulation of the four pipes
+//!   (Fig 9) used by [`crate::simulator`] to time `[C1]`/`[C2]`.
+
+pub mod cube_pipe;
+pub mod solver;
+pub mod spec;
+
+pub use cube_pipe::{simulate_cube_stage, CubePipeTiming, PipeRates};
+pub use solver::{solve_tiling, TilingObjective};
+pub use spec::{StageDims, TileSpec, BYTES_BF16, BYTES_FP32};

@@ -1,0 +1,144 @@
+//! Tiling-constraint solver: search the admissible (single*, base*)
+//! space for a stage's dims and rank candidates.
+//!
+//! The paper derives its tilings by balancing MTE2/MTE1/FixP bandwidth
+//! against MMAD throughput under the L1/L0 capacity constraints; this
+//! solver makes that derivation executable.  Objectives:
+//!
+//! * maximize the MMAD duty per base tile (larger tiles amortize issue
+//!   overhead), then
+//! * minimize the FixP writeback traffic (prefer accumulating over K in
+//!   L0C), then
+//! * prefer equal `[C1]`/`[C2]` L1 footprints (Remark 4.1: identical
+//!   tiling eliminates inter-stage bubbles).
+
+use super::spec::{StageDims, TileSpec, BYTES_BF16};
+use crate::hardware::CubeCoreMem;
+
+/// What the solver optimizes (exposed for the ablation bench).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TilingObjective {
+    /// The paper's composite objective (see module docs).
+    PaperBalanced,
+    /// Largest base-tile MMAD only (ignores FixP traffic).
+    MaxMmad,
+}
+
+fn divisors_up_to(n: usize, cap: usize) -> Vec<usize> {
+    (1..=cap.min(n)).filter(|d| n % d == 0).collect()
+}
+
+/// Search admissible tilings for a stage; returns candidates sorted best
+/// first.  `m_per_core` is the query-row block each Cube core owns
+/// (paper: 128 = M 256 split over 2 cores... in fact singleM = 128 with
+/// M = 256 processed as two singleM tiles).
+pub fn solve_tiling(dims: &StageDims, mem: &CubeCoreMem, m_per_core: usize,
+                    objective: TilingObjective) -> Vec<TileSpec> {
+    let mut out = Vec::new();
+    // hardware-natural granularities: fractal/cube units are 16-aligned
+    let align = 16;
+    let singles_n = divisors_up_to(dims.n, dims.n);
+    let singles_k = divisors_up_to(dims.k, dims.k);
+    for &single_n in &singles_n {
+        if single_n % align != 0 {
+            continue;
+        }
+        for &single_k in &singles_k {
+            if single_k % align != 0 {
+                continue;
+            }
+            for base_m in divisors_up_to(m_per_core, m_per_core) {
+                if base_m % align != 0 {
+                    continue;
+                }
+                for &base_n in &divisors_up_to(single_n, single_n)[..] {
+                    if base_n % align != 0 {
+                        continue;
+                    }
+                    for &base_k in &divisors_up_to(single_k, single_k)[..] {
+                        if base_k % align != 0 {
+                            continue;
+                        }
+                        let spec = TileSpec {
+                            single_m: m_per_core,
+                            single_n,
+                            single_k,
+                            base_m,
+                            base_n,
+                            base_k,
+                            l1_kv_buffers: 3,
+                            l0_double_buffer: true,
+                        };
+                        if spec.feasible(mem) {
+                            out.push(spec);
+                        }
+                    }
+                }
+            }
+        }
+    }
+    let score = |s: &TileSpec| -> (i64, i64, i64) {
+        let mmad = s.base_tile_flops() as i64;
+        // FixP traffic ∝ number of K-slices accumulated per (m,n) tile:
+        // fewer, larger K steps = fewer partial writebacks
+        let k_steps = (dims.k / s.base_k) as i64;
+        // L1 in-flight footprint (for Remark 4.1 parity across stages)
+        let l1_foot = (s.single_n * s.single_k * BYTES_BF16) as i64;
+        match objective {
+            TilingObjective::PaperBalanced => (mmad, -k_steps, -l1_foot),
+            TilingObjective::MaxMmad => (mmad, 0, 0),
+        }
+    };
+    out.sort_by(|a, b| score(b).cmp(&score(a)));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hardware::Ascend910;
+
+    fn mem() -> CubeCoreMem {
+        Ascend910::default().cube_mem
+    }
+
+    #[test]
+    fn c2_solver_recovers_paper_bases() {
+        let best = &solve_tiling(&StageDims::c2(256), &mem(), 128,
+                                 TilingObjective::PaperBalanced)[0];
+        // paper: base 128x128x128 for [C2]
+        assert_eq!((best.base_m, best.base_n, best.base_k), (128, 128, 128));
+    }
+
+    #[test]
+    fn c1_solver_base_k_divides_576() {
+        let best = &solve_tiling(&StageDims::c1(256), &mem(), 128,
+                                 TilingObjective::PaperBalanced)[0];
+        // paper: baseK = 96 "to match 576 input dim"; any admissible
+        // winner must divide 576 and obey L0: baseK*128*2 <= 32K -> <=128;
+        // divisors of 576 that are 16-aligned and <= 128: {16,32,48,96,64?}
+        // 576 = 2^6*9: 64 divides 576? 576/64 = 9 yes. 128 divides? no.
+        // So max feasible is 96 or 64; balanced objective prefers 96.
+        assert_eq!(best.base_m, 128);
+        assert_eq!(best.base_n, 128);
+        assert_eq!(best.base_k, 96);
+    }
+
+    #[test]
+    fn all_candidates_feasible() {
+        for s in solve_tiling(&StageDims::c1(256), &mem(), 128,
+                              TilingObjective::PaperBalanced) {
+            assert!(s.feasible(&mem()));
+        }
+    }
+
+    #[test]
+    fn paper_specs_among_candidates() {
+        let c1 = solve_tiling(&StageDims::c1(256), &mem(), 128,
+                              TilingObjective::PaperBalanced);
+        assert!(c1.iter().any(|s| s.base_k == 96 && s.single_k == 288));
+        let c2 = solve_tiling(&StageDims::c2(256), &mem(), 128,
+                              TilingObjective::PaperBalanced);
+        assert!(c2.iter().any(|s| *s == TileSpec::paper_c2()));
+    }
+}

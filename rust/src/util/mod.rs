@@ -1,0 +1,5 @@
+//! In-tree replacements for crates unavailable in the offline build
+//! (see Cargo.toml note): a minimal JSON parser and a property-test kit.
+
+pub mod json;
+pub mod prop;

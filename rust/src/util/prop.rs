@@ -1,0 +1,96 @@
+//! Tiny property-testing kit — in-tree stand-in for `proptest`
+//! (offline build).
+//!
+//! [`run_prop`] executes a property over `cases` deterministic seeds and
+//! reports the first failing seed so a failure reproduces with
+//! `PROP_SEED=<n>`.  Generators are just closures over
+//! [`crate::numerics::Rng`]; no shrinking, but the seed makes failures
+//! replayable, which is what matters for CI.
+
+use crate::numerics::Rng;
+
+/// Run `prop` over `cases` seeded RNGs; panic with the failing seed.
+pub fn run_prop(name: &str, cases: u64, mut prop: impl FnMut(&mut Rng)) {
+    if let Ok(seed) = std::env::var("PROP_SEED") {
+        let seed: u64 = seed.parse().expect("PROP_SEED must be u64");
+        let mut rng = Rng::new(seed);
+        prop(&mut rng);
+        return;
+    }
+    for case in 0..cases {
+        let seed = 0xC0FFEE ^ (case.wrapping_mul(0x9E3779B9));
+        let mut rng = Rng::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+            || prop(&mut rng)));
+        if let Err(e) = result {
+            eprintln!("property `{name}` failed at case {case} \
+                       (rerun with PROP_SEED={seed})");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+/// Uniform integer in `[lo, hi)`.
+pub fn gen_range(rng: &mut Rng, lo: i64, hi: i64) -> i64 {
+    assert!(lo < hi);
+    lo + (rng.next_u64() % (hi - lo) as u64) as i64
+}
+
+/// Uniform usize in `[lo, hi)`.
+pub fn gen_usize(rng: &mut Rng, lo: usize, hi: usize) -> usize {
+    gen_range(rng, lo as i64, hi as i64) as usize
+}
+
+/// Pick one element of a slice.
+pub fn gen_choice<'a, T>(rng: &mut Rng, xs: &'a [T]) -> &'a T {
+    &xs[gen_usize(rng, 0, xs.len())]
+}
+
+/// A normal f32 in roughly `[-10^mag, 10^mag]`, never subnormal/zero.
+pub fn gen_normal_f32(rng: &mut Rng, mag: i32) -> f32 {
+    loop {
+        let v = rng.gaussian() * 10f32.powi(mag);
+        if v.is_normal() {
+            return v;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_prop_executes_all_cases() {
+        let mut count = 0;
+        run_prop("counter", 17, |_| count += 1);
+        assert_eq!(count, 17);
+    }
+
+    #[test]
+    #[should_panic]
+    fn run_prop_propagates_failure() {
+        run_prop("fails", 5, |rng| {
+            let x = gen_usize(rng, 0, 100);
+            assert!(x < 1000); // passes...
+            assert!(false); // ...then fails, must propagate
+        });
+    }
+
+    #[test]
+    fn gen_range_bounds() {
+        let mut rng = Rng::new(1);
+        for _ in 0..1000 {
+            let v = gen_range(&mut rng, -5, 7);
+            assert!((-5..7).contains(&v));
+        }
+    }
+
+    #[test]
+    fn gen_normal_never_zero() {
+        let mut rng = Rng::new(2);
+        for _ in 0..1000 {
+            assert!(gen_normal_f32(&mut rng, -3).is_normal());
+        }
+    }
+}

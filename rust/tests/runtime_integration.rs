@@ -1,0 +1,151 @@
+//! Integration: PJRT runtime against the real AOT artifacts.
+//!
+//! Requires `make artifacts` (skips cleanly otherwise).  Verifies that
+//! the HLO text compiled by `python/compile/aot.py` loads on the CPU
+//! PJRT client and computes the same attention as the bit-exact Rust
+//! numerics / golden oracle.
+
+use amla::numerics::flash_base::FlashConfig;
+use amla::numerics::golden::{golden_attention, row_limits};
+use amla::numerics::{rel_frobenius_error, Matrix, Rng};
+use amla::runtime::{Engine, TensorView};
+
+fn engine() -> Option<Engine> {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    Some(Engine::new("artifacts").expect("engine"))
+}
+
+fn make_qkv(rng: &mut Rng, g: usize, s2: usize) -> (Matrix, Matrix, Matrix) {
+    (rng.gaussian_matrix(g, 576, 1.0), rng.gaussian_matrix(s2, 576, 1.0),
+     rng.gaussian_matrix(s2, 512, 1.0))
+}
+
+fn run_kernel(engine: &Engine, algo: &str, n1: usize, sq: usize,
+              kv_len: usize, q: &Matrix, k: &Matrix, v: &Matrix) -> Vec<f32> {
+    let kernel = engine.load_kernel_for(algo, n1, sq, kv_len).expect("load");
+    let meta = &kernel.meta;
+    let bucket = meta.bucket;
+    assert_eq!(k.rows, bucket, "caller must pad to the bucket");
+    let valid = [kv_len as i32];
+    let g = n1 * sq;
+    let out = kernel
+        .run(&[
+            TensorView::F32(&q.data, &[g, 576]),
+            TensorView::F32(&k.data, &[bucket, 576]),
+            TensorView::F32(&v.data, &[bucket, 512]),
+            TensorView::I32(&valid, &[1]),
+        ])
+        .expect("run");
+    out.into_iter().next().unwrap()
+}
+
+#[test]
+fn amla_artifact_matches_golden() {
+    let Some(engine) = engine() else { return };
+    let mut rng = Rng::new(1);
+    let (n1, sq, kv) = (16, 1, 256);
+    let (q, k, v) = make_qkv(&mut rng, n1 * sq, 256);
+    let out = run_kernel(&engine, "amla", n1, sq, kv, &q, &k, &v);
+    let gold = golden_attention(&q, &k, &v, &row_limits(n1, n1, 1, kv));
+    let err = rel_frobenius_error(&out, &gold.data);
+    // artifact runs BF16 matmuls inside
+    assert!(err < 1e-2, "amla artifact vs golden: {err}");
+}
+
+#[test]
+fn base_artifact_matches_golden() {
+    let Some(engine) = engine() else { return };
+    let mut rng = Rng::new(2);
+    let (n1, sq, kv) = (16, 1, 256);
+    let (q, k, v) = make_qkv(&mut rng, n1 * sq, 256);
+    let out = run_kernel(&engine, "base", n1, sq, kv, &q, &k, &v);
+    let gold = golden_attention(&q, &k, &v, &row_limits(n1, n1, 1, kv));
+    assert!(rel_frobenius_error(&out, &gold.data) < 1e-2);
+}
+
+#[test]
+fn amla_artifact_tracks_rust_amla() {
+    // PJRT AMLA and the Rust recurrence implement the same algorithm;
+    // both in mixed BF16, so they agree to BF16 noise.
+    let Some(engine) = engine() else { return };
+    let mut rng = Rng::new(3);
+    let (n1, sq, kv) = (16, 1, 256);
+    let (q, k, v) = make_qkv(&mut rng, n1 * sq, 256);
+    let out = run_kernel(&engine, "amla", n1, sq, kv, &q, &k, &v);
+    let cfg = FlashConfig { block_kv: 256, n1, sq, valid_len: kv,
+                            mixed_bf16: true };
+    let rust = amla::numerics::amla::amla_attention(&q, &k, &v, &cfg);
+    let err = rel_frobenius_error(&out, &rust.data);
+    assert!(err < 5e-3, "pjrt vs rust amla: {err}");
+}
+
+#[test]
+fn bucket_padding_respected() {
+    // valid_len < bucket: padding rows must not influence the output
+    let Some(engine) = engine() else { return };
+    let mut rng = Rng::new(4);
+    let (n1, sq) = (16, 1);
+    let (q, mut k, mut v) = make_qkv(&mut rng, n1 * sq, 256);
+    let valid = 100;
+    let out1 = run_kernel(&engine, "amla", n1, sq, valid, &q, &k, &v);
+    // poison the padding region
+    for x in &mut k.data[valid * 576..] {
+        *x = 1e4;
+    }
+    for x in &mut v.data[valid * 512..] {
+        *x = -1e4;
+    }
+    let out2 = run_kernel(&engine, "amla", n1, sq, valid, &q, &k, &v);
+    assert_eq!(out1, out2, "padding leaked into the output");
+}
+
+#[test]
+fn mtp_artifact_is_causal() {
+    let Some(engine) = engine() else { return };
+    let mut rng = Rng::new(5);
+    let (n1, sq, kv) = (16, 2, 200);
+    let (q, k, v) = make_qkv(&mut rng, n1 * sq, 256);
+    let out = run_kernel(&engine, "amla", n1, sq, kv, &q, &k, &v);
+    // q_pos 0 rows see kv-1 tokens, q_pos 1 rows see kv
+    let gold = golden_attention(&q, &k, &v, &row_limits(n1 * sq, n1, sq, kv));
+    assert!(rel_frobenius_error(&out, &gold.data) < 1e-2);
+}
+
+#[test]
+fn bucket_selection_picks_smallest() {
+    let Some(engine) = engine() else { return };
+    let reg = engine.registry();
+    let buckets = reg.kernel_buckets("amla", 16, 1);
+    assert!(buckets.len() >= 2, "need multiple buckets: {buckets:?}");
+    let small = reg.select_kernel("amla", 16, 1, buckets[0]).unwrap();
+    assert_eq!(small.bucket, buckets[0]);
+    let next = reg.select_kernel("amla", 16, 1, buckets[0] + 1).unwrap();
+    assert_eq!(next.bucket, buckets[1]);
+}
+
+#[test]
+fn executable_cache_reuses_compilations() {
+    let Some(engine) = engine() else { return };
+    let a = engine.load_kernel_for("amla", 16, 1, 128).unwrap();
+    let b = engine.load_kernel_for("amla", 16, 1, 200).unwrap();
+    // same bucket -> same Arc
+    assert!(std::sync::Arc::ptr_eq(&a, &b));
+}
+
+#[test]
+fn paper_shape_artifact_runs() {
+    // N1=128 paper configuration (quickstart validation artifact)
+    let Some(engine) = engine() else { return };
+    if engine.registry().kernel_buckets("amla", 128, 1).is_empty() {
+        eprintln!("skipping: paper-shape artifacts not built");
+        return;
+    }
+    let mut rng = Rng::new(6);
+    let (q, k, v) = make_qkv(&mut rng, 128, 1024);
+    let out = run_kernel(&engine, "amla", 128, 1, 1024, &q, &k, &v);
+    let gold = golden_attention(&q, &k, &v, &row_limits(128, 128, 1, 1024));
+    assert!(rel_frobenius_error(&out, &gold.data) < 1e-2);
+}
