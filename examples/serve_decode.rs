@@ -8,9 +8,14 @@
 //! TPOT and aggregate throughput; run with `--algo base` to serve the
 //! Algorithm-1 kernel instead and compare.
 //!
+//! The serve loop is batched: every global step advances the whole
+//! active set one token through `DecodeEngine::step_batch`, with
+//! `--batch-workers` controlling in-batch attention parallelism
+//! (1 = the serial reference; outputs are bit-identical either way).
+//!
 //! ```bash
 //! make artifacts && cargo run --release --example serve_decode -- \
-//!     --requests 12 --max-batch 4 --workers 4 --max-new-tokens 24
+//!     --requests 12 --max-batch 4 --batch-workers 4 --max-new-tokens 24
 //! ```
 
 use amla::config::{Args, ServeConfig};
@@ -49,8 +54,8 @@ fn main() -> anyhow::Result<()> {
     let total_tokens: usize =
         requests.iter().map(|r| r.max_new_tokens).sum();
     eprintln!("[serve_decode] {n_requests} requests, {total_tokens} tokens \
-               to generate, max batch {}, {} workers",
-              cfg.max_batch, cfg.workers);
+               to generate, max batch {}, {} workers, {} batch workers",
+              cfg.max_batch, cfg.workers, cfg.batch_workers);
 
     let report = serve(&engine, requests, &cfg)?;
 

@@ -46,6 +46,12 @@ from .ref import LN2, row_limits
 # range where Lemma 3.1 no longer holds; values that small are negligible
 # in the final sum anyway.
 DELTA_CLAMP = -30
+# Symmetric upper clamp: a large positive delta (running max rising by
+# >30 binades in one block) would push the accumulator's exponent field
+# past 254 and the integer add would fabricate Inf bit patterns.  The
+# rescale drives those values toward zero anyway, so clamping is
+# accuracy-neutral — mirror of rust/src/numerics/fp32.rs::DELTA_CLAMP_HI.
+DELTA_CLAMP_HI = 30
 # Tie-break epsilon added before the float->int cast (Algorithm 2 line 11)
 # so that exact .5 boundaries round the same way the CANN kernel does.
 ROUND_EPS = 1e-6
@@ -145,8 +151,9 @@ def _amla_kernel(valid_ref, q_ref, k_ref, v_ref,
     n_prev = n_ref[...][:, 0]
     c_prev = c_ref[...][:, 0]
     first = jnp.logical_not(jnp.isfinite(m_prev))  # per-row "i == 1"
-    delta = jnp.where(first, 0, jnp.maximum(n_new - n_prev,
-                                            jnp.int32(DELTA_CLAMP)))
+    delta = jnp.where(first, 0, jnp.clip(n_new - n_prev,
+                                         jnp.int32(DELTA_CLAMP),
+                                         jnp.int32(DELTA_CLAMP_HI)))
     eps = jnp.where(first, 0.0, 1.5 * (c_new / c_prev - 1.0))  # line 10-11
     # Split exactly: the power-of-two part stays integer (bit-exact Lemma
     # 3.1); only the compensation fraction goes through a float round.

@@ -8,6 +8,7 @@
 
 use amla::bench_util::{bb, Bench};
 use amla::config::{Algo, ServeConfig};
+use amla::coordinator::engine::SeqRuntime;
 use amla::coordinator::{serve, Batcher, DecodeEngine, DecodeRequest,
                         HostLayerExecutor};
 use amla::kvcache::{PagePool, SequenceCache};
@@ -27,22 +28,65 @@ fn engine() -> DecodeEngine<HostLayerExecutor> {
 fn main() {
     let mut b = Bench::new("coordinator");
 
-    // serving throughput across (batch, workers)
+    // serving throughput across (batch, batch_workers)
     println!("host-substrate serving throughput:");
     for (max_batch, workers) in [(1usize, 1usize), (4, 1), (4, 4), (8, 4)] {
         let eng = engine();
-        let cfg = ServeConfig { max_batch, workers, pool_pages: 512,
-                                page_size: 16, ..ServeConfig::default() };
+        let cfg = ServeConfig { max_batch, workers, batch_workers: workers,
+                                pool_pages: 512, page_size: 16,
+                                ..ServeConfig::default() };
         let reqs: Vec<_> = (0..8u64)
             .map(|i| DecodeRequest::new(i, vec![1, 2, 3], 6))
             .collect();
         let t0 = std::time::Instant::now();
         let report = serve(&eng, reqs, &cfg).unwrap();
-        println!("  batch {max_batch} workers {workers}: {:.0} tok/s \
-                  ({} tokens in {:.2?})",
+        println!("  batch {max_batch} batch_workers {workers}: {:.0} tok/s \
+                  ({} tokens in {:.2?}, occupancy {:.2})",
                  report.metrics.tokens_generated as f64
                      / t0.elapsed().as_secs_f64(),
-                 report.metrics.tokens_generated, t0.elapsed());
+                 report.metrics.tokens_generated, t0.elapsed(),
+                 report.metrics.mean_batch_occupancy());
+    }
+
+    // batched decode steps/sec: the tentpole number — the same
+    // 8-sequence batch stepped by the engine with 1 vs 4 workers.
+    println!("\nbatched step_batch throughput (8 sequences, ctx ~48):");
+    for workers in [1usize, 4] {
+        let eng = engine();
+        let mut rts: Vec<SeqRuntime> =
+            (0..8).map(|_| SeqRuntime::new(2)).collect();
+        let mut toks = vec![0u32; 8];
+        // warm each sequence to a non-trivial context
+        for step in 0..48u32 {
+            let feeds: Vec<u32> =
+                toks.iter().map(|&t| t.wrapping_add(step)).collect();
+            let outs = eng.step_batch(&mut rts, &feeds, workers);
+            for (t, o) in toks.iter_mut().zip(outs) {
+                *t = o.unwrap();
+            }
+        }
+        let t0 = std::time::Instant::now();
+        let mut steps = 0u64;
+        while t0.elapsed().as_secs_f64() < 0.5 {
+            // keep context bounded: free + rebuild when near the bucket
+            if rts[0].caches[0].len() > 100 {
+                let mut pool = eng.pool.lock().unwrap();
+                for rt in &mut rts {
+                    rt.free(&mut pool);
+                }
+                drop(pool);
+                rts = (0..8).map(|_| SeqRuntime::new(2)).collect();
+            }
+            let feeds = toks.clone();
+            let outs = eng.step_batch(&mut rts, &feeds, workers);
+            for (t, o) in toks.iter_mut().zip(outs) {
+                *t = o.unwrap();
+            }
+            steps += 1;
+        }
+        let sps = steps as f64 / t0.elapsed().as_secs_f64();
+        println!("  workers {workers}: {:.1} steps/s ({:.0} seq-tok/s)",
+                 sps, sps * 8.0);
     }
 
     // single decode step cost (host substrate)

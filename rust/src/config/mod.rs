@@ -51,6 +51,11 @@ pub struct ServeConfig {
     pub pool_pages: usize,
     /// Worker threads executing attention calls.
     pub workers: usize,
+    /// Worker threads inside one batched decode step: how many
+    /// sequences of a batch run their attention in parallel
+    /// ([`crate::coordinator::LayerExecutor::step_batch`]).  1 = the
+    /// serial reference path.
+    pub batch_workers: usize,
     /// Per-request cap on generated tokens.
     pub max_new_tokens: usize,
 }
@@ -66,6 +71,9 @@ impl Default for ServeConfig {
             page_size: 64,
             pool_pages: 512,
             workers: std::thread::available_parallelism()
+                .map(|n| n.get().min(8))
+                .unwrap_or(4),
+            batch_workers: std::thread::available_parallelism()
                 .map(|n| n.get().min(8))
                 .unwrap_or(4),
             max_new_tokens: 64,
@@ -96,6 +104,7 @@ impl ServeConfig {
         num_field!("page-size", self.page_size);
         num_field!("pool-pages", self.pool_pages);
         num_field!("workers", self.workers);
+        num_field!("batch-workers", self.batch_workers);
         num_field!("max-new-tokens", self.max_new_tokens);
         self.validate()
     }
@@ -106,6 +115,9 @@ impl ServeConfig {
         }
         if self.max_batch == 0 || self.page_size == 0 || self.pool_pages == 0 {
             bail!("max_batch, page_size, pool_pages must be positive");
+        }
+        if self.batch_workers == 0 {
+            bail!("batch_workers must be positive (1 = serial)");
         }
         Ok(())
     }
@@ -192,6 +204,14 @@ mod tests {
         assert!(cfg.apply_args(&args("--algo nope")).is_err());
         assert!(cfg.apply_args(&args("--sq 3")).is_err());
         assert!(cfg.apply_args(&args("--max-batch abc")).is_err());
+    }
+
+    #[test]
+    fn batch_workers_override_and_validation() {
+        let mut cfg = ServeConfig::default();
+        cfg.apply_args(&args("--batch-workers 4")).unwrap();
+        assert_eq!(cfg.batch_workers, 4);
+        assert!(cfg.apply_args(&args("--batch-workers 0")).is_err());
     }
 
     #[test]

@@ -70,6 +70,7 @@ impl Batcher {
             self.free_rows -= need;
             let mut st = RequestState::new(req);
             st.started_at = Some(std::time::Instant::now());
+            st.admitted_rows = need;
             self.active.push(st);
             self.stats.admitted += 1;
             n += 1;
@@ -104,7 +105,9 @@ impl Batcher {
         while i < self.active.len() {
             if self.active[i].done() {
                 let st = self.active.swap_remove(i);
-                self.free_rows += Self::rows_needed(&st.request);
+                // credit exactly what admission deducted — the request's
+                // max_new_tokens may have shrunk on abort
+                self.free_rows += st.admitted_rows;
                 self.stats.completed += 1;
                 done.push(st);
             } else {
@@ -112,6 +115,12 @@ impl Batcher {
             }
         }
         done
+    }
+
+    /// Remove the head-of-line request (used when it can never be
+    /// admitted: its row requirement exceeds the whole pool budget).
+    pub fn pop_blocked(&mut self) -> Option<DecodeRequest> {
+        self.queue.pop_front()
     }
 
     pub fn idle(&self) -> bool {
@@ -168,6 +177,20 @@ mod tests {
         b.active_mut()[0].generated.extend([1, 1, 1, 1]);
         b.reap();
         assert_eq!(b.admit(), 1);
+    }
+
+    #[test]
+    fn abort_credits_full_admission_budget() {
+        let mut b = Batcher::new(1, 10);
+        b.enqueue(req(0, 4, 4)); // deducts 8 rows
+        b.admit();
+        // abort after one token: the serve loop shrinks max_new_tokens
+        b.active_mut()[0].generated.push(1);
+        b.active_mut()[0].request.max_new_tokens = 1;
+        b.reap();
+        // the full 8 rows must be credited back, not prompt+generated=5
+        b.enqueue(req(1, 4, 4));
+        assert_eq!(b.admit(), 1, "admission budget leaked on abort");
     }
 
     #[test]

@@ -19,11 +19,30 @@ use anyhow::{anyhow, Context, Result};
 
 use crate::config::{Algo, ServeConfig};
 use crate::kvcache::{PagePool, SequenceCache};
-use crate::numerics::flash_base::FlashConfig;
+use crate::numerics::amla::{amla_attention_with_scratch, AmlaScratch};
+use crate::numerics::flash_base::{base_flash_attention_with_scratch,
+                                  FlashConfig};
 use crate::numerics::golden::row_limits;
 use crate::numerics::mla::{decode_step_with, MlaDims, MlaWeights};
 use crate::numerics::Matrix;
 use crate::runtime::{Engine as PjrtEngine, TensorView};
+
+/// One sequence's slot in a batched layer step: the residual-stream
+/// input plus padded cache buffers, following the same contract as
+/// [`LayerExecutor::step`] (history in rows `0..valid_len-sq`, the
+/// executor fills rows `valid_len-sq..valid_len` and runs attention).
+#[derive(Debug)]
+pub struct StepJob {
+    /// `[sq, d_model]` layer input (residual stream), updated by the
+    /// engine between layers.
+    pub x: Vec<f32>,
+    /// `[bucket, d_latent]` padded latent cache.
+    pub c_buf: Vec<f32>,
+    /// `[bucket, d_rope]` padded rope-key cache.
+    pub kr_buf: Vec<f32>,
+    pub bucket: usize,
+    pub valid_len: usize,
+}
 
 /// Runs one MLA decode layer over padded cache buffers.
 ///
@@ -31,6 +50,13 @@ use crate::runtime::{Engine as PjrtEngine, TensorView};
 /// `0..valid_len-sq` holding history; the executor computes the new
 /// latent/rope rows at `valid_len-sq..valid_len`, runs attention, and
 /// leaves the *updated* caches in the buffers.  Returns `y [sq, d_model]`.
+///
+/// [`LayerExecutor::step_batch`] is the batched form: one call advances
+/// every job of a decode batch through the layer.  The default
+/// implementation is the serial reference (a loop over [`Self::step`]);
+/// implementations that parallelize **must** produce bit-identical
+/// per-job results — sequences are independent (disjoint caches), so
+/// any execution order is exact.
 pub trait LayerExecutor: Send + Sync {
     fn dims(&self) -> MlaDims;
     fn n_layers(&self) -> usize;
@@ -39,6 +65,19 @@ pub trait LayerExecutor: Send + Sync {
     fn step(&self, layer: usize, x: &[f32], c_cache: &mut [f32],
             kr_cache: &mut [f32], bucket: usize, valid_len: usize)
             -> Result<Vec<f32>>;
+
+    /// Advance every job in `jobs` one layer forward, returning one
+    /// result per job (same order).  `workers` is the attention-level
+    /// parallelism budget ([`ServeConfig::batch_workers`] on the
+    /// serving path); implementations may ignore it.
+    fn step_batch(&self, layer: usize, jobs: &mut [&mut StepJob],
+                  workers: usize) -> Vec<Result<Vec<f32>>> {
+        let _ = workers; // serial reference implementation
+        jobs.iter_mut()
+            .map(|j| self.step(layer, &j.x, &mut j.c_buf, &mut j.kr_buf,
+                               j.bucket, j.valid_len))
+            .collect()
+    }
 }
 
 /// Test/bench executor backed by the in-process Rust numerics.
@@ -56,6 +95,40 @@ impl HostLayerExecutor {
             .map(|l| MlaWeights::init(dims, seed.wrapping_add(l as u64)))
             .collect();
         Self { weights, algo, block_kv, buckets }
+    }
+
+    /// One layer forward on a job's buffers, reusing `scratch` for the
+    /// attention block loop.  Moves the job's cache buffers into
+    /// matrices and back — no copies on the batched path.
+    fn step_job(&self, layer: usize, job: &mut StepJob,
+                scratch: &mut AmlaScratch) -> Vec<f32> {
+        let d = self.dims();
+        let w = &self.weights[layer];
+        let mut c = Matrix::from_vec(job.bucket, d.d_latent,
+                                     std::mem::take(&mut job.c_buf));
+        let mut kr = Matrix::from_vec(job.bucket, d.d_rope,
+                                      std::mem::take(&mut job.kr_buf));
+        let algo = self.algo;
+        let block_kv = self.block_kv;
+        let y = decode_step_with(&job.x, &mut c, &mut kr, job.valid_len, w,
+            |q, k, v, valid| {
+                let cfg = FlashConfig { block_kv, n1: d.n1, sq: d.sq,
+                                        valid_len: valid, mixed_bf16: true };
+                match algo {
+                    Algo::Amla =>
+                        amla_attention_with_scratch(q, k, v, &cfg, scratch).0,
+                    Algo::Base => {
+                        // golden-equivalent safety: flash base
+                        let limits = row_limits(q.rows, d.n1, d.sq, valid);
+                        let _ = limits;
+                        base_flash_attention_with_scratch(q, k, v, &cfg,
+                                                          scratch)
+                    }
+                }
+            });
+        job.c_buf = c.data;
+        job.kr_buf = kr.data;
+        y
     }
 }
 
@@ -75,29 +148,52 @@ impl LayerExecutor for HostLayerExecutor {
     fn step(&self, layer: usize, x: &[f32], c_cache: &mut [f32],
             kr_cache: &mut [f32], bucket: usize, valid_len: usize)
             -> Result<Vec<f32>> {
-        let d = self.dims();
-        let w = &self.weights[layer];
-        let mut c = Matrix::from_vec(bucket, d.d_latent, c_cache.to_vec());
-        let mut kr = Matrix::from_vec(bucket, d.d_rope, kr_cache.to_vec());
-        let algo = self.algo;
-        let block_kv = self.block_kv;
-        let y = decode_step_with(x, &mut c, &mut kr, valid_len, w,
-            move |q, k, v, valid| {
-                let cfg = FlashConfig { block_kv, n1: d.n1, sq: d.sq,
-                                        valid_len: valid, mixed_bf16: true };
-                match algo {
-                    Algo::Amla => crate::numerics::amla::amla_attention(q, k, v, &cfg),
-                    Algo::Base => {
-                        // golden-equivalent safety: flash base
-                        let limits = row_limits(q.rows, d.n1, d.sq, valid);
-                        let _ = limits;
-                        crate::numerics::flash_base::base_flash_attention(q, k, v, &cfg)
-                    }
-                }
-            });
-        c_cache.copy_from_slice(&c.data);
-        kr_cache.copy_from_slice(&kr.data);
+        let mut job = StepJob { x: x.to_vec(), c_buf: c_cache.to_vec(),
+                                kr_buf: kr_cache.to_vec(), bucket,
+                                valid_len };
+        let mut scratch = AmlaScratch::new();
+        let y = self.step_job(layer, &mut job, &mut scratch);
+        c_cache.copy_from_slice(&job.c_buf);
+        kr_cache.copy_from_slice(&job.kr_buf);
         Ok(y)
+    }
+
+    /// Batched layer step: jobs fan out over a scoped worker pool, one
+    /// reusable [`AmlaScratch`] per worker.  Sequences are independent,
+    /// so the result is bit-identical to the serial default regardless
+    /// of `workers`.
+    fn step_batch(&self, layer: usize, jobs: &mut [&mut StepJob],
+                  workers: usize) -> Vec<Result<Vec<f32>>> {
+        let n = jobs.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        let workers = workers.clamp(1, n);
+        if workers == 1 {
+            let mut scratch = AmlaScratch::new();
+            return jobs.iter_mut()
+                .map(|j| Ok(self.step_job(layer, j, &mut scratch)))
+                .collect();
+        }
+        let chunk = n.div_ceil(workers);
+        let mut chunk_outs: Vec<Vec<Vec<f32>>> = Vec::new();
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = jobs
+                .chunks_mut(chunk)
+                .map(|ch| {
+                    scope.spawn(move || {
+                        let mut scratch = AmlaScratch::new();
+                        ch.iter_mut()
+                            .map(|j| self.step_job(layer, j, &mut scratch))
+                            .collect::<Vec<_>>()
+                    })
+                })
+                .collect();
+            for h in handles {
+                chunk_outs.push(h.join().expect("batch worker panicked"));
+            }
+        });
+        chunk_outs.into_iter().flatten().map(Ok).collect()
     }
 }
 
@@ -373,44 +469,122 @@ impl<E: LayerExecutor> DecodeEngine<E> {
     /// Run one decode step for a sequence whose caches hold `ctx` tokens:
     /// feeds `token`, returns the next token.  `sq` must be 1 for the
     /// serving path (MTP buckets exist for the bare-kernel experiments).
+    ///
+    /// This is the single-sequence view of [`Self::step_batch`] — one
+    /// shared implementation, so the serial and batched paths cannot
+    /// drift apart.
     pub fn step(&self, rt: &mut SeqRuntime, token: u32) -> Result<u32> {
+        self.step_batch(std::slice::from_mut(rt), &[token], 1)
+            .pop()
+            .expect("step_batch returns one result per sequence")
+    }
+
+    /// One **batched** decode step: every `(runtime, token)` pair
+    /// advances one token together.  Per layer, the caches of all
+    /// sequences are gathered from the paged pool into per-job bucket
+    /// buffers (page-contiguous runs), the executor's
+    /// [`LayerExecutor::step_batch`] fans the attention calls over
+    /// `workers` threads, and the new latent/rope rows are scattered
+    /// back.  A per-sequence failure (pool exhausted, bucket overflow)
+    /// aborts only that sequence — its slot reports `Err`, the rest of
+    /// the batch proceeds — matching the serial path's semantics.
+    ///
+    /// Outputs are bit-identical to calling [`Self::step`] per sequence
+    /// in any order: sequences share no mutable state.
+    pub fn step_batch(&self, rts: &mut [SeqRuntime], tokens: &[u32],
+                      workers: usize) -> Vec<Result<u32>> {
         let d = self.executor.dims();
         assert_eq!(d.sq, 1, "serving engine drives sq=1 artifacts");
-        let ctx = rt.caches[0].len() + 1; // history + the new token
-        let bucket = self.bucket_for(ctx)?;
+        assert_eq!(rts.len(), tokens.len());
+        let n = rts.len();
+        let n_layers = self.executor.n_layers();
 
-        let mut x = self.embed(token, d.d_model);
-        let mut c_buf = vec![0f32; bucket * d.d_latent];
-        let mut kr_buf = vec![0f32; bucket * d.d_rope];
-
-        for layer in 0..self.executor.n_layers() {
-            {
-                // reserve the new row, then materialize history + blank row
-                let mut pool = self.pool.lock().unwrap();
-                rt.caches[layer]
-                    .append(&mut pool, &vec![0.0; d.d_latent],
-                            &vec![0.0; d.d_rope])
-                    .context("latent pool exhausted")?;
-                rt.caches[layer].materialize(&pool, bucket, &mut c_buf,
-                                             &mut kr_buf);
-            }
-            let y = self.executor.step(layer, &x, &mut c_buf, &mut kr_buf,
-                                       bucket, ctx)?;
-            {
-                // persist the executor-written new row back to the pool
-                let mut pool = self.pool.lock().unwrap();
-                let row = ctx - 1;
-                rt.caches[layer].write_row(
-                    &mut pool, row,
-                    &c_buf[row * d.d_latent..(row + 1) * d.d_latent],
-                    &kr_buf[row * d.d_rope..(row + 1) * d.d_rope]);
-            }
-            // residual connection
-            for (xi, yi) in x.iter_mut().zip(&y) {
-                *xi += yi;
+        let mut out: Vec<Result<u32>> = (0..n).map(|_| Ok(0)).collect();
+        let mut jobs: Vec<Option<StepJob>> = Vec::with_capacity(n);
+        let mut ctxs = vec![0usize; n];
+        for i in 0..n {
+            let ctx = rts[i].caches[0].len() + 1; // history + new token
+            ctxs[i] = ctx;
+            match self.bucket_for(ctx) {
+                Ok(bucket) => jobs.push(Some(StepJob {
+                    x: self.embed(tokens[i], d.d_model),
+                    c_buf: vec![0.0; bucket * d.d_latent],
+                    kr_buf: vec![0.0; bucket * d.d_rope],
+                    bucket,
+                    valid_len: ctx,
+                })),
+                Err(e) => {
+                    out[i] = Err(e);
+                    jobs.push(None);
+                }
             }
         }
-        Ok(self.readout(&x))
+
+        let zero_lat = vec![0.0; d.d_latent];
+        let zero_rope = vec![0.0; d.d_rope];
+        for layer in 0..n_layers {
+            // gather: reserve the new row, materialize history + blank
+            for i in 0..n {
+                let Some(job) = jobs[i].as_mut() else { continue };
+                let mut pool = self.pool.lock().unwrap();
+                match rts[i].caches[layer]
+                    .append(&mut pool, &zero_lat, &zero_rope)
+                    .context("latent pool exhausted")
+                {
+                    Ok(()) => rts[i].caches[layer].materialize(
+                        &pool, job.bucket, &mut job.c_buf, &mut job.kr_buf),
+                    Err(e) => {
+                        out[i] = Err(e);
+                        jobs[i] = None;
+                    }
+                }
+            }
+
+            // execute the layer across the batch
+            let mut live_idx: Vec<usize> = Vec::with_capacity(n);
+            let mut live: Vec<&mut StepJob> = Vec::with_capacity(n);
+            for (i, slot) in jobs.iter_mut().enumerate() {
+                if let Some(job) = slot.as_mut() {
+                    live_idx.push(i);
+                    live.push(job);
+                }
+            }
+            let ys = self.executor.step_batch(layer, &mut live, workers);
+            drop(live);
+
+            // scatter: persist the new row, advance the residual stream
+            for (&i, y) in live_idx.iter().zip(ys) {
+                match y {
+                    Ok(y) => {
+                        let job = jobs[i].as_mut().unwrap();
+                        let row = ctxs[i] - 1;
+                        {
+                            let mut pool = self.pool.lock().unwrap();
+                            rts[i].caches[layer].write_row(
+                                &mut pool, row,
+                                &job.c_buf[row * d.d_latent
+                                           ..(row + 1) * d.d_latent],
+                                &job.kr_buf[row * d.d_rope
+                                            ..(row + 1) * d.d_rope]);
+                        }
+                        for (xi, yi) in job.x.iter_mut().zip(&y) {
+                            *xi += yi;
+                        }
+                    }
+                    Err(e) => {
+                        out[i] = Err(e);
+                        jobs[i] = None;
+                    }
+                }
+            }
+        }
+
+        for i in 0..n {
+            if let Some(job) = &jobs[i] {
+                out[i] = Ok(self.readout(&job.x));
+            }
+        }
+        out
     }
 
     /// Prefill: feed every prompt token (decode-style, one at a time).
@@ -476,6 +650,77 @@ mod tests {
             eng.prefill(&mut rt, &[1, 2, 3, 4]).unwrap()
         };
         assert_eq!(ta, tb);
+    }
+
+    #[test]
+    fn step_batch_bit_identical_to_serial_steps() {
+        // same seeds, mixed context lengths (straddling the 64 bucket),
+        // serial engine.step vs engine.step_batch at 1 and 4 workers
+        let prompts: Vec<Vec<u32>> = vec![
+            vec![1, 2, 3],
+            vec![9; 70], // crosses into the 128 bucket
+            vec![4, 5],
+            vec![6; 40],
+            vec![8, 1, 2, 3, 4],
+        ];
+        let serial = {
+            let eng = host_engine(Algo::Amla);
+            prompts.iter().map(|p| {
+                let mut rt = SeqRuntime::new(2);
+                let t = eng.prefill(&mut rt, p).unwrap();
+                eng.step(&mut rt, t).unwrap()
+            }).collect::<Vec<_>>()
+        };
+        for workers in [1usize, 4] {
+            let eng = host_engine(Algo::Amla);
+            let mut rts: Vec<SeqRuntime> =
+                (0..prompts.len()).map(|_| SeqRuntime::new(2)).collect();
+            // drive the prompts via step_batch, one token per step
+            let longest = prompts.iter().map(Vec::len).max().unwrap();
+            let mut last: Vec<u32> = prompts.iter().map(|p| p[0]).collect();
+            for pos in 0..longest {
+                let (mut idx, mut toks) = (Vec::new(), Vec::new());
+                for (i, p) in prompts.iter().enumerate() {
+                    if pos < p.len() {
+                        idx.push(i);
+                        toks.push(p[pos]);
+                    }
+                }
+                // step only the sequences whose prompt still has tokens
+                let mut sub: Vec<SeqRuntime> = Vec::new();
+                for &i in &idx {
+                    sub.push(std::mem::replace(&mut rts[i],
+                                               SeqRuntime::new(0)));
+                }
+                let outs = eng.step_batch(&mut sub, &toks, workers);
+                for ((&i, rt), o) in idx.iter().zip(sub).zip(outs) {
+                    rts[i] = rt;
+                    last[i] = o.unwrap();
+                }
+            }
+            let final_toks = eng.step_batch(&mut rts, &last, workers);
+            let final_toks: Vec<u32> =
+                final_toks.into_iter().map(|r| r.unwrap()).collect();
+            assert_eq!(final_toks, serial,
+                       "workers={workers} diverged from serial");
+        }
+    }
+
+    #[test]
+    fn step_batch_isolates_per_sequence_failures() {
+        let eng = host_engine(Algo::Amla);
+        // one sequence pushed past the largest bucket, one healthy
+        let mut big = SeqRuntime::new(2);
+        let mut t = 1;
+        for _ in 0..128 {
+            t = eng.step(&mut big, t).unwrap();
+        }
+        let healthy = SeqRuntime::new(2);
+        let mut rts = vec![big, healthy];
+        let outs = eng.step_batch(&mut rts, &[t, 7], 2);
+        assert!(outs[0].is_err(), "overfull sequence must fail");
+        assert!(outs[1].is_ok(), "healthy sequence must complete");
+        assert_eq!(rts[1].caches[0].len(), 1);
     }
 
     #[test]

@@ -65,12 +65,42 @@ pub struct Metrics {
     pub step_latency: LatencyHisto,
     pub token_latency: LatencyHisto,
     pub wall_time: Duration,
+    /// Sum over batched steps of the batch size (for mean occupancy).
+    /// Per-batch *latency* is `step_latency` — the serve loop performs
+    /// exactly one batched step per iteration.
+    pub batch_size_sum: u64,
+    /// Number of batched steps recorded.
+    pub batches: u64,
+    /// Largest batch observed.
+    pub batch_peak: usize,
 }
 
 impl Metrics {
     pub fn tokens_per_sec(&self) -> f64 {
         let secs = self.wall_time.as_secs_f64();
         if secs == 0.0 { 0.0 } else { self.tokens_generated as f64 / secs }
+    }
+
+    /// Record one batched decode step over `size` sequences.
+    pub fn record_batch(&mut self, size: usize) {
+        self.batches += 1;
+        self.batch_size_sum += size as u64;
+        self.batch_peak = self.batch_peak.max(size);
+    }
+
+    /// Mean sequences per batched step (occupancy of the decode engine).
+    pub fn mean_batch_occupancy(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.batch_size_sum as f64 / self.batches as f64
+        }
+    }
+
+    /// Batched steps per second of wall time.
+    pub fn steps_per_sec(&self) -> f64 {
+        let secs = self.wall_time.as_secs_f64();
+        if secs == 0.0 { 0.0 } else { self.batches as f64 / secs }
     }
 
     /// Prometheus-style exposition text.
@@ -87,12 +117,21 @@ impl Metrics {
              amla_step_latency_us{{q=\"0.99\"}} {:.0}\n\
              amla_step_latency_us_mean {:.0}\n\
              # TYPE amla_throughput_tokens_per_s gauge\n\
-             amla_throughput_tokens_per_s {:.2}\n",
+             amla_throughput_tokens_per_s {:.2}\n\
+             # TYPE amla_batch_occupancy_mean gauge\n\
+             amla_batch_occupancy_mean {:.2}\n\
+             # TYPE amla_batch_peak gauge\n\
+             amla_batch_peak {}\n\
+             # TYPE amla_batch_steps_per_s gauge\n\
+             amla_batch_steps_per_s {:.2}\n",
             self.requests_completed, self.tokens_generated, self.steps,
             self.step_latency.quantile_us(0.5),
             self.step_latency.quantile_us(0.99),
             self.step_latency.mean_us(),
-            self.tokens_per_sec())
+            self.tokens_per_sec(),
+            self.mean_batch_occupancy(),
+            self.batch_peak,
+            self.steps_per_sec())
     }
 }
 
@@ -121,5 +160,18 @@ mod tests {
         assert!(text.contains("amla_requests_completed 3"));
         assert!(text.contains("amla_tokens_generated 120"));
         assert!(text.contains("amla_throughput_tokens_per_s 60.00"));
+        assert!(text.contains("amla_batch_occupancy_mean"));
+    }
+
+    #[test]
+    fn batch_counters_accumulate() {
+        let mut m = Metrics::default();
+        m.record_batch(4);
+        m.record_batch(8);
+        m.wall_time = Duration::from_secs(1);
+        assert_eq!(m.batches, 2);
+        assert_eq!(m.batch_peak, 8);
+        assert!((m.mean_batch_occupancy() - 6.0).abs() < 1e-9);
+        assert!((m.steps_per_sec() - 2.0).abs() < 1e-9);
     }
 }

@@ -1,16 +1,46 @@
 //! L3 decode-serving coordinator.
 //!
 //! The serving shape of the paper's contribution: AMLA is a decode
-//! kernel, so the coordinator is a vLLM-style decode loop with the
-//! kernel as its hot path:
+//! kernel whose throughput comes from keeping the matmul units
+//! saturated across **many concurrent decode requests**, so the
+//! coordinator is a vLLM-style *batched* decode loop with the kernel as
+//! its hot path:
 //!
 //! ```text
 //! requests → [batcher: admission + continuous batching]
-//!          → [scheduler: worker threads, one decode step per sequence]
-//!          → [engine: N-layer MLA model over PJRT layer executables]
-//!          → [kvcache: paged latent pool, bucket materialization]
-//!          → streamed tokens + metrics
+//!          → [scheduler: one batched step per iteration — every active
+//!             sequence advances one token together]
+//!          → [engine: N-layer MLA model; step_batch fans the per-
+//!             sequence attention calls over a scoped worker pool]
+//!          → [kvcache: paged latent pool, page-contiguous gather into
+//!             bucket buffers]
+//!          → streamed tokens + metrics (per-batch occupancy; the step
+//!             latency histogram is per batched step)
 //! ```
+//!
+//! ## The batched-engine contract
+//!
+//! [`engine::LayerExecutor::step_batch`] advances a whole batch of
+//! [`engine::StepJob`]s one layer forward.  Three rules make it safe to
+//! parallelize and easy to implement:
+//!
+//! 1. **Default = serial reference.**  The provided implementation
+//!    loops over [`engine::LayerExecutor::step`]; any executor (e.g.
+//!    [`engine::PjrtLayerExecutor`]) works unmodified.
+//! 2. **Bit-identical parallelism.**  Jobs are independent — disjoint
+//!    caches, disjoint outputs — so a parallel implementation must (and
+//!    [`engine::HostLayerExecutor`]'s scoped-thread pool does) return
+//!    exactly the serial results for every worker count.
+//!    `rust/tests/end_to_end.rs` pins this bit-for-bit.
+//! 3. **Scratch reuse.**  Per-block buffers of the attention recurrence
+//!    live in [`crate::numerics::amla::AmlaScratch`], one per worker,
+//!    reused across layers and steps — the hot loop performs no heap
+//!    allocation.
+//!
+//! Worker count comes from [`crate::config::ServeConfig::batch_workers`]
+//! (`--batch-workers`; 1 = serial).  The older
+//! [`crate::config::ServeConfig::workers`] field still sizes the PJRT
+//! client pool.
 //!
 //! Python never appears here — the executables were AOT-compiled by
 //! `make artifacts`.  The stack is generic over [`engine::LayerExecutor`]
@@ -28,7 +58,7 @@ pub mod workload;
 
 pub use batcher::{Batcher, BatcherStats};
 pub use engine::{DecodeEngine, HostLayerExecutor, LayerExecutor,
-                 PjrtLayerExecutor};
+                 PjrtLayerExecutor, StepJob};
 pub use metrics::Metrics;
 pub use request::{DecodeRequest, DecodeResult, RequestId, RequestState};
 pub use scheduler::{serve, ServeReport};

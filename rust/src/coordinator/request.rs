@@ -31,16 +31,45 @@ pub struct RequestState {
     pub started_at: Option<Instant>,
     /// Per-token decode latencies (s).
     pub token_latencies: Vec<f64>,
+    /// Prompt tokens already fed (the batched serve loop prefills
+    /// incrementally, one token per global step).
+    pub prompt_consumed: usize,
+    /// Wall time spent on prefill steps that have not yet produced a
+    /// token — folded into the first generated token's latency so TTFT
+    /// keeps covering the whole prefill.
+    pub pending_prefill: f64,
+    /// Pool-row budget deducted at admission; credited back verbatim on
+    /// reap (the request's `max_new_tokens` may shrink on abort, so the
+    /// credit must not be recomputed from it).
+    pub admitted_rows: usize,
 }
 
 impl RequestState {
     pub fn new(request: DecodeRequest) -> Self {
         Self { request, generated: Vec::new(), enqueued_at: Instant::now(),
-               started_at: None, token_latencies: Vec::new() }
+               started_at: None, token_latencies: Vec::new(),
+               prompt_consumed: 0, pending_prefill: 0.0,
+               admitted_rows: 0 }
     }
 
     pub fn done(&self) -> bool {
         self.generated.len() >= self.request.max_new_tokens
+    }
+
+    /// The token to feed on the next decode step: the next prompt token
+    /// while prefilling, else the last generated token.
+    pub fn next_feed(&self) -> u32 {
+        if self.prompt_consumed < self.request.prompt.len() {
+            self.request.prompt[self.prompt_consumed]
+        } else {
+            *self.generated.last().expect("decode step before prefill")
+        }
+    }
+
+    /// Whether the next step consumes a prompt token (incremental
+    /// prefill) rather than extending the generation.
+    pub fn prefilling(&self) -> bool {
+        self.prompt_consumed < self.request.prompt.len()
     }
 
     /// Context length after prefill + generation so far.

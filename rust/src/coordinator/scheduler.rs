@@ -1,15 +1,21 @@
-//! The serving loop: continuous batching over worker threads.
+//! The serving loop: continuous batching over the batched decode engine.
 //!
-//! Each global step, every active sequence advances one token; steps of
-//! distinct sequences are independent (separate caches), so they fan out
-//! across a scoped thread pool — the std-thread analogue of the async
-//! worker pool a tokio deployment would use (offline build; see
-//! Cargo.toml note).  After the join, finished sequences are reaped,
-//! their pages released, and the batcher refills slots from the queue
-//! (continuous batching).
+//! Each global step, every active sequence advances **one token
+//! together** through [`DecodeEngine::step_batch`]: per layer the
+//! coordinator gathers all sequences' caches from the paged pool, the
+//! executor fans the independent attention calls across
+//! [`ServeConfig::batch_workers`] scoped threads, and the new rows
+//! scatter back.  Prompts prefill incrementally — one prompt token per
+//! global step — so a freshly admitted request joins the running batch
+//! immediately instead of serializing a whole-prompt prefill.  After
+//! each step, finished sequences are reaped, their pages released, and
+//! the batcher refills slots from the queue (continuous batching).
+//!
+//! Batching and parallelism are exact: sequences share no mutable
+//! state, so the emitted token streams are bit-identical for every
+//! `batch_workers` setting (see `rust/tests/end_to_end.rs`).
 
 use std::collections::HashMap;
-use std::sync::Mutex;
 use std::time::Instant;
 
 use anyhow::Result;
@@ -62,76 +68,84 @@ pub fn serve<E: LayerExecutor>(engine: &DecodeEngine<E>,
     let t0 = Instant::now();
 
     while !batcher.idle() {
-        batcher.admit();
+        if batcher.admit() == 0 && batcher.active_len() == 0 {
+            // the active set is empty (all rows free), so the head
+            // request can never fit: reject it with an empty result and
+            // keep serving instead of deadlocking the loop
+            let Some(req) = batcher.pop_blocked() else { break };
+            eprintln!("[serve] request {} rejected: needs more pool rows \
+                       than the pool holds", req.id);
+            results.push(DecodeResult {
+                id: req.id,
+                tokens: Vec::new(),
+                queue_delay: 0.0,
+                ttft: 0.0,
+                mean_tpot: 0.0,
+                p99_tpot: 0.0,
+            });
+            continue;
+        }
         for st in batcher.active_mut().iter() {
             runtimes
                 .entry(st.request.id)
                 .or_insert_with(|| SeqRuntime::new(n_layers));
         }
 
-        // ---- one global step over the active set ---------------------
+        // ---- one batched step over the active set --------------------
         let step_t0 = Instant::now();
         let states = batcher.active_mut();
-        // job inputs: (request id, this step's token or full prompt)
-        let jobs: Vec<(RequestId, Option<u32>, Vec<u32>)> = states
-            .iter()
-            .map(|st| (st.request.id,
-                       st.generated.last().copied(),
-                       st.request.prompt.clone()))
-            .collect();
-        // hand each job exclusive access to its runtime
-        let mut job_rts: Vec<(usize, RequestId, SeqRuntime)> = Vec::new();
-        for (i, (id, _, _)) in jobs.iter().enumerate() {
-            job_rts.push((i, *id, runtimes.remove(id).unwrap()));
+        let ids: Vec<RequestId> =
+            states.iter().map(|st| st.request.id).collect();
+        let feeds: Vec<u32> = states.iter().map(|st| st.next_feed()).collect();
+        // hand the batch exclusive access to its runtimes
+        let mut rts: Vec<SeqRuntime> =
+            ids.iter().map(|id| runtimes.remove(id).unwrap()).collect();
+
+        let outs = engine.step_batch(&mut rts, &feeds, cfg.batch_workers);
+
+        let step_dt = step_t0.elapsed();
+        let dt = step_dt.as_secs_f64();
+        for (id, rt) in ids.iter().zip(rts) {
+            runtimes.insert(*id, rt);
         }
-        let out_slot: Mutex<Vec<(usize, RequestId, SeqRuntime,
-                                 Result<u32>, f64)>> = Mutex::new(Vec::new());
-        let workers = cfg.workers.max(1).min(jobs.len().max(1));
-        let job_queue: Mutex<Vec<(usize, RequestId, SeqRuntime)>> =
-            Mutex::new(job_rts);
-
-        std::thread::scope(|scope| {
-            for _ in 0..workers {
-                scope.spawn(|| loop {
-                    let Some((i, id, mut rt)) =
-                        job_queue.lock().unwrap().pop()
-                    else {
-                        break;
-                    };
-                    let tok_t0 = Instant::now();
-                    let out = match jobs[i].1 {
-                        None => engine.prefill(&mut rt, &jobs[i].2),
-                        Some(tok) => engine.step(&mut rt, tok),
-                    };
-                    let dt = tok_t0.elapsed().as_secs_f64();
-                    out_slot.lock().unwrap().push((i, id, rt, out, dt));
-                });
-            }
-        });
-
-        let mut step_results = out_slot.into_inner().unwrap();
-        step_results.sort_by_key(|(i, ..)| *i);
-        for (i, id, rt, out, dt) in step_results {
-            runtimes.insert(id, rt);
-            let st = &mut batcher.active_mut()[i];
-            debug_assert_eq!(st.request.id, id);
+        let states = batcher.active_mut();
+        for (i, out) in outs.into_iter().enumerate() {
+            let st = &mut states[i];
+            debug_assert_eq!(st.request.id, ids[i]);
             match out {
                 Ok(token) => {
-                    st.generated.push(token);
-                    st.token_latencies.push(dt);
-                    metrics.tokens_generated += 1;
-                    metrics
-                        .token_latency
-                        .record(std::time::Duration::from_secs_f64(dt));
+                    if st.prefilling() {
+                        st.prompt_consumed += 1;
+                        if st.prefilling() {
+                            // interior prompt token: output discarded,
+                            // time accrues toward the first token
+                            st.pending_prefill += dt;
+                        } else {
+                            // last prompt token -> first generated token
+                            let lat = st.pending_prefill + dt;
+                            st.generated.push(token);
+                            st.token_latencies.push(lat);
+                            st.pending_prefill = 0.0;
+                            metrics.tokens_generated += 1;
+                            metrics.token_latency.record(
+                                std::time::Duration::from_secs_f64(lat));
+                        }
+                    } else {
+                        st.generated.push(token);
+                        st.token_latencies.push(dt);
+                        metrics.tokens_generated += 1;
+                        metrics.token_latency.record(step_dt);
+                    }
                 }
                 Err(e) => {
-                    eprintln!("[serve] request {id} aborted: {e:#}");
+                    eprintln!("[serve] request {} aborted: {e:#}", ids[i]);
                     st.request.max_new_tokens = st.generated.len();
                 }
             }
         }
         metrics.steps += 1;
-        metrics.step_latency.record(step_t0.elapsed());
+        metrics.step_latency.record(step_dt);
+        metrics.record_batch(ids.len());
         batcher.note_step();
 
         // ---- reap + release pages -------------------------------------
@@ -165,7 +179,8 @@ mod tests {
     }
 
     fn cfg(max_batch: usize, workers: usize) -> ServeConfig {
-        ServeConfig { max_batch, workers, pool_pages: 256, page_size: 8,
+        ServeConfig { max_batch, workers, batch_workers: workers,
+                      pool_pages: 256, page_size: 8,
                       ..ServeConfig::default() }
     }
 
@@ -218,6 +233,42 @@ mod tests {
         let report = serve(&engine, reqs, &cfg(2, 2)).unwrap();
         assert!(report.batcher.mean_occupancy() > 1.5,
                 "occupancy {}", report.batcher.mean_occupancy());
+    }
+
+    #[test]
+    fn batch_metrics_recorded() {
+        let engine = small_engine();
+        let reqs: Vec<_> = (0..4)
+            .map(|i| DecodeRequest::new(i, vec![1, 2], 3))
+            .collect();
+        let report = serve(&engine, reqs, &cfg(4, 2)).unwrap();
+        assert_eq!(report.metrics.batches, report.metrics.steps);
+        assert_eq!(report.metrics.batch_peak, 4);
+        assert!(report.metrics.mean_batch_occupancy() > 1.0);
+    }
+
+    #[test]
+    fn oversized_request_rejected_without_stalling_the_rest() {
+        let engine = small_engine();
+        // request 0 needs 150 rows/layer against a 16-row budget; the
+        // others fit — they must complete, the oversized one gets an
+        // empty result instead of deadlocking the loop
+        let reqs = vec![
+            DecodeRequest::new(0, vec![1; 50], 100),
+            DecodeRequest::new(1, vec![1, 2], 3),
+            DecodeRequest::new(2, vec![3, 4], 3),
+        ];
+        let cfg = ServeConfig { max_batch: 1, workers: 1, batch_workers: 1,
+                                pool_pages: 4, page_size: 8,
+                                ..ServeConfig::default() };
+        let report = serve(&engine, reqs, &cfg).unwrap();
+        let mut results = report.results;
+        results.sort_by_key(|r| r.id);
+        assert_eq!(results.len(), 3);
+        assert!(results[0].tokens.is_empty(), "oversized request served?");
+        assert_eq!(results[1].tokens.len(), 3);
+        assert_eq!(results[2].tokens.len(), 3);
+        assert_eq!(report.metrics.requests_completed, 2);
     }
 
     #[test]

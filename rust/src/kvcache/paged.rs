@@ -97,6 +97,17 @@ impl PagePool {
         &self.data[base..base + row]
     }
 
+    /// Contiguous view of the first `rows` `[latent | rope]` rows of a
+    /// page — the gather primitive of the batched decode path: callers
+    /// copy whole-page runs instead of doing a page lookup per row.
+    #[inline]
+    pub fn page_rows(&self, page: PageId, rows: usize) -> &[f32] {
+        debug_assert!(rows <= self.page_size);
+        let row = self.row_width();
+        let base = page as usize * self.page_size * row;
+        &self.data[base..base + rows * row]
+    }
+
     #[inline]
     fn row_slice_mut(&mut self, page: PageId, slot: usize) -> &mut [f32] {
         let row = self.row_width();
@@ -146,24 +157,42 @@ impl SequenceCache {
         Ok(())
     }
 
+    /// Visit this sequence's rows as page-contiguous runs, in order.
+    /// Each call to `visit` receives `(first_row_index, run)` where
+    /// `run` is `rows_in_page * [latent | rope]` values — the
+    /// page-granular gather the batched decode path is built on.
+    pub fn for_each_page_run<'a>(&self, pool: &'a PagePool,
+                                 mut visit: impl FnMut(usize, &'a [f32])) {
+        let ps = pool.page_size();
+        for (pi, &page) in self.pages.iter().enumerate() {
+            let start = pi * ps;
+            let rows = (self.len - start).min(ps);
+            visit(start, pool.page_rows(page, rows));
+        }
+    }
+
     /// Gather this sequence's rows into padded bucket buffers:
     /// `c_out` is `[bucket, d_latent]`, `kr_out` is `[bucket, d_rope]`
-    /// (both zero-padded past `len`).
+    /// (both zero-padded past `len`).  Walks whole-page runs
+    /// ([`Self::for_each_page_run`]) rather than doing a page lookup
+    /// per row.
     pub fn materialize(&self, pool: &PagePool, bucket: usize,
                        c_out: &mut [f32], kr_out: &mut [f32]) {
         let dl = pool.d_latent;
         let dr = pool.d_rope;
+        let rw = pool.row_width();
         assert!(self.len <= bucket, "sequence longer than bucket");
         assert_eq!(c_out.len(), bucket * dl);
         assert_eq!(kr_out.len(), bucket * dr);
         c_out[self.len * dl..].fill(0.0);
         kr_out[self.len * dr..].fill(0.0);
-        for i in 0..self.len {
-            let row = pool.row_slice(self.pages[i / pool.page_size()],
-                                     i % pool.page_size());
-            c_out[i * dl..(i + 1) * dl].copy_from_slice(&row[..dl]);
-            kr_out[i * dr..(i + 1) * dr].copy_from_slice(&row[dl..]);
-        }
+        self.for_each_page_run(pool, |start, run| {
+            for (r, row) in run.chunks_exact(rw).enumerate() {
+                let i = start + r;
+                c_out[i * dl..(i + 1) * dl].copy_from_slice(&row[..dl]);
+                kr_out[i * dr..(i + 1) * dr].copy_from_slice(&row[dl..]);
+            }
+        });
     }
 
     /// Read back one row (for write-back verification).
@@ -312,6 +341,28 @@ mod tests {
             assert_eq!(p.stats().allocated_pages, used);
             assert_eq!(p.stats().free_pages, 16 - used);
         });
+    }
+
+    #[test]
+    fn page_runs_cover_sequence_in_order() {
+        let mut p = pool(); // page_size 4, row width 6 + 2
+        let mut seq = SequenceCache::new();
+        for i in 0..10 {
+            seq.append(&mut p, &[i as f32; 6], &[-(i as f32); 2]).unwrap();
+        }
+        let mut seen = Vec::new();
+        seq.for_each_page_run(&p, |start, run| {
+            assert_eq!(run.len() % 8, 0, "partial rows in a run");
+            for (r, row) in run.chunks_exact(8).enumerate() {
+                seen.push((start + r, row[0], row[6]));
+            }
+        });
+        assert_eq!(seen.len(), 10);
+        for (i, &(idx, lat, rope)) in seen.iter().enumerate() {
+            assert_eq!(idx, i);
+            assert_eq!(lat, i as f32);
+            assert_eq!(rope, -(i as f32));
+        }
     }
 
     #[test]

@@ -15,7 +15,7 @@
 //! * final normalization `O ← O / (ℓ_N · S16)`.
 
 use super::bf16::{bf16_round, matmul_nn_bf16};
-use super::flash_base::{score_block, FlashConfig};
+use super::flash_base::{score_block_into, FlashConfig};
 use super::fp32::{exponent_of_max, rescale_add, rescale_row};
 use super::golden::row_limits;
 use super::Matrix;
@@ -23,19 +23,73 @@ use super::Matrix;
 const LN2: f32 = std::f32::consts::LN_2;
 
 /// Per-row running state of the AMLA recurrence.
+///
+/// `s16` is the scale folded into P on the row's most recent
+/// contributing block — the final normalization divides by `l * s16`,
+/// so it lives here (updated atomically with `n`/`c`) rather than in a
+/// shadow array that could drift from the rest of the state when a
+/// fully-masked trailing block skips a row.
 #[derive(Debug, Clone)]
 pub struct AmlaState {
     pub m: Vec<f32>,
     pub l: Vec<f32>,
     pub n: Vec<i32>,
     pub c: Vec<f32>,
+    pub s16: Vec<f32>,
     pub seen: Vec<bool>,
 }
 
 impl AmlaState {
     pub fn new(g: usize) -> Self {
         Self { m: vec![f32::NEG_INFINITY; g], l: vec![0.0; g],
-               n: vec![0; g], c: vec![1.0; g], seen: vec![false; g] }
+               n: vec![0; g], c: vec![1.0; g], s16: vec![1.0; g],
+               seen: vec![false; g] }
+    }
+}
+
+/// Reusable scratch for the block loop of [`amla_attention_with_scratch`]
+/// (and the Base recurrence): the probability block `p `, the `T = P·V`
+/// partial, and the masked score block.  One decode step makes
+/// `S2/block_kv` passes over these; preallocating them once per worker
+/// (instead of per attention call) removes every per-block heap
+/// allocation from the serving hot loop.
+#[derive(Debug, Default)]
+pub struct AmlaScratch {
+    /// `[G, block_kv]` probability block.
+    pub(crate) p: Vec<f32>,
+    /// `[G, Dv]` per-block `T = P·V` partial.
+    pub(crate) t: Vec<f32>,
+    /// `[G, block_kv]` masked score block.
+    pub(crate) s: Vec<f32>,
+}
+
+impl AmlaScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Preallocate for a known shape (callers on the serving path size
+    /// once for the largest bucket and reuse across steps).
+    pub fn with_shape(g: usize, block_kv: usize, dv: usize) -> Self {
+        let mut sc = Self::default();
+        sc.ensure(g, block_kv, dv);
+        sc
+    }
+
+    /// Grow (never shrink) to fit a `[g, block_kv] x [block_kv, dv]`
+    /// block shape.
+    pub(crate) fn ensure(&mut self, g: usize, block_kv: usize, dv: usize) {
+        let pb = g * block_kv;
+        if self.p.len() < pb {
+            self.p.resize(pb, 0.0);
+        }
+        if self.s.len() < pb {
+            self.s.resize(pb, 0.0);
+        }
+        let tb = g * dv;
+        if self.t.len() < tb {
+            self.t.resize(tb, 0.0);
+        }
     }
 }
 
@@ -59,6 +113,17 @@ pub fn amla_attention(q: &Matrix, k: &Matrix, v: &Matrix,
 
 pub fn amla_attention_stats(q: &Matrix, k: &Matrix, v: &Matrix,
                             cfg: &FlashConfig) -> (Matrix, AmlaStats) {
+    let mut scratch = AmlaScratch::new();
+    amla_attention_with_scratch(q, k, v, cfg, &mut scratch)
+}
+
+/// [`amla_attention_stats`] with caller-owned scratch buffers — the
+/// serving path's entry point (one [`AmlaScratch`] per worker thread,
+/// reused across every layer call and decode step).
+pub fn amla_attention_with_scratch(q: &Matrix, k: &Matrix, v: &Matrix,
+                                   cfg: &FlashConfig,
+                                   scratch: &mut AmlaScratch)
+                                   -> (Matrix, AmlaStats) {
     let (g, s2, dv) = (q.rows, k.rows, v.cols);
     assert_eq!(s2 % cfg.block_kv, 0, "S2 must be a multiple of block_kv");
     let n1 = if cfg.n1 == 0 { g } else { cfg.n1 };
@@ -68,19 +133,19 @@ pub fn amla_attention_stats(q: &Matrix, k: &Matrix, v: &Matrix,
     let mut o = Matrix::zeros(g, dv); // the "GM-resident" Õ accumulator
     let mut st = AmlaState::new(g);
     let mut stats = AmlaStats::default();
-    let mut p = vec![0f32; g * cfg.block_kv];
-    let mut t = vec![0f32; g * dv];
-    let mut s16_final = vec![1f32; g];
+    scratch.ensure(g, cfg.block_kv, dv);
+    let (p, t) = (&mut scratch.p, &mut scratch.t);
 
     for base in (0..s2).step_by(cfg.block_kv) {
         let bs = cfg.block_kv;
         stats.blocks += 1;
         // [C1] + mask
-        let s = score_block(q, k, base, bs, scale, &limits, cfg.mixed_bf16);
+        score_block_into(q, k, base, bs, scale, &limits, cfg.mixed_bf16,
+                         &mut scratch.s);
 
         // [V1]: online softmax + exponent/compensation bookkeeping
         for r in 0..g {
-            let row = &s.data[r * bs..(r + 1) * bs];
+            let row = &scratch.s[r * bs..(r + 1) * bs];
             let blk_max = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
             let m_new = st.m[r].max(blk_max);
             if m_new == f32::NEG_INFINITY {
@@ -97,6 +162,16 @@ pub fn amla_attention_stats(q: &Matrix, k: &Matrix, v: &Matrix,
                 let pv = if sv == f32::NEG_INFINITY { 0.0 } else { (sv - m_new).exp() };
                 p[r * bs + j] = pv;
                 rowsum += pv;
+            }
+            if st.seen[r] && rowsum == 0.0 {
+                // zero-mass block for an initialized row (fully masked
+                // tail, or all-underflow): m_new == st.m[r] here, so the
+                // rescale would be Δn = 0, eps = 0 — nothing but the
+                // ROUND_EPS tie-break drifting Õ.  Skip it entirely: the
+                // block is an exact no-op (P row is already zeroed) and
+                // the output becomes bit-independent of how many masked
+                // bucket-padding blocks follow valid_len.
+                continue;
             }
             st.l[r] = st.l[r] * alpha + rowsum;
 
@@ -123,16 +198,16 @@ pub fn amla_attention_stats(q: &Matrix, k: &Matrix, v: &Matrix,
             st.m[r] = m_new;
             st.n[r] = n_new;
             st.c[r] = c_new;
+            st.s16[r] = s16;
             st.seen[r] = true;
-            s16_final[r] = s16;
         }
 
         // [C2]: T = P V accumulated into O ("AtomicAdd<FP32> in GM")
         let vblk = &v.data[base * dv..(base + bs) * dv];
         if cfg.mixed_bf16 {
-            matmul_nn_bf16(&p[..g * bs], vblk, g, bs, dv, &mut t);
+            matmul_nn_bf16(&p[..g * bs], vblk, g, bs, dv, &mut t[..g * dv]);
         } else {
-            for x in t.iter_mut() {
+            for x in t[..g * dv].iter_mut() {
                 *x = 0.0;
             }
             for r in 0..g {
@@ -149,14 +224,21 @@ pub fn amla_attention_stats(q: &Matrix, k: &Matrix, v: &Matrix,
                 }
             }
         }
-        for (x, &tv) in o.data.iter_mut().zip(&t) {
+        for (x, &tv) in o.data.iter_mut().zip(&t[..g * dv]) {
             *x += tv;
         }
     }
 
-    // Last [V]: O <- O / (l_N * S16)  (Algorithm 2 line 20)
+    // Last [V]: O <- O / (l_N * S16)  (Algorithm 2 line 20).  The
+    // normalization reads the S16 stored in `st` — the same state the
+    // per-block updates maintain — so a trailing fully-masked block
+    // (which `continue`s every row) cannot leave the denominator out of
+    // sync with `st.n`/`st.c`.
     for r in 0..g {
-        let denom = st.l[r] * s16_final[r];
+        if !st.seen[r] {
+            continue; // fully-masked row: output stays zero
+        }
+        let denom = st.l[r] * st.s16[r];
         if denom > 0.0 {
             let inv = 1.0 / denom;
             for x in o.row_mut(r) {
@@ -247,6 +329,49 @@ mod tests {
             assert!(rel_frobenius_error(&a.data, &b.data) < 1e-5,
                     "seed={seed} nblk={nblk} scale={scale}");
         });
+    }
+
+    #[test]
+    fn prop_trailing_masked_blocks_are_noops() {
+        // valid_len-edge property: blocks past the valid prefix are fully
+        // masked and must be exact no-ops — the output (including the
+        // final normalization, which reads S16 from the stored state)
+        // must be bit-identical to a run over only the covering blocks.
+        run_prop("amla_masked_tail_noop", 24, |rng| {
+            let seed = rng.next_u64();
+            let valid = gen_usize(rng, 1, 129); // <= 2 of the 4 blocks
+            let (q, k, v) = inputs(seed, 4, 256, 32, 16, 1.0);
+            let cfg = FlashConfig { block_kv: 64, n1: 4, sq: 1,
+                                    valid_len: valid, mixed_bf16: true };
+            let full = amla_attention(&q, &k, &v, &cfg);
+            let s2p = valid.div_ceil(64) * 64;
+            let kp = Matrix::from_vec(s2p, 32, k.data[..s2p * 32].to_vec());
+            let vp = Matrix::from_vec(s2p, 16, v.data[..s2p * 16].to_vec());
+            let trunc = amla_attention(&q, &kp, &vp, &cfg);
+            for (i, (a, b)) in full.data.iter().zip(&trunc.data).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(),
+                           "seed={seed} valid={valid} elem={i}: {a} vs {b}");
+            }
+        });
+    }
+
+    #[test]
+    fn scratch_reuse_is_bit_identical() {
+        // a dirtied, over-sized scratch must not leak into later calls
+        let mut scratch = AmlaScratch::new();
+        let (q1, k1, v1) = inputs(5, 8, 256, 48, 32, 1.0);
+        let cfg1 = FlashConfig { block_kv: 64, n1: 8, sq: 1, valid_len: 256,
+                                 mixed_bf16: true };
+        let _ = amla_attention_with_scratch(&q1, &k1, &v1, &cfg1, &mut scratch);
+        let (q2, k2, v2) = inputs(6, 4, 128, 32, 16, 1.0);
+        let cfg2 = FlashConfig { block_kv: 64, n1: 4, sq: 1, valid_len: 100,
+                                 mixed_bf16: true };
+        let (a, _) = amla_attention_with_scratch(&q2, &k2, &v2, &cfg2,
+                                                 &mut scratch);
+        let b = amla_attention(&q2, &k2, &v2, &cfg2);
+        let bits = |m: &Matrix| m.data.iter().map(|x| x.to_bits())
+            .collect::<Vec<_>>();
+        assert_eq!(bits(&a), bits(&b));
     }
 
     #[test]

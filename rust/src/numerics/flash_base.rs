@@ -34,16 +34,19 @@ impl FlashConfig {
     }
 }
 
-/// Compute the masked score block `[G, bs]` starting at KV row `base`.
-pub(crate) fn score_block(q: &Matrix, k: &Matrix, base: usize, bs: usize,
-                          scale: f32, limits: &[usize],
-                          mixed_bf16: bool) -> Matrix {
+/// Compute the masked score block `[G, bs]` starting at KV row `base`
+/// into a caller-owned buffer (`out` may be longer; only the leading
+/// `g * bs` elements are written) — no allocation on the block hot loop.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn score_block_into(q: &Matrix, k: &Matrix, base: usize,
+                               bs: usize, scale: f32, limits: &[usize],
+                               mixed_bf16: bool, out: &mut [f32]) {
     let g = q.rows;
     let dk = q.cols;
-    let mut s = Matrix::zeros(g, bs);
+    let s = &mut out[..g * bs];
     if mixed_bf16 {
         matmul_nt_bf16(&q.data, &k.data[base * dk..(base + bs) * dk], g, bs,
-                       dk, &mut s.data);
+                       dk, s);
     } else {
         for i in 0..g {
             let a = q.row(i);
@@ -53,24 +56,33 @@ pub(crate) fn score_block(q: &Matrix, k: &Matrix, base: usize, bs: usize,
                 for p in 0..dk {
                     acc += a[p] * b[p];
                 }
-                s.data[i * bs + j] = acc;
+                s[i * bs + j] = acc;
             }
         }
     }
     for i in 0..g {
         let lim = limits[i];
         for j in 0..bs {
-            let e = &mut s.data[i * bs + j];
+            let e = &mut s[i * bs + j];
             *e = if base + j < lim { *e * scale } else { f32::NEG_INFINITY };
         }
     }
-    s
 }
 
 /// Algorithm 1 over the full KV range.  `q`: `[G, Dk]`, `k`: `[S2, Dk]`,
 /// `v`: `[S2, Dv]` with `S2 % block_kv == 0`.
 pub fn base_flash_attention(q: &Matrix, k: &Matrix, v: &Matrix,
                             cfg: &FlashConfig) -> Matrix {
+    let mut scratch = super::amla::AmlaScratch::new();
+    base_flash_attention_with_scratch(q, k, v, cfg, &mut scratch)
+}
+
+/// [`base_flash_attention`] with caller-owned scratch (shared
+/// [`super::amla::AmlaScratch`] layout: `p`, `t`, score block).
+pub fn base_flash_attention_with_scratch(q: &Matrix, k: &Matrix, v: &Matrix,
+                                         cfg: &FlashConfig,
+                                         scratch: &mut super::amla::AmlaScratch)
+                                         -> Matrix {
     let (g, s2, dv) = (q.rows, k.rows, v.cols);
     assert_eq!(s2 % cfg.block_kv, 0, "S2 must be a multiple of block_kv");
     let n1 = if cfg.n1 == 0 { g } else { cfg.n1 };
@@ -80,20 +92,26 @@ pub fn base_flash_attention(q: &Matrix, k: &Matrix, v: &Matrix,
     let mut o = Matrix::zeros(g, dv);
     let mut m = vec![f32::NEG_INFINITY; g];
     let mut l = vec![0f32; g];
-    let mut p_bf = vec![0f32; g * cfg.block_kv];
-    let mut t = vec![0f32; g * dv];
+    scratch.ensure(g, cfg.block_kv, dv);
+    let (p_bf, t) = (&mut scratch.p, &mut scratch.t);
 
     for base in (0..s2).step_by(cfg.block_kv) {
         let bs = cfg.block_kv;
         // [C1] + mask
-        let s = score_block(q, k, base, bs, scale, &limits, cfg.mixed_bf16);
+        score_block_into(q, k, base, bs, scale, &limits, cfg.mixed_bf16,
+                         &mut scratch.s);
         // [V1] online softmax
         for r in 0..g {
-            let row = &s.data[r * bs..(r + 1) * bs];
+            let row = &scratch.s[r * bs..(r + 1) * bs];
             let blk_max = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
             let m_new = m[r].max(blk_max);
             if m_new == f32::NEG_INFINITY {
-                continue; // row fully masked so far
+                // row fully masked so far: zero its P row explicitly —
+                // a reused scratch may hold values from a previous call
+                for x in &mut p_bf[r * bs..(r + 1) * bs] {
+                    *x = 0.0;
+                }
+                continue;
             }
             let alpha = if m[r].is_finite() { (m[r] - m_new).exp() } else { 0.0 };
             let mut rowsum = 0f32;
@@ -112,9 +130,9 @@ pub fn base_flash_attention(q: &Matrix, k: &Matrix, v: &Matrix,
         // [C2] T = P V, accumulate into O
         let vblk = &v.data[base * dv..(base + bs) * dv];
         if cfg.mixed_bf16 {
-            matmul_nn_bf16(&p_bf[..g * bs], vblk, g, bs, dv, &mut t);
+            matmul_nn_bf16(&p_bf[..g * bs], vblk, g, bs, dv, &mut t[..g * dv]);
         } else {
-            for x in t.iter_mut() {
+            for x in t[..g * dv].iter_mut() {
                 *x = 0.0;
             }
             for r in 0..g {
@@ -131,7 +149,7 @@ pub fn base_flash_attention(q: &Matrix, k: &Matrix, v: &Matrix,
                 }
             }
         }
-        for (x, &tv) in o.data.iter_mut().zip(&t) {
+        for (x, &tv) in o.data.iter_mut().zip(&t[..g * dv]) {
             *x += tv;
         }
     }

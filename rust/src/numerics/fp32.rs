@@ -18,6 +18,16 @@ pub const EXP_ONE: i32 = 1 << 23;
 /// Lower clamp for per-step exponent deltas (Algorithm 2 line 11).
 pub const DELTA_CLAMP: i32 = -30;
 
+/// Symmetric upper clamp.  `delta_n = n_i - n_{i-1}` is positive when the
+/// running max *rises*; an unclamped large Δn pushes the accumulator's
+/// exponent field past 254 and the integer add silently fabricates
+/// Inf/NaN bit patterns (the lemma pre-condition `E + n < 255` of
+/// [`lemma_applies`] is violated).  Values the clamp touches are rescaled
+/// toward zero anyway — post-rescale they are dominated by the new max's
+/// contribution — so the clamp is accuracy-neutral, exactly like the
+/// lower one.
+pub const DELTA_CLAMP_HI: i32 = 30;
+
 /// Tie-break epsilon folded into the compensation add (Algorithm 2 line 11).
 pub const ROUND_EPS: f32 = 1e-6;
 
@@ -37,7 +47,8 @@ pub fn lemma_applies(f: f32, n: i32) -> bool {
 /// `f * 2^n` via the integer exponent add (Eq. 8).
 ///
 /// Caller must ensure [`lemma_applies`]; in the kernels this is
-/// guaranteed by the `DELTA_CLAMP` and by guarding zero bit patterns.
+/// guaranteed by the `DELTA_CLAMP`/`DELTA_CLAMP_HI` clamps and by
+/// guarding zero bit patterns.
 #[inline]
 pub fn mul_pow2_by_add(f: f32, n: i32) -> f32 {
     f32::from_bits((f.to_bits() as i32).wrapping_add(n * EXP_ONE) as u32)
@@ -60,7 +71,7 @@ pub fn rescale_element(f: f32, add: i32) -> f32 {
 /// domain with the mantissa-midpoint estimate `M ~ 2^22`.
 #[inline]
 pub fn rescale_add(delta_n: i32, eps: f32) -> i32 {
-    let clamped = delta_n.max(DELTA_CLAMP);
+    let clamped = delta_n.clamp(DELTA_CLAMP, DELTA_CLAMP_HI);
     clamped * EXP_ONE + ((eps + ROUND_EPS) * EXP_ONE as f32).round() as i32
 }
 
@@ -134,6 +145,45 @@ mod tests {
     #[test]
     fn delta_clamp_applies() {
         assert_eq!(rescale_add(-100, 0.0), rescale_add(DELTA_CLAMP, 0.0));
+    }
+
+    #[test]
+    fn delta_clamp_upper_applies() {
+        assert_eq!(rescale_add(1000, 0.0), rescale_add(DELTA_CLAMP_HI, 0.0));
+        assert_eq!(rescale_add(i32::MAX, 0.0),
+                   rescale_add(DELTA_CLAMP_HI, 0.0));
+    }
+
+    #[test]
+    fn prop_rescale_add_keeps_lemma_valid() {
+        // Regression for the missing upper clamp: for any accumulator
+        // value that satisfies the lemma at the clamp bounds, applying
+        // the clamped rescale_add must keep the result finite — a raw
+        // (unclamped) large positive delta would overflow the exponent
+        // field into Inf/NaN bit patterns.
+        run_prop("rescale_add_lemma", 2000, |rng| {
+            // normal f32 with exponent field comfortably inside the
+            // lemma's validity range for |n| <= 30 (upper margin also
+            // absorbs the mantissa carry of the ROUND_EPS tie-break)
+            let e = gen_range(rng, 31, 220) as u32;
+            let mantissa = (rng.next_u64() & 0x7F_FFFF) as u32;
+            let sign = if rng.next_u64() & 1 == 1 { 0x8000_0000 } else { 0 };
+            let f = f32::from_bits(sign | (e << 23) | mantissa);
+            let delta = gen_range(rng, -1000, 1000) as i32;
+            let clamped = delta.clamp(DELTA_CLAMP, DELTA_CLAMP_HI);
+            assert!(lemma_applies(f, clamped),
+                    "clamped delta must stay in the lemma domain: \
+                     f={f} delta={delta}");
+            let add = rescale_add(delta, 0.0);
+            let out = rescale_element(f, add);
+            assert!(out.is_finite(),
+                    "clamped rescale overflowed: f={f} delta={delta}");
+            // and the pure power-of-two part is the exact multiply
+            let exact = mul_pow2_by_add(f, clamped);
+            assert_eq!(mul_pow2_by_add(f, clamped).to_bits(),
+                       (f * (clamped as f32).exp2()).to_bits(),
+                       "f={f} clamped={clamped} exact={exact}");
+        });
     }
 
     #[test]

@@ -1,8 +1,10 @@
-//! End-to-end: the full serving stack over real PJRT layer artifacts.
+//! End-to-end: the full serving stack over real PJRT layer artifacts,
+//! plus the batched-vs-serial exactness contract on the host substrate.
 //!
 //! Coordinator -> batcher -> engine -> PJRT decode-layer executable ->
 //! paged latent cache, with the HostLayerExecutor (bit-exact Rust
-//! numerics) as the cross-check substrate.
+//! numerics) as the cross-check substrate.  The batched tests need no
+//! artifacts and always run.
 
 use amla::config::{Algo, ServeConfig};
 use amla::coordinator::{serve, DecodeEngine, DecodeRequest,
@@ -93,6 +95,116 @@ fn pjrt_and_host_layer_steps_agree() {
     let err_c = amla::numerics::rel_frobenius_error(
         &c_p[row..row + dims.d_latent], &c_h[row..row + dims.d_latent]);
     assert!(err_c < 1e-3, "new latent row diverged: {err_c}");
+}
+
+// ---- batched-parallel exactness (host substrate; always runs) --------
+
+/// Mixed-bucket workload: prompt/generation lengths chosen so the batch
+/// spans both the 64 and 128 KV buckets at the same time.
+fn mixed_bucket_requests() -> Vec<DecodeRequest> {
+    vec![
+        DecodeRequest::new(0, vec![1, 2, 3], 6),
+        DecodeRequest::new(1, vec![9; 60], 12),      // crosses into 128
+        DecodeRequest::new(2, vec![4, 5], 4),
+        DecodeRequest::new(3, vec![7; 30], 8),
+        DecodeRequest::new(4, vec![11, 12, 13, 14], 10),
+        DecodeRequest::new(5, vec![2; 50], 20),      // crosses into 128
+        DecodeRequest::new(6, vec![3], 5),
+        DecodeRequest::new(7, vec![8; 10], 7),
+    ]
+}
+
+fn host_engine(algo: Algo) -> DecodeEngine<HostLayerExecutor> {
+    let dims = MlaDims { d_model: 64, n1: 2, d_head: 16, q_rank: 32,
+                         d_latent: 24, d_rope: 8, sq: 1 };
+    let exec = HostLayerExecutor::new(dims, 2, algo, 32, vec![64, 128], 7);
+    DecodeEngine::new(exec, 1024, 16)
+}
+
+fn serve_tokens(algo: Algo, max_batch: usize, batch_workers: usize)
+                -> Vec<(u64, Vec<u32>)> {
+    let engine = host_engine(algo);
+    let cfg = ServeConfig { max_batch, batch_workers, workers: batch_workers,
+                            pool_pages: 1024, page_size: 16,
+                            ..ServeConfig::default() };
+    let report = serve(&engine, mixed_bucket_requests(), &cfg)
+        .expect("serve");
+    assert_eq!(report.metrics.requests_completed, 8);
+    assert_eq!(engine.pool.lock().unwrap().stats().allocated_pages, 0,
+               "pages leaked");
+    let mut toks: Vec<(u64, Vec<u32>)> = report.results.into_iter()
+        .map(|r| (r.id, r.tokens))
+        .collect();
+    toks.sort_by_key(|(id, _)| *id);
+    toks
+}
+
+#[test]
+fn batched_parallel_bit_identical_to_serial() {
+    // The tentpole contract: a mixed-bucket batch served with the
+    // parallel worker pool must emit exactly the serial path's tokens,
+    // for both algorithms and across batch sizes.
+    for algo in [Algo::Amla, Algo::Base] {
+        let serial = serve_tokens(algo, 4, 1);
+        for workers in [1usize, 4] {
+            for max_batch in [4usize, 8] {
+                let got = serve_tokens(algo, max_batch, workers);
+                assert_eq!(got, serial,
+                           "algo {:?} max_batch {max_batch} \
+                            workers {workers} diverged from serial",
+                           algo);
+            }
+        }
+    }
+}
+
+#[test]
+fn engine_step_batch_matches_sequential_engine_steps() {
+    use amla::coordinator::engine::SeqRuntime;
+    // drive the same prompts through engine.step (one sequence at a
+    // time) and engine.step_batch (whole batch, 4 workers); every fed
+    // token's output must match bit-for-bit.
+    let prompts: Vec<Vec<u32>> = vec![
+        vec![5, 6, 7],
+        vec![1; 40],
+        vec![2, 3],
+        vec![9; 70], // 128 bucket
+    ];
+    let serial: Vec<Vec<u32>> = {
+        let eng = host_engine(Algo::Amla);
+        prompts.iter().map(|p| {
+            let mut rt = SeqRuntime::new(2);
+            let mut outs = Vec::new();
+            for &t in p {
+                outs.push(eng.step(&mut rt, t).unwrap());
+            }
+            outs
+        }).collect()
+    };
+    let eng = host_engine(Algo::Amla);
+    let mut rts: Vec<SeqRuntime> =
+        (0..prompts.len()).map(|_| SeqRuntime::new(2)).collect();
+    let longest = prompts.iter().map(Vec::len).max().unwrap();
+    let mut batched: Vec<Vec<u32>> = vec![Vec::new(); prompts.len()];
+    for pos in 0..longest {
+        let (mut idx, mut toks) = (Vec::new(), Vec::new());
+        for (i, p) in prompts.iter().enumerate() {
+            if pos < p.len() {
+                idx.push(i);
+                toks.push(p[pos]);
+            }
+        }
+        let mut sub: Vec<SeqRuntime> = Vec::new();
+        for &i in &idx {
+            sub.push(std::mem::replace(&mut rts[i], SeqRuntime::new(0)));
+        }
+        let outs = eng.step_batch(&mut sub, &toks, 4);
+        for ((&i, rt), o) in idx.iter().zip(sub).zip(outs) {
+            rts[i] = rt;
+            batched[i].push(o.unwrap());
+        }
+    }
+    assert_eq!(batched, serial);
 }
 
 #[test]
