@@ -54,8 +54,10 @@ fn main() -> anyhow::Result<()> {
     let total_tokens: usize =
         requests.iter().map(|r| r.max_new_tokens).sum();
     eprintln!("[serve_decode] {n_requests} requests, {total_tokens} tokens \
-               to generate, max batch {}, {} workers, {} batch workers",
-              cfg.max_batch, cfg.workers, cfg.batch_workers);
+               to generate, max batch {}, {} workers, {} batch workers, \
+               fuse-buckets {} (host-kernel route; PJRT still per-seq)",
+              cfg.max_batch, cfg.workers, cfg.batch_workers,
+              cfg.fuse_buckets);
 
     let report = serve(&engine, requests, &cfg)?;
 

@@ -19,10 +19,53 @@ fn dims() -> MlaDims {
               d_rope: 8, sq: 1 }
 }
 
-fn engine() -> DecodeEngine<HostLayerExecutor> {
+fn engine_fused(fuse: bool) -> DecodeEngine<HostLayerExecutor> {
     DecodeEngine::new(
-        HostLayerExecutor::new(dims(), 2, Algo::Amla, 64, vec![64, 128], 3),
+        HostLayerExecutor::new(dims(), 2, Algo::Amla, 64, vec![64, 128], 3)
+            .with_fuse(fuse),
         512, 16)
+}
+
+fn engine() -> DecodeEngine<HostLayerExecutor> {
+    engine_fused(true)
+}
+
+/// Measure steady-state `step_batch` throughput (steps/s) for a batch
+/// of `bsize` same-bucket sequences on `eng`.
+fn step_batch_steps_per_sec(eng: &DecodeEngine<HostLayerExecutor>,
+                            bsize: usize, workers: usize) -> f64 {
+    let mut rts: Vec<SeqRuntime> =
+        (0..bsize).map(|_| SeqRuntime::new(2)).collect();
+    let mut toks = vec![0u32; bsize];
+    // warm each sequence to a non-trivial context
+    for step in 0..48u32 {
+        let feeds: Vec<u32> =
+            toks.iter().map(|&t| t.wrapping_add(step)).collect();
+        let outs = eng.step_batch(&mut rts, &feeds, workers);
+        for (t, o) in toks.iter_mut().zip(outs) {
+            *t = o.unwrap();
+        }
+    }
+    let t0 = std::time::Instant::now();
+    let mut steps = 0u64;
+    while t0.elapsed().as_secs_f64() < 0.5 {
+        // keep context bounded: free + rebuild when near the bucket
+        if rts[0].caches[0].len() > 100 {
+            let mut pool = eng.pool.lock().unwrap();
+            for rt in &mut rts {
+                rt.free(&mut pool);
+            }
+            drop(pool);
+            rts = (0..bsize).map(|_| SeqRuntime::new(2)).collect();
+        }
+        let feeds = toks.clone();
+        let outs = eng.step_batch(&mut rts, &feeds, workers);
+        for (t, o) in toks.iter_mut().zip(outs) {
+            *t = o.unwrap();
+        }
+        steps += 1;
+    }
+    steps as f64 / t0.elapsed().as_secs_f64()
 }
 
 fn main() {
@@ -48,45 +91,46 @@ fn main() {
                  report.metrics.mean_batch_occupancy());
     }
 
-    // batched decode steps/sec: the tentpole number — the same
-    // 8-sequence batch stepped by the engine with 1 vs 4 workers.
+    // batched decode steps/sec: the PR-1 number — the same 8-sequence
+    // batch stepped by the (unfused) engine with 1 vs 4 workers.
     println!("\nbatched step_batch throughput (8 sequences, ctx ~48):");
     for workers in [1usize, 4] {
-        let eng = engine();
-        let mut rts: Vec<SeqRuntime> =
-            (0..8).map(|_| SeqRuntime::new(2)).collect();
-        let mut toks = vec![0u32; 8];
-        // warm each sequence to a non-trivial context
-        for step in 0..48u32 {
-            let feeds: Vec<u32> =
-                toks.iter().map(|&t| t.wrapping_add(step)).collect();
-            let outs = eng.step_batch(&mut rts, &feeds, workers);
-            for (t, o) in toks.iter_mut().zip(outs) {
-                *t = o.unwrap();
-            }
-        }
-        let t0 = std::time::Instant::now();
-        let mut steps = 0u64;
-        while t0.elapsed().as_secs_f64() < 0.5 {
-            // keep context bounded: free + rebuild when near the bucket
-            if rts[0].caches[0].len() > 100 {
-                let mut pool = eng.pool.lock().unwrap();
-                for rt in &mut rts {
-                    rt.free(&mut pool);
-                }
-                drop(pool);
-                rts = (0..8).map(|_| SeqRuntime::new(2)).collect();
-            }
-            let feeds = toks.clone();
-            let outs = eng.step_batch(&mut rts, &feeds, workers);
-            for (t, o) in toks.iter_mut().zip(outs) {
-                *t = o.unwrap();
-            }
-            steps += 1;
-        }
-        let sps = steps as f64 / t0.elapsed().as_secs_f64();
+        let eng = engine_fused(false);
+        let sps = step_batch_steps_per_sec(&eng, 8, workers);
         println!("  workers {workers}: {:.1} steps/s ({:.0} seq-tok/s)",
                  sps, sps * 8.0);
+    }
+
+    // fused vs threaded cross-sequence step_batch: the PR-2 tentpole —
+    // a same-bucket batch of B sequences, one fused kernel call vs the
+    // per-sequence worker pool (outputs are bit-identical; only the
+    // call shape differs)
+    println!("\nfused vs threaded step_batch (same-bucket batch):");
+    let mut baseline: Vec<(String, f64)> = Vec::new();
+    for bsize in [2usize, 8] {
+        for fuse in [false, true] {
+            let eng = engine_fused(fuse);
+            let sps = step_batch_steps_per_sec(&eng, bsize, 4);
+            let label = if fuse { "fused" } else { "threaded" };
+            println!("  B {bsize} {label:<8}: {:.1} steps/s \
+                      ({:.0} seq-tok/s)", sps, sps * bsize as f64);
+            baseline.push((format!("step_batch/b{bsize}_{label}"), sps));
+        }
+    }
+    // perf-trajectory baseline: BENCH_coordinator.json at the repo root
+    // (opt-in so routine bench runs do not dirty the tree)
+    if std::env::var("AMLA_BENCH_RECORD").is_ok() {
+        let mut json = String::from(
+            "{\n  \"bench\": \"coordinator\",\n  \
+             \"metric\": \"steps_per_sec\",\n  \"configs\": {\n");
+        for (i, (name, sps)) in baseline.iter().enumerate() {
+            let sep = if i + 1 < baseline.len() { "," } else { "" };
+            json.push_str(&format!("    \"{name}\": {sps:.2}{sep}\n"));
+        }
+        json.push_str("  }\n}\n");
+        std::fs::write("BENCH_coordinator.json", &json)
+            .expect("write BENCH_coordinator.json");
+        println!("\nrecorded BENCH_coordinator.json");
     }
 
     // single decode step cost (host substrate)

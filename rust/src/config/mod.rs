@@ -56,6 +56,11 @@ pub struct ServeConfig {
     /// ([`crate::coordinator::LayerExecutor::step_batch`]).  1 = the
     /// serial reference path.
     pub batch_workers: usize,
+    /// Fuse same-bucket sequences of a batched step into one
+    /// cross-sequence attention call (`--fuse-buckets on|off`; on by
+    /// default).  Bit-identical to the per-sequence path; singleton
+    /// buckets fall back to the threaded path either way.
+    pub fuse_buckets: bool,
     /// Per-request cap on generated tokens.
     pub max_new_tokens: usize,
 }
@@ -76,8 +81,18 @@ impl Default for ServeConfig {
             batch_workers: std::thread::available_parallelism()
                 .map(|n| n.get().min(8))
                 .unwrap_or(4),
+            fuse_buckets: true,
             max_new_tokens: 64,
         }
+    }
+}
+
+/// Parse a boolean-ish CLI value (`on|off|true|false|1|0|yes|no`).
+pub fn parse_bool(key: &str, v: &str) -> Result<bool> {
+    match v {
+        "1" | "true" | "on" | "yes" => Ok(true),
+        "0" | "false" | "off" | "no" => Ok(false),
+        other => bail!("--{key}: expected on|off, got `{other}`"),
     }
 }
 
@@ -106,6 +121,11 @@ impl ServeConfig {
         num_field!("workers", self.workers);
         num_field!("batch-workers", self.batch_workers);
         num_field!("max-new-tokens", self.max_new_tokens);
+        if let Some(v) = args.get("fuse-buckets") {
+            self.fuse_buckets = parse_bool("fuse-buckets", v)?;
+        } else if args.has_flag("fuse-buckets") {
+            self.fuse_buckets = true; // bare `--fuse-buckets`
+        }
         self.validate()
     }
 
@@ -212,6 +232,22 @@ mod tests {
         cfg.apply_args(&args("--batch-workers 4")).unwrap();
         assert_eq!(cfg.batch_workers, 4);
         assert!(cfg.apply_args(&args("--batch-workers 0")).is_err());
+    }
+
+    #[test]
+    fn fuse_buckets_flag_and_values() {
+        let mut cfg = ServeConfig::default();
+        assert!(cfg.fuse_buckets, "fusion defaults on");
+        cfg.apply_args(&args("--fuse-buckets off")).unwrap();
+        assert!(!cfg.fuse_buckets);
+        cfg.apply_args(&args("--fuse-buckets on")).unwrap();
+        assert!(cfg.fuse_buckets);
+        cfg.fuse_buckets = false;
+        cfg.apply_args(&args("--fuse-buckets")).unwrap(); // bare flag
+        assert!(cfg.fuse_buckets);
+        assert!(cfg.apply_args(&args("--fuse-buckets maybe")).is_err());
+        assert!(parse_bool("x", "1").unwrap());
+        assert!(!parse_bool("x", "no").unwrap());
     }
 
     #[test]

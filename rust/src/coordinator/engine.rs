@@ -13,17 +13,22 @@
 //! sinusoids) and sampling is argmax over a hashed readout — the point
 //! is the attention/cache machinery, not language modelling.
 
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Mutex;
 
 use anyhow::{anyhow, Context, Result};
 
 use crate::config::{Algo, ServeConfig};
-use crate::kvcache::{PagePool, SequenceCache};
-use crate::numerics::amla::{amla_attention_with_scratch, AmlaScratch};
-use crate::numerics::flash_base::{base_flash_attention_with_scratch,
-                                  FlashConfig};
-use crate::numerics::golden::row_limits;
-use crate::numerics::mla::{decode_step_with, MlaDims, MlaWeights};
+use crate::kvcache::{BucketArena, PagePool, SequenceCache};
+use crate::numerics::amla::{amla_attention_batched,
+                            amla_attention_with_scratch, AmlaScratch};
+use crate::numerics::flash_base::{base_flash_attention_batched,
+                                  base_flash_attention_with_scratch,
+                                  BatchedKv, FlashConfig};
+use crate::numerics::mla::{decode_step_finish, decode_step_prepare,
+                           decode_step_with, pack_k_rows, MlaDims,
+                           MlaWeights};
 use crate::numerics::Matrix;
 use crate::runtime::{Engine as PjrtEngine, TensorView};
 
@@ -78,6 +83,35 @@ pub trait LayerExecutor: Send + Sync {
                                j.bucket, j.valid_len))
             .collect()
     }
+
+    /// Cumulative fused-route counters `(groups, jobs)` since this
+    /// executor was built, or `None` when it has no fused path (the
+    /// default; [`PjrtLayerExecutor`] still serializes per sequence
+    /// pending `[B>1]` layer executables).
+    fn fusion_stats(&self) -> Option<(u64, u64)> {
+        None
+    }
+
+    /// Apply the serving config's fusion toggle
+    /// ([`ServeConfig::fuse_buckets`] / `--fuse-buckets`); returns
+    /// whether the executor has a fused route to toggle.  The scheduler
+    /// calls this once at the start of every `serve` run, so the CLI
+    /// flag governs any executor — executors without a fused path
+    /// ignore it.
+    fn set_fuse(&self, on: bool) -> bool {
+        let _ = on;
+        false
+    }
+}
+
+/// Reusable buffers of the fused cross-sequence route: the gather
+/// arena plus one attention scratch sized for the largest stacked
+/// group seen so far.  Locked for the duration of one fused
+/// `step_batch` call.
+#[derive(Debug, Default)]
+struct FusedBuffers {
+    arena: BucketArena,
+    scratch: AmlaScratch,
 }
 
 /// Test/bench executor backed by the in-process Rust numerics.
@@ -85,7 +119,21 @@ pub struct HostLayerExecutor {
     pub weights: Vec<MlaWeights>,
     pub algo: Algo,
     pub block_kv: usize,
+    /// Fuse same-bucket jobs of a batched step into one cross-sequence
+    /// kernel call (on by default; bit-identical either way — see the
+    /// module contract).  Singleton buckets always take the threaded
+    /// per-sequence path.  Atomic so [`LayerExecutor::set_fuse`] can
+    /// apply the serving config through a shared reference.
+    fuse_buckets: AtomicBool,
     buckets: Vec<usize>,
+    /// Pool of reusable fused-route buffers: one entry per
+    /// concurrently-fused bucket group at steady state, so parallel
+    /// groups neither serialize on a shared arena nor allocate per
+    /// step after warmup.
+    fused: Mutex<Vec<FusedBuffers>>,
+    /// Cumulative fused-call counters for [`LayerExecutor::fusion_stats`].
+    fused_groups: AtomicU64,
+    fused_jobs: AtomicU64,
 }
 
 impl HostLayerExecutor {
@@ -94,7 +142,45 @@ impl HostLayerExecutor {
         let weights = (0..n_layers)
             .map(|l| MlaWeights::init(dims, seed.wrapping_add(l as u64)))
             .collect();
-        Self { weights, algo, block_kv, buckets }
+        Self { weights, algo, block_kv, fuse_buckets: AtomicBool::new(true),
+               buckets,
+               fused: Mutex::new(Vec::new()),
+               fused_groups: AtomicU64::new(0),
+               fused_jobs: AtomicU64::new(0) }
+    }
+
+    /// Pop reusable fused buffers from the pool (grows on demand; the
+    /// pool converges to one entry per concurrently-fused group).
+    fn acquire_fused(&self) -> FusedBuffers {
+        self.fused.lock().unwrap().pop().unwrap_or_default()
+    }
+
+    fn release_fused(&self, bufs: FusedBuffers) {
+        self.fused.lock().unwrap().push(bufs);
+    }
+
+    /// Run one fused bucket group with pooled buffers, tagging the
+    /// results with the group's original batch positions.
+    fn run_fused_group(&self, layer: usize, idxs: Vec<usize>,
+                       mut members: Vec<&mut StepJob>)
+                       -> (Vec<usize>, Vec<Vec<f32>>) {
+        let mut bufs = self.acquire_fused();
+        let ys = self.step_group_fused(layer, &mut members, &mut bufs);
+        self.release_fused(bufs);
+        (idxs, ys)
+    }
+
+    /// Builder toggle for the fused cross-sequence route
+    /// ([`crate::config::ServeConfig::fuse_buckets`]); the serve loop
+    /// applies the config's value via [`LayerExecutor::set_fuse`].
+    pub fn with_fuse(self, on: bool) -> Self {
+        self.fuse_buckets.store(on, Ordering::Relaxed);
+        self
+    }
+
+    /// Whether the fused cross-sequence route is currently enabled.
+    pub fn fuse_enabled(&self) -> bool {
+        self.fuse_buckets.load(Ordering::Relaxed)
     }
 
     /// One layer forward on a job's buffers, reusing `scratch` for the
@@ -117,53 +203,79 @@ impl HostLayerExecutor {
                 match algo {
                     Algo::Amla =>
                         amla_attention_with_scratch(q, k, v, &cfg, scratch).0,
-                    Algo::Base => {
-                        // golden-equivalent safety: flash base
-                        let limits = row_limits(q.rows, d.n1, d.sq, valid);
-                        let _ = limits;
+                    Algo::Base =>
                         base_flash_attention_with_scratch(q, k, v, &cfg,
-                                                          scratch)
-                    }
+                                                          scratch),
                 }
             });
         job.c_buf = c.data;
         job.kr_buf = kr.data;
         y
     }
-}
 
-impl LayerExecutor for HostLayerExecutor {
-    fn dims(&self) -> MlaDims {
-        self.weights[0].dims
+    /// One fused layer step over a same-bucket group: every job's
+    /// projection phase runs first ([`decode_step_prepare`], writing
+    /// the new cache rows into the job buffers and the absorbed queries
+    /// / packed keys into the [`BucketArena`]), then **one**
+    /// cross-sequence attention call covers the whole group, then the
+    /// per-job output projections ([`decode_step_finish`]).
+    ///
+    /// Bit-identical to [`Self::step_job`] on each member: the phases
+    /// compose to exactly [`decode_step_with`], and the batched kernels
+    /// preserve per-row arithmetic across the stacked dimension.
+    fn step_group_fused(&self, layer: usize, group: &mut [&mut StepJob],
+                        bufs: &mut FusedBuffers) -> Vec<Vec<f32>> {
+        let d = self.dims();
+        let w = &self.weights[layer];
+        let b = group.len();
+        let bucket = group[0].bucket;
+        let g = d.sq * d.n1;
+        let dk = d.dk();
+        bufs.arena.reset(b, g, bucket, dk);
+        for (i, job) in group.iter_mut().enumerate() {
+            debug_assert_eq!(job.bucket, bucket, "mixed buckets in group");
+            let mut c = Matrix::from_vec(bucket, d.d_latent,
+                                         std::mem::take(&mut job.c_buf));
+            let mut kr = Matrix::from_vec(bucket, d.d_rope,
+                                          std::mem::take(&mut job.kr_buf));
+            let q_rows = decode_step_prepare(&job.x, &mut c, &mut kr,
+                                             job.valid_len, w);
+            bufs.arena.q_slab_mut(i).copy_from_slice(&q_rows.data);
+            pack_k_rows(&c, &kr, bufs.arena.k_slab_mut(i));
+            job.c_buf = c.data;
+            job.kr_buf = kr.data;
+        }
+        // split borrows: the arena is read (stacked q + key slabs) while
+        // the attention scratch is written — disjoint fields of `bufs`
+        let arena = &bufs.arena;
+        let scratch = &mut bufs.scratch;
+        let mut kvs: Vec<BatchedKv> = Vec::with_capacity(b);
+        for (i, job) in group.iter().enumerate() {
+            kvs.push(BatchedKv { k: arena.k_slab(i),
+                                 v: job.c_buf.as_slice(),
+                                 valid_len: job.valid_len });
+        }
+        let cfg = FlashConfig { block_kv: self.block_kv, n1: d.n1,
+                                sq: d.sq, valid_len: 0, mixed_bf16: true };
+        let o = match self.algo {
+            Algo::Amla => amla_attention_batched(arena.q_rows(b), g, &kvs,
+                                                 &cfg, scratch).0,
+            Algo::Base => base_flash_attention_batched(arena.q_rows(b), g,
+                                                       &kvs, &cfg, scratch),
+        };
+        drop(kvs);
+        let dl = d.d_latent;
+        (0..b)
+            .map(|i| decode_step_finish(&o.data[i * g * dl..(i + 1) * g * dl],
+                                        w))
+            .collect()
     }
 
-    fn n_layers(&self) -> usize {
-        self.weights.len()
-    }
-
-    fn buckets(&self) -> Vec<usize> {
-        self.buckets.clone()
-    }
-
-    fn step(&self, layer: usize, x: &[f32], c_cache: &mut [f32],
-            kr_cache: &mut [f32], bucket: usize, valid_len: usize)
-            -> Result<Vec<f32>> {
-        let mut job = StepJob { x: x.to_vec(), c_buf: c_cache.to_vec(),
-                                kr_buf: kr_cache.to_vec(), bucket,
-                                valid_len };
-        let mut scratch = AmlaScratch::new();
-        let y = self.step_job(layer, &mut job, &mut scratch);
-        c_cache.copy_from_slice(&job.c_buf);
-        kr_cache.copy_from_slice(&job.kr_buf);
-        Ok(y)
-    }
-
-    /// Batched layer step: jobs fan out over a scoped worker pool, one
-    /// reusable [`AmlaScratch`] per worker.  Sequences are independent,
-    /// so the result is bit-identical to the serial default regardless
-    /// of `workers`.
-    fn step_batch(&self, layer: usize, jobs: &mut [&mut StepJob],
-                  workers: usize) -> Vec<Result<Vec<f32>>> {
+    /// The PR-1 threaded per-sequence path: jobs fan out over a scoped
+    /// worker pool, one reusable [`AmlaScratch`] per worker.  Also the
+    /// fallback for singleton buckets when fusion is on.
+    fn step_batch_threaded(&self, layer: usize, jobs: &mut [&mut StepJob],
+                           workers: usize) -> Vec<Result<Vec<f32>>> {
         let n = jobs.len();
         if n == 0 {
             return Vec::new();
@@ -194,6 +306,148 @@ impl LayerExecutor for HostLayerExecutor {
             }
         });
         chunk_outs.into_iter().flatten().map(Ok).collect()
+    }
+}
+
+impl LayerExecutor for HostLayerExecutor {
+    fn dims(&self) -> MlaDims {
+        self.weights[0].dims
+    }
+
+    fn n_layers(&self) -> usize {
+        self.weights.len()
+    }
+
+    fn buckets(&self) -> Vec<usize> {
+        self.buckets.clone()
+    }
+
+    fn step(&self, layer: usize, x: &[f32], c_cache: &mut [f32],
+            kr_cache: &mut [f32], bucket: usize, valid_len: usize)
+            -> Result<Vec<f32>> {
+        let mut job = StepJob { x: x.to_vec(), c_buf: c_cache.to_vec(),
+                                kr_buf: kr_cache.to_vec(), bucket,
+                                valid_len };
+        let mut scratch = AmlaScratch::new();
+        let y = self.step_job(layer, &mut job, &mut scratch);
+        c_cache.copy_from_slice(&job.c_buf);
+        kr_cache.copy_from_slice(&job.kr_buf);
+        Ok(y)
+    }
+
+    /// Batched layer step.  With `fuse_buckets` on, jobs sharing a KV
+    /// bucket are stacked into one cross-sequence fused kernel call
+    /// ([`Self::step_group_fused`]); singleton buckets — and the whole
+    /// batch when fusion is off or no bucket repeats — fall back to the
+    /// threaded per-sequence path.  Sequences are independent, so every
+    /// route is bit-identical to the serial default regardless of
+    /// `workers` or grouping.
+    fn step_batch(&self, layer: usize, jobs: &mut [&mut StepJob],
+                  workers: usize) -> Vec<Result<Vec<f32>>> {
+        let n = jobs.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        if !self.fuse_enabled() {
+            return self.step_batch_threaded(layer, jobs, workers);
+        }
+        // group job positions by bucket; only groups of >= 2 fuse
+        let mut groups: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+        for (i, job) in jobs.iter().enumerate() {
+            groups.entry(job.bucket).or_default().push(i);
+        }
+        if groups.values().all(|idxs| idxs.len() < 2) {
+            return self.step_batch_threaded(layer, jobs, workers);
+        }
+        let mut slots: Vec<Option<&mut StepJob>> =
+            jobs.iter_mut().map(|j| Some(&mut **j)).collect();
+        // every slot is overwritten below (fused groups + singles
+        // partition the positions); the placeholder only types the vec
+        let mut out: Vec<Result<Vec<f32>>> =
+            (0..n).map(|_| Err(anyhow!("job not routed"))).collect();
+        let mut singles: Vec<usize> = Vec::new();
+        let mut grouped: Vec<(Vec<usize>, Vec<&mut StepJob>)> = Vec::new();
+        for (_, idxs) in groups {
+            if idxs.len() < 2 {
+                singles.push(idxs[0]);
+                continue;
+            }
+            let members: Vec<&mut StepJob> =
+                idxs.iter().map(|&i| slots[i].take().unwrap()).collect();
+            grouped.push((idxs, members));
+        }
+        let mut singles_members: Vec<&mut StepJob> =
+            singles.iter().map(|&i| slots[i].take().unwrap()).collect();
+        // Fused bucket groups run concurrently — at most `workers`
+        // scoped threads, with the singleton batch overlapping in the
+        // same scope (groups and singles are disjoint, so this is as
+        // exact as the per-sequence pool).  `workers == 1` keeps the
+        // whole route serial, matching the knob's documented contract.
+        let mut group_results: Vec<(Vec<usize>, Vec<Vec<f32>>)>;
+        let single_results: Vec<Result<Vec<f32>>>;
+        if workers <= 1 {
+            group_results = grouped.into_iter()
+                .map(|(idxs, members)| {
+                    self.run_fused_group(layer, idxs, members)
+                })
+                .collect();
+            single_results = self.step_batch_threaded(layer,
+                                                      &mut singles_members,
+                                                      workers);
+        } else {
+            let chunk = grouped.len().div_ceil(workers);
+            group_results = Vec::new();
+            let gr = &mut group_results;
+            single_results = std::thread::scope(|scope| {
+                let singles_handle = if singles_members.is_empty() {
+                    None
+                } else {
+                    let sm = &mut singles_members;
+                    Some(scope.spawn(move || {
+                        self.step_batch_threaded(layer, sm, workers)
+                    }))
+                };
+                let mut handles = Vec::new();
+                while !grouped.is_empty() {
+                    let take = chunk.min(grouped.len());
+                    let part: Vec<_> = grouped.drain(..take).collect();
+                    handles.push(scope.spawn(move || {
+                        part.into_iter()
+                            .map(|(idxs, members)| {
+                                self.run_fused_group(layer, idxs, members)
+                            })
+                            .collect::<Vec<_>>()
+                    }));
+                }
+                for h in handles {
+                    gr.extend(h.join().expect("fused group panicked"));
+                }
+                singles_handle
+                    .map(|h| h.join().expect("singles worker panicked"))
+                    .unwrap_or_default()
+            });
+        }
+        for (idxs, ys) in group_results {
+            self.fused_groups.fetch_add(1, Ordering::Relaxed);
+            self.fused_jobs.fetch_add(idxs.len() as u64, Ordering::Relaxed);
+            for (i, y) in idxs.into_iter().zip(ys) {
+                out[i] = Ok(y);
+            }
+        }
+        for (&i, y) in singles.iter().zip(single_results) {
+            out[i] = y;
+        }
+        out
+    }
+
+    fn fusion_stats(&self) -> Option<(u64, u64)> {
+        Some((self.fused_groups.load(Ordering::Relaxed),
+              self.fused_jobs.load(Ordering::Relaxed)))
+    }
+
+    fn set_fuse(&self, on: bool) -> bool {
+        self.fuse_buckets.store(on, Ordering::Relaxed);
+        true
     }
 }
 
@@ -389,6 +643,17 @@ impl LayerExecutor for PjrtLayerExecutor {
     }
 }
 
+/// One sequence's outcome of a traced batched step: the sampled token
+/// plus the final residual stream it was read out from (the input to
+/// `DecodeEngine::readout`) — the hook the golden-trace regression
+/// suite uses to pin output bits, not just tokens, across kernel
+/// rewrites.
+#[derive(Debug, Clone)]
+pub struct StepTrace {
+    pub token: u32,
+    pub x: Vec<f32>,
+}
+
 /// Per-sequence runtime state: one latent cache per layer.
 pub struct SeqRuntime {
     pub caches: Vec<SequenceCache>,
@@ -493,13 +758,27 @@ impl<E: LayerExecutor> DecodeEngine<E> {
     /// in any order: sequences share no mutable state.
     pub fn step_batch(&self, rts: &mut [SeqRuntime], tokens: &[u32],
                       workers: usize) -> Vec<Result<u32>> {
+        self.step_batch_traced(rts, tokens, workers)
+            .into_iter()
+            .map(|r| r.map(|t| t.token))
+            .collect()
+    }
+
+    /// [`Self::step_batch`] with per-sequence trace output: the sampled
+    /// token plus the final residual stream it was read out from.  The
+    /// golden-trace regression suite pins the residual bits across
+    /// kernel rewrites; the serving path uses the token-only wrapper.
+    pub fn step_batch_traced(&self, rts: &mut [SeqRuntime], tokens: &[u32],
+                             workers: usize) -> Vec<Result<StepTrace>> {
         let d = self.executor.dims();
         assert_eq!(d.sq, 1, "serving engine drives sq=1 artifacts");
         assert_eq!(rts.len(), tokens.len());
         let n = rts.len();
         let n_layers = self.executor.n_layers();
 
-        let mut out: Vec<Result<u32>> = (0..n).map(|_| Ok(0)).collect();
+        let mut out: Vec<Result<StepTrace>> = (0..n)
+            .map(|_| Ok(StepTrace { token: 0, x: Vec::new() }))
+            .collect();
         let mut jobs: Vec<Option<StepJob>> = Vec::with_capacity(n);
         let mut ctxs = vec![0usize; n];
         for i in 0..n {
@@ -580,8 +859,9 @@ impl<E: LayerExecutor> DecodeEngine<E> {
         }
 
         for i in 0..n {
-            if let Some(job) = &jobs[i] {
-                out[i] = Ok(self.readout(&job.x));
+            if let Some(job) = jobs[i].take() {
+                out[i] = Ok(StepTrace { token: self.readout(&job.x),
+                                        x: job.x });
             }
         }
         out
@@ -675,35 +955,68 @@ mod tests {
             let eng = host_engine(Algo::Amla);
             let mut rts: Vec<SeqRuntime> =
                 (0..prompts.len()).map(|_| SeqRuntime::new(2)).collect();
-            // drive the prompts via step_batch, one token per step
-            let longest = prompts.iter().map(Vec::len).max().unwrap();
-            let mut last: Vec<u32> = prompts.iter().map(|p| p[0]).collect();
-            for pos in 0..longest {
-                let (mut idx, mut toks) = (Vec::new(), Vec::new());
-                for (i, p) in prompts.iter().enumerate() {
-                    if pos < p.len() {
-                        idx.push(i);
-                        toks.push(p[pos]);
-                    }
-                }
-                // step only the sequences whose prompt still has tokens
-                let mut sub: Vec<SeqRuntime> = Vec::new();
-                for &i in &idx {
-                    sub.push(std::mem::replace(&mut rts[i],
-                                               SeqRuntime::new(0)));
-                }
-                let outs = eng.step_batch(&mut sub, &toks, workers);
-                for ((&i, rt), o) in idx.iter().zip(sub).zip(outs) {
-                    rts[i] = rt;
-                    last[i] = o.unwrap();
-                }
-            }
+            // drive the prompts via the shared staggered-batch driver
+            let toks = crate::testing::drive_prompts(&eng, &mut rts,
+                                                     &prompts, workers);
+            let last: Vec<u32> =
+                toks.iter().map(|t| *t.last().unwrap()).collect();
             let final_toks = eng.step_batch(&mut rts, &last, workers);
             let final_toks: Vec<u32> =
                 final_toks.into_iter().map(|r| r.unwrap()).collect();
             assert_eq!(final_toks, serial,
                        "workers={workers} diverged from serial");
         }
+    }
+
+    #[test]
+    fn fused_route_bit_identical_and_counted() {
+        // same engine, fuse on vs off: token streams must be identical
+        // bit-for-bit, and the fused counters must move only when the
+        // fused route actually ran
+        let dims = MlaDims { d_model: 64, n1: 2, d_head: 16, q_rank: 32,
+                             d_latent: 24, d_rope: 8, sq: 1 };
+        let prompts: Vec<Vec<u32>> = vec![
+            vec![1, 2, 3],
+            vec![4, 5],
+            vec![9; 70], // 128 bucket: a singleton next to a fused group
+            vec![7, 8, 9, 10],
+        ];
+        let run = |fuse: bool| {
+            let exec = HostLayerExecutor::new(dims, 2, Algo::Amla, 32,
+                                              vec![64, 128], 7)
+                .with_fuse(fuse);
+            let eng = DecodeEngine::new(exec, 128, 16);
+            let mut rts: Vec<SeqRuntime> =
+                (0..prompts.len()).map(|_| SeqRuntime::new(2)).collect();
+            let toks =
+                crate::testing::drive_prompts(&eng, &mut rts, &prompts, 2);
+            let last: Vec<u32> =
+                toks.iter().map(|t| *t.last().unwrap()).collect();
+            let finals = eng.step_batch(&mut rts, &last, 2);
+            let finals: Vec<u32> =
+                finals.into_iter().map(|r| r.unwrap()).collect();
+            (finals, eng.executor.fusion_stats().unwrap())
+        };
+        let (tokens_on, stats_on) = run(true);
+        let (tokens_off, stats_off) = run(false);
+        assert_eq!(tokens_on, tokens_off,
+                   "fused route diverged from per-sequence route");
+        assert!(stats_on.0 > 0, "fused route never taken");
+        assert!(stats_on.1 >= 2 * stats_on.0,
+                "fused groups must hold >= 2 jobs each");
+        assert_eq!(stats_off, (0, 0), "fusion off must not fuse");
+    }
+
+    #[test]
+    fn traced_step_exposes_readout_input() {
+        let eng = host_engine(Algo::Amla);
+        let mut rt = SeqRuntime::new(2);
+        let traces = eng.step_batch_traced(std::slice::from_mut(&mut rt),
+                                           &[42], 1);
+        let trace = traces.into_iter().next().unwrap().unwrap();
+        assert_eq!(trace.x.len(), 64, "residual stream is [d_model]");
+        assert_eq!(trace.token, eng.readout(&trace.x),
+                   "token must be the readout of the traced residual");
     }
 
     #[test]

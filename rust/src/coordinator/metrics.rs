@@ -73,6 +73,11 @@ pub struct Metrics {
     pub batches: u64,
     /// Largest batch observed.
     pub batch_peak: usize,
+    /// Fused cross-sequence kernel calls (same-bucket groups of >= 2
+    /// sequences) executed during the run.
+    pub fused_groups: u64,
+    /// Sequence-layer jobs that went through a fused call.
+    pub fused_jobs: u64,
 }
 
 impl Metrics {
@@ -123,7 +128,11 @@ impl Metrics {
              # TYPE amla_batch_peak gauge\n\
              amla_batch_peak {}\n\
              # TYPE amla_batch_steps_per_s gauge\n\
-             amla_batch_steps_per_s {:.2}\n",
+             amla_batch_steps_per_s {:.2}\n\
+             # TYPE amla_fused_groups counter\n\
+             amla_fused_groups {}\n\
+             # TYPE amla_fused_jobs counter\n\
+             amla_fused_jobs {}\n",
             self.requests_completed, self.tokens_generated, self.steps,
             self.step_latency.quantile_us(0.5),
             self.step_latency.quantile_us(0.99),
@@ -131,7 +140,9 @@ impl Metrics {
             self.tokens_per_sec(),
             self.mean_batch_occupancy(),
             self.batch_peak,
-            self.steps_per_sec())
+            self.steps_per_sec(),
+            self.fused_groups,
+            self.fused_jobs)
     }
 }
 
@@ -161,6 +172,16 @@ mod tests {
         assert!(text.contains("amla_tokens_generated 120"));
         assert!(text.contains("amla_throughput_tokens_per_s 60.00"));
         assert!(text.contains("amla_batch_occupancy_mean"));
+    }
+
+    #[test]
+    fn fused_counters_rendered() {
+        let mut m = Metrics::default();
+        m.fused_groups = 3;
+        m.fused_jobs = 9;
+        let text = m.render();
+        assert!(text.contains("amla_fused_groups 3"));
+        assert!(text.contains("amla_fused_jobs 9"));
     }
 
     #[test]

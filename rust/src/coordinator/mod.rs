@@ -42,6 +42,32 @@
 //! [`crate::config::ServeConfig::workers`] field still sizes the PJRT
 //! client pool.
 //!
+//! ## The fused-path bit-identity contract
+//!
+//! With [`crate::config::ServeConfig::fuse_buckets`] on
+//! (`--fuse-buckets`, the default), [`engine::HostLayerExecutor`]
+//! groups a step's jobs by KV bucket and runs each group of ≥ 2 through
+//! **one** cross-sequence kernel call
+//! ([`crate::numerics::amla::amla_attention_batched`] /
+//! [`crate::numerics::flash_base::base_flash_attention_batched`]): the
+//! absorbed queries stack into a `[B·G, Dk]` block, the packed keys
+//! gather into a reusable [`crate::kvcache::BucketArena`], and a single
+//! score/rescale/accumulate block loop covers the whole group.
+//! Singleton buckets fall back to the threaded per-sequence path.
+//!
+//! Fusion must be **bit-identical** to the per-sequence path, not just
+//! close: per-row `AmlaState` semantics (Δn clamps, `ROUND_EPS`
+//! tie-breaks, zero-mass no-ops) are preserved across the stacked
+//! dimension, and the score / `P·V` matmuls run per-sequence slabs with
+//! the exact per-sequence operand shapes.  Three layers of tests pin
+//! the contract: kernel-level property suites (fused ≡ N× per-sequence,
+//! bit-for-bit, 100+ randomized mask/precision cases), the end-to-end
+//! `(fuse, workers, max_batch)` serving matrix, and the golden-trace
+//! file under `rust/tests/golden/` that freezes tokens *and* final
+//! residual bits across PRs.  A change that breaks any of these is a
+//! numerics regression, never an acceptable "parallel rounding
+//! difference".
+//!
 //! Python never appears here — the executables were AOT-compiled by
 //! `make artifacts`.  The stack is generic over [`engine::LayerExecutor`]
 //! so integration tests can run the identical coordinator against the
@@ -58,7 +84,7 @@ pub mod workload;
 
 pub use batcher::{Batcher, BatcherStats};
 pub use engine::{DecodeEngine, HostLayerExecutor, LayerExecutor,
-                 PjrtLayerExecutor, StepJob};
+                 PjrtLayerExecutor, StepJob, StepTrace};
 pub use metrics::Metrics;
 pub use request::{DecodeRequest, DecodeResult, RequestId, RequestState};
 pub use scheduler::{serve, ServeReport};

@@ -66,6 +66,11 @@ pub fn serve<E: LayerExecutor>(engine: &DecodeEngine<E>,
     let mut results = Vec::new();
     let mut runtimes: HashMap<RequestId, SeqRuntime> = HashMap::new();
     let t0 = Instant::now();
+    // the config's fusion toggle governs the run (no-op on executors
+    // without a fused route, e.g. PJRT pending [B>1] executables) ...
+    engine.executor.set_fuse(cfg.fuse_buckets);
+    // ... and executor-level fused counters are cumulative: report deltas
+    let fused0 = engine.executor.fusion_stats();
 
     while !batcher.idle() {
         if batcher.admit() == 0 && batcher.active_len() == 0 {
@@ -160,6 +165,12 @@ pub fn serve<E: LayerExecutor>(engine: &DecodeEngine<E>,
     }
 
     metrics.wall_time = t0.elapsed();
+    if let (Some((g0, j0)), Some((g1, j1))) =
+        (fused0, engine.executor.fusion_stats())
+    {
+        metrics.fused_groups = g1.saturating_sub(g0);
+        metrics.fused_jobs = j1.saturating_sub(j0);
+    }
     Ok(ServeReport { results, metrics, batcher: batcher.stats() })
 }
 
@@ -170,12 +181,17 @@ mod tests {
     use crate::coordinator::engine::HostLayerExecutor;
     use crate::numerics::mla::MlaDims;
 
-    fn small_engine() -> DecodeEngine<HostLayerExecutor> {
+    fn small_engine_fused(fuse: bool) -> DecodeEngine<HostLayerExecutor> {
         let dims = MlaDims { d_model: 48, n1: 2, d_head: 12, q_rank: 24,
                              d_latent: 16, d_rope: 8, sq: 1 };
         let exec = HostLayerExecutor::new(dims, 2, Algo::Amla, 32,
-                                          vec![32, 64], 11);
+                                          vec![32, 64], 11)
+            .with_fuse(fuse);
         DecodeEngine::new(exec, 256, 8)
+    }
+
+    fn small_engine() -> DecodeEngine<HostLayerExecutor> {
+        small_engine_fused(true)
     }
 
     fn cfg(max_batch: usize, workers: usize) -> ServeConfig {
@@ -222,6 +238,32 @@ mod tests {
         };
         assert_eq!(seq_tokens, par_tokens,
                    "batching/parallelism must not change outputs");
+    }
+
+    #[test]
+    fn fused_serving_matches_unfused_and_records_metrics() {
+        let reqs = |n: u64| -> Vec<DecodeRequest> {
+            (0..n).map(|i| DecodeRequest::new(i, vec![3, 1 + i as u32], 5))
+                .collect()
+        };
+        let run = |fuse: bool| {
+            // the engine starts with the opposite setting to prove the
+            // ServeConfig toggle (not the builder) governs the run
+            let engine = small_engine_fused(!fuse);
+            let mut c = cfg(4, 2);
+            c.fuse_buckets = fuse;
+            let report = serve(&engine, reqs(4), &c).unwrap();
+            let mut r = report.results;
+            r.sort_by_key(|x| x.id);
+            (r.into_iter().map(|x| x.tokens).collect::<Vec<_>>(),
+             report.metrics.fused_groups, report.metrics.fused_jobs)
+        };
+        let (tok_on, groups_on, jobs_on) = run(true);
+        let (tok_off, groups_off, _) = run(false);
+        assert_eq!(tok_on, tok_off, "fusion changed served tokens");
+        assert!(groups_on > 0, "no fused groups recorded");
+        assert!(jobs_on >= 2 * groups_on);
+        assert_eq!(groups_off, 0, "--fuse-buckets off must disable fusion");
     }
 
     #[test]

@@ -11,4 +11,4 @@
 
 pub mod paged;
 
-pub use paged::{PageId, PagePool, PoolStats, SequenceCache};
+pub use paged::{BucketArena, PageId, PagePool, PoolStats, SequenceCache};

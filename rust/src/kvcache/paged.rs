@@ -231,6 +231,67 @@ impl Default for SequenceCache {
     }
 }
 
+/// Reusable gather arena for the fused cross-sequence attention path:
+/// one bucket group's stacked query rows (`[B·G, Dk]`) plus per-
+/// sequence packed key slabs (`B × [bucket, Dk]`, each the
+/// `[latent | rope]` interleave the kernels consume — the same row
+/// layout the pool stores, so a slab fills with straight row copies of
+/// the gathered cache).
+///
+/// Buffers grow monotonically and are reused across layers and decode
+/// steps, so after warmup the fused hot loop performs no heap
+/// allocation — the same discipline as
+/// [`crate::numerics::amla::AmlaScratch`].
+#[derive(Debug, Default)]
+pub struct BucketArena {
+    q: Vec<f32>,
+    k: Vec<f32>,
+    q_slab: usize,
+    k_slab: usize,
+}
+
+impl BucketArena {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Size for a group of `b` sequences with `[g, dk]` query rows and
+    /// `[bucket, dk]` key slabs.  Grows (never shrinks) the backing
+    /// buffers.
+    pub fn reset(&mut self, b: usize, g: usize, bucket: usize, dk: usize) {
+        self.q_slab = g * dk;
+        self.k_slab = bucket * dk;
+        let qn = b * self.q_slab;
+        if self.q.len() < qn {
+            self.q.resize(qn, 0.0);
+        }
+        let kn = b * self.k_slab;
+        if self.k.len() < kn {
+            self.k.resize(kn, 0.0);
+        }
+    }
+
+    /// The stacked `[b*g, dk]` query block (leading prefix of the
+    /// backing buffer).
+    pub fn q_rows(&self, b: usize) -> &[f32] {
+        &self.q[..b * self.q_slab]
+    }
+
+    /// Sequence `i`'s `[g, dk]` query slab, for the gather phase.
+    pub fn q_slab_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.q[i * self.q_slab..(i + 1) * self.q_slab]
+    }
+
+    /// Sequence `i`'s packed `[bucket, dk]` key slab.
+    pub fn k_slab(&self, i: usize) -> &[f32] {
+        &self.k[i * self.k_slab..(i + 1) * self.k_slab]
+    }
+
+    pub fn k_slab_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.k[i * self.k_slab..(i + 1) * self.k_slab]
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -363,6 +424,26 @@ mod tests {
             assert_eq!(lat, i as f32);
             assert_eq!(rope, -(i as f32));
         }
+    }
+
+    #[test]
+    fn bucket_arena_slabs_are_disjoint_and_reusable() {
+        let mut a = BucketArena::new();
+        a.reset(2, 3, 8, 4);
+        a.q_slab_mut(0).fill(1.0);
+        a.q_slab_mut(1).fill(2.0);
+        a.k_slab_mut(0).fill(3.0);
+        a.k_slab_mut(1).fill(4.0);
+        assert_eq!(a.q_rows(2).len(), 2 * 3 * 4);
+        assert!(a.q_rows(2)[..12].iter().all(|&x| x == 1.0));
+        assert!(a.q_rows(2)[12..].iter().all(|&x| x == 2.0));
+        assert!(a.k_slab(0).iter().all(|&x| x == 3.0));
+        assert!(a.k_slab(1).iter().all(|&x| x == 4.0));
+        // shrink-reuse: smaller group reuses the same allocation,
+        // slab indexing stays consistent
+        a.reset(1, 2, 4, 4);
+        assert_eq!(a.q_slab_mut(0).len(), 8);
+        assert_eq!(a.k_slab(0).len(), 16);
     }
 
     #[test]

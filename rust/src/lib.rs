@@ -33,5 +33,6 @@ pub mod report;
 pub mod roofline;
 pub mod runtime;
 pub mod simulator;
+pub mod testing;
 pub mod tiling;
 pub mod util;

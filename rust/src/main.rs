@@ -59,7 +59,8 @@ amla — AMLA reproduction coordinator
 
 USAGE:
   amla serve      [--requests N] [--algo amla|base] [--max-batch B]
-                  [--workers W] [--max-new-tokens T] [--artifacts DIR]
+                  [--workers W] [--batch-workers W] [--fuse-buckets on|off]
+                  [--max-new-tokens T] [--artifacts DIR]
   amla reproduce  [--exp roofline|accuracy|perf|ablation|pipeline|all]
                   [--samples N] [--context S2]
   amla simulate   [--sq 1|2] [--sk N] [--algo amla|base] [--batch B]

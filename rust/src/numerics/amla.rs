@@ -15,7 +15,8 @@
 //! * final normalization `O ← O / (ℓ_N · S16)`.
 
 use super::bf16::{bf16_round, matmul_nn_bf16};
-use super::flash_base::{score_block_into, FlashConfig};
+use super::flash_base::{score_block_into, BatchedKv, FlashConfig,
+                        ScoreBlock};
 use super::fp32::{exponent_of_max, rescale_add, rescale_row};
 use super::golden::row_limits;
 use super::Matrix;
@@ -140,8 +141,9 @@ pub fn amla_attention_with_scratch(q: &Matrix, k: &Matrix, v: &Matrix,
         let bs = cfg.block_kv;
         stats.blocks += 1;
         // [C1] + mask
-        score_block_into(q, k, base, bs, scale, &limits, cfg.mixed_bf16,
-                         &mut scratch.s);
+        let blk = ScoreBlock { base, bs, scale, limits: &limits,
+                               mixed_bf16: cfg.mixed_bf16 };
+        score_block_into(&q.data, g, q.cols, &k.data, &blk, &mut scratch.s);
 
         // [V1]: online softmax + exponent/compensation bookkeeping
         for r in 0..g {
@@ -235,6 +237,169 @@ pub fn amla_attention_with_scratch(q: &Matrix, k: &Matrix, v: &Matrix,
     // (which `continue`s every row) cannot leave the denominator out of
     // sync with `st.n`/`st.c`.
     for r in 0..g {
+        if !st.seen[r] {
+            continue; // fully-masked row: output stays zero
+        }
+        let denom = st.l[r] * st.s16[r];
+        if denom > 0.0 {
+            let inv = 1.0 / denom;
+            for x in o.row_mut(r) {
+                *x *= inv;
+            }
+        }
+    }
+    (o, stats)
+}
+
+/// Algorithm 2 fused across sequences: `seqs.len()` same-bucket
+/// sequences stacked into one `[B·g, Dk]` query block (`q`, row-major,
+/// sequence-major) and driven through a **single** score/rescale/
+/// accumulate block loop — the cross-sequence kernel shape the paper's
+/// Preload-Pipeline analysis wants (feed the Cube units `[B·G, Dk]`
+/// GEMMs instead of `B` separate `[G, Dk]` calls).
+///
+/// ## Bit-identity contract
+///
+/// The fused kernel is bit-identical to `B` separate
+/// [`amla_attention_with_scratch`] calls: per-row [`AmlaState`]
+/// semantics are preserved across the stacked dimension (same Δn
+/// clamps, same `ROUND_EPS` tie-breaks, same zero-mass-block no-ops),
+/// the score and `P·V` matmuls run one per-sequence slab at a time with
+/// the exact per-sequence operand shapes, and rows never interact
+/// across sequences.  The property suite (`prop_batched_equals_per_
+/// sequence`) and the golden-trace tests pin this bit-for-bit.
+///
+/// Output rows of sequence `i` are `i*g..(i+1)*g`.  `cfg.valid_len` is
+/// ignored; each [`BatchedKv::valid_len`] masks its own sequence.
+/// `stats.blocks` counts KV blocks once per block loop iteration (not
+/// per sequence); `stats.rescale_adds` sums over all stacked rows.
+pub fn amla_attention_batched(q: &[f32], g: usize, seqs: &[BatchedKv],
+                              cfg: &FlashConfig,
+                              scratch: &mut AmlaScratch)
+                              -> (Matrix, AmlaStats) {
+    let b = seqs.len();
+    assert!(b > 0, "empty fused batch");
+    let rows = b * g;
+    assert_eq!(q.len() % rows, 0, "stacked q is not [b*g, dk]");
+    let dk = q.len() / rows;
+    let s2 = seqs[0].k.len() / dk;
+    assert_eq!(s2 % cfg.block_kv, 0, "S2 must be a multiple of block_kv");
+    let dv = seqs[0].v.len() / s2;
+    let n1 = if cfg.n1 == 0 { g } else { cfg.n1 };
+    let scale = 1.0 / (dk as f32).sqrt();
+    let mut limits = Vec::with_capacity(rows);
+    for kv in seqs {
+        assert_eq!(kv.k.len(), s2 * dk, "bucket mismatch in fused batch");
+        assert_eq!(kv.v.len(), s2 * dv, "bucket mismatch in fused batch");
+        limits.extend(row_limits(g, n1, cfg.sq, kv.valid_len));
+    }
+
+    let mut o = Matrix::zeros(rows, dv); // stacked "GM-resident" Õ
+    let mut st = AmlaState::new(rows);
+    let mut stats = AmlaStats::default();
+    scratch.ensure(rows, cfg.block_kv, dv);
+    let (p, t) = (&mut scratch.p, &mut scratch.t);
+
+    for base in (0..s2).step_by(cfg.block_kv) {
+        let bs = cfg.block_kv;
+        stats.blocks += 1;
+        // [C1] + mask: one stacked [b*g, bs] score block, one slab per
+        // sequence (each scored against its own K rows)
+        for (i, kv) in seqs.iter().enumerate() {
+            let blk = ScoreBlock { base, bs, scale,
+                                   limits: &limits[i * g..(i + 1) * g],
+                                   mixed_bf16: cfg.mixed_bf16 };
+            score_block_into(&q[i * g * dk..(i + 1) * g * dk], g, dk, kv.k,
+                             &blk,
+                             &mut scratch.s[i * g * bs..(i + 1) * g * bs]);
+        }
+
+        // [V1]: online softmax + exponent/compensation bookkeeping over
+        // the stacked rows — the body is the per-sequence recurrence
+        // verbatim, so every row's arithmetic is unchanged
+        for r in 0..rows {
+            let row = &scratch.s[r * bs..(r + 1) * bs];
+            let blk_max = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+            let m_new = st.m[r].max(blk_max);
+            if m_new == f32::NEG_INFINITY {
+                for x in &mut p[r * bs..(r + 1) * bs] {
+                    *x = 0.0;
+                }
+                continue;
+            }
+            let n_new = exponent_of_max(m_new);
+            let alpha =
+                if st.m[r].is_finite() { (st.m[r] - m_new).exp() } else { 0.0 };
+            let mut rowsum = 0f32;
+            for (j, &sv) in row.iter().enumerate() {
+                let pv = if sv == f32::NEG_INFINITY { 0.0 } else { (sv - m_new).exp() };
+                p[r * bs + j] = pv;
+                rowsum += pv;
+            }
+            if st.seen[r] && rowsum == 0.0 {
+                // zero-mass block for an initialized row: exact no-op
+                // (see the per-sequence kernel for the derivation)
+                continue;
+            }
+            st.l[r] = st.l[r] * alpha + rowsum;
+
+            let s32 = (LN2 * (n_new as f32 + m_new / LN2)).exp();
+            let (s16, c_new) = if cfg.mixed_bf16 {
+                let s16 = bf16_round(s32);
+                (s16, s16 / s32)
+            } else {
+                (s32, 1.0f32)
+            };
+
+            if st.seen[r] {
+                let eps = 1.5 * (c_new / st.c[r] - 1.0);
+                let add = rescale_add(n_new - st.n[r], eps);
+                rescale_row(o.row_mut(r), add);
+                stats.rescale_adds += 1;
+            }
+            for x in &mut p[r * bs..(r + 1) * bs] {
+                *x *= s16;
+            }
+            st.m[r] = m_new;
+            st.n[r] = n_new;
+            st.c[r] = c_new;
+            st.s16[r] = s16;
+            st.seen[r] = true;
+        }
+
+        // [C2]: per-sequence T = P V slabs, accumulated into O
+        for (i, kv) in seqs.iter().enumerate() {
+            let vblk = &kv.v[base * dv..(base + bs) * dv];
+            let pslab = &p[i * g * bs..(i + 1) * g * bs];
+            let tslab = &mut t[i * g * dv..(i + 1) * g * dv];
+            if cfg.mixed_bf16 {
+                matmul_nn_bf16(pslab, vblk, g, bs, dv, tslab);
+            } else {
+                for x in tslab.iter_mut() {
+                    *x = 0.0;
+                }
+                for r in 0..g {
+                    for j in 0..bs {
+                        let pv = pslab[r * bs + j];
+                        if pv == 0.0 {
+                            continue;
+                        }
+                        let vrow = &vblk[j * dv..(j + 1) * dv];
+                        let orow = &mut tslab[r * dv..(r + 1) * dv];
+                        for c in 0..dv {
+                            orow[c] += pv * vrow[c];
+                        }
+                    }
+                }
+            }
+        }
+        for (x, &tv) in o.data.iter_mut().zip(&t[..rows * dv]) {
+            *x += tv;
+        }
+    }
+
+    // Last [V]: O <- O / (l_N * S16), per stacked row
+    for r in 0..rows {
         if !st.seen[r] {
             continue; // fully-masked row: output stays zero
         }
@@ -372,6 +537,63 @@ mod tests {
         let bits = |m: &Matrix| m.data.iter().map(|x| x.to_bits())
             .collect::<Vec<_>>();
         assert_eq!(bits(&a), bits(&b));
+    }
+
+    #[test]
+    fn prop_batched_equals_per_sequence() {
+        // Tentpole pin: the fused cross-sequence kernel must be
+        // bit-identical to N separate per-sequence calls — across
+        // valid-len edges at block boundaries, zero-mass blocks,
+        // fully-masked rows/sequences, and both precisions.  The
+        // per-sequence reference reuses one scratch across sequences
+        // and hands the dirtied scratch to the fused call, so scratch
+        // reuse is pinned at the same time.
+        run_prop("amla_batched_eq_seq", 120, |rng| {
+            let case = crate::testing::gen_attn_case(rng);
+            let mut scratch = AmlaScratch::new();
+            let mut expect: Vec<u32> = Vec::new();
+            for i in 0..case.b {
+                let (q, k, v) = (case.seq_q(i), case.seq_k(i), case.seq_v(i));
+                let cfg = case.cfg(case.valid_lens[i]);
+                let (o, _) =
+                    amla_attention_with_scratch(&q, &k, &v, &cfg, &mut scratch);
+                expect.extend(o.data.iter().map(|x| x.to_bits()));
+            }
+            let kvs = case.kvs();
+            let (got, stats) = amla_attention_batched(
+                &case.q, case.g, &kvs, &case.cfg(0), &mut scratch);
+            assert_eq!(stats.blocks, case.s2 / case.block_kv);
+            let got_bits: Vec<u32> =
+                got.data.iter().map(|x| x.to_bits()).collect();
+            assert_eq!(got_bits, expect, "{}", case.describe());
+        });
+    }
+
+    #[test]
+    fn batched_fully_masked_sequence_is_zero_and_isolated() {
+        // a valid_len = 0 sequence in the middle of a fused batch must
+        // produce all-zero output rows and leave its neighbours'
+        // arithmetic untouched
+        let (q1, k1, v1) = inputs(21, 4, 128, 32, 16, 1.0);
+        let (q2, k2, v2) = inputs(22, 4, 128, 32, 16, 1.0);
+        let mut q = q1.data.clone();
+        q.extend_from_slice(&q2.data);
+        let kvs = vec![
+            BatchedKv { k: &k1.data, v: &v1.data, valid_len: 0 },
+            BatchedKv { k: &k2.data, v: &v2.data, valid_len: 100 },
+        ];
+        let cfg = FlashConfig { block_kv: 64, n1: 4, sq: 1, valid_len: 0,
+                                mixed_bf16: true };
+        let mut scratch = AmlaScratch::new();
+        let (o, _) = amla_attention_batched(&q, 4, &kvs, &cfg, &mut scratch);
+        assert!(o.data[..4 * 16].iter().all(|&x| x == 0.0),
+                "masked sequence leaked mass");
+        let solo = amla_attention(&q2, &k2, &v2,
+                                  &FlashConfig { valid_len: 100, ..cfg });
+        let got: Vec<u32> =
+            o.data[4 * 16..].iter().map(|x| x.to_bits()).collect();
+        let want: Vec<u32> = solo.data.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(got, want);
     }
 
     #[test]

@@ -34,24 +34,38 @@ impl FlashConfig {
     }
 }
 
-/// Compute the masked score block `[G, bs]` starting at KV row `base`
-/// into a caller-owned buffer (`out` may be longer; only the leading
-/// `g * bs` elements are written) — no allocation on the block hot loop.
-#[allow(clippy::too_many_arguments)]
-pub(crate) fn score_block_into(q: &Matrix, k: &Matrix, base: usize,
-                               bs: usize, scale: f32, limits: &[usize],
-                               mixed_bf16: bool, out: &mut [f32]) {
-    let g = q.rows;
-    let dk = q.cols;
+/// Geometry and masking of one score-block computation (`[C1]` + mask):
+/// KV rows `base..base+bs` scored against every query row, scaled, and
+/// masked by the per-row causal limits.
+pub(crate) struct ScoreBlock<'a> {
+    /// First KV row of the block.
+    pub base: usize,
+    /// KV rows in the block (`block_kv`).
+    pub bs: usize,
+    /// `1/sqrt(Dk)` softmax scale.
+    pub scale: f32,
+    /// Per-query-row attendable KV limits ([`row_limits`]).
+    pub limits: &'a [usize],
+    /// BF16 operands + FP32 accumulation (Cube-core contract).
+    pub mixed_bf16: bool,
+}
+
+/// Compute one masked score block `[g, bs]` into a caller-owned buffer
+/// (`out` may be longer; only the leading `g * bs` elements are
+/// written) — no allocation on the block hot loop.  `q` is `[g, dk]`
+/// row-major, `k` the full `[S2, dk]` key rows; the fused batched path
+/// calls this once per sequence slab of its stacked score block.
+pub(crate) fn score_block_into(q: &[f32], g: usize, dk: usize, k: &[f32],
+                               blk: &ScoreBlock, out: &mut [f32]) {
+    let (base, bs) = (blk.base, blk.bs);
     let s = &mut out[..g * bs];
-    if mixed_bf16 {
-        matmul_nt_bf16(&q.data, &k.data[base * dk..(base + bs) * dk], g, bs,
-                       dk, s);
+    if blk.mixed_bf16 {
+        matmul_nt_bf16(q, &k[base * dk..(base + bs) * dk], g, bs, dk, s);
     } else {
         for i in 0..g {
-            let a = q.row(i);
+            let a = &q[i * dk..(i + 1) * dk];
             for j in 0..bs {
-                let b = &k.data[(base + j) * dk..(base + j + 1) * dk];
+                let b = &k[(base + j) * dk..(base + j + 1) * dk];
                 let mut acc = 0f32;
                 for p in 0..dk {
                     acc += a[p] * b[p];
@@ -61,12 +75,27 @@ pub(crate) fn score_block_into(q: &Matrix, k: &Matrix, base: usize,
         }
     }
     for i in 0..g {
-        let lim = limits[i];
+        let lim = blk.limits[i];
         for j in 0..bs {
             let e = &mut s[i * bs + j];
-            *e = if base + j < lim { *e * scale } else { f32::NEG_INFINITY };
+            *e = if base + j < lim { *e * blk.scale } else { f32::NEG_INFINITY };
         }
     }
+}
+
+/// One sequence's KV operands inside a fused cross-sequence attention
+/// call: bucket-padded key/value rows plus the sequence's valid prefix.
+/// All sequences of one call share the bucket length and the
+/// [`FlashConfig`] (whose `valid_len` field is ignored in favor of the
+/// per-sequence value here).
+#[derive(Debug, Clone, Copy)]
+pub struct BatchedKv<'a> {
+    /// `[S2, Dk]` key rows.
+    pub k: &'a [f32],
+    /// `[S2, Dv]` value rows.
+    pub v: &'a [f32],
+    /// Valid KV rows for this sequence (bucket padding is masked beyond).
+    pub valid_len: usize,
 }
 
 /// Algorithm 1 over the full KV range.  `q`: `[G, Dk]`, `k`: `[S2, Dk]`,
@@ -98,8 +127,9 @@ pub fn base_flash_attention_with_scratch(q: &Matrix, k: &Matrix, v: &Matrix,
     for base in (0..s2).step_by(cfg.block_kv) {
         let bs = cfg.block_kv;
         // [C1] + mask
-        score_block_into(q, k, base, bs, scale, &limits, cfg.mixed_bf16,
-                         &mut scratch.s);
+        let blk = ScoreBlock { base, bs, scale, limits: &limits,
+                               mixed_bf16: cfg.mixed_bf16 };
+        score_block_into(&q.data, g, q.cols, &k.data, &blk, &mut scratch.s);
         // [V1] online softmax
         for r in 0..g {
             let row = &scratch.s[r * bs..(r + 1) * bs];
@@ -164,6 +194,124 @@ pub fn base_flash_attention_with_scratch(q: &Matrix, k: &Matrix, v: &Matrix,
     o
 }
 
+/// Cross-sequence fused Algorithm 1: `seqs.len()` same-bucket sequences
+/// stacked into one `[B·g, Dk]` query block (`q`, row-major, sequence-
+/// major) and driven through a single block loop — the Base twin of
+/// [`super::amla::amla_attention_batched`], used by the fused serving
+/// route when `algo = base`.
+///
+/// Bit-identical to `B` separate [`base_flash_attention_with_scratch`]
+/// calls: every per-row operation (score dot product, online-softmax
+/// bookkeeping, `P·V` slab matmul, final normalization) executes the
+/// same f32 op sequence on the same values as the per-sequence path —
+/// rows never interact across the stacked dimension.  Output rows of
+/// sequence `i` are `i*g..(i+1)*g`.  `cfg.valid_len` is ignored; each
+/// [`BatchedKv::valid_len`] masks its own sequence.
+pub fn base_flash_attention_batched(q: &[f32], g: usize,
+                                    seqs: &[BatchedKv], cfg: &FlashConfig,
+                                    scratch: &mut super::amla::AmlaScratch)
+                                    -> Matrix {
+    let b = seqs.len();
+    assert!(b > 0, "empty fused batch");
+    let rows = b * g;
+    assert_eq!(q.len() % rows, 0, "stacked q is not [b*g, dk]");
+    let dk = q.len() / rows;
+    let s2 = seqs[0].k.len() / dk;
+    assert_eq!(s2 % cfg.block_kv, 0, "S2 must be a multiple of block_kv");
+    let dv = seqs[0].v.len() / s2;
+    let n1 = if cfg.n1 == 0 { g } else { cfg.n1 };
+    let scale = 1.0 / (dk as f32).sqrt();
+    let mut limits = Vec::with_capacity(rows);
+    for kv in seqs {
+        assert_eq!(kv.k.len(), s2 * dk, "bucket mismatch in fused batch");
+        assert_eq!(kv.v.len(), s2 * dv, "bucket mismatch in fused batch");
+        limits.extend(row_limits(g, n1, cfg.sq, kv.valid_len));
+    }
+
+    let mut o = Matrix::zeros(rows, dv);
+    let mut m = vec![f32::NEG_INFINITY; rows];
+    let mut l = vec![0f32; rows];
+    scratch.ensure(rows, cfg.block_kv, dv);
+    let (p_bf, t) = (&mut scratch.p, &mut scratch.t);
+
+    for base in (0..s2).step_by(cfg.block_kv) {
+        let bs = cfg.block_kv;
+        // [C1] + mask: one stacked [b*g, bs] score block, one slab per
+        // sequence (each scored against its own K rows)
+        for (i, kv) in seqs.iter().enumerate() {
+            let blk = ScoreBlock { base, bs, scale,
+                                   limits: &limits[i * g..(i + 1) * g],
+                                   mixed_bf16: cfg.mixed_bf16 };
+            score_block_into(&q[i * g * dk..(i + 1) * g * dk], g, dk, kv.k,
+                             &blk,
+                             &mut scratch.s[i * g * bs..(i + 1) * g * bs]);
+        }
+        // [V1] online softmax over the stacked rows
+        for r in 0..rows {
+            let row = &scratch.s[r * bs..(r + 1) * bs];
+            let blk_max = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+            let m_new = m[r].max(blk_max);
+            if m_new == f32::NEG_INFINITY {
+                for x in &mut p_bf[r * bs..(r + 1) * bs] {
+                    *x = 0.0;
+                }
+                continue;
+            }
+            let alpha = if m[r].is_finite() { (m[r] - m_new).exp() } else { 0.0 };
+            let mut rowsum = 0f32;
+            for (j, &sv) in row.iter().enumerate() {
+                let p = if sv == f32::NEG_INFINITY { 0.0 } else { (sv - m_new).exp() };
+                p_bf[r * bs + j] = p;
+                rowsum += p;
+            }
+            l[r] = l[r] * alpha + rowsum;
+            // [V2] rescale of O (the stage AMLA eliminates)
+            for x in o.row_mut(r) {
+                *x *= alpha;
+            }
+            m[r] = m_new;
+        }
+        // [C2] per-sequence T = P V slabs, accumulated into O
+        for (i, kv) in seqs.iter().enumerate() {
+            let vblk = &kv.v[base * dv..(base + bs) * dv];
+            let pslab = &p_bf[i * g * bs..(i + 1) * g * bs];
+            let tslab = &mut t[i * g * dv..(i + 1) * g * dv];
+            if cfg.mixed_bf16 {
+                matmul_nn_bf16(pslab, vblk, g, bs, dv, tslab);
+            } else {
+                for x in tslab.iter_mut() {
+                    *x = 0.0;
+                }
+                for r in 0..g {
+                    for j in 0..bs {
+                        let p = pslab[r * bs + j];
+                        if p == 0.0 {
+                            continue;
+                        }
+                        let vrow = &vblk[j * dv..(j + 1) * dv];
+                        let orow = &mut tslab[r * dv..(r + 1) * dv];
+                        for c in 0..dv {
+                            orow[c] += p * vrow[c];
+                        }
+                    }
+                }
+            }
+        }
+        for (x, &tv) in o.data.iter_mut().zip(&t[..rows * dv]) {
+            *x += tv;
+        }
+    }
+    for r in 0..rows {
+        if l[r] > 0.0 {
+            let inv = 1.0 / l[r];
+            for x in o.row_mut(r) {
+                *x *= inv;
+            }
+        }
+    }
+    o
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -208,6 +356,32 @@ mod tests {
         let v100 = Matrix::from_vec(100, 16, v.data[..100 * 16].to_vec());
         let gold = golden_full(&q, &k100, &v100);
         assert!(rel_frobenius_error(&out.data, &gold.data) < 1e-5);
+    }
+
+    #[test]
+    fn prop_batched_equals_per_sequence() {
+        // Base twin of the AMLA fused-kernel pin: the cross-sequence
+        // Algorithm 1 must be bit-identical to N per-sequence calls,
+        // with the same shared-scratch reuse pattern as serving.
+        use crate::util::prop::run_prop;
+        run_prop("base_batched_eq_seq", 100, |rng| {
+            let case = crate::testing::gen_attn_case(rng);
+            let mut scratch = crate::numerics::amla::AmlaScratch::new();
+            let mut expect: Vec<u32> = Vec::new();
+            for i in 0..case.b {
+                let (q, k, v) = (case.seq_q(i), case.seq_k(i), case.seq_v(i));
+                let cfg = case.cfg(case.valid_lens[i]);
+                let o = base_flash_attention_with_scratch(&q, &k, &v, &cfg,
+                                                          &mut scratch);
+                expect.extend(o.data.iter().map(|x| x.to_bits()));
+            }
+            let kvs = case.kvs();
+            let got = base_flash_attention_batched(&case.q, case.g, &kvs,
+                                                   &case.cfg(0), &mut scratch);
+            let got_bits: Vec<u32> =
+                got.data.iter().map(|x| x.to_bits()).collect();
+            assert_eq!(got_bits, expect, "{}", case.describe());
+        });
     }
 
     #[test]

@@ -155,6 +155,86 @@ mod tests {
     }
 
     #[test]
+    fn clamp_boundaries_exact_on_both_sides() {
+        // Δn at clamp ± 1 on both ends: the increment must be exactly
+        // clamp(Δn)·2²³ plus the ROUND_EPS tie-break residue, so one
+        // step inside the clamp is still exact and one step outside
+        // saturates.
+        let eps_bias = (ROUND_EPS * EXP_ONE as f32).round() as i32;
+        for d in [DELTA_CLAMP - 1, DELTA_CLAMP, DELTA_CLAMP + 1,
+                  DELTA_CLAMP_HI - 1, DELTA_CLAMP_HI, DELTA_CLAMP_HI + 1] {
+            let want = d.clamp(DELTA_CLAMP, DELTA_CLAMP_HI) * EXP_ONE
+                + eps_bias;
+            assert_eq!(rescale_add(d, 0.0), want, "delta {d}");
+        }
+        assert_ne!(rescale_add(DELTA_CLAMP + 1, 0.0),
+                   rescale_add(DELTA_CLAMP, 0.0));
+        assert_ne!(rescale_add(DELTA_CLAMP_HI - 1, 0.0),
+                   rescale_add(DELTA_CLAMP_HI, 0.0));
+    }
+
+    #[test]
+    fn lemma_domain_edges_at_clamped_deltas() {
+        // Lower side: E = 31 is the smallest exponent field still valid
+        // at Δn = DELTA_CLAMP (31 - 30 = 1 > 0); E = 30 drops out of the
+        // domain.  Upper side: E = 224 is the largest valid at
+        // Δn = DELTA_CLAMP_HI (224 + 30 = 254 < 255); E = 225 overflows.
+        let lo_ok = f32::from_bits(31u32 << 23 | 0x2A_AAAA);
+        assert!(lemma_applies(lo_ok, DELTA_CLAMP));
+        assert_eq!(mul_pow2_by_add(lo_ok, DELTA_CLAMP).to_bits(),
+                   (lo_ok * (DELTA_CLAMP as f32).exp2()).to_bits());
+        let lo_edge = f32::from_bits(30u32 << 23 | 0x2A_AAAA);
+        assert!(!lemma_applies(lo_edge, DELTA_CLAMP));
+
+        let hi_ok = f32::from_bits(224u32 << 23 | 0x12_3456);
+        assert!(lemma_applies(hi_ok, DELTA_CLAMP_HI));
+        assert_eq!(mul_pow2_by_add(hi_ok, DELTA_CLAMP_HI).to_bits(),
+                   (hi_ok * (DELTA_CLAMP_HI as f32).exp2()).to_bits());
+        let hi_edge = f32::from_bits(225u32 << 23 | 0x12_3456);
+        assert!(!lemma_applies(hi_edge, DELTA_CLAMP_HI));
+    }
+
+    #[test]
+    fn subnormal_accumulator_under_clamped_adds() {
+        // Subnormal bit patterns (E = 0, nonzero mantissa) are outside
+        // the lemma domain — only exact zeros are guarded.  Pin the two
+        // facts the kernel relies on: (a) lemma_applies rejects them for
+        // every clamped Δn, (b) a clamped *positive* add can only
+        // promote them into the small-normal range (exponent field
+        // <= 30 + 1 carry), never fabricate Inf/NaN.
+        for &bits in &[1u32, 0x0000_FFFF, 0x007F_FFFF,
+                       0x8000_0001, 0x807F_FFFF] {
+            let f = f32::from_bits(bits);
+            assert!(!lemma_applies(f, DELTA_CLAMP_HI), "bits {bits:#x}");
+            assert!(!lemma_applies(f, DELTA_CLAMP), "bits {bits:#x}");
+            let up = rescale_element(f, rescale_add(i32::MAX, 0.0));
+            assert!(up.is_finite(),
+                    "subnormal {bits:#x} promoted past the finite range");
+        }
+        // exact zeros still pass through untouched
+        assert_eq!(rescale_element(0.0, rescale_add(i32::MAX, 0.0)), 0.0);
+        assert_eq!(rescale_element(-0.0, rescale_add(i32::MIN, 0.0)), 0.0);
+    }
+
+    #[test]
+    fn tie_break_carry_at_the_upper_margin() {
+        // The ~8-ULP ROUND_EPS bias can carry into the exponent field
+        // when the mantissa is within 8 ULP of all-ones: at E = 224
+        // (the last exponent whose pure power-of-two part stays in
+        // range at Δn = +30) the carry lands in E = 255 — which is why
+        // the kernel-side guarantee (and `prop_rescale_add_lemma`
+        // above) claims exponents <= 220 only.  Pin both sides of that
+        // margin so a future clamp change re-derives it consciously.
+        let carry = f32::from_bits((224u32 << 23) | 0x7F_FFFF);
+        let out = rescale_element(carry, rescale_add(DELTA_CLAMP_HI, 0.0));
+        assert!(!out.is_finite(),
+                "documented margin: the tie-break carry escapes the field");
+        let safe = f32::from_bits((220u32 << 23) | 0x7F_FFFF);
+        let out = rescale_element(safe, rescale_add(DELTA_CLAMP_HI, 0.0));
+        assert!(out.is_finite());
+    }
+
+    #[test]
     fn prop_rescale_add_keeps_lemma_valid() {
         // Regression for the missing upper clamp: for any accumulator
         // value that satisfies the lemma at the clamp bounds, applying

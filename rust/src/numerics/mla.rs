@@ -127,12 +127,33 @@ fn matmul(x: &[f32], w: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
 ///
 /// `attend` abstracts the latent-attention kernel so the same driver runs
 /// against the Rust recurrences (tests) or a PJRT executable (runtime).
+///
+/// Composed from [`decode_step_prepare`] → `attend` →
+/// [`decode_step_finish`]; the fused cross-sequence route runs the same
+/// phases with one shared attention call over a whole bucket group, so
+/// the two paths cannot drift numerically.
 pub fn decode_step_with<F>(x: &[f32], c_cache: &mut Matrix,
                            kr_cache: &mut Matrix, valid_len: usize,
                            w: &MlaWeights, mut attend: F) -> Vec<f32>
 where
     F: FnMut(&Matrix, &Matrix, &Matrix, usize) -> Matrix,
 {
+    let d = w.dims;
+    let q_rows = decode_step_prepare(x, c_cache, kr_cache, valid_len, w);
+    // K = [c_cache | kr_cache], V = c_cache
+    let s2 = c_cache.rows;
+    let mut k_full = Matrix::zeros(s2, d.dk());
+    pack_k_rows(c_cache, kr_cache, &mut k_full.data);
+    let o_lat = attend(&q_rows, &k_full, c_cache, valid_len); // [g, d_latent]
+    decode_step_finish(&o_lat.data, w)
+}
+
+/// Pre-attention phase of the absorbed decode step: projects the new
+/// token(s), applies RoPE, writes the new latent/rope cache rows in
+/// place, and returns the absorbed query rows `[sq·n1, Dk]`.
+pub fn decode_step_prepare(x: &[f32], c_cache: &mut Matrix,
+                           kr_cache: &mut Matrix, valid_len: usize,
+                           w: &MlaWeights) -> Matrix {
     let d = w.dims;
     assert_eq!(x.len(), d.sq * d.d_model);
     assert!(valid_len >= d.sq && valid_len <= c_cache.rows);
@@ -189,16 +210,32 @@ where
                 .copy_from_slice(&q_rope[(s * d.n1 + h) * d.d_rope..][..d.d_rope]);
         }
     }
+    q_rows
+}
 
-    // K = [c_cache | kr_cache], V = c_cache
+/// Interleave `K = [c | kr]` rows into `out` (`[S2, d_latent + d_rope]`
+/// row-major) — the key layout the attention kernels consume, and the
+/// same `[latent | rope]` row order the paged pool stores.
+pub fn pack_k_rows(c_cache: &Matrix, kr_cache: &Matrix, out: &mut [f32]) {
     let s2 = c_cache.rows;
-    let mut k_full = Matrix::zeros(s2, d.dk());
+    let dl = c_cache.cols;
+    let dr = kr_cache.cols;
+    let dk = dl + dr;
+    assert_eq!(kr_cache.rows, s2);
+    assert_eq!(out.len(), s2 * dk);
     for rrow in 0..s2 {
-        k_full.row_mut(rrow)[..d.d_latent].copy_from_slice(c_cache.row(rrow));
-        k_full.row_mut(rrow)[d.d_latent..].copy_from_slice(kr_cache.row(rrow));
+        out[rrow * dk..rrow * dk + dl].copy_from_slice(c_cache.row(rrow));
+        out[rrow * dk + dl..(rrow + 1) * dk]
+            .copy_from_slice(kr_cache.row(rrow));
     }
-    let o_lat = attend(&q_rows, &k_full, c_cache, valid_len); // [g, d_latent]
+}
 
+/// Post-attention phase: absorbed output projection of the latent
+/// attention rows `o_lat` (`[sq·n1, d_latent]`, row-major) back to the
+/// residual stream `[sq, d_model]`.
+pub fn decode_step_finish(o_lat: &[f32], w: &MlaWeights) -> Vec<f32> {
+    let d = w.dims;
+    assert_eq!(o_lat.len(), d.sq * d.n1 * d.d_latent);
     // absorbed output: o_heads[s,h,:] = o_lat[s,h,:] @ W_UV[h]
     let (_, w_uv) = w.get("w_uv");
     let (_, w_o) = w.get("w_o");
@@ -206,7 +243,7 @@ where
     for s in 0..d.sq {
         for h in 0..d.n1 {
             let r = s * d.n1 + h;
-            let ol = o_lat.row(r);
+            let ol = &o_lat[r * d.d_latent..(r + 1) * d.d_latent];
             let wuv = &w_uv[h * d.d_latent * d.d_head..][..d.d_latent * d.d_head];
             let dst = &mut o_heads[(s * d.n1 + h) * d.d_head..][..d.d_head];
             for c in 0..d.d_latent {

@@ -1,0 +1,238 @@
+//! Seeded case generators shared by the numerics property suites and
+//! the golden-trace regression tests.
+//!
+//! Lives in the library (not `#[cfg(test)]`) so unit tests, the
+//! integration tests under `rust/tests/`, and the benches all draw the
+//! same randomized attention cases.  Everything is driven by the
+//! deterministic [`crate::numerics::Rng`], so a failing case replays
+//! from its seed (`PROP_SEED=<n>`, see [`crate::util::prop::run_prop`]).
+
+use crate::coordinator::engine::{DecodeEngine, LayerExecutor, SeqRuntime};
+use crate::numerics::flash_base::{BatchedKv, FlashConfig};
+use crate::numerics::{Matrix, Rng};
+use crate::util::prop::{gen_choice, gen_usize};
+
+/// One randomized cross-sequence attention case: `b` same-bucket
+/// sequences with independent KV contents and valid lengths, plus the
+/// stacked `[b*g, dk]` query block the fused kernel consumes.
+///
+/// The valid-length generator deliberately lands on the mask-pattern
+/// edges the fused kernel must get right: full buckets (no padding),
+/// `valid` exactly on / one past / one short of a `block_kv` boundary,
+/// minimal prefixes, and `valid = 0` (every row fully masked).
+#[derive(Debug, Clone)]
+pub struct AttnCase {
+    /// Sequences in the fused batch.
+    pub b: usize,
+    /// Query heads.
+    pub n1: usize,
+    /// Query positions (1 = decode, 2 = MTP).
+    pub sq: usize,
+    /// Query rows per sequence (`sq * n1`).
+    pub g: usize,
+    pub dk: usize,
+    pub dv: usize,
+    /// Bucket length (KV rows incl. padding), a multiple of `block_kv`.
+    pub s2: usize,
+    pub block_kv: usize,
+    pub mixed_bf16: bool,
+    /// Stacked `[b*g, dk]` queries, sequence-major.
+    pub q: Vec<f32>,
+    /// Per-sequence `[s2, dk]` key rows.
+    pub ks: Vec<Vec<f32>>,
+    /// Per-sequence `[s2, dv]` value rows.
+    pub vs: Vec<Vec<f32>>,
+    /// Per-sequence valid KV prefix (`<= s2`).
+    pub valid_lens: Vec<usize>,
+}
+
+impl AttnCase {
+    /// The per-sequence [`FlashConfig`] (fused callers pass any
+    /// `valid_len`; it is ignored on the batched entry points).
+    pub fn cfg(&self, valid_len: usize) -> FlashConfig {
+        FlashConfig { block_kv: self.block_kv, n1: self.n1, sq: self.sq,
+                      valid_len, mixed_bf16: self.mixed_bf16 }
+    }
+
+    /// Sequence `i`'s query rows as a standalone `[g, dk]` matrix.
+    pub fn seq_q(&self, i: usize) -> Matrix {
+        let n = self.g * self.dk;
+        Matrix::from_vec(self.g, self.dk, self.q[i * n..(i + 1) * n].to_vec())
+    }
+
+    pub fn seq_k(&self, i: usize) -> Matrix {
+        Matrix::from_vec(self.s2, self.dk, self.ks[i].clone())
+    }
+
+    pub fn seq_v(&self, i: usize) -> Matrix {
+        Matrix::from_vec(self.s2, self.dv, self.vs[i].clone())
+    }
+
+    /// The fused-call view of every sequence's KV.
+    pub fn kvs(&self) -> Vec<BatchedKv<'_>> {
+        (0..self.b)
+            .map(|i| BatchedKv { k: &self.ks[i], v: &self.vs[i],
+                                 valid_len: self.valid_lens[i] })
+            .collect()
+    }
+
+    /// Compact description for assertion messages.
+    pub fn describe(&self) -> String {
+        format!("b={} n1={} sq={} dk={} dv={} s2={} block={} bf16={} valid={:?}",
+                self.b, self.n1, self.sq, self.dk, self.dv, self.s2,
+                self.block_kv, self.mixed_bf16, self.valid_lens)
+    }
+}
+
+/// Draw one valid-length with the edge cases over-weighted.
+fn gen_valid_len(rng: &mut Rng, s2: usize, block_kv: usize) -> usize {
+    match gen_usize(rng, 0, 8) {
+        0 => s2,                          // no padding at all
+        1 => s2 - block_kv + 1,           // one row into the last block
+        2 => block_kv,                    // exactly one full block
+        3 if s2 > block_kv => block_kv + 1, // one row past a block edge
+        4 => 1,                           // minimal prefix
+        5 => 0,                           // fully masked sequence
+        6 => gen_usize(rng, 1, block_kv + 1), // inside the first block
+        _ => gen_usize(rng, 1, s2 + 1),   // anywhere
+    }
+}
+
+/// Generate one randomized [`AttnCase`] (shapes kept small enough that
+/// a 100+-case property run stays fast in debug builds).
+pub fn gen_attn_case(rng: &mut Rng) -> AttnCase {
+    let b = gen_usize(rng, 1, 5);
+    let sq = *gen_choice(rng, &[1usize, 1, 1, 2]); // serving is sq=1-heavy
+    let n1 = *gen_choice(rng, &[1usize, 2, 4]);
+    let g = sq * n1;
+    let dk = *gen_choice(rng, &[8usize, 16, 32]);
+    let dv = *gen_choice(rng, &[4usize, 8, 16]);
+    let block_kv = *gen_choice(rng, &[16usize, 32]);
+    let nblk = gen_usize(rng, 1, 5);
+    let s2 = nblk * block_kv;
+    let mixed_bf16 = rng.next_u64() & 1 == 1;
+    let sigma = *gen_choice(rng, &[0.1f32, 1.0, 6.0]);
+
+    let q = rng.gaussian_matrix(b * g, dk, sigma).data;
+    let mut ks = Vec::with_capacity(b);
+    let mut vs = Vec::with_capacity(b);
+    let mut valid_lens = Vec::with_capacity(b);
+    for _ in 0..b {
+        ks.push(rng.gaussian_matrix(s2, dk, sigma).data);
+        vs.push(rng.gaussian_matrix(s2, dv, sigma).data);
+        valid_lens.push(gen_valid_len(rng, s2, block_kv));
+    }
+    AttnCase { b, n1, sq, g, dk, dv, s2, block_kv, mixed_bf16, q, ks, vs,
+               valid_lens }
+}
+
+/// Drive `prompts` through `engine.step_batch` one position per global
+/// step, the way the serve loop prefills: at each position only the
+/// sequences whose prompt still has tokens step (staggered batch), so
+/// mixed-length prompts exercise regrouping of the fused route.
+/// Returns every emitted token per sequence, in order; `rts` is left
+/// holding the final runtimes for follow-on decode steps.
+///
+/// This is the one shared copy of the batch-stepping driver the
+/// bit-identity and golden-trace suites build on — keeping it here
+/// means the golden pin and the unit-test oracles cannot drift apart.
+pub fn drive_prompts<E: LayerExecutor>(engine: &DecodeEngine<E>,
+                                       rts: &mut [SeqRuntime],
+                                       prompts: &[Vec<u32>],
+                                       workers: usize) -> Vec<Vec<u32>> {
+    assert_eq!(rts.len(), prompts.len());
+    let mut tokens: Vec<Vec<u32>> = vec![Vec::new(); prompts.len()];
+    let longest = prompts.iter().map(Vec::len).max().unwrap_or(0);
+    for pos in 0..longest {
+        let (mut idx, mut toks) = (Vec::new(), Vec::new());
+        for (i, p) in prompts.iter().enumerate() {
+            if pos < p.len() {
+                idx.push(i);
+                toks.push(p[pos]);
+            }
+        }
+        // swap the stepping sequences' runtimes out behind an empty
+        // placeholder so the sub-batch gets exclusive access
+        let mut sub: Vec<SeqRuntime> = Vec::new();
+        for &i in &idx {
+            sub.push(std::mem::replace(&mut rts[i], SeqRuntime::new(0)));
+        }
+        let outs = engine.step_batch(&mut sub, &toks, workers);
+        for ((&i, rt), o) in idx.iter().zip(sub).zip(outs) {
+            rts[i] = rt;
+            tokens[i].push(o.expect("prompt step failed"));
+        }
+    }
+    tokens
+}
+
+/// Hex-encode a float slice bit-exactly (`aabbccdd` per element,
+/// space-separated) — the golden-trace file format for output bits.
+pub fn encode_f32_bits(xs: &[f32]) -> String {
+    xs.iter()
+        .map(|x| format!("{:08x}", x.to_bits()))
+        .collect::<Vec<_>>()
+        .join(" ")
+}
+
+/// Inverse of [`encode_f32_bits`]; `None` on any malformed token.
+pub fn decode_f32_bits(s: &str) -> Option<Vec<f32>> {
+    s.split_whitespace()
+        .map(|tok| u32::from_str_radix(tok, 16).ok().map(f32::from_bits))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::run_prop;
+
+    #[test]
+    fn cases_are_shape_consistent() {
+        run_prop("attn_case_shapes", 50, |rng| {
+            let c = gen_attn_case(rng);
+            assert_eq!(c.g, c.sq * c.n1);
+            assert_eq!(c.q.len(), c.b * c.g * c.dk);
+            assert_eq!(c.ks.len(), c.b);
+            assert_eq!(c.vs.len(), c.b);
+            assert_eq!(c.valid_lens.len(), c.b);
+            assert_eq!(c.s2 % c.block_kv, 0);
+            for i in 0..c.b {
+                assert_eq!(c.ks[i].len(), c.s2 * c.dk);
+                assert_eq!(c.vs[i].len(), c.s2 * c.dv);
+                assert!(c.valid_lens[i] <= c.s2, "{}", c.describe());
+            }
+        });
+    }
+
+    #[test]
+    fn edge_valid_lens_are_generated() {
+        // over many cases the generator must actually hit the edges the
+        // fused kernel is pinned on
+        let mut rng = Rng::new(0xED6E);
+        let (mut zero, mut full, mut block_edge) = (false, false, false);
+        for _ in 0..300 {
+            let c = gen_attn_case(&mut rng);
+            for &v in &c.valid_lens {
+                zero |= v == 0;
+                full |= v == c.s2;
+                block_edge |= v % c.block_kv <= 1 && v > 0;
+            }
+        }
+        assert!(zero && full && block_edge,
+                "zero={zero} full={full} block_edge={block_edge}");
+    }
+
+    #[test]
+    fn f32_bits_roundtrip() {
+        let xs = vec![0.0f32, -0.0, 1.5, f32::NEG_INFINITY, 3.1415927,
+                      f32::MIN_POSITIVE, -1e30];
+        let enc = encode_f32_bits(&xs);
+        let back = decode_f32_bits(&enc).unwrap();
+        assert_eq!(xs.len(), back.len());
+        for (a, b) in xs.iter().zip(&back) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert!(decode_f32_bits("zz").is_none());
+    }
+}

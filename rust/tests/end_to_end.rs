@@ -26,6 +26,7 @@ fn serve_cfg() -> ServeConfig {
         pool_pages: 64,
         workers: 2,
         max_new_tokens: 3,
+        ..ServeConfig::default()
     }
 }
 
@@ -114,24 +115,38 @@ fn mixed_bucket_requests() -> Vec<DecodeRequest> {
     ]
 }
 
-fn host_engine(algo: Algo) -> DecodeEngine<HostLayerExecutor> {
+fn host_engine_fused(algo: Algo, fuse: bool)
+                     -> DecodeEngine<HostLayerExecutor> {
     let dims = MlaDims { d_model: 64, n1: 2, d_head: 16, q_rank: 32,
                          d_latent: 24, d_rope: 8, sq: 1 };
-    let exec = HostLayerExecutor::new(dims, 2, algo, 32, vec![64, 128], 7);
+    let exec = HostLayerExecutor::new(dims, 2, algo, 32, vec![64, 128], 7)
+        .with_fuse(fuse);
     DecodeEngine::new(exec, 1024, 16)
 }
 
-fn serve_tokens(algo: Algo, max_batch: usize, batch_workers: usize)
-                -> Vec<(u64, Vec<u32>)> {
-    let engine = host_engine(algo);
+fn host_engine(algo: Algo) -> DecodeEngine<HostLayerExecutor> {
+    host_engine_fused(algo, true)
+}
+
+fn serve_tokens(algo: Algo, max_batch: usize, batch_workers: usize,
+                fuse: bool) -> Vec<(u64, Vec<u32>)> {
+    let engine = host_engine_fused(algo, fuse);
     let cfg = ServeConfig { max_batch, batch_workers, workers: batch_workers,
                             pool_pages: 1024, page_size: 16,
+                            fuse_buckets: fuse,
                             ..ServeConfig::default() };
     let report = serve(&engine, mixed_bucket_requests(), &cfg)
         .expect("serve");
     assert_eq!(report.metrics.requests_completed, 8);
     assert_eq!(engine.pool.lock().unwrap().stats().allocated_pages, 0,
                "pages leaked");
+    if fuse && max_batch >= 4 {
+        assert!(report.metrics.fused_groups > 0,
+                "fused route never taken at max_batch {max_batch}");
+    }
+    if !fuse {
+        assert_eq!(report.metrics.fused_groups, 0);
+    }
     let mut toks: Vec<(u64, Vec<u32>)> = report.results.into_iter()
         .map(|r| (r.id, r.tokens))
         .collect();
@@ -142,17 +157,22 @@ fn serve_tokens(algo: Algo, max_batch: usize, batch_workers: usize)
 #[test]
 fn batched_parallel_bit_identical_to_serial() {
     // The tentpole contract: a mixed-bucket batch served with the
-    // parallel worker pool must emit exactly the serial path's tokens,
-    // for both algorithms and across batch sizes.
+    // parallel worker pool and/or the fused cross-sequence kernel must
+    // emit exactly the serial path's tokens, for both algorithms and
+    // across batch sizes — every (fuse, workers, max_batch) cell of the
+    // matrix is bit-identical.
     for algo in [Algo::Amla, Algo::Base] {
-        let serial = serve_tokens(algo, 4, 1);
-        for workers in [1usize, 4] {
-            for max_batch in [4usize, 8] {
-                let got = serve_tokens(algo, max_batch, workers);
-                assert_eq!(got, serial,
-                           "algo {:?} max_batch {max_batch} \
-                            workers {workers} diverged from serial",
-                           algo);
+        let serial = serve_tokens(algo, 4, 1, false);
+        for fuse in [false, true] {
+            for workers in [1usize, 4] {
+                for max_batch in [4usize, 8] {
+                    let got = serve_tokens(algo, max_batch, workers, fuse);
+                    assert_eq!(got, serial,
+                               "algo {:?} max_batch {max_batch} \
+                                workers {workers} fuse {fuse} \
+                                diverged from serial",
+                               algo);
+                }
             }
         }
     }
@@ -184,26 +204,7 @@ fn engine_step_batch_matches_sequential_engine_steps() {
     let eng = host_engine(Algo::Amla);
     let mut rts: Vec<SeqRuntime> =
         (0..prompts.len()).map(|_| SeqRuntime::new(2)).collect();
-    let longest = prompts.iter().map(Vec::len).max().unwrap();
-    let mut batched: Vec<Vec<u32>> = vec![Vec::new(); prompts.len()];
-    for pos in 0..longest {
-        let (mut idx, mut toks) = (Vec::new(), Vec::new());
-        for (i, p) in prompts.iter().enumerate() {
-            if pos < p.len() {
-                idx.push(i);
-                toks.push(p[pos]);
-            }
-        }
-        let mut sub: Vec<SeqRuntime> = Vec::new();
-        for &i in &idx {
-            sub.push(std::mem::replace(&mut rts[i], SeqRuntime::new(0)));
-        }
-        let outs = eng.step_batch(&mut sub, &toks, 4);
-        for ((&i, rt), o) in idx.iter().zip(sub).zip(outs) {
-            rts[i] = rt;
-            batched[i].push(o.unwrap());
-        }
-    }
+    let batched = amla::testing::drive_prompts(&eng, &mut rts, &prompts, 4);
     assert_eq!(batched, serial);
 }
 

@@ -1,0 +1,173 @@
+//! Golden-trace regression: one deterministic 4-sequence mixed-bucket
+//! decode trace — every emitted token plus the final step's
+//! residual-stream bits — must be reproduced **exactly** by every
+//! serving configuration (`fuse on/off × workers 1/4`), and must match
+//! the committed golden file so future kernel rewrites cannot silently
+//! drift the numerics.
+//!
+//! Bootstrap: if `rust/tests/golden/decode_trace.txt` is missing (or
+//! `AMLA_REGEN_GOLDEN=1` is set) the test writes it from the current
+//! build and reports success — commit the generated file to arm the
+//! cross-PR pin.  The cross-config identity assertions always run.
+
+use amla::config::Algo;
+use amla::coordinator::engine::{HostLayerExecutor, SeqRuntime};
+use amla::coordinator::DecodeEngine;
+use amla::numerics::mla::MlaDims;
+use amla::testing::{decode_f32_bits, drive_prompts, encode_f32_bits};
+
+const GOLDEN_PATH: &str = concat!(env!("CARGO_MANIFEST_DIR"),
+                                  "/rust/tests/golden/decode_trace.txt");
+const DECODE_STEPS: usize = 8;
+
+/// Prompts chosen so the batch spans both KV buckets mid-trace: seq 1
+/// crosses from the 64 into the 128 bucket while the others stay in 64,
+/// exercising fused groups, singleton fallback, and regrouping.
+fn prompts() -> Vec<Vec<u32>> {
+    vec![
+        vec![11, 12, 13],
+        vec![7; 60],
+        vec![5, 6],
+        vec![9; 30],
+    ]
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+struct Trace {
+    /// Per sequence: every token emitted (prompt phase + decode phase).
+    tokens: Vec<Vec<u32>>,
+    /// Per sequence: bit pattern of the final step's residual stream.
+    xbits: Vec<Vec<u32>>,
+}
+
+fn run_trace(fuse: bool, workers: usize) -> Trace {
+    let dims = MlaDims { d_model: 64, n1: 2, d_head: 16, q_rank: 32,
+                         d_latent: 24, d_rope: 8, sq: 1 };
+    let exec = HostLayerExecutor::new(dims, 2, Algo::Amla, 32,
+                                      vec![64, 128], 7)
+        .with_fuse(fuse);
+    let eng = DecodeEngine::new(exec, 1024, 16);
+    let prompts = prompts();
+    let n = prompts.len();
+    let mut rts: Vec<SeqRuntime> =
+        (0..n).map(|_| SeqRuntime::new(2)).collect();
+
+    // prompt phase: one prompt token per global step, like the serve
+    // loop (the shared driver in amla::testing)
+    let mut tokens = drive_prompts(&eng, &mut rts, &prompts, workers);
+    let mut last: Vec<u32> =
+        tokens.iter().map(|t| *t.last().expect("non-empty prompt")).collect();
+
+    // decode phase: the whole batch steps together; the final step is
+    // traced so the residual-stream bits are pinned too
+    let mut xbits: Vec<Vec<u32>> = vec![Vec::new(); n];
+    for step in 0..DECODE_STEPS {
+        let feeds = last.clone();
+        if step + 1 < DECODE_STEPS {
+            let outs = eng.step_batch(&mut rts, &feeds, workers);
+            for (i, o) in outs.into_iter().enumerate() {
+                let t = o.expect("decode step failed");
+                tokens[i].push(t);
+                last[i] = t;
+            }
+        } else {
+            let outs = eng.step_batch_traced(&mut rts, &feeds, workers);
+            for (i, o) in outs.into_iter().enumerate() {
+                let tr = o.expect("traced decode step failed");
+                tokens[i].push(tr.token);
+                xbits[i] = tr.x.iter().map(|x| x.to_bits()).collect();
+            }
+        }
+    }
+    Trace { tokens, xbits }
+}
+
+/// Render the comparable body of the golden file (no comment lines).
+fn render(trace: &Trace) -> String {
+    let mut out = String::new();
+    for i in 0..trace.tokens.len() {
+        out.push_str(&format!("seq {i}\n"));
+        let toks: Vec<String> =
+            trace.tokens[i].iter().map(u32::to_string).collect();
+        out.push_str(&format!("tokens {}\n", toks.join(" ")));
+        let x: Vec<f32> =
+            trace.xbits[i].iter().map(|&b| f32::from_bits(b)).collect();
+        out.push_str(&format!("xbits {}\n", encode_f32_bits(&x)));
+    }
+    out
+}
+
+fn parse(text: &str) -> Option<Trace> {
+    let mut tokens = Vec::new();
+    let mut xbits = Vec::new();
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("tokens ") {
+            tokens.push(rest.split_whitespace()
+                .map(|t| t.parse::<u32>().ok())
+                .collect::<Option<Vec<u32>>>()?);
+        } else if let Some(rest) = line.strip_prefix("xbits ") {
+            xbits.push(decode_f32_bits(rest)?
+                .iter().map(|x| x.to_bits()).collect());
+        } else if !line.starts_with("seq ") {
+            return None;
+        }
+    }
+    if tokens.is_empty() || tokens.len() != xbits.len() {
+        return None;
+    }
+    Some(Trace { tokens, xbits })
+}
+
+#[test]
+fn golden_trace_reproduces_across_all_configs() {
+    let reference = run_trace(false, 1); // unfused serial = the oracle
+    for (fuse, workers) in [(false, 4), (true, 1), (true, 4)] {
+        let got = run_trace(fuse, workers);
+        assert_eq!(got, reference,
+                   "fuse={fuse} workers={workers} diverged from the \
+                    unfused serial trace");
+    }
+
+    let path = std::path::Path::new(GOLDEN_PATH);
+    let regen = std::env::var("AMLA_REGEN_GOLDEN").is_ok();
+    if path.exists() && !regen {
+        let text = std::fs::read_to_string(path).expect("read golden file");
+        let golden = parse(&text).expect("malformed golden file — \
+            regenerate with AMLA_REGEN_GOLDEN=1");
+        assert_eq!(reference, golden,
+                   "decode trace drifted from {GOLDEN_PATH}; if the \
+                    change is intended, regenerate with \
+                    AMLA_REGEN_GOLDEN=1 cargo test --test golden_trace \
+                    and commit the diff");
+    } else {
+        let header = "\
+# AMLA golden decode trace v1 (4 sequences, mixed 64/128 buckets,\n\
+# 2-layer host model, bf16 kernels).  Pinned bit-for-bit by\n\
+# rust/tests/golden_trace.rs across fuse on/off x workers 1/4.\n\
+# Regenerate: AMLA_REGEN_GOLDEN=1 cargo test --test golden_trace\n";
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir).expect("create golden dir");
+        }
+        std::fs::write(path, format!("{header}{}", render(&reference)))
+            .expect("write golden file");
+        eprintln!("golden trace written to {GOLDEN_PATH}; commit it to \
+                   arm the cross-PR regression pin");
+    }
+}
+
+#[test]
+fn golden_file_roundtrips_through_parser() {
+    // the serializer and parser must agree, so a committed file cannot
+    // be misread as matching when it does not
+    let tr = Trace {
+        tokens: vec![vec![1, 2, 3], vec![9]],
+        xbits: vec![vec![0x3F800000, 0x80000000], vec![0x7F7FFFFF]],
+    };
+    let parsed = parse(&render(&tr)).expect("roundtrip parse");
+    assert_eq!(tr, parsed);
+    assert!(parse("garbage\n").is_none());
+}
