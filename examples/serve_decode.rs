@@ -13,15 +13,27 @@
 //! `--batch-workers` controlling in-batch attention parallelism
 //! (1 = the serial reference; outputs are bit-identical either way).
 //!
+//! With `--open-loop` the same trace is served **arrival-driven**: each
+//! request becomes visible at its Poisson arrival time, queue delays are
+//! real, and starved heads may trigger recompute preemption
+//! (`--preempt on|off`, `--rate R`, `--starvation-steps S`;
+//! `--virtual-clock` replaces wall time with the deterministic
+//! simulated clock).
+//!
 //! ```bash
 //! make artifacts && cargo run --release --example serve_decode -- \
 //!     --requests 12 --max-batch 4 --batch-workers 4 --max-new-tokens 24
+//! # open-loop at 8 req/s offered:
+//! cargo run --release --example serve_decode -- \
+//!     --requests 12 --open-loop --rate 8 --max-new-tokens 24
 //! ```
 
 use amla::config::{Args, ServeConfig};
 use amla::coordinator::{serve, DecodeEngine, DecodeRequest,
                         PjrtLayerExecutor};
 use amla::numerics::mla::MlaDims;
+use amla::serving::clock::{SimClock, StepCostModel};
+use amla::serving::serve_open_loop;
 
 fn main() -> anyhow::Result<()> {
     let args = Args::parse(std::env::args().skip(1));
@@ -42,27 +54,48 @@ fn main() -> anyhow::Result<()> {
     let engine = DecodeEngine::new(exec, cfg.pool_pages, cfg.page_size);
 
     // Synthetic trace (Poisson arrivals, mixed lengths) from the
-    // workload generator; served closed-loop here.
+    // workload generator; closed-loop strips the arrivals, open-loop
+    // honors them.
     let spec = amla::coordinator::WorkloadSpec {
         requests: n_requests,
+        rate: cfg.rate,
         prompt_len: amla::coordinator::LenDist::Uniform(3, 10),
         gen_len: amla::coordinator::LenDist::Fixed(cfg.max_new_tokens),
         ..amla::coordinator::WorkloadSpec::default()
     };
-    let requests: Vec<DecodeRequest> =
-        amla::coordinator::requests_of(&amla::coordinator::generate_trace(&spec));
+    let trace = amla::coordinator::generate_trace(&spec);
     let total_tokens: usize =
-        requests.iter().map(|r| r.max_new_tokens).sum();
+        trace.iter().map(|t| t.request.max_new_tokens).sum();
     eprintln!("[serve_decode] {n_requests} requests, {total_tokens} tokens \
                to generate, max batch {}, {} workers, {} batch workers, \
                fuse-buckets {} (host-kernel route; PJRT still per-seq)",
               cfg.max_batch, cfg.workers, cfg.batch_workers,
               cfg.fuse_buckets);
 
-    let report = serve(&engine, requests, &cfg)?;
+    let (results, summary, metrics, completed) = if cfg.open_loop {
+        let mut clock = if args.has_flag("virtual-clock") {
+            SimClock::simulated(StepCostModel::default())
+        } else {
+            SimClock::wall()
+        };
+        eprintln!("[serve_decode] open-loop at {} req/s offered, preempt \
+                   {}, {} clock", cfg.rate, cfg.preempt,
+                  if clock.is_virtual() { "virtual" } else { "wall" });
+        let report = serve_open_loop(&engine, trace, &cfg, &mut clock)?;
+        let (summary, metrics) = (report.summary(), report.metrics.render());
+        let completed = report.metrics.requests_completed;
+        (report.results, summary, metrics, completed)
+    } else {
+        let requests: Vec<DecodeRequest> =
+            amla::coordinator::requests_of(&trace);
+        let report = serve(&engine, requests, &cfg)?;
+        let (summary, metrics) = (report.summary(), report.metrics.render());
+        let completed = report.metrics.requests_completed;
+        (report.results, summary, metrics, completed)
+    };
 
     println!("\n=== per-request ===");
-    let mut results = report.results.clone();
+    let mut results = results;
     results.sort_by_key(|r| r.id);
     for r in &results {
         println!("req {:>3}: {:>3} tokens  queue {:>6.1} ms  ttft {:>7.1} ms  \
@@ -71,10 +104,10 @@ fn main() -> anyhow::Result<()> {
                  r.mean_tpot * 1e3, r.p99_tpot * 1e3);
     }
     println!("\n=== aggregate ===");
-    println!("{}", report.summary());
-    println!("{}", report.metrics.render());
+    println!("{summary}");
+    println!("{metrics}");
 
-    anyhow::ensure!(report.metrics.requests_completed == n_requests as u64,
+    anyhow::ensure!(completed == n_requests as u64,
                     "not all requests completed");
     println!("serve_decode OK");
     Ok(())

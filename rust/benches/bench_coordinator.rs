@@ -181,11 +181,11 @@ fn main() {
         b.bench("batcher_admit_reap_cycle", || {
             let mut batcher = Batcher::new(8, 100_000);
             for i in 0..64u64 {
-                batcher.enqueue(DecodeRequest::new(i, vec![1, 2], 1));
+                batcher.enqueue(DecodeRequest::new(i, vec![1, 2], 1), 0.0);
             }
             let mut total = 0;
             while !batcher.idle() {
-                total += batcher.admit();
+                total += batcher.admit(0.0);
                 for st in batcher.active_mut() {
                     st.generated.push(1);
                 }

@@ -1,0 +1,88 @@
+//! Open-loop serving benchmarks: the rate-sweep SLO harness on the host
+//! substrate under the deterministic virtual clock.
+//!
+//! Produces the offered-rate → TTFT/TPOT/queue-delay load curve plus
+//! the saturation throughput estimate — the serving-side number the
+//! AMLA kernel's batched throughput ultimately feeds.  Deterministic
+//! (virtual clock, seeded trace), so it doubles as the CI bench-smoke
+//! target: `AMLA_BENCH_SMOKE=1` shrinks it to 2 rates × 8 requests.
+//!
+//! `AMLA_BENCH_RECORD=1` writes the sweep report to
+//! `BENCH_serving.json` (committed placeholder at the repo root),
+//! mirroring `BENCH_coordinator.json`.
+
+use amla::config::{Algo, ServeConfig};
+use amla::coordinator::{generate_trace, DecodeEngine, HostLayerExecutor,
+                        LenDist, WorkloadSpec};
+use amla::numerics::mla::MlaDims;
+use amla::serving::{sweep, StepCostModel, SweepConfig};
+
+fn main() {
+    let smoke = std::env::var("AMLA_BENCH_SMOKE").is_ok();
+    let (n_requests, rates): (usize, Vec<f64>) = if smoke {
+        (8, vec![2.0, 32.0])
+    } else {
+        (48, vec![1.0, 2.0, 4.0, 8.0, 16.0, 32.0])
+    };
+
+    let dims = MlaDims { d_model: 64, n1: 2, d_head: 16, q_rank: 32,
+                         d_latent: 24, d_rope: 8, sq: 1 };
+    let exec = HostLayerExecutor::new(dims, 2, Algo::Amla, 64,
+                                      vec![64, 128], 3);
+    let engine = DecodeEngine::new(exec, 512, 16);
+
+    let spec = WorkloadSpec {
+        requests: n_requests,
+        rate: 4.0,
+        prompt_len: LenDist::Uniform(3, 10),
+        gen_len: LenDist::Geometric { mean: 12.0, cap: 40 },
+        ..WorkloadSpec::default()
+    };
+    let trace = generate_trace(&spec);
+    let cfg = ServeConfig { max_batch: 8, workers: 4, batch_workers: 4,
+                            pool_pages: 512, page_size: 16,
+                            starvation_steps: 16, preempt: true,
+                            ..ServeConfig::default() };
+    let sweep_cfg = SweepConfig {
+        rates,
+        saturation_fraction: 0.8,
+        model: StepCostModel::new(2e-3, 5e-4),
+    };
+
+    println!("open-loop rate sweep ({n_requests} requests, virtual clock, \
+              preempt on{}):", if smoke { ", SMOKE" } else { "" });
+    let t0 = std::time::Instant::now();
+    let report = sweep(&engine, &trace, spec.rate, &cfg, &sweep_cfg)
+        .expect("sweep failed");
+    println!("{}", report.render_table());
+    println!("(sweep wall time: {:.2?})", t0.elapsed());
+
+    // smoke invariants: the harness must produce a well-formed,
+    // saturation-capable report even at tiny scale
+    assert_eq!(report.points.len(), sweep_cfg.rates.len());
+    for w in report.points.windows(2) {
+        assert!(w[1].offered_rate > w[0].offered_rate,
+                "points must be rate-sorted");
+    }
+    assert!(report.saturation_throughput > 0.0);
+
+    // preempt off for contrast (same trace, same rates)
+    let mut cfg_off = cfg.clone();
+    cfg_off.preempt = false;
+    let report_off = sweep(&engine, &trace, spec.rate, &cfg_off, &sweep_cfg)
+        .expect("sweep (preempt off) failed");
+    println!("preempt off, highest rate: ttft p99 {:.3}s (vs {:.3}s with \
+              preemption)",
+             report_off.points.last().unwrap().ttft_p99,
+             report.points.last().unwrap().ttft_p99);
+
+    // perf-trajectory baseline: BENCH_serving.json at the repo root
+    // (opt-in so routine bench runs do not dirty the tree)
+    if std::env::var("AMLA_BENCH_RECORD").is_ok() {
+        let json = report.to_json().to_string();
+        std::fs::write("BENCH_serving.json", format!("{json}\n"))
+            .expect("write BENCH_serving.json");
+        println!("recorded BENCH_serving.json");
+    }
+    println!("bench_serving OK");
+}

@@ -63,6 +63,21 @@ pub struct ServeConfig {
     pub fuse_buckets: bool,
     /// Per-request cap on generated tokens.
     pub max_new_tokens: usize,
+    /// Serve arrival-timed traces open-loop (`--open-loop`): requests
+    /// become visible at their trace arrival times instead of being
+    /// enqueued up front ([`crate::serving::serve_open_loop`]).
+    pub open_loop: bool,
+    /// Offered arrival rate (req/s) of the generated open-loop trace
+    /// (`--rate`).
+    pub rate: f64,
+    /// Open-loop starvation threshold (`--starvation-steps`): global
+    /// steps the head-of-line request may wait before the scheduler
+    /// considers recompute eviction.
+    pub starvation_steps: usize,
+    /// Enable recompute-style preemption under starvation
+    /// (`--preempt on|off`; on by default).  Evicted sequences resume
+    /// with bit-identical tokens — see [`crate::serving::preempt`].
+    pub preempt: bool,
 }
 
 impl Default for ServeConfig {
@@ -83,6 +98,10 @@ impl Default for ServeConfig {
                 .unwrap_or(4),
             fuse_buckets: true,
             max_new_tokens: 64,
+            open_loop: false,
+            rate: 4.0,
+            starvation_steps: 32,
+            preempt: true,
         }
     }
 }
@@ -121,10 +140,22 @@ impl ServeConfig {
         num_field!("workers", self.workers);
         num_field!("batch-workers", self.batch_workers);
         num_field!("max-new-tokens", self.max_new_tokens);
+        num_field!("rate", self.rate);
+        num_field!("starvation-steps", self.starvation_steps);
         if let Some(v) = args.get("fuse-buckets") {
             self.fuse_buckets = parse_bool("fuse-buckets", v)?;
         } else if args.has_flag("fuse-buckets") {
             self.fuse_buckets = true; // bare `--fuse-buckets`
+        }
+        if let Some(v) = args.get("open-loop") {
+            self.open_loop = parse_bool("open-loop", v)?;
+        } else if args.has_flag("open-loop") {
+            self.open_loop = true; // bare `--open-loop`
+        }
+        if let Some(v) = args.get("preempt") {
+            self.preempt = parse_bool("preempt", v)?;
+        } else if args.has_flag("preempt") {
+            self.preempt = true; // bare `--preempt`
         }
         self.validate()
     }
@@ -138,6 +169,9 @@ impl ServeConfig {
         }
         if self.batch_workers == 0 {
             bail!("batch_workers must be positive (1 = serial)");
+        }
+        if !(self.rate > 0.0 && self.rate.is_finite()) {
+            bail!("rate must be a positive, finite req/s value");
         }
         Ok(())
     }
@@ -254,5 +288,25 @@ mod tests {
     fn negative_numbers_are_values_not_flags() {
         let a = args("--offset -5");
         assert_eq!(a.get("offset").unwrap(), "-5");
+    }
+
+    #[test]
+    fn open_loop_flags_parse() {
+        let mut cfg = ServeConfig::default();
+        assert!(!cfg.open_loop, "closed loop is the default");
+        assert!(cfg.preempt, "preemption defaults on");
+        cfg.apply_args(&args("--open-loop --rate 12.5 \
+                              --starvation-steps 16 --preempt off"))
+            .unwrap();
+        assert!(cfg.open_loop);
+        assert_eq!(cfg.rate, 12.5);
+        assert_eq!(cfg.starvation_steps, 16);
+        assert!(!cfg.preempt);
+        cfg.apply_args(&args("--open-loop off --preempt on")).unwrap();
+        assert!(!cfg.open_loop);
+        assert!(cfg.preempt);
+        assert!(cfg.apply_args(&args("--rate 0")).is_err());
+        assert!(cfg.apply_args(&args("--rate -3")).is_err());
+        assert!(cfg.apply_args(&args("--preempt maybe")).is_err());
     }
 }

@@ -5,6 +5,14 @@
 //! request is admitted immediately — no waiting for a full batch to
 //! drain.  Admission also respects the latent-pool budget: a request is
 //! only admitted if the pool can hold its prompt plus max generation.
+//!
+//! Admission stays FIFO with head-of-line blocking by design; the
+//! open-loop scheduler ([`crate::serving`]) breaks pathological
+//! head-of-line stalls from *outside* via recompute eviction
+//! ([`Batcher::evict`]) when the head has starved past
+//! `ServeConfig::starvation_steps`.  All timestamps are clock seconds
+//! from the serving clock ([`crate::serving::clock::SimClock`]), so the
+//! batcher works identically under wall and virtual time.
 
 use std::collections::VecDeque;
 
@@ -15,6 +23,9 @@ use crate::coordinator::request::{DecodeRequest, RequestState};
 pub struct BatcherStats {
     pub admitted: u64,
     pub completed: u64,
+    /// Active sequences evicted for recompute-resume (each re-admission
+    /// counts in `admitted` again).
+    pub preempted: u64,
     pub queued_peak: usize,
     /// Sum over steps of active-batch sizes (for mean occupancy).
     pub active_area: u64,
@@ -31,24 +42,42 @@ impl BatcherStats {
     }
 }
 
+/// A queued request plus its admission-queue bookkeeping.
+#[derive(Debug)]
+struct Queued {
+    req: DecodeRequest,
+    /// Clock time (s) the request entered the queue.
+    enqueued_s: f64,
+    /// Global step count at enqueue; `stats.steps - enqueued_step` is
+    /// the entry's queue wait in steps (the starvation signal for the
+    /// preemption policy) — O(1) per step, no queue walk.
+    enqueued_step: u64,
+}
+
 /// Admission queue + active set.
 pub struct Batcher {
     max_batch: usize,
     /// Pages still unreserved in the latent pool (admission budget).
     free_rows: usize,
-    queue: VecDeque<DecodeRequest>,
+    /// Full pool budget (rows per layer) — `free_rows`' starting value.
+    total_rows: usize,
+    queue: VecDeque<Queued>,
     active: Vec<RequestState>,
     stats: BatcherStats,
 }
 
 impl Batcher {
     pub fn new(max_batch: usize, pool_rows: usize) -> Self {
-        Self { max_batch, free_rows: pool_rows, queue: VecDeque::new(),
-               active: Vec::new(), stats: BatcherStats::default() }
+        Self { max_batch, free_rows: pool_rows, total_rows: pool_rows,
+               queue: VecDeque::new(), active: Vec::new(),
+               stats: BatcherStats::default() }
     }
 
-    pub fn enqueue(&mut self, req: DecodeRequest) {
-        self.queue.push_back(req);
+    /// Enqueue `req` as of clock time `now_s` (its trace arrival time on
+    /// the open-loop path).
+    pub fn enqueue(&mut self, req: DecodeRequest, now_s: f64) {
+        self.queue.push_back(Queued { req, enqueued_s: now_s,
+                                      enqueued_step: self.stats.steps });
         self.stats.queued_peak = self.stats.queued_peak.max(self.queue.len());
     }
 
@@ -57,19 +86,21 @@ impl Batcher {
     }
 
     /// Move queued requests into the active set while slots + pool rows
-    /// allow.  Returns how many were admitted.
-    pub fn admit(&mut self) -> usize {
+    /// allow, stamping admission at clock time `now_s`.  Returns how
+    /// many were admitted.
+    pub fn admit(&mut self, now_s: f64) -> usize {
         let mut n = 0;
         while self.active.len() < self.max_batch {
             let Some(front) = self.queue.front() else { break };
-            let need = Self::rows_needed(front);
+            let need = Self::rows_needed(&front.req);
             if need > self.free_rows {
                 break; // head-of-line blocking by design: FIFO fairness
             }
-            let req = self.queue.pop_front().unwrap();
+            let q = self.queue.pop_front().unwrap();
             self.free_rows -= need;
-            let mut st = RequestState::new(req);
-            st.started_at = Some(std::time::Instant::now());
+            let mut st = RequestState::new(q.req);
+            st.enqueued_s = q.enqueued_s;
+            st.started_s = Some(now_s);
             st.admitted_rows = need;
             self.active.push(st);
             self.stats.admitted += 1;
@@ -81,6 +112,11 @@ impl Batcher {
     /// Current active sequences (mutable for the step loop).
     pub fn active_mut(&mut self) -> &mut [RequestState] {
         &mut self.active
+    }
+
+    /// Read-only view of the active set (victim selection).
+    pub fn active(&self) -> &[RequestState] {
+        &self.active
     }
 
     pub fn active_len(&self) -> usize {
@@ -95,6 +131,27 @@ impl Batcher {
     pub fn note_step(&mut self) {
         self.stats.steps += 1;
         self.stats.active_area += self.active.len() as u64;
+    }
+
+    /// Whether the head-of-line request has waited in the queue for
+    /// more than `threshold` global steps.
+    pub fn head_starved(&self, threshold: u64) -> bool {
+        self.queue.front()
+            .is_some_and(|q| self.stats.steps - q.enqueued_step > threshold)
+    }
+
+    /// Whether the head-of-line request could be admitted into an
+    /// *empty* pool — false means no amount of eviction will ever fit
+    /// it and it must be rejected instead.
+    pub fn head_can_ever_fit(&self) -> bool {
+        self.queue.front()
+            .is_some_and(|q| Self::rows_needed(&q.req) <= self.total_rows)
+    }
+
+    /// The head-of-line request, if any (victim-selection input for the
+    /// preemption policy).
+    pub fn head_request(&self) -> Option<&DecodeRequest> {
+        self.queue.front().map(|q| &q.req)
     }
 
     /// Remove finished sequences, returning them; their pool budget is
@@ -117,10 +174,21 @@ impl Batcher {
         done
     }
 
+    /// Evict the active sequence at `idx` for recompute-resume: its
+    /// admission budget is credited back and its state returned so the
+    /// caller can release its cache pages and re-enqueue it with
+    /// `prompt ⧺ generated` ([`crate::serving::preempt`]).
+    pub fn evict(&mut self, idx: usize) -> RequestState {
+        let st = self.active.swap_remove(idx);
+        self.free_rows += st.admitted_rows;
+        self.stats.preempted += 1;
+        st
+    }
+
     /// Remove the head-of-line request (used when it can never be
     /// admitted: its row requirement exceeds the whole pool budget).
     pub fn pop_blocked(&mut self) -> Option<DecodeRequest> {
-        self.queue.pop_front()
+        self.queue.pop_front().map(|q| q.req)
     }
 
     pub fn idle(&self) -> bool {
@@ -144,9 +212,9 @@ mod tests {
     fn admits_up_to_max_batch() {
         let mut b = Batcher::new(2, 1000);
         for i in 0..5 {
-            b.enqueue(req(i, 4, 4));
+            b.enqueue(req(i, 4, 4), 0.0);
         }
-        assert_eq!(b.admit(), 2);
+        assert_eq!(b.admit(0.0), 2);
         assert_eq!(b.active_len(), 2);
         assert_eq!(b.queue_len(), 3);
     }
@@ -155,50 +223,50 @@ mod tests {
     fn continuous_refill_on_completion() {
         let mut b = Batcher::new(2, 1000);
         for i in 0..3 {
-            b.enqueue(req(i, 2, 1));
+            b.enqueue(req(i, 2, 1), 0.0);
         }
-        b.admit();
+        b.admit(0.0);
         // finish one sequence
         b.active_mut()[0].generated.push(7);
         let done = b.reap();
         assert_eq!(done.len(), 1);
-        assert_eq!(b.admit(), 1); // slot refilled immediately
+        assert_eq!(b.admit(0.0), 1); // slot refilled immediately
         assert_eq!(b.active_len(), 2);
     }
 
     #[test]
     fn pool_budget_blocks_admission() {
         let mut b = Batcher::new(8, 10);
-        b.enqueue(req(0, 4, 4)); // needs 8
-        b.enqueue(req(1, 4, 4)); // needs 8 > remaining 2
-        assert_eq!(b.admit(), 1);
+        b.enqueue(req(0, 4, 4), 0.0); // needs 8
+        b.enqueue(req(1, 4, 4), 0.0); // needs 8 > remaining 2
+        assert_eq!(b.admit(0.0), 1);
         assert_eq!(b.queue_len(), 1);
         // finishing the first releases budget
         b.active_mut()[0].generated.extend([1, 1, 1, 1]);
         b.reap();
-        assert_eq!(b.admit(), 1);
+        assert_eq!(b.admit(0.0), 1);
     }
 
     #[test]
     fn abort_credits_full_admission_budget() {
         let mut b = Batcher::new(1, 10);
-        b.enqueue(req(0, 4, 4)); // deducts 8 rows
-        b.admit();
+        b.enqueue(req(0, 4, 4), 0.0); // deducts 8 rows
+        b.admit(0.0);
         // abort after one token: the serve loop shrinks max_new_tokens
         b.active_mut()[0].generated.push(1);
         b.active_mut()[0].request.max_new_tokens = 1;
         b.reap();
         // the full 8 rows must be credited back, not prompt+generated=5
-        b.enqueue(req(1, 4, 4));
-        assert_eq!(b.admit(), 1, "admission budget leaked on abort");
+        b.enqueue(req(1, 4, 4), 0.0);
+        assert_eq!(b.admit(0.0), 1, "admission budget leaked on abort");
     }
 
     #[test]
     fn fifo_order_preserved() {
         let mut b = Batcher::new(1, 1000);
-        b.enqueue(req(10, 2, 1));
-        b.enqueue(req(11, 2, 1));
-        b.admit();
+        b.enqueue(req(10, 2, 1), 0.0);
+        b.enqueue(req(11, 2, 1), 0.0);
+        b.admit(0.0);
         assert_eq!(b.active_mut()[0].request.id, 10);
     }
 
@@ -206,11 +274,63 @@ mod tests {
     fn occupancy_accounting() {
         let mut b = Batcher::new(4, 1000);
         for i in 0..4 {
-            b.enqueue(req(i, 2, 2));
+            b.enqueue(req(i, 2, 2), 0.0);
         }
-        b.admit();
+        b.admit(0.0);
         b.note_step();
         b.note_step();
         assert_eq!(b.stats().mean_occupancy(), 4.0);
+    }
+
+    #[test]
+    fn admission_stamps_clock_times() {
+        let mut b = Batcher::new(2, 1000);
+        b.enqueue(req(0, 2, 2), 1.25);
+        b.admit(3.0);
+        let st = &b.active_mut()[0];
+        assert_eq!(st.enqueued_s, 1.25);
+        assert_eq!(st.started_s, Some(3.0));
+        assert!((st.queue_delay() - 1.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn queued_entries_accrue_starvation_steps() {
+        let mut b = Batcher::new(1, 1000);
+        b.enqueue(req(0, 2, 2), 0.0);
+        b.enqueue(req(1, 2, 2), 0.0);
+        b.admit(0.0); // head = request 1, blocked on the slot
+        assert!(!b.head_starved(0));
+        for _ in 0..3 {
+            b.note_step();
+        }
+        assert!(b.head_starved(2));
+        assert!(!b.head_starved(3));
+        assert!(b.head_can_ever_fit());
+    }
+
+    #[test]
+    fn evict_credits_budget_and_counts() {
+        let mut b = Batcher::new(2, 10);
+        b.enqueue(req(0, 4, 4), 0.0); // 8 rows
+        b.enqueue(req(1, 4, 4), 0.0); // blocked: only 2 rows left
+        b.admit(0.0);
+        assert_eq!(b.active_len(), 1);
+        let st = b.evict(0);
+        assert_eq!(st.request.id, 0);
+        assert_eq!(b.stats().preempted, 1);
+        assert_eq!(b.active_len(), 0);
+        // the credited budget admits the queued request
+        assert_eq!(b.admit(0.0), 1);
+        assert_eq!(b.active_mut()[0].request.id, 1);
+    }
+
+    #[test]
+    fn oversized_head_can_never_fit() {
+        let mut b = Batcher::new(2, 10);
+        b.enqueue(req(0, 20, 20), 0.0);
+        assert!(!b.head_can_ever_fit());
+        assert_eq!(b.admit(0.0), 0);
+        assert_eq!(b.pop_blocked().unwrap().id, 0);
+        assert!(b.idle());
     }
 }

@@ -3,6 +3,22 @@
 
 use std::time::Duration;
 
+/// Nearest-rank quantile of an **ascending-sorted** sample: the
+/// smallest value whose rank covers a `q` fraction of the sample
+/// (`rank = ceil(q·n)`, 1-based).  For n = 100, q = 0.99 this is the
+/// 99th value — not the max, which the old truncated-index formula
+/// (`(n as f64 * q) as usize`) only reached through clamping.  Shared
+/// by [`crate::coordinator::request::DecodeResult`] and the rate-sweep
+/// percentiles in [`crate::serving::sweep`]; returns 0.0 on empty.
+pub fn quantile_sorted(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    debug_assert!((0.0..=1.0).contains(&q), "quantile q out of range");
+    let rank = (q * sorted.len() as f64).ceil() as usize;
+    sorted[rank.clamp(1, sorted.len()) - 1]
+}
+
 /// Fixed log-scale latency histogram (1 µs … ~134 s).
 #[derive(Debug, Clone)]
 pub struct LatencyHisto {
@@ -78,6 +94,10 @@ pub struct Metrics {
     pub fused_groups: u64,
     /// Sequence-layer jobs that went through a fused call.
     pub fused_jobs: u64,
+    /// Recompute-style evictions performed by the open-loop scheduler
+    /// (a preempted request is re-enqueued with `prompt ⧺ generated`
+    /// and counted once per eviction).
+    pub preemptions: u64,
 }
 
 impl Metrics {
@@ -132,7 +152,9 @@ impl Metrics {
              # TYPE amla_fused_groups counter\n\
              amla_fused_groups {}\n\
              # TYPE amla_fused_jobs counter\n\
-             amla_fused_jobs {}\n",
+             amla_fused_jobs {}\n\
+             # TYPE amla_preemptions counter\n\
+             amla_preemptions {}\n",
             self.requests_completed, self.tokens_generated, self.steps,
             self.step_latency.quantile_us(0.5),
             self.step_latency.quantile_us(0.99),
@@ -142,7 +164,8 @@ impl Metrics {
             self.batch_peak,
             self.steps_per_sec(),
             self.fused_groups,
-            self.fused_jobs)
+            self.fused_jobs,
+            self.preemptions)
     }
 }
 
@@ -179,9 +202,24 @@ mod tests {
         let mut m = Metrics::default();
         m.fused_groups = 3;
         m.fused_jobs = 9;
+        m.preemptions = 2;
         let text = m.render();
         assert!(text.contains("amla_fused_groups 3"));
         assert!(text.contains("amla_fused_jobs 9"));
+        assert!(text.contains("amla_preemptions 2"));
+    }
+
+    #[test]
+    fn quantile_sorted_nearest_rank() {
+        let xs: Vec<f64> = (1..=100).map(f64::from).collect();
+        assert_eq!(quantile_sorted(&xs, 0.99), 99.0);
+        assert_eq!(quantile_sorted(&xs, 0.50), 50.0);
+        assert_eq!(quantile_sorted(&xs, 1.0), 100.0);
+        assert_eq!(quantile_sorted(&xs, 0.0), 1.0);
+        assert_eq!(quantile_sorted(&[], 0.5), 0.0);
+        assert_eq!(quantile_sorted(&[7.0], 0.99), 7.0);
+        // odd sample: p50 of 5 values is the 3rd
+        assert_eq!(quantile_sorted(&[1.0, 2.0, 3.0, 4.0, 5.0], 0.5), 3.0);
     }
 
     #[test]

@@ -68,6 +68,17 @@
 //! numerics regression, never an acceptable "parallel rounding
 //! difference".
 //!
+//! ## One stepping core, two admission loops
+//!
+//! The engine-stepping machinery (batched step + token accounting +
+//! reap/release) lives once in [`scheduler::StepCore`].  The closed-loop
+//! driver here ([`scheduler::serve`], everything enqueued up front) and
+//! the arrival-timed open-loop driver
+//! ([`crate::serving::serve_open_loop`], with virtual-clock determinism
+//! and recompute preemption) are both thin admission policies around
+//! it, so the two paths cannot drift apart in token accounting or page
+//! lifecycle.
+//!
 //! Python never appears here — the executables were AOT-compiled by
 //! `make artifacts`.  The stack is generic over [`engine::LayerExecutor`]
 //! so integration tests can run the identical coordinator against the
@@ -87,6 +98,6 @@ pub use engine::{DecodeEngine, HostLayerExecutor, LayerExecutor,
                  PjrtLayerExecutor, StepJob, StepTrace};
 pub use metrics::Metrics;
 pub use request::{DecodeRequest, DecodeResult, RequestId, RequestState};
-pub use scheduler::{serve, ServeReport};
-pub use workload::{generate_trace, requests_of, LenDist, TracedRequest,
-                   WorkloadSpec};
+pub use scheduler::{serve, ServeReport, StepCore};
+pub use workload::{generate_trace, requests_of, ArrivalProcess, LenDist,
+                   TracedRequest, WorkloadSpec};

@@ -1,6 +1,10 @@
 //! Request / result types of the decode service.
-
-use std::time::Instant;
+//!
+//! All request timing is kept as **clock seconds** (`f64` offsets from
+//! the serving clock's start) rather than `Instant`s: the open-loop
+//! path ([`crate::serving`]) runs on a virtual clock whose readings are
+//! deterministic, and the closed-loop path feeds wall readings through
+//! the same fields — one accounting path for both loops.
 
 pub type RequestId = u64;
 
@@ -27,8 +31,11 @@ impl DecodeRequest {
 pub struct RequestState {
     pub request: DecodeRequest,
     pub generated: Vec<u32>,
-    pub enqueued_at: Instant,
-    pub started_at: Option<Instant>,
+    /// Clock time (s) the request entered the queue — its trace arrival
+    /// time on the open-loop path.
+    pub enqueued_s: f64,
+    /// Clock time (s) the request was admitted to the active set.
+    pub started_s: Option<f64>,
     /// Per-token decode latencies (s).
     pub token_latencies: Vec<f64>,
     /// Prompt tokens already fed (the batched serve loop prefills
@@ -46,8 +53,8 @@ pub struct RequestState {
 
 impl RequestState {
     pub fn new(request: DecodeRequest) -> Self {
-        Self { request, generated: Vec::new(), enqueued_at: Instant::now(),
-               started_at: None, token_latencies: Vec::new(),
+        Self { request, generated: Vec::new(), enqueued_s: 0.0,
+               started_s: None, token_latencies: Vec::new(),
                prompt_consumed: 0, pending_prefill: 0.0,
                admitted_rows: 0 }
     }
@@ -76,6 +83,18 @@ impl RequestState {
     pub fn context_len(&self) -> usize {
         self.request.prompt.len() + self.generated.len()
     }
+
+    /// Queueing delay (s): admission minus enqueue, 0 while queued.
+    pub fn queue_delay(&self) -> f64 {
+        self.started_s.map_or(0.0, |s| (s - self.enqueued_s).max(0.0))
+    }
+
+    /// Remaining work in engine steps: unfed prompt tokens plus tokens
+    /// still to generate — the preemption policy's "remaining budget".
+    pub fn remaining_steps(&self) -> usize {
+        (self.request.prompt.len() - self.prompt_consumed)
+            + self.request.max_new_tokens.saturating_sub(self.generated.len())
+    }
 }
 
 /// Final outcome returned to the client.
@@ -93,26 +112,39 @@ pub struct DecodeResult {
 }
 
 impl DecodeResult {
-    pub fn from_state(st: &RequestState) -> Self {
-        let mut lats = st.token_latencies.clone();
+    /// Assemble a result from its raw parts, deriving the latency
+    /// summary (mean + nearest-rank p99 via
+    /// [`crate::coordinator::metrics::quantile_sorted`]).  This is the
+    /// one place TTFT/TPOT math lives: [`Self::from_state`] and the
+    /// open-loop resume ledger (which merges token streams across
+    /// preemptions) both build on it.
+    pub fn from_parts(id: RequestId, tokens: Vec<u32>, latencies: &[f64],
+                      queue_delay: f64) -> Self {
+        let mut lats = latencies.to_vec();
         lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
         let mean = if lats.is_empty() { 0.0 } else {
             lats.iter().sum::<f64>() / lats.len() as f64
         };
-        let p99 = lats
-            .get(((lats.len() as f64 * 0.99) as usize).min(lats.len().saturating_sub(1)))
-            .copied()
-            .unwrap_or(0.0);
-        let started = st.started_at.unwrap_or(st.enqueued_at);
+        let p99 = crate::coordinator::metrics::quantile_sorted(&lats, 0.99);
         Self {
-            id: st.request.id,
-            tokens: st.generated.clone(),
-            queue_delay: started.duration_since(st.enqueued_at).as_secs_f64(),
-            ttft: st.token_latencies.first().copied().unwrap_or(0.0)
-                + started.duration_since(st.enqueued_at).as_secs_f64(),
+            id,
+            tokens,
+            queue_delay,
+            ttft: latencies.first().copied().unwrap_or(0.0) + queue_delay,
             mean_tpot: mean,
             p99_tpot: p99,
         }
+    }
+
+    pub fn from_state(st: &RequestState) -> Self {
+        Self::from_parts(st.request.id, st.generated.clone(),
+                         &st.token_latencies, st.queue_delay())
+    }
+
+    /// Empty result for a request rejected at admission (can never fit
+    /// the pool).
+    pub fn rejected(id: RequestId) -> Self {
+        Self::from_parts(id, Vec::new(), &[], 0.0)
     }
 }
 
@@ -125,6 +157,7 @@ mod tests {
         let mut st = RequestState::new(DecodeRequest::new(1, vec![1, 2, 3], 2));
         assert!(!st.done());
         assert_eq!(st.context_len(), 3);
+        assert_eq!(st.remaining_steps(), 5);
         st.generated.push(42);
         st.token_latencies.push(0.01);
         st.generated.push(43);
@@ -134,6 +167,44 @@ mod tests {
         let res = DecodeResult::from_state(&st);
         assert_eq!(res.tokens, vec![42, 43]);
         assert!((res.mean_tpot - 0.015).abs() < 1e-9);
+    }
+
+    #[test]
+    fn queue_delay_and_ttft_from_clock_times() {
+        let mut st = RequestState::new(DecodeRequest::new(3, vec![1], 1));
+        st.enqueued_s = 2.0;
+        st.started_s = Some(2.5);
+        st.generated.push(7);
+        st.token_latencies.push(0.25);
+        let res = DecodeResult::from_state(&st);
+        assert!((res.queue_delay - 0.5).abs() < 1e-12);
+        assert!((res.ttft - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn p99_is_nearest_rank_not_truncated_index() {
+        // 100 sorted latencies 0.001..=0.100: nearest-rank p99 is the
+        // 99th value (0.099), not the max — the old truncated index
+        // `(len * 0.99) as usize` landed on the max only because of
+        // clamping
+        let lats: Vec<f64> = (1..=100).map(|i| i as f64 * 1e-3).collect();
+        let res = DecodeResult::from_parts(0, vec![0; 100], &lats, 0.0);
+        assert!((res.p99_tpot - 0.099).abs() < 1e-12,
+                "p99 {}", res.p99_tpot);
+        // unsorted input must sort before ranking
+        let mut shuffled = lats.clone();
+        shuffled.reverse();
+        let res2 = DecodeResult::from_parts(0, vec![0; 100], &shuffled, 0.0);
+        assert_eq!(res.p99_tpot, res2.p99_tpot);
+    }
+
+    #[test]
+    fn empty_latencies_are_zeroed() {
+        let res = DecodeResult::rejected(9);
+        assert_eq!(res.id, 9);
+        assert!(res.tokens.is_empty());
+        assert_eq!(res.ttft, 0.0);
+        assert_eq!(res.p99_tpot, 0.0);
     }
 
     #[test]

@@ -14,9 +14,17 @@
 //! Batching and parallelism are exact: sequences share no mutable
 //! state, so the emitted token streams are bit-identical for every
 //! `batch_workers` setting (see `rust/tests/end_to_end.rs`).
+//!
+//! The engine-stepping machinery lives in [`StepCore`] — one shared
+//! implementation of "advance the active set one step / reap the
+//! finished" used by both this closed-loop driver and the arrival-timed
+//! open-loop driver ([`crate::serving::serve_open_loop`]), so the two
+//! loops cannot drift apart in token accounting or page lifecycle.
+//! Time flows through [`SimClock`]: this loop always runs it in wall
+//! mode; the open loop may run it virtually.
 
 use std::collections::HashMap;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
@@ -24,7 +32,9 @@ use crate::config::ServeConfig;
 use crate::coordinator::batcher::{Batcher, BatcherStats};
 use crate::coordinator::engine::{DecodeEngine, LayerExecutor, SeqRuntime};
 use crate::coordinator::metrics::Metrics;
-use crate::coordinator::request::{DecodeRequest, DecodeResult, RequestId};
+use crate::coordinator::request::{DecodeRequest, DecodeResult, RequestId,
+                                  RequestState};
+use crate::serving::clock::SimClock;
 
 /// Outcome of a full [`serve`] run.
 #[derive(Debug)]
@@ -49,54 +59,41 @@ impl ServeReport {
     }
 }
 
-/// Drive all `requests` to completion on `engine` and return the report.
-pub fn serve<E: LayerExecutor>(engine: &DecodeEngine<E>,
-                               requests: Vec<DecodeRequest>,
-                               cfg: &ServeConfig) -> Result<ServeReport> {
-    let n_layers = engine.executor.n_layers();
-    // budget is per-layer: a token consumes one row in every layer
-    let pool_rows = cfg.pool_pages * cfg.page_size;
-    let mut batcher = Batcher::new(cfg.max_batch,
-                                   pool_rows / n_layers.max(1));
-    for r in requests {
-        batcher.enqueue(r);
+/// The shared engine-stepping core: owns the per-request
+/// [`SeqRuntime`]s and implements one batched step ([`StepCore::step`])
+/// and the reap/release cycle ([`StepCore::reap`]) over a [`Batcher`]'s
+/// active set.  Both serve loops (closed and open) are thin admission
+/// policies around this object; the open loop additionally evicts
+/// through [`StepCore::evict`].
+///
+/// Timing: the step measures its wall duration and passes it through
+/// [`SimClock::advance_step`], booking whatever the clock returns —
+/// the measurement itself in wall mode, the deterministic modeled cost
+/// in virtual mode.
+pub struct StepCore {
+    runtimes: HashMap<RequestId, SeqRuntime>,
+    n_layers: usize,
+}
+
+impl StepCore {
+    pub fn new(n_layers: usize) -> Self {
+        Self { runtimes: HashMap::new(), n_layers }
     }
 
-    let mut metrics = Metrics::default();
-    let mut results = Vec::new();
-    let mut runtimes: HashMap<RequestId, SeqRuntime> = HashMap::new();
-    let t0 = Instant::now();
-    // the config's fusion toggle governs the run (no-op on executors
-    // without a fused route, e.g. PJRT pending [B>1] executables) ...
-    engine.executor.set_fuse(cfg.fuse_buckets);
-    // ... and executor-level fused counters are cumulative: report deltas
-    let fused0 = engine.executor.fusion_stats();
-
-    while !batcher.idle() {
-        if batcher.admit() == 0 && batcher.active_len() == 0 {
-            // the active set is empty (all rows free), so the head
-            // request can never fit: reject it with an empty result and
-            // keep serving instead of deadlocking the loop
-            let Some(req) = batcher.pop_blocked() else { break };
-            eprintln!("[serve] request {} rejected: needs more pool rows \
-                       than the pool holds", req.id);
-            results.push(DecodeResult {
-                id: req.id,
-                tokens: Vec::new(),
-                queue_delay: 0.0,
-                ttft: 0.0,
-                mean_tpot: 0.0,
-                p99_tpot: 0.0,
-            });
-            continue;
-        }
+    /// Advance every active sequence one token (one batched engine
+    /// step), doing token/latency/metrics accounting.  Returns the
+    /// batch size stepped.  A per-sequence engine failure aborts only
+    /// that sequence (its `max_new_tokens` shrinks so it reaps).
+    pub fn step<E: LayerExecutor>(&mut self, engine: &DecodeEngine<E>,
+                                  batcher: &mut Batcher, cfg: &ServeConfig,
+                                  metrics: &mut Metrics,
+                                  clock: &mut SimClock) -> usize {
         for st in batcher.active_mut().iter() {
-            runtimes
+            self.runtimes
                 .entry(st.request.id)
-                .or_insert_with(|| SeqRuntime::new(n_layers));
+                .or_insert_with(|| SeqRuntime::new(self.n_layers));
         }
 
-        // ---- one batched step over the active set --------------------
         let step_t0 = Instant::now();
         let states = batcher.active_mut();
         let ids: Vec<RequestId> =
@@ -104,14 +101,14 @@ pub fn serve<E: LayerExecutor>(engine: &DecodeEngine<E>,
         let feeds: Vec<u32> = states.iter().map(|st| st.next_feed()).collect();
         // hand the batch exclusive access to its runtimes
         let mut rts: Vec<SeqRuntime> =
-            ids.iter().map(|id| runtimes.remove(id).unwrap()).collect();
+            ids.iter().map(|id| self.runtimes.remove(id).unwrap()).collect();
 
         let outs = engine.step_batch(&mut rts, &feeds, cfg.batch_workers);
 
-        let step_dt = step_t0.elapsed();
-        let dt = step_dt.as_secs_f64();
+        let measured = step_t0.elapsed().as_secs_f64();
+        let dt = clock.advance_step(ids.len(), measured);
         for (id, rt) in ids.iter().zip(rts) {
-            runtimes.insert(*id, rt);
+            self.runtimes.insert(*id, rt);
         }
         let states = batcher.active_mut();
         for (i, out) in outs.into_iter().enumerate() {
@@ -133,13 +130,14 @@ pub fn serve<E: LayerExecutor>(engine: &DecodeEngine<E>,
                             st.pending_prefill = 0.0;
                             metrics.tokens_generated += 1;
                             metrics.token_latency.record(
-                                std::time::Duration::from_secs_f64(lat));
+                                Duration::from_secs_f64(lat));
                         }
                     } else {
                         st.generated.push(token);
                         st.token_latencies.push(dt);
                         metrics.tokens_generated += 1;
-                        metrics.token_latency.record(step_dt);
+                        metrics.token_latency.record(
+                            Duration::from_secs_f64(dt));
                     }
                 }
                 Err(e) => {
@@ -149,28 +147,120 @@ pub fn serve<E: LayerExecutor>(engine: &DecodeEngine<E>,
             }
         }
         metrics.steps += 1;
-        metrics.step_latency.record(step_dt);
+        metrics.step_latency.record(Duration::from_secs_f64(dt));
         metrics.record_batch(ids.len());
         batcher.note_step();
+        ids.len()
+    }
 
-        // ---- reap + release pages -------------------------------------
-        for st in batcher.reap() {
-            if let Some(mut rt) = runtimes.remove(&st.request.id) {
+    /// Remove finished sequences from the active set, release their
+    /// cache pages, and return their states (the caller converts them
+    /// to [`DecodeResult`]s — directly, or merged across preemptions).
+    pub fn reap<E: LayerExecutor>(&mut self, engine: &DecodeEngine<E>,
+                                  batcher: &mut Batcher)
+                                  -> Vec<RequestState> {
+        let done = batcher.reap();
+        for st in &done {
+            if let Some(mut rt) = self.runtimes.remove(&st.request.id) {
                 let mut pool = engine.pool.lock().unwrap();
                 rt.free(&mut pool);
             }
-            results.push(DecodeResult::from_state(&st));
-            metrics.requests_completed += 1;
         }
+        done
     }
 
-    metrics.wall_time = t0.elapsed();
+    /// Evict the active sequence at `idx` for recompute-resume: its
+    /// pages are released and its admission budget credited back; the
+    /// returned state carries the tokens generated so far (the resume
+    /// prompt is `prompt ⧺ generated` — see [`crate::serving::preempt`]).
+    pub fn evict<E: LayerExecutor>(&mut self, engine: &DecodeEngine<E>,
+                                   batcher: &mut Batcher, idx: usize)
+                                   -> RequestState {
+        let st = batcher.evict(idx);
+        if let Some(mut rt) = self.runtimes.remove(&st.request.id) {
+            let mut pool = engine.pool.lock().unwrap();
+            rt.free(&mut pool);
+        }
+        st
+    }
+}
+
+/// Pop and reject the head-of-line request that can never be admitted
+/// (its row requirement exceeds the whole pool budget), returning its
+/// empty result; `None` when the queue is empty.
+pub(crate) fn reject_blocked_head(batcher: &mut Batcher)
+                                  -> Option<DecodeResult> {
+    let req = batcher.pop_blocked()?;
+    eprintln!("[serve] request {} rejected: needs more pool rows than the \
+               pool holds", req.id);
+    Some(DecodeResult::rejected(req.id))
+}
+
+/// Shared run setup for both serve loops: build the admission batcher
+/// (the pool-row budget is **per layer** — a token consumes one row in
+/// every layer) and apply the config's fusion toggle (no-op on
+/// executors without a fused route, e.g. PJRT pending `[B>1]`
+/// executables).  Returns the batcher plus the cumulative
+/// fused-counter baseline for [`finish_run_metrics`].
+pub(crate) fn init_run<E: LayerExecutor>(engine: &DecodeEngine<E>,
+                                         cfg: &ServeConfig)
+                                         -> (Batcher, Option<(u64, u64)>) {
+    let n_layers = engine.executor.n_layers();
+    let pool_rows = cfg.pool_pages * cfg.page_size;
+    let batcher = Batcher::new(cfg.max_batch, pool_rows / n_layers.max(1));
+    engine.executor.set_fuse(cfg.fuse_buckets);
+    (batcher, engine.executor.fusion_stats())
+}
+
+/// Shared run teardown: executor-level fused counters are cumulative
+/// across runs, so the run's metrics report deltas against the
+/// [`init_run`] baseline.
+pub(crate) fn finish_run_metrics<E: LayerExecutor>(engine: &DecodeEngine<E>,
+                                                   fused0: Option<(u64, u64)>,
+                                                   metrics: &mut Metrics) {
     if let (Some((g0, j0)), Some((g1, j1))) =
         (fused0, engine.executor.fusion_stats())
     {
         metrics.fused_groups = g1.saturating_sub(g0);
         metrics.fused_jobs = j1.saturating_sub(j0);
     }
+}
+
+/// Drive all `requests` to completion on `engine` and return the report.
+pub fn serve<E: LayerExecutor>(engine: &DecodeEngine<E>,
+                               requests: Vec<DecodeRequest>,
+                               cfg: &ServeConfig) -> Result<ServeReport> {
+    let mut clock = SimClock::wall();
+    let (mut batcher, fused0) = init_run(engine, cfg);
+    let t0 = clock.now();
+    for r in requests {
+        batcher.enqueue(r, t0);
+    }
+
+    let mut metrics = Metrics::default();
+    let mut results = Vec::new();
+    let mut core = StepCore::new(engine.executor.n_layers());
+
+    while !batcher.idle() {
+        if batcher.admit(clock.now()) == 0 && batcher.active_len() == 0 {
+            // the active set is empty (all rows free), so the head
+            // request can never fit: reject it with an empty result and
+            // keep serving instead of deadlocking the loop
+            let Some(res) = reject_blocked_head(&mut batcher) else { break };
+            results.push(res);
+            continue;
+        }
+
+        core.step(engine, &mut batcher, cfg, &mut metrics, &mut clock);
+
+        for st in core.reap(engine, &mut batcher) {
+            results.push(DecodeResult::from_state(&st));
+            metrics.requests_completed += 1;
+        }
+    }
+
+    metrics.wall_time = clock.elapsed();
+    finish_run_metrics(engine, fused0, &mut metrics);
     Ok(ServeReport { results, metrics, batcher: batcher.stats() })
 }
 

@@ -1,10 +1,12 @@
 //! Workload generation for the serving benchmarks: synthetic request
-//! traces with Poisson arrivals and configurable prompt/generation
-//! length distributions — the standard serving-eval methodology
-//! (vLLM/Orca-style) applied to the decode-only AMLA stack.
+//! traces with Poisson or bursty on/off arrivals and configurable
+//! prompt/generation length distributions — the standard serving-eval
+//! methodology (vLLM/Orca-style) applied to the decode-only AMLA stack.
+//! The open-loop harness ([`crate::serving`]) consumes the arrival
+//! times; closed-loop benches strip them via [`requests_of`].
 
-use crate::numerics::Rng;
 use crate::coordinator::request::DecodeRequest;
+use crate::numerics::Rng;
 
 /// Distribution of a length parameter.
 #[derive(Debug, Clone, Copy)]
@@ -14,6 +16,10 @@ pub enum LenDist {
     Uniform(usize, usize),
     /// Geometric-ish with the given mean (clamped to [1, cap]).
     Geometric { mean: f64, cap: usize },
+    /// Log-normal (heavy-tailed): `exp(mu + sigma·Z)`, rounded up and
+    /// clamped to [1, cap].  Median ≈ `exp(mu)`; a few prompts land far
+    /// into the tail, which is what stresses open-loop admission.
+    LogNormal { mu: f64, sigma: f64, cap: usize },
 }
 
 impl LenDist {
@@ -21,15 +27,36 @@ impl LenDist {
         match *self {
             LenDist::Fixed(n) => n,
             LenDist::Uniform(lo, hi) => {
-                lo + (rng.next_u64() as usize) % (hi - lo + 1)
+                // widening-multiply bound (Lemire): no modulo bias
+                let span = (hi - lo + 1) as u64;
+                lo + ((rng.next_u64() as u128 * span as u128) >> 64) as usize
             }
             LenDist::Geometric { mean, cap } => {
                 let u = rng.uniform().max(1e-12);
                 let v = (-u.ln() * mean).ceil() as usize;
                 v.clamp(1, cap)
             }
+            LenDist::LogNormal { mu, sigma, cap } => {
+                let z = rng.gaussian() as f64;
+                let v = (mu + sigma * z).exp().ceil() as usize;
+                v.clamp(1, cap)
+            }
         }
     }
+}
+
+/// Arrival process of the trace.
+#[derive(Debug, Clone, Copy)]
+pub enum ArrivalProcess {
+    /// Memoryless: exponential inter-arrivals at the spec's `rate`.
+    Poisson,
+    /// Interrupted Poisson (on/off bursts): bursts of ~`burst_mean`
+    /// requests arrive at `rate / duty`, separated by idle gaps sized
+    /// so the **long-run rate stays `rate`** (idle gap mean =
+    /// `burst_mean · (1 − duty) / rate`).  `duty` ∈ (0, 1] is the
+    /// fraction of time spent bursting; `duty = 1` degenerates to
+    /// Poisson.
+    Bursty { burst_mean: f64, duty: f64 },
 }
 
 /// One synthetic trace entry: a request plus its arrival offset.
@@ -44,8 +71,9 @@ pub struct TracedRequest {
 #[derive(Debug, Clone, Copy)]
 pub struct WorkloadSpec {
     pub requests: usize,
-    /// Mean arrival rate (req/s) for the Poisson process.
+    /// Mean arrival rate (req/s) of the arrival process.
     pub rate: f64,
+    pub arrivals: ArrivalProcess,
     pub prompt_len: LenDist,
     pub gen_len: LenDist,
     pub seed: u64,
@@ -53,20 +81,42 @@ pub struct WorkloadSpec {
 
 impl Default for WorkloadSpec {
     fn default() -> Self {
-        Self { requests: 16, rate: 4.0, prompt_len: LenDist::Uniform(3, 10),
+        Self { requests: 16, rate: 4.0, arrivals: ArrivalProcess::Poisson,
+               prompt_len: LenDist::Uniform(3, 10),
                gen_len: LenDist::Geometric { mean: 12.0, cap: 48 },
                seed: 0xA17A }
     }
 }
 
-/// Generate a deterministic trace: exponential inter-arrivals at `rate`,
-/// lengths per the configured distributions.
+/// Exponential with the given mean (inverse-CDF of a uniform draw).
+fn exp_gap(rng: &mut Rng, mean: f64) -> f64 {
+    -rng.uniform().max(1e-12).ln() * mean
+}
+
+/// Generate a deterministic trace: inter-arrivals per the configured
+/// process, lengths per the configured distributions.
 pub fn generate_trace(spec: &WorkloadSpec) -> Vec<TracedRequest> {
     let mut rng = Rng::new(spec.seed);
     let mut t = 0.0;
     (0..spec.requests as u64)
         .map(|id| {
-            let gap = -rng.uniform().max(1e-12).ln() / spec.rate;
+            let gap = match spec.arrivals {
+                ArrivalProcess::Poisson => exp_gap(&mut rng, 1.0 / spec.rate),
+                ArrivalProcess::Bursty { burst_mean, duty } => {
+                    assert!(duty > 0.0 && duty <= 1.0,
+                            "bursty duty must be in (0, 1]");
+                    assert!(burst_mean >= 1.0, "burst_mean must be >= 1");
+                    let mut gap = exp_gap(&mut rng, duty / spec.rate);
+                    // geometric burst termination: after each arrival
+                    // the burst ends w.p. 1/burst_mean, inserting an
+                    // idle gap that restores the long-run rate
+                    if rng.uniform() < 1.0 / burst_mean {
+                        gap += exp_gap(&mut rng,
+                                       burst_mean * (1.0 - duty) / spec.rate);
+                    }
+                    gap
+                }
+            };
             t += gap;
             let p_len = spec.prompt_len.sample(&mut rng);
             let g_len = spec.gen_len.sample(&mut rng);
@@ -125,6 +175,9 @@ mod tests {
             assert!((3..=9).contains(&u));
             let g = LenDist::Geometric { mean: 5.0, cap: 20 }.sample(rng);
             assert!((1..=20).contains(&g));
+            let l = LenDist::LogNormal { mu: 2.0, sigma: 0.7, cap: 64 }
+                .sample(rng);
+            assert!((1..=64).contains(&l));
         });
     }
 
@@ -136,5 +189,100 @@ mod tests {
         let sum: usize = (0..n).map(|_| d.sample(&mut rng)).sum();
         let mean = sum as f64 / n as f64;
         assert!((mean - 8.0).abs() < 0.8, "mean {mean}");
+    }
+
+    #[test]
+    fn uniform_is_unbiased_across_span() {
+        // widening-multiply bound: the span must be covered uniformly —
+        // with 64k draws over 7 values, each bucket holds ~9362; the
+        // old `next_u64 % span` would still pass this, but the edges
+        // (lo and hi) must both be reachable and roughly equal
+        let mut rng = Rng::new(0xB1A5);
+        let d = LenDist::Uniform(3, 9);
+        let mut counts = [0usize; 7];
+        let n = 64_000;
+        for _ in 0..n {
+            let v = d.sample(&mut rng);
+            assert!((3..=9).contains(&v));
+            counts[v - 3] += 1;
+        }
+        let expect = n as f64 / 7.0;
+        for (i, &c) in counts.iter().enumerate() {
+            assert!((c as f64 - expect).abs() < expect * 0.05,
+                    "bucket {i}: {c} vs {expect}");
+        }
+    }
+
+    #[test]
+    fn prop_lognormal_deterministic_and_bounded() {
+        run_prop("lognormal", 100, |rng| {
+            let d = LenDist::LogNormal { mu: 1.5, sigma: 1.0, cap: 200 };
+            let mut r2 = rng.clone();
+            let a = d.sample(rng);
+            let b = d.sample(&mut r2);
+            assert_eq!(a, b, "same RNG state must give the same sample");
+            assert!((1..=200).contains(&a));
+        });
+    }
+
+    #[test]
+    fn lognormal_median_and_heavy_tail() {
+        let mut rng = Rng::new(17);
+        let d = LenDist::LogNormal { mu: 2.0, sigma: 0.8, cap: 10_000 };
+        let n = 20_000;
+        let mut xs: Vec<usize> = (0..n).map(|_| d.sample(&mut rng)).collect();
+        xs.sort_unstable();
+        let median = xs[n / 2] as f64;
+        // median of exp(mu + sigma Z) is exp(mu) ≈ 7.39 (ceil shifts up)
+        assert!((median - 2f64.exp()).abs() < 2.0, "median {median}");
+        // heavy tail: p99 well above the median
+        let p99 = xs[n * 99 / 100] as f64;
+        assert!(p99 > 3.0 * median, "p99 {p99} vs median {median}");
+    }
+
+    #[test]
+    fn bursty_long_run_rate_matches_spec() {
+        let spec = WorkloadSpec {
+            requests: 4000, rate: 10.0,
+            arrivals: ArrivalProcess::Bursty { burst_mean: 8.0, duty: 0.25 },
+            ..WorkloadSpec::default()
+        };
+        let trace = generate_trace(&spec);
+        for w in trace.windows(2) {
+            assert!(w[1].arrival > w[0].arrival);
+        }
+        let span = trace.last().unwrap().arrival;
+        let measured = spec.requests as f64 / span;
+        assert!((measured - 10.0).abs() < 2.5,
+                "long-run bursty rate {measured} (want ~10)");
+    }
+
+    #[test]
+    fn prop_bursty_is_burstier_than_poisson() {
+        // coefficient of variation of inter-arrival gaps: 1 for Poisson,
+        // well above 1 for on/off arrivals at equal long-run rate
+        run_prop("bursty_cv", 10, |rng| {
+            let seed = rng.next_u64();
+            let cv = |arrivals: ArrivalProcess| {
+                let spec = WorkloadSpec { requests: 3000, rate: 10.0,
+                                          arrivals, seed,
+                                          ..WorkloadSpec::default() };
+                let tr = generate_trace(&spec);
+                let gaps: Vec<f64> = tr.windows(2)
+                    .map(|w| w[1].arrival - w[0].arrival)
+                    .collect();
+                let mean = gaps.iter().sum::<f64>() / gaps.len() as f64;
+                let var = gaps.iter()
+                    .map(|g| (g - mean) * (g - mean))
+                    .sum::<f64>() / gaps.len() as f64;
+                var.sqrt() / mean
+            };
+            let cv_poisson = cv(ArrivalProcess::Poisson);
+            let cv_bursty = cv(ArrivalProcess::Bursty { burst_mean: 8.0,
+                                                        duty: 0.2 });
+            assert!((cv_poisson - 1.0).abs() < 0.25,
+                    "poisson CV {cv_poisson}");
+            assert!(cv_bursty > 1.5, "bursty CV {cv_bursty}");
+        });
     }
 }

@@ -32,6 +32,7 @@ pub mod pipeline;
 pub mod report;
 pub mod roofline;
 pub mod runtime;
+pub mod serving;
 pub mod simulator;
 pub mod testing;
 pub mod tiling;

@@ -2,6 +2,8 @@
 //!
 //! ```text
 //! amla serve      [--algo amla|base] [--requests N] [--max-batch B] ...
+//!                 [--open-loop] [--rate R] [--preempt on|off]
+//! amla sweep      [--rates R1,R2,...] [--requests N] ...
 //! amla reproduce  [--exp roofline|accuracy|perf|ablation|pipeline|all]
 //! amla simulate   [--sq 1|2] [--sk N] [--algo amla|base]
 //! amla accuracy   [--samples N] [--context S2]
@@ -13,10 +15,13 @@
 use anyhow::{bail, Result};
 
 use amla::config::{Algo, Args, ServeConfig};
-use amla::coordinator::{serve, DecodeEngine, DecodeRequest,
-                        PjrtLayerExecutor};
+use amla::coordinator::{generate_trace, serve, DecodeEngine, DecodeRequest,
+                        HostLayerExecutor, LenDist, PjrtLayerExecutor,
+                        WorkloadSpec};
 use amla::numerics::mla::MlaDims;
 use amla::report;
+use amla::serving::clock::{SimClock, StepCostModel};
+use amla::serving::{serve_open_loop, sweep, SweepConfig};
 use amla::simulator::{simulate_910, simulate_flashmla, FlashMlaModel,
                       KernelConfig};
 
@@ -31,6 +36,7 @@ fn run() -> Result<()> {
     let args = Args::from_env();
     match args.positional.first().map(String::as_str) {
         Some("serve") => cmd_serve(&args),
+        Some("sweep") => cmd_sweep(&args),
         Some("reproduce") => cmd_reproduce(&args),
         Some("simulate") => cmd_simulate(&args),
         Some("accuracy") => cmd_accuracy(&args),
@@ -61,6 +67,16 @@ USAGE:
   amla serve      [--requests N] [--algo amla|base] [--max-batch B]
                   [--workers W] [--batch-workers W] [--fuse-buckets on|off]
                   [--max-new-tokens T] [--artifacts DIR]
+                  [--open-loop] [--rate R] [--starvation-steps S]
+                  [--preempt on|off] [--virtual-clock]
+                  # --open-loop serves a Poisson trace arrival-driven:
+                  # requests appear at their arrival times, starved heads
+                  # may preempt (recompute eviction, bit-identical resume)
+  amla sweep      [--rates R1,R2,...] [--requests N] [--algo amla|base]
+                  [--max-batch B] [--preempt on|off]
+                  # open-loop rate sweep on the host substrate with a
+                  # deterministic virtual clock: TTFT/TPOT/queue-delay
+                  # percentiles vs offered rate + saturation throughput
   amla reproduce  [--exp roofline|accuracy|perf|ablation|pipeline|all]
                   [--samples N] [--context S2]
   amla simulate   [--sq 1|2] [--sk N] [--algo amla|base] [--batch B]
@@ -84,16 +100,81 @@ fn cmd_serve(args: &Args) -> Result<()> {
     eprintln!("[serve] compiled {compiled} layer executables");
     let engine = DecodeEngine::new(exec, cfg.pool_pages, cfg.page_size);
 
-    let requests: Vec<DecodeRequest> = (0..n_requests as u64)
-        .map(|i| {
-            let prompt: Vec<u32> =
-                (0..4 + (i % 5) as u32).map(|t| 100 + 17 * i as u32 + t).collect();
-            DecodeRequest::new(i, prompt, cfg.max_new_tokens)
-        })
-        .collect();
-    let report = serve(&engine, requests, &cfg)?;
-    println!("{}", report.summary());
-    println!("{}", report.metrics.render());
+    if cfg.open_loop {
+        let spec = WorkloadSpec {
+            requests: n_requests,
+            rate: cfg.rate,
+            gen_len: LenDist::Fixed(cfg.max_new_tokens),
+            ..WorkloadSpec::default()
+        };
+        let trace = generate_trace(&spec);
+        let mut clock = if args.has_flag("virtual-clock") {
+            SimClock::simulated(StepCostModel::default())
+        } else {
+            SimClock::wall()
+        };
+        eprintln!("[serve] open-loop: {n_requests} requests at {} req/s, \
+                   preempt {}, starvation {} steps, {} clock",
+                  cfg.rate, cfg.preempt, cfg.starvation_steps,
+                  if clock.is_virtual() { "virtual" } else { "wall" });
+        let report = serve_open_loop(&engine, trace, &cfg, &mut clock)?;
+        println!("{}", report.summary());
+        println!("{}", report.metrics.render());
+    } else {
+        let requests: Vec<DecodeRequest> = (0..n_requests as u64)
+            .map(|i| {
+                let prompt: Vec<u32> = (0..4 + (i % 5) as u32)
+                    .map(|t| 100 + 17 * i as u32 + t)
+                    .collect();
+                DecodeRequest::new(i, prompt, cfg.max_new_tokens)
+            })
+            .collect();
+        let report = serve(&engine, requests, &cfg)?;
+        println!("{}", report.summary());
+        println!("{}", report.metrics.render());
+    }
+    Ok(())
+}
+
+/// Open-loop rate sweep on the host substrate (bit-exact Rust numerics,
+/// no artifacts needed) under the deterministic virtual clock.
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let mut cfg = ServeConfig::default();
+    cfg.apply_args(args)?;
+    let n_requests = args.get_usize("requests", 32)?;
+    let n_layers = args.get_usize("layers", 2)?;
+    let rates: Vec<f64> = match args.get("rates") {
+        None => vec![1.0, 2.0, 4.0, 8.0, 16.0],
+        Some(s) => s
+            .split(',')
+            .map(|t| {
+                t.trim()
+                    .parse::<f64>()
+                    .map_err(|_| anyhow::anyhow!("--rates: bad number `{t}`"))
+            })
+            .collect::<Result<_>>()?,
+    };
+
+    let dims = MlaDims { d_model: 64, n1: 2, d_head: 16, q_rank: 32,
+                         d_latent: 24, d_rope: 8, sq: 1 };
+    let exec = HostLayerExecutor::new(dims, n_layers, cfg.algo, 32,
+                                      vec![64, 128], 7);
+    let engine = DecodeEngine::new(exec, cfg.pool_pages, cfg.page_size);
+
+    let spec = WorkloadSpec {
+        requests: n_requests,
+        rate: cfg.rate,
+        prompt_len: LenDist::Uniform(3, 10),
+        gen_len: LenDist::Geometric { mean: 12.0, cap: 48 },
+        ..WorkloadSpec::default()
+    };
+    let trace = generate_trace(&spec);
+    eprintln!("[sweep] {} requests, {} rates, max_batch {}, preempt {}",
+              n_requests, rates.len(), cfg.max_batch, cfg.preempt);
+    let sweep_cfg = SweepConfig { rates, ..SweepConfig::default() };
+    let report = sweep(&engine, &trace, spec.rate, &cfg, &sweep_cfg)?;
+    println!("{}", report.render_table());
+    println!("{}", report.to_json());
     Ok(())
 }
 

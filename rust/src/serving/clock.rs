@@ -1,0 +1,205 @@
+//! `SimClock`: the time source of the open-loop serving loop.
+//!
+//! Open-loop serving is *arrival-driven*: requests become visible at
+//! trace timestamps, so the loop needs a notion of "now" and of "how
+//! long did that batched step take".  Two modes:
+//!
+//! * **Wall** — real time.  `now()` is seconds since the clock was
+//!   built, a step costs its measured wall duration, and
+//!   [`SimClock::advance_to`] sleeps until the next arrival.  This is
+//!   the production mode.
+//! * **Virtual** — deterministic simulated time.  `now()` is an
+//!   accumulated `f64`, a step costs what the seeded
+//!   [`StepCostModel`] says (the measured wall time is ignored), and
+//!   `advance_to` jumps instantly.  Because every scheduling decision
+//!   of the open loop depends only on clock readings, token contents,
+//!   and step counts — all bit-identical across worker counts and
+//!   fusion settings — a virtual-clock run is **bit-reproducible**,
+//!   which is what lets CI pin open-loop golden traces.
+//!
+//! The closed-loop `serve` path uses a Wall clock internally, so both
+//! loops share one stepping core
+//! ([`crate::coordinator::scheduler::StepCore`]) and one timing seam.
+
+use std::time::{Duration, Instant};
+
+use crate::numerics::Rng;
+
+/// Deterministic per-step cost model for the virtual clock: a fixed
+/// overhead plus a marginal cost per active sequence, optionally
+/// perturbed by seeded multiplicative jitter (one draw per step, so the
+/// cost stream is reproducible from the seed).
+#[derive(Debug, Clone)]
+pub struct StepCostModel {
+    /// Fixed cost per batched step (s).
+    pub base_s: f64,
+    /// Marginal cost per active sequence in the step (s).
+    pub per_seq_s: f64,
+    /// Multiplicative jitter amplitude in `[0, 1)`: each step's cost is
+    /// scaled by `1 + jitter * u`, `u` uniform in `[-1, 1]`.  0 = none.
+    jitter: f64,
+    rng: Rng,
+}
+
+impl StepCostModel {
+    /// Jitter-free model (the default for tests: strictly deterministic
+    /// *and* monotone in batch size).
+    pub fn new(base_s: f64, per_seq_s: f64) -> Self {
+        Self { base_s, per_seq_s, jitter: 0.0, rng: Rng::new(1) }
+    }
+
+    /// Enable seeded multiplicative jitter.
+    pub fn with_jitter(mut self, jitter: f64, seed: u64) -> Self {
+        assert!((0.0..1.0).contains(&jitter), "jitter must be in [0, 1)");
+        self.jitter = jitter;
+        self.rng = Rng::new(seed);
+        self
+    }
+
+    /// Cost (s) of one batched step over `batch` sequences.  Consumes
+    /// one RNG draw per call when jitter is enabled.
+    pub fn cost(&mut self, batch: usize) -> f64 {
+        let base = self.base_s + self.per_seq_s * batch as f64;
+        if self.jitter == 0.0 {
+            base
+        } else {
+            base * (1.0 + self.jitter * (2.0 * self.rng.uniform() - 1.0))
+        }
+    }
+}
+
+impl Default for StepCostModel {
+    /// 1 ms per step + 250 µs per sequence — roughly the host-substrate
+    /// shape at the test dims; absolute scale is irrelevant to the
+    /// simulated schedules, only ratios to arrival gaps matter.
+    fn default() -> Self {
+        Self::new(1e-3, 2.5e-4)
+    }
+}
+
+/// Wall-clock or deterministic virtual time (see module docs).
+#[derive(Debug, Clone)]
+pub enum SimClock {
+    Wall { start: Instant },
+    Virtual { now_s: f64, model: StepCostModel },
+}
+
+impl SimClock {
+    pub fn wall() -> Self {
+        SimClock::Wall { start: Instant::now() }
+    }
+
+    pub fn simulated(model: StepCostModel) -> Self {
+        SimClock::Virtual { now_s: 0.0, model }
+    }
+
+    pub fn is_virtual(&self) -> bool {
+        matches!(self, SimClock::Virtual { .. })
+    }
+
+    /// Seconds since the clock started.
+    pub fn now(&self) -> f64 {
+        match self {
+            SimClock::Wall { start } => start.elapsed().as_secs_f64(),
+            SimClock::Virtual { now_s, .. } => *now_s,
+        }
+    }
+
+    /// Account one batched step over `batch` sequences that measured
+    /// `measured_s` of wall time; returns the duration the run should
+    /// book for it.  Wall mode books the measurement (time advanced by
+    /// itself); Virtual mode ignores the measurement and advances `now`
+    /// by the modeled cost.
+    pub fn advance_step(&mut self, batch: usize, measured_s: f64) -> f64 {
+        match self {
+            SimClock::Wall { .. } => measured_s,
+            SimClock::Virtual { now_s, model } => {
+                let dt = model.cost(batch);
+                *now_s += dt;
+                dt
+            }
+        }
+    }
+
+    /// Move "now" forward to `t_s` (no-op if already past): the open
+    /// loop's idle jump to the next arrival.  Wall mode sleeps the
+    /// difference; Virtual mode jumps instantly.
+    pub fn advance_to(&mut self, t_s: f64) {
+        match self {
+            SimClock::Wall { start } => {
+                let now = start.elapsed().as_secs_f64();
+                if t_s > now {
+                    std::thread::sleep(Duration::from_secs_f64(t_s - now));
+                }
+            }
+            SimClock::Virtual { now_s, .. } => {
+                if t_s > *now_s {
+                    *now_s = t_s;
+                }
+            }
+        }
+    }
+
+    /// Total elapsed clock time as a `Duration` (for `Metrics::wall_time`).
+    pub fn elapsed(&self) -> Duration {
+        match self {
+            SimClock::Wall { start } => start.elapsed(),
+            SimClock::Virtual { now_s, .. } => Duration::from_secs_f64(*now_s),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn virtual_clock_is_deterministic() {
+        let run = || {
+            let mut c = SimClock::simulated(
+                StepCostModel::new(1e-3, 1e-4).with_jitter(0.2, 42));
+            let mut ts = Vec::new();
+            for b in [1usize, 4, 2, 8, 1] {
+                c.advance_step(b, 123.456); // measured time must be ignored
+                ts.push(c.now().to_bits());
+            }
+            ts
+        };
+        assert_eq!(run(), run(), "virtual time must be bit-reproducible");
+    }
+
+    #[test]
+    fn virtual_advance_to_jumps_forward_only() {
+        let mut c = SimClock::simulated(StepCostModel::new(1e-3, 0.0));
+        c.advance_to(2.5);
+        assert_eq!(c.now(), 2.5);
+        c.advance_to(1.0); // never backwards
+        assert_eq!(c.now(), 2.5);
+        let dt = c.advance_step(3, 99.0);
+        assert_eq!(dt, 1e-3);
+        assert_eq!(c.now(), 2.5 + 1e-3);
+        assert!(c.is_virtual());
+        assert!((c.elapsed().as_secs_f64() - c.now()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cost_scales_with_batch() {
+        let mut m = StepCostModel::new(1e-3, 1e-4);
+        assert!(m.cost(8) > m.cost(1));
+        assert_eq!(m.cost(0), 1e-3);
+    }
+
+    #[test]
+    fn wall_clock_books_measured_time() {
+        let mut c = SimClock::wall();
+        assert!(!c.is_virtual());
+        assert_eq!(c.advance_step(4, 0.125), 0.125);
+        assert!(c.now() >= 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "jitter")]
+    fn jitter_amplitude_validated() {
+        StepCostModel::default().with_jitter(1.5, 1);
+    }
+}

@@ -1,0 +1,410 @@
+//! Open-loop serving: arrival-driven admission, recompute preemption,
+//! and the rate-sweep SLO harness.
+//!
+//! The closed-loop driver ([`crate::coordinator::serve`]) enqueues every
+//! request up front — fine for throughput benchmarks, useless for load
+//! curves.  This subsystem serves **arrival-timed traces open-loop**:
+//! a [`crate::coordinator::TracedRequest`] becomes visible to admission
+//! only at its arrival time, the queue grows when the engine falls
+//! behind the offered rate, and TTFT/TPOT/queue-delay distributions vs
+//! offered rate (the Orca/vLLM serving-eval methodology the workload
+//! generator targets) come out of [`sweep`].
+//!
+//! Both loops share one engine-stepping path —
+//! [`crate::coordinator::scheduler::StepCore`] — so open-loop serving
+//! is an *admission policy*, not a fork of the decode machinery.
+//!
+//! ## Virtual-clock semantics
+//!
+//! Time flows through [`clock::SimClock`].  In **wall** mode the loop
+//! is real-time: arrivals are slept for, steps cost their measured
+//! duration.  In **virtual** mode `now` is a deterministic `f64`:
+//! arrival release, admission stamps, starvation counting, and step
+//! durations all derive from the seeded [`clock::StepCostModel`], and
+//! the engine's token streams are bit-identical for every worker count
+//! and fusion setting — so an entire open-loop run (tokens, completion
+//! order, eviction decisions, makespan) is **bit-reproducible**.  The
+//! golden trace in `rust/tests/open_loop_golden.rs` pins exactly this
+//! across `workers ∈ {1,4} × fuse on/off × preempt on/off`.
+//!
+//! ## The preemption bit-identity contract
+//!
+//! Preemption is **recompute-style** ([`preempt`]): when the queue head
+//! has starved past [`crate::config::ServeConfig::starvation_steps`]
+//! and admission is blocked, the active sequence with the most
+//! remaining budget is evicted — pages released, admission budget
+//! credited — and re-enqueued with `prompt ⧺ generated` as its resume
+//! prompt.  Only victims with strictly more remaining work than the
+//! starved head's total need are eligible (the anti-livelock progress
+//! guard of [`preempt::select_victim`]); otherwise the head waits
+//! FIFO-style.  Because decode is deterministic and prefill replays the
+//! identical token sequence into the identical cache layout, the
+//! resumed sequence **must emit bit-identical remaining tokens**: an
+//! evicted-and-resumed request's merged token stream equals an
+//! un-preempted run's exactly.  This is a hard contract like the fused
+//! bit-identity contract in [`crate::coordinator`] — a divergence is a
+//! numerics bug, never an acceptable scheduling artifact.  Pinned by
+//! `preemption_is_bit_identical_to_unpreempted_run` below and the
+//! open-loop golden trace.
+
+pub mod clock;
+pub mod preempt;
+pub mod sweep;
+
+use std::collections::VecDeque;
+
+use anyhow::Result;
+
+use crate::config::ServeConfig;
+use crate::coordinator::batcher::BatcherStats;
+use crate::coordinator::engine::{DecodeEngine, LayerExecutor};
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::request::{DecodeResult, RequestId};
+use crate::coordinator::scheduler::{finish_run_metrics, init_run, StepCore};
+use crate::coordinator::workload::TracedRequest;
+use clock::SimClock;
+use preempt::{select_victim, ResumeLedger};
+
+pub use clock::StepCostModel;
+pub use sweep::{sweep, RatePoint, ServeLoadReport, SweepConfig};
+
+/// Outcome of one [`serve_open_loop`] run.
+#[derive(Debug)]
+pub struct OpenLoopReport {
+    /// Per-request results, in completion order; preempted requests are
+    /// merged across evictions (full token stream, first-admission
+    /// queue delay).
+    pub results: Vec<DecodeResult>,
+    /// Request ids in the order they completed (the golden-trace pin
+    /// alongside the token streams).
+    pub completion_order: Vec<RequestId>,
+    pub metrics: Metrics,
+    pub batcher: BatcherStats,
+    /// Clock time (s) from trace start to the last completion.
+    pub makespan: f64,
+}
+
+impl OpenLoopReport {
+    pub fn summary(&self) -> String {
+        format!(
+            "{} requests, {} tokens in {:.2}s clock — {:.1} tok/s, \
+             {} preemptions, queued peak {}, mean batch {:.2}",
+            self.metrics.requests_completed,
+            self.metrics.tokens_generated,
+            self.makespan,
+            if self.makespan > 0.0 {
+                self.metrics.tokens_generated as f64 / self.makespan
+            } else {
+                0.0
+            },
+            self.metrics.preemptions,
+            self.batcher.queued_peak,
+            self.batcher.mean_occupancy())
+    }
+}
+
+/// Serve an arrival-timed `trace` open-loop on `engine` under `clock`.
+///
+/// Requests enter the admission queue at their arrival times (the trace
+/// is sorted by arrival internally; ids must be unique).  When the
+/// engine is idle and no request is visible yet, the clock jumps (or
+/// sleeps) to the next arrival.  With [`ServeConfig::preempt`] on,
+/// head-of-line starvation past [`ServeConfig::starvation_steps`]
+/// triggers recompute eviction (see module docs).
+pub fn serve_open_loop<E: LayerExecutor>(engine: &DecodeEngine<E>,
+                                         mut trace: Vec<TracedRequest>,
+                                         cfg: &ServeConfig,
+                                         clock: &mut SimClock)
+                                         -> Result<OpenLoopReport> {
+    let (mut batcher, fused0) = init_run(engine, cfg);
+    trace.sort_by(|a, b| {
+        a.arrival
+            .partial_cmp(&b.arrival)
+            .unwrap()
+            .then(a.request.id.cmp(&b.request.id))
+    });
+    let mut pending: VecDeque<TracedRequest> = trace.into();
+
+    let mut metrics = Metrics::default();
+    let mut results = Vec::new();
+    let mut completion_order = Vec::new();
+    let mut ledger = ResumeLedger::default();
+    let mut core = StepCore::new(engine.executor.n_layers());
+
+    while !batcher.idle() || !pending.is_empty() {
+        let now = clock.now();
+        // release every request that has arrived by `now`; its queue
+        // clock starts at the *trace* arrival, not the release instant
+        while pending.front().is_some_and(|t| t.arrival <= now) {
+            let tr = pending.pop_front().unwrap();
+            batcher.enqueue(tr.request, tr.arrival);
+        }
+        if batcher.idle() {
+            // engine drained before the next arrival: jump to it
+            let next = pending.front().expect("loop invariant").arrival;
+            clock.advance_to(next);
+            continue;
+        }
+
+        let admitted = batcher.admit(now);
+        if admitted == 0 && batcher.active_len() == 0 {
+            // all rows free yet the head cannot be admitted: it can
+            // never fit — reject it (returning any pre-eviction tokens)
+            let Some(req) = batcher.pop_blocked() else { break };
+            eprintln!("[serve-open] request {} rejected: needs more pool \
+                       rows than the pool holds", req.id);
+            completion_order.push(req.id);
+            results.push(ledger.reject(req.id));
+            continue;
+        }
+
+        if cfg.preempt
+            && admitted == 0
+            && batcher.active_len() > 0
+            && batcher.head_starved(cfg.starvation_steps as u64)
+            && batcher.head_can_ever_fit()
+        {
+            // anti-livelock progress guard: only evict a sequence with
+            // strictly more remaining work than the starved head needs
+            // in total (see preempt::select_victim)
+            let head_need = batcher.head_request()
+                .map(|r| r.prompt.len() + r.max_new_tokens)
+                .unwrap_or(usize::MAX);
+            if let Some(victim) = select_victim(batcher.active(), head_need) {
+                let st = core.evict(engine, &mut batcher, victim);
+                metrics.preemptions += 1;
+                let resume = ledger.note_eviction(st);
+                batcher.enqueue(resume, now);
+                batcher.admit(now);
+            }
+        }
+
+        core.step(engine, &mut batcher, cfg, &mut metrics, clock);
+
+        for st in core.reap(engine, &mut batcher) {
+            completion_order.push(st.request.id);
+            results.push(ledger.finish(&st));
+            metrics.requests_completed += 1;
+        }
+    }
+
+    let makespan = clock.now();
+    metrics.wall_time = clock.elapsed();
+    finish_run_metrics(engine, fused0, &mut metrics);
+    Ok(OpenLoopReport { results, completion_order, metrics,
+                        batcher: batcher.stats(), makespan })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Algo;
+    use crate::coordinator::engine::HostLayerExecutor;
+    use crate::coordinator::request::DecodeRequest;
+    use crate::coordinator::{serve, LenDist, WorkloadSpec};
+    use crate::numerics::mla::MlaDims;
+
+    fn engine() -> DecodeEngine<HostLayerExecutor> {
+        let dims = MlaDims { d_model: 48, n1: 2, d_head: 12, q_rank: 24,
+                             d_latent: 16, d_rope: 8, sq: 1 };
+        let exec = HostLayerExecutor::new(dims, 2, Algo::Amla, 32,
+                                          vec![32, 64], 11);
+        DecodeEngine::new(exec, 512, 8)
+    }
+
+    fn vclock() -> SimClock {
+        SimClock::simulated(StepCostModel::new(0.01, 0.0))
+    }
+
+    /// pool budget rows/layer = pool_pages * page_size / n_layers
+    fn cfg(pool_pages: usize, preempt: bool, workers: usize) -> ServeConfig {
+        ServeConfig { max_batch: 4, workers, batch_workers: workers,
+                      pool_pages, page_size: 8, preempt,
+                      starvation_steps: 4,
+                      ..ServeConfig::default() }
+    }
+
+    /// Two long residents admitted at t=0 fill a 56-row budget; a small
+    /// request arriving at t=0.05 starves behind them.
+    fn pressured_trace() -> Vec<TracedRequest> {
+        let mk = |id, prompt: Vec<u32>, gen, arrival| TracedRequest {
+            request: DecodeRequest::new(id, prompt, gen),
+            arrival,
+        };
+        vec![
+            mk(0, vec![1, 2, 3], 24, 0.0),       // 27 rows
+            mk(1, vec![4, 5, 6, 7], 24, 0.0),    // 28 rows
+            mk(2, vec![8, 9], 4, 0.05),          // 6 rows, starved
+        ]
+    }
+
+    fn tokens_by_id(results: &[DecodeResult]) -> Vec<(RequestId, Vec<u32>)> {
+        let mut t: Vec<_> = results.iter()
+            .map(|r| (r.id, r.tokens.clone()))
+            .collect();
+        t.sort_by_key(|(id, _)| *id);
+        t
+    }
+
+    #[test]
+    fn open_loop_completes_a_generated_trace() {
+        let spec = WorkloadSpec { requests: 12, rate: 40.0,
+                                  gen_len: LenDist::Fixed(5),
+                                  ..WorkloadSpec::default() };
+        let trace = crate::coordinator::generate_trace(&spec);
+        let eng = engine();
+        let mut clock = vclock();
+        let report =
+            serve_open_loop(&eng, trace.clone(), &cfg(128, true, 2),
+                            &mut clock).unwrap();
+        assert_eq!(report.results.len(), 12);
+        assert_eq!(report.metrics.requests_completed, 12);
+        for r in &report.results {
+            assert_eq!(r.tokens.len(), 5, "request {} incomplete", r.id);
+            assert!(r.queue_delay >= 0.0);
+            assert!(r.ttft >= r.queue_delay);
+        }
+        assert_eq!(report.completion_order.len(), 12);
+        assert!(report.makespan >= trace.last().unwrap().arrival,
+                "makespan must cover the last arrival");
+        assert_eq!(eng.pool.lock().unwrap().stats().allocated_pages, 0,
+                   "pages leaked");
+    }
+
+    #[test]
+    fn open_loop_tokens_match_closed_loop() {
+        // same request set, no pool pressure: arrival timing changes the
+        // schedule but never the per-request token streams
+        let trace = pressured_trace();
+        let requests: Vec<_> =
+            trace.iter().map(|t| t.request.clone()).collect();
+        let open = {
+            let eng = engine();
+            let mut clock = vclock();
+            serve_open_loop(&eng, trace, &cfg(128, false, 2), &mut clock)
+                .unwrap()
+        };
+        let closed = {
+            let eng = engine();
+            serve(&eng, requests, &cfg(128, false, 2)).unwrap()
+        };
+        assert_eq!(tokens_by_id(&open.results),
+                   tokens_by_id(&closed.results));
+        assert_eq!(open.metrics.preemptions, 0);
+    }
+
+    #[test]
+    fn preemption_is_bit_identical_to_unpreempted_run() {
+        // 56-row budget: requests 0+1 fill it, request 2 starves, the
+        // preemptor evicts the longest-remaining resident and resumes it
+        // by recompute — merged token streams must equal the
+        // unconstrained (never-preempted) run's bit-for-bit
+        let constrained = {
+            let eng = engine();
+            let mut clock = vclock();
+            serve_open_loop(&eng, pressured_trace(), &cfg(14, true, 2),
+                            &mut clock).unwrap()
+        };
+        assert!(constrained.metrics.preemptions > 0,
+                "pool pressure must actually trigger eviction");
+        assert_eq!(constrained.batcher.preempted,
+                   constrained.metrics.preemptions);
+        let unconstrained = {
+            let eng = engine();
+            let mut clock = vclock();
+            serve_open_loop(&eng, pressured_trace(), &cfg(128, true, 2),
+                            &mut clock).unwrap()
+        };
+        assert_eq!(unconstrained.metrics.preemptions, 0);
+        assert_eq!(tokens_by_id(&constrained.results),
+                   tokens_by_id(&unconstrained.results),
+                   "recompute-resumed tokens diverged");
+        // every request still completed exactly once
+        assert_eq!(constrained.results.len(), 3);
+        let eng = engine();
+        let mut clock = vclock();
+        let again = serve_open_loop(&eng, pressured_trace(),
+                                    &cfg(14, true, 2), &mut clock).unwrap();
+        assert_eq!(again.completion_order, constrained.completion_order);
+    }
+
+    #[test]
+    fn preemption_off_blocks_head_of_line() {
+        // same pressure, preempt off: request 2 must wait for a resident
+        // to finish (FIFO head-of-line), but everything still completes
+        let eng = engine();
+        let mut clock = vclock();
+        let report = serve_open_loop(&eng, pressured_trace(),
+                                     &cfg(14, false, 2), &mut clock)
+            .unwrap();
+        assert_eq!(report.metrics.preemptions, 0);
+        assert_eq!(report.results.len(), 3);
+        assert_eq!(tokens_by_id(&report.results).len(), 3);
+        assert_eq!(eng.pool.lock().unwrap().stats().allocated_pages, 0);
+    }
+
+    #[test]
+    fn virtual_clock_run_is_deterministic_across_configs() {
+        let run = |workers: usize, fuse: bool| {
+            let eng = engine();
+            let mut clock = vclock();
+            let mut c = cfg(14, true, workers);
+            c.fuse_buckets = fuse;
+            let r = serve_open_loop(&eng, pressured_trace(), &c,
+                                    &mut clock).unwrap();
+            (tokens_by_id(&r.results), r.completion_order,
+             r.makespan.to_bits(), r.metrics.preemptions)
+        };
+        let reference = run(1, false);
+        for (workers, fuse) in [(1, true), (4, false), (4, true)] {
+            assert_eq!(run(workers, fuse), reference,
+                       "workers={workers} fuse={fuse} diverged");
+        }
+    }
+
+    #[test]
+    fn oversized_request_rejected_open_loop() {
+        let trace = vec![
+            TracedRequest { request: DecodeRequest::new(0, vec![1; 60], 60),
+                            arrival: 0.0 },
+            TracedRequest { request: DecodeRequest::new(1, vec![1, 2], 3),
+                            arrival: 0.1 },
+        ];
+        let eng = engine();
+        let mut clock = vclock();
+        let report = serve_open_loop(&eng, trace, &cfg(14, true, 1),
+                                     &mut clock).unwrap();
+        let toks = tokens_by_id(&report.results);
+        assert_eq!(toks.len(), 2);
+        assert!(toks[0].1.is_empty(), "oversized request served?");
+        assert_eq!(toks[1].1.len(), 3);
+        assert_eq!(report.metrics.requests_completed, 1);
+    }
+
+    #[test]
+    fn queue_delay_reflects_starvation() {
+        // preempt off: the starved request's queue delay spans the
+        // resident generation it waited out
+        let eng = engine();
+        let mut clock = vclock();
+        let report = serve_open_loop(&eng, pressured_trace(),
+                                     &cfg(14, false, 2), &mut clock)
+            .unwrap();
+        let toks = tokens_by_id(&report.results);
+        assert_eq!(toks[2].0, 2);
+        let r2 = report.results.iter().find(|r| r.id == 2).unwrap();
+        assert!(r2.queue_delay > 0.05,
+                "starved request reported queue delay {}", r2.queue_delay);
+    }
+
+    #[test]
+    fn report_summary_renders() {
+        let eng = engine();
+        let mut clock = vclock();
+        let report = serve_open_loop(&eng, pressured_trace(),
+                                     &cfg(128, true, 1), &mut clock)
+            .unwrap();
+        let s = report.summary();
+        assert!(s.contains("3 requests"), "{s}");
+    }
+}

@@ -1,0 +1,289 @@
+//! Recompute-style preemption: eviction policy + the resume ledger.
+//!
+//! When the open-loop head-of-line request has starved past
+//! `ServeConfig::starvation_steps` and admission is pool-blocked, the
+//! scheduler evicts the active sequence with the **most remaining
+//! budget** (prompt tokens still to feed plus tokens still to
+//! generate), releases its pages, and re-enqueues it with
+//! `prompt ⧺ generated` as the resume prompt.  Decode is deterministic,
+//! so the resumed sequence replays its exact KV state during re-prefill
+//! and then emits **bit-identical** remaining tokens — the recompute
+//! contract pinned by `preemption_is_bit_identical_to_unpreempted_run`
+//! in [`crate::serving`]'s tests and by the open-loop golden trace
+//! (`rust/tests/open_loop_golden.rs`).
+//!
+//! The [`ResumeLedger`] carries what eviction would otherwise lose:
+//! tokens already generated, their latencies, and the first-admission
+//! queue delay, merging them into the final [`DecodeResult`] when the
+//! resumed request completes.
+
+use std::collections::HashMap;
+
+use crate::coordinator::request::{DecodeRequest, DecodeResult, RequestId,
+                                  RequestState};
+
+/// Pick the eviction victim among `active`: the sequence with the most
+/// remaining engine steps ([`RequestState::remaining_steps`]), breaking
+/// ties toward the larger request id (the younger admission) so the
+/// choice is deterministic.
+///
+/// **Progress guard (anti-livelock)**: only sequences with *strictly
+/// more* than `min_remaining` steps left are eligible, where the caller
+/// passes the starved head's total step need.  Recompute resets a
+/// victim's progress (its whole resume prompt re-prefills), so without
+/// the guard a starvation threshold shorter than the typical service
+/// time would rotate requests through the pool forever, none ever
+/// finishing.  With it, every eviction replaces a sequence by one with
+/// strictly less remaining work, so some sequence always runs to
+/// completion and the system drains.  `None` if no sequence qualifies
+/// (the starved head then waits FIFO-style).
+pub fn select_victim(active: &[RequestState], min_remaining: usize)
+                     -> Option<usize> {
+    active.iter()
+        .enumerate()
+        .filter(|(_, st)| !st.done() && st.remaining_steps() > min_remaining)
+        .max_by_key(|(_, st)| (st.remaining_steps(), st.request.id))
+        .map(|(i, _)| i)
+}
+
+/// Carry-over state of a preempted request between its evictions and
+/// final completion.
+#[derive(Debug, Default)]
+struct Carried {
+    tokens: Vec<u32>,
+    latencies: Vec<f64>,
+    /// Queue delay of the *first* admission (later re-admissions are a
+    /// scheduling artifact, not client-visible queueing).
+    queue_delay: f64,
+    /// Time a still-first-token-less request has lost to evictions:
+    /// prefill service discarded by recompute plus re-queue waits.  Part
+    /// of the request's true TTFT — without it, a sequence evicted
+    /// mid-prefill would report only its final admission's prefill
+    /// latency and the sweep would show preemption as nearly free.
+    lost_ttft: f64,
+}
+
+/// Accumulates per-request state across recompute evictions and merges
+/// it back into the final result.
+#[derive(Debug, Default)]
+pub struct ResumeLedger {
+    carried: HashMap<RequestId, Carried>,
+}
+
+impl ResumeLedger {
+    /// Record the eviction of `st` and build its resume request:
+    /// `prompt ⧺ generated` with the un-generated token budget.  The
+    /// tokens/latencies generated so far move into the ledger; for a
+    /// request evicted before its first token, the discarded prefill
+    /// service time and (on repeat evictions) the re-queue wait accrue
+    /// into `Carried::lost_ttft` so the final TTFT stays honest.
+    pub fn note_eviction(&mut self, st: RequestState) -> DecodeRequest {
+        let id = st.request.id;
+        let first_eviction = !self.carried.contains_key(&id);
+        let entry = self.carried.entry(id).or_insert_with(|| Carried {
+            queue_delay: st.queue_delay(),
+            ..Carried::default()
+        });
+        if entry.tokens.is_empty() && st.generated.is_empty() {
+            if !first_eviction {
+                // this admission's queue wait was re-queueing after an
+                // earlier eviction, still pre-first-token
+                entry.lost_ttft += st.queue_delay();
+            }
+            entry.lost_ttft += st.pending_prefill;
+        }
+        let remaining =
+            st.request.max_new_tokens.saturating_sub(st.generated.len());
+        let mut prompt = st.request.prompt;
+        prompt.extend_from_slice(&st.generated);
+        entry.tokens.extend_from_slice(&st.generated);
+        entry.latencies.extend_from_slice(&st.token_latencies);
+        DecodeRequest::new(id, prompt, remaining)
+    }
+
+    /// Build the final result for a reaped state, merging any carried
+    /// pre-eviction tokens/latencies in front of the resumed run's.
+    /// If every eviction happened before the first token, the final
+    /// TTFT additionally covers the lost prefill time and the last
+    /// re-queue wait (`first-token time − arrival`, exact under the
+    /// virtual clock).
+    pub fn finish(&mut self, st: &RequestState) -> DecodeResult {
+        match self.carried.remove(&st.request.id) {
+            None => DecodeResult::from_state(st),
+            Some(mut carried) => {
+                let ttft_extra = if carried.tokens.is_empty() {
+                    carried.lost_ttft + st.queue_delay()
+                } else {
+                    0.0 // first token predates eviction: TTFT already set
+                };
+                carried.tokens.extend_from_slice(&st.generated);
+                carried.latencies.extend_from_slice(&st.token_latencies);
+                let mut res =
+                    DecodeResult::from_parts(st.request.id, carried.tokens,
+                                             &carried.latencies,
+                                             carried.queue_delay);
+                res.ttft += ttft_extra;
+                res
+            }
+        }
+    }
+
+    /// Result for a request rejected at (re-)admission: tokens carried
+    /// from before any eviction are still returned to the client.
+    pub fn reject(&mut self, id: RequestId) -> DecodeResult {
+        match self.carried.remove(&id) {
+            None => DecodeResult::rejected(id),
+            Some(c) => DecodeResult::from_parts(id, c.tokens, &c.latencies,
+                                                c.queue_delay),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn state(id: RequestId, prompt: usize, max_new: usize,
+             generated: &[u32]) -> RequestState {
+        let mut st = RequestState::new(
+            DecodeRequest::new(id, vec![1; prompt], max_new));
+        st.prompt_consumed = prompt; // past prefill
+        st.generated = generated.to_vec();
+        st.token_latencies = vec![0.01; generated.len()];
+        st
+    }
+
+    #[test]
+    fn victim_is_most_remaining_work() {
+        let active = vec![
+            state(0, 2, 10, &[1, 2, 3]), // 7 remaining
+            state(1, 2, 20, &[1]),       // 19 remaining
+            state(2, 2, 5, &[1, 2]),     // 3 remaining
+        ];
+        assert_eq!(select_victim(&active, 0), Some(1));
+    }
+
+    #[test]
+    fn victim_tie_breaks_to_larger_id_and_skips_done() {
+        let active = vec![
+            state(3, 2, 5, &[1]),            // 4 remaining
+            state(7, 2, 5, &[1]),            // 4 remaining, larger id
+            state(9, 2, 2, &[1, 2]),         // done
+        ];
+        assert_eq!(select_victim(&active, 0), Some(1));
+        let all_done = vec![state(0, 2, 1, &[4])];
+        assert_eq!(select_victim(&all_done, 0), None);
+        assert_eq!(select_victim(&[], 0), None);
+    }
+
+    #[test]
+    fn progress_guard_blocks_short_victims() {
+        // head needs 6 steps; only sequences with > 6 remaining qualify
+        let active = vec![
+            state(0, 2, 6, &[1, 2]),     // 4 remaining: protected
+            state(1, 2, 30, &[1]),       // 29 remaining: eligible
+        ];
+        assert_eq!(select_victim(&active, 6), Some(1));
+        // nobody has more work than the head: FIFO wait, no eviction
+        assert_eq!(select_victim(&active, 29), None);
+    }
+
+    #[test]
+    fn eviction_builds_resume_prompt_and_budget() {
+        let mut ledger = ResumeLedger::default();
+        let mut st = state(5, 3, 10, &[41, 42]);
+        st.enqueued_s = 1.0;
+        st.started_s = Some(1.5);
+        let resume = ledger.note_eviction(st);
+        assert_eq!(resume.id, 5);
+        assert_eq!(resume.prompt, vec![1, 1, 1, 41, 42]);
+        assert_eq!(resume.max_new_tokens, 8);
+        assert_eq!(ledger.carried.len(), 1);
+    }
+
+    #[test]
+    fn finish_merges_tokens_latencies_and_first_queue_delay() {
+        let mut ledger = ResumeLedger::default();
+        let mut first = state(2, 2, 4, &[10, 11]);
+        first.enqueued_s = 0.0;
+        first.started_s = Some(0.5);
+        first.token_latencies = vec![0.2, 0.03];
+        let resume = ledger.note_eviction(first);
+
+        // the resumed run generates the remaining 2 tokens
+        let mut resumed = RequestState::new(resume);
+        resumed.prompt_consumed = resumed.request.prompt.len();
+        resumed.generated = vec![12, 13];
+        resumed.token_latencies = vec![0.15, 0.03];
+        resumed.enqueued_s = 3.0;
+        resumed.started_s = Some(4.0); // re-admission delay: not queueing
+
+        let res = ledger.finish(&resumed);
+        assert_eq!(res.tokens, vec![10, 11, 12, 13]);
+        assert!((res.queue_delay - 0.5).abs() < 1e-12,
+                "first admission's queue delay must be preserved");
+        // ttft = first token latency of the ORIGINAL run + queue delay
+        assert!((res.ttft - 0.7).abs() < 1e-12, "ttft {}", res.ttft);
+        assert!((res.mean_tpot - 0.1025).abs() < 1e-9);
+        assert!(ledger.carried.is_empty(), "entry must be consumed");
+    }
+
+    #[test]
+    fn mid_prefill_eviction_keeps_ttft_honest() {
+        // arrival 0.0, admitted 0.1, evicted mid-prefill at 2.0 (1.9 s
+        // of prefill service discarded), re-admitted 5.0, first token
+        // 5.5: true TTFT is 5.5 s, not 0.6 s
+        let mut ledger = ResumeLedger::default();
+        let mut st = RequestState::new(DecodeRequest::new(8, vec![1; 40], 4));
+        st.enqueued_s = 0.0;
+        st.started_s = Some(0.1);
+        st.prompt_consumed = 19; // still prefilling, no token yet
+        st.pending_prefill = 1.9;
+        let resume = ledger.note_eviction(st);
+        assert_eq!(resume.max_new_tokens, 4);
+
+        let mut resumed = RequestState::new(resume);
+        resumed.enqueued_s = 2.0; // eviction time
+        resumed.started_s = Some(5.0); // re-admitted 3 s later
+        resumed.prompt_consumed = resumed.request.prompt.len();
+        resumed.generated = vec![9, 10, 11, 12];
+        resumed.token_latencies = vec![0.5, 0.01, 0.01, 0.01];
+
+        let res = ledger.finish(&resumed);
+        // queue_delay: first admission only (0.1 s)
+        assert!((res.queue_delay - 0.1).abs() < 1e-12);
+        // ttft = 0.1 queue + 1.9 lost prefill + 3.0 re-queue + 0.5 new
+        // prefill-to-first-token = 5.5
+        assert!((res.ttft - 5.5).abs() < 1e-9, "ttft {}", res.ttft);
+        assert_eq!(res.tokens, vec![9, 10, 11, 12]);
+    }
+
+    #[test]
+    fn finish_without_eviction_passes_through() {
+        let mut ledger = ResumeLedger::default();
+        let st = state(1, 2, 2, &[5, 6]);
+        let res = ledger.finish(&st);
+        assert_eq!(res.tokens, vec![5, 6]);
+    }
+
+    #[test]
+    fn repeated_eviction_accumulates() {
+        let mut ledger = ResumeLedger::default();
+        let first = state(4, 2, 6, &[1, 2]);
+        let resume1 = ledger.note_eviction(first);
+        let mut mid = RequestState::new(resume1);
+        mid.prompt_consumed = mid.request.prompt.len();
+        mid.generated = vec![3];
+        mid.token_latencies = vec![0.01];
+        let resume2 = ledger.note_eviction(mid);
+        assert_eq!(resume2.prompt, vec![1, 1, 1, 2, 3]);
+        assert_eq!(resume2.max_new_tokens, 3);
+        assert_eq!(ledger.carried.len(), 1, "one entry per request");
+        let mut last = RequestState::new(resume2);
+        last.prompt_consumed = last.request.prompt.len();
+        last.generated = vec![4, 5, 6];
+        last.token_latencies = vec![0.01; 3];
+        let res = ledger.finish(&last);
+        assert_eq!(res.tokens, vec![1, 2, 3, 4, 5, 6]);
+    }
+}

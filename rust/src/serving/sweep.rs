@@ -1,0 +1,369 @@
+//! Rate sweep: offered-rate → SLO-percentile load curves.
+//!
+//! Runs one arrival trace open-loop at increasing offered rates (the
+//! trace's arrival gaps are rescaled, so the request set is identical
+//! at every rate — only the load changes) and reports per-rate
+//! TTFT/TPOT/queue-delay percentiles, achieved throughput, and a
+//! saturation verdict into a [`ServeLoadReport`] (JSON via
+//! [`crate::util::json`]).  This is the TTFT/TPOT-vs-rate methodology
+//! of the Orca/vLLM serving evals, producible deterministically in CI
+//! thanks to the virtual clock.
+//!
+//! **Saturation**: a rate point is saturated when the completed-request
+//! throughput falls below [`SweepConfig::saturation_fraction`] of the
+//! *realized* offered rate (`requests / arrival span` of the finite
+//! trace) — the queue grows faster than the engine drains it, so the
+//! makespan stretches past the arrival span.  The report's
+//! `saturation_throughput` is the best token throughput observed
+//! anywhere in the sweep (the capacity estimate the open-loop
+//! methodology exists to measure).
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::config::ServeConfig;
+use crate::coordinator::engine::{DecodeEngine, LayerExecutor};
+use crate::coordinator::metrics::quantile_sorted;
+use crate::coordinator::workload::TracedRequest;
+use crate::serving::clock::{SimClock, StepCostModel};
+use crate::serving::serve_open_loop;
+use crate::util::json::Json;
+
+/// Sweep parameters.
+#[derive(Debug, Clone)]
+pub struct SweepConfig {
+    /// Offered rates (req/s) to run; sorted ascending internally so the
+    /// report is monotone in offered rate.
+    pub rates: Vec<f64>,
+    /// A rate is saturated when completed-request throughput drops
+    /// below this fraction of the offered rate.
+    pub saturation_fraction: f64,
+    /// Virtual-clock step-cost model (cloned fresh per rate so every
+    /// point sees the identical cost stream).
+    pub model: StepCostModel,
+}
+
+impl Default for SweepConfig {
+    fn default() -> Self {
+        Self { rates: vec![1.0, 2.0, 4.0, 8.0, 16.0],
+               saturation_fraction: 0.8,
+               model: StepCostModel::default() }
+    }
+}
+
+/// One offered-rate measurement.
+#[derive(Debug, Clone)]
+pub struct RatePoint {
+    /// Nominal offered rate this point was scaled to.
+    pub offered_rate: f64,
+    /// Realized arrival rate of the finite trace (`requests / arrival
+    /// span`) — the saturation comparison uses this, so finite-sample
+    /// drift of the Poisson trace cannot misflag a point.
+    pub realized_rate: f64,
+    /// Completed requests per clock second.
+    pub achieved_req_rate: f64,
+    pub tokens_per_sec: f64,
+    pub ttft_p50: f64,
+    pub ttft_p99: f64,
+    pub tpot_p50: f64,
+    pub tpot_p99: f64,
+    pub queue_p50: f64,
+    pub queue_p99: f64,
+    pub mean_occupancy: f64,
+    pub preemptions: u64,
+    pub saturated: bool,
+}
+
+/// The sweep's load report (see module docs).
+#[derive(Debug, Clone)]
+pub struct ServeLoadReport {
+    /// Points in ascending offered-rate order.
+    pub points: Vec<RatePoint>,
+    /// Best token throughput observed across the sweep.
+    pub saturation_throughput: f64,
+    /// First offered rate flagged saturated, if any.
+    pub saturation_rate: Option<f64>,
+}
+
+impl ServeLoadReport {
+    /// Render as a [`Json`] tree (serialize with `.to_string()`).
+    pub fn to_json(&self) -> Json {
+        let point = |p: &RatePoint| {
+            let mut m = BTreeMap::new();
+            m.insert("offered_rate".into(), Json::Num(p.offered_rate));
+            m.insert("realized_rate".into(), Json::Num(p.realized_rate));
+            m.insert("achieved_req_rate".into(),
+                     Json::Num(p.achieved_req_rate));
+            m.insert("tokens_per_sec".into(), Json::Num(p.tokens_per_sec));
+            m.insert("ttft_p50_s".into(), Json::Num(p.ttft_p50));
+            m.insert("ttft_p99_s".into(), Json::Num(p.ttft_p99));
+            m.insert("tpot_p50_s".into(), Json::Num(p.tpot_p50));
+            m.insert("tpot_p99_s".into(), Json::Num(p.tpot_p99));
+            m.insert("queue_delay_p50_s".into(), Json::Num(p.queue_p50));
+            m.insert("queue_delay_p99_s".into(), Json::Num(p.queue_p99));
+            m.insert("mean_occupancy".into(), Json::Num(p.mean_occupancy));
+            m.insert("preemptions".into(), Json::Num(p.preemptions as f64));
+            m.insert("saturated".into(), Json::Bool(p.saturated));
+            Json::Obj(m)
+        };
+        let mut root = BTreeMap::new();
+        root.insert("bench".into(), Json::Str("serving".into()));
+        root.insert("metric".into(),
+                    Json::Str("open_loop_rate_sweep".into()));
+        root.insert("saturation_throughput_tok_s".into(),
+                    Json::Num(self.saturation_throughput));
+        root.insert("saturation_rate_req_s".into(),
+                    self.saturation_rate.map_or(Json::Null, Json::Num));
+        root.insert("points".into(),
+                    Json::Arr(self.points.iter().map(point).collect()));
+        Json::Obj(root)
+    }
+
+    /// Human-readable table.
+    pub fn render_table(&self) -> String {
+        let mut out = String::from(
+            "rate(req/s)  achieved  tok/s   ttft p50/p99 (s)  \
+             tpot p50/p99 (ms)  queue p50 (s)  preempt  sat\n");
+        for p in &self.points {
+            out.push_str(&format!(
+                "{:>10.2}  {:>8.2}  {:>6.1}  {:>7.3} {:>8.3}  \
+                 {:>8.2} {:>8.2}  {:>12.3}  {:>7}  {}\n",
+                p.offered_rate, p.achieved_req_rate, p.tokens_per_sec,
+                p.ttft_p50, p.ttft_p99,
+                p.tpot_p50 * 1e3, p.tpot_p99 * 1e3,
+                p.queue_p50, p.preemptions,
+                if p.saturated { "SAT" } else { "ok" }));
+        }
+        out.push_str(&format!(
+            "saturation throughput: {:.1} tok/s{}\n",
+            self.saturation_throughput,
+            match self.saturation_rate {
+                Some(r) => format!(", saturates at {r:.2} req/s offered"),
+                None => ", no saturation in sweep".into(),
+            }));
+        out
+    }
+}
+
+/// Run `trace` (generated at `base_rate` req/s) open-loop at each of
+/// `sweep.rates` by rescaling its arrival gaps, on a fresh virtual
+/// clock per rate.  The engine's pool drains completely between rates,
+/// so one engine serves the whole sweep.
+pub fn sweep<E: LayerExecutor>(engine: &DecodeEngine<E>,
+                               trace: &[TracedRequest], base_rate: f64,
+                               cfg: &ServeConfig, sweep_cfg: &SweepConfig)
+                               -> Result<ServeLoadReport> {
+    anyhow::ensure!(base_rate > 0.0 && base_rate.is_finite(),
+                    "base_rate must be positive and finite, got {base_rate}");
+    let mut rates = sweep_cfg.rates.clone();
+    anyhow::ensure!(!rates.is_empty(), "sweep needs at least one rate");
+    for &r in &rates {
+        // validate before the sort: a NaN would panic partial_cmp
+        anyhow::ensure!(r > 0.0 && r.is_finite(),
+                        "offered rates must be positive and finite, got {r}");
+    }
+    rates.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mut points = Vec::with_capacity(rates.len());
+    for &rate in &rates {
+        let scale = base_rate / rate;
+        let scaled: Vec<TracedRequest> = trace.iter()
+            .map(|t| TracedRequest { request: t.request.clone(),
+                                     arrival: t.arrival * scale })
+            .collect();
+        let arrival_span = scaled.iter()
+            .map(|t| t.arrival)
+            .fold(0.0, f64::max)
+            .max(1e-9);
+        let realized_rate = scaled.len() as f64 / arrival_span;
+        let mut clock = SimClock::simulated(sweep_cfg.model.clone());
+        let report = serve_open_loop(engine, scaled, cfg, &mut clock)?;
+
+        let completed = report.metrics.requests_completed;
+        let makespan = report.makespan.max(1e-12);
+        let mut ttfts = Vec::new();
+        let mut queues = Vec::new();
+        let mut tpots = Vec::new();
+        for r in &report.results {
+            if r.tokens.is_empty() {
+                continue; // rejected: no latency to report
+            }
+            ttfts.push(r.ttft);
+            queues.push(r.queue_delay);
+            tpots.push(r.mean_tpot);
+        }
+        let sorted = |mut v: Vec<f64>| {
+            v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            v
+        };
+        let (ttfts, queues, tpots) =
+            (sorted(ttfts), sorted(queues), sorted(tpots));
+        let achieved = completed as f64 / makespan;
+        points.push(RatePoint {
+            offered_rate: rate,
+            realized_rate,
+            achieved_req_rate: achieved,
+            tokens_per_sec: report.metrics.tokens_generated as f64
+                / makespan,
+            ttft_p50: quantile_sorted(&ttfts, 0.5),
+            ttft_p99: quantile_sorted(&ttfts, 0.99),
+            tpot_p50: quantile_sorted(&tpots, 0.5),
+            tpot_p99: quantile_sorted(&tpots, 0.99),
+            queue_p50: quantile_sorted(&queues, 0.5),
+            queue_p99: quantile_sorted(&queues, 0.99),
+            mean_occupancy: report.batcher.mean_occupancy(),
+            preemptions: report.metrics.preemptions,
+            saturated: achieved
+                < sweep_cfg.saturation_fraction * realized_rate,
+        });
+    }
+    let saturation_throughput = points.iter()
+        .map(|p| p.tokens_per_sec)
+        .fold(0.0, f64::max);
+    let saturation_rate = points.iter()
+        .find(|p| p.saturated)
+        .map(|p| p.offered_rate);
+    Ok(ServeLoadReport { points, saturation_throughput, saturation_rate })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Algo;
+    use crate::coordinator::engine::HostLayerExecutor;
+    use crate::coordinator::{generate_trace, LenDist, WorkloadSpec};
+    use crate::numerics::mla::MlaDims;
+
+    fn engine() -> DecodeEngine<HostLayerExecutor> {
+        let dims = MlaDims { d_model: 48, n1: 2, d_head: 12, q_rank: 24,
+                             d_latent: 16, d_rope: 8, sq: 1 };
+        let exec = HostLayerExecutor::new(dims, 2, Algo::Amla, 32,
+                                          vec![32, 64], 11);
+        DecodeEngine::new(exec, 512, 8)
+    }
+
+    fn toy_trace() -> (Vec<TracedRequest>, f64) {
+        let spec = WorkloadSpec { requests: 10, rate: 4.0,
+                                  prompt_len: LenDist::Uniform(2, 4),
+                                  gen_len: LenDist::Fixed(6),
+                                  ..WorkloadSpec::default() };
+        (generate_trace(&spec), spec.rate)
+    }
+
+    /// Pool-constrained toy: max_batch 2 and a 40-row budget mean the
+    /// engine serves ~2 requests at a time, so high offered rates pile
+    /// the queue up and the makespan stretches far past the arrival
+    /// span.
+    fn toy_cfg() -> ServeConfig {
+        ServeConfig { max_batch: 2, workers: 1, batch_workers: 1,
+                      pool_pages: 10, page_size: 8,
+                      starvation_steps: 8, preempt: true,
+                      ..ServeConfig::default() }
+    }
+
+    fn toy_sweep() -> SweepConfig {
+        SweepConfig { rates: vec![0.5, 4.0, 64.0],
+                      saturation_fraction: 0.8,
+                      model: StepCostModel::new(0.02, 0.005) }
+    }
+
+    #[test]
+    fn sweep_detects_saturation_on_pool_constrained_config() {
+        let eng = engine();
+        let (trace, base_rate) = toy_trace();
+        let report =
+            sweep(&eng, &trace, base_rate, &toy_cfg(), &toy_sweep())
+                .unwrap();
+        assert_eq!(report.points.len(), 3);
+        // monotone offered-rate axis
+        for w in report.points.windows(2) {
+            assert!(w[1].offered_rate > w[0].offered_rate);
+        }
+        // at 0.5 req/s the engine keeps up; at 64 req/s it cannot
+        let first = &report.points[0];
+        let last = &report.points[2];
+        assert!(!first.saturated,
+                "low rate saturated: achieved {} of {}",
+                first.achieved_req_rate, first.offered_rate);
+        assert!(last.saturated, "pool-constrained high rate not detected \
+                 (achieved {} of {})",
+                last.achieved_req_rate, last.offered_rate);
+        let sat = report.saturation_rate
+            .expect("saturation must be detected somewhere in the sweep");
+        assert!(sat > first.offered_rate && sat <= 64.0, "rate {sat}");
+        assert!(report.saturation_throughput > 0.0);
+        // load curve: queueing and TTFT grow with offered rate
+        assert!(last.queue_p50 >= first.queue_p50,
+                "queue p50 fell with load: {} -> {}",
+                first.queue_p50, last.queue_p50);
+        assert!(last.ttft_p99 >= first.ttft_p99);
+        // percentile ordering within every point
+        for p in &report.points {
+            assert!(p.ttft_p50 <= p.ttft_p99);
+            assert!(p.tpot_p50 <= p.tpot_p99);
+            assert!(p.queue_p50 <= p.queue_p99);
+            assert!(p.tokens_per_sec > 0.0);
+        }
+    }
+
+    #[test]
+    fn sweep_is_deterministic() {
+        let run = || {
+            let eng = engine();
+            let (trace, base_rate) = toy_trace();
+            let report =
+                sweep(&eng, &trace, base_rate, &toy_cfg(), &toy_sweep())
+                    .unwrap();
+            report.to_json().to_string()
+        };
+        assert_eq!(run(), run(), "virtual-clock sweep must be reproducible");
+    }
+
+    #[test]
+    fn report_json_roundtrips_through_parser() {
+        let eng = engine();
+        let (trace, base_rate) = toy_trace();
+        let report =
+            sweep(&eng, &trace, base_rate, &toy_cfg(), &toy_sweep())
+                .unwrap();
+        let text = report.to_json().to_string();
+        let parsed = Json::parse(&text).expect("report must be valid JSON");
+        assert_eq!(parsed.req_str("bench").unwrap(), "serving");
+        let pts = parsed.req("points").unwrap().as_arr().unwrap();
+        assert_eq!(pts.len(), 3);
+        for p in pts {
+            assert!(p.req("offered_rate").unwrap().as_f64().is_some());
+            assert!(p.req("saturated").unwrap().as_bool().is_some());
+        }
+        assert!(report.render_table().contains("saturation throughput"));
+    }
+
+    #[test]
+    fn invalid_rates_error_instead_of_panicking() {
+        let eng = engine();
+        let (trace, base_rate) = toy_trace();
+        for bad in [vec![0.0, 4.0], vec![-1.0], vec![f64::NAN, 4.0],
+                    Vec::new()] {
+            let mut sc = toy_sweep();
+            sc.rates = bad.clone();
+            assert!(sweep(&eng, &trace, base_rate, &toy_cfg(), &sc).is_err(),
+                    "rates {bad:?} must be rejected cleanly");
+        }
+        let mut sc = toy_sweep();
+        sc.rates = vec![1.0];
+        assert!(sweep(&eng, &trace, 0.0, &toy_cfg(), &sc).is_err(),
+                "zero base_rate must be rejected");
+    }
+
+    #[test]
+    fn unsorted_rates_are_sorted_in_report() {
+        let eng = engine();
+        let (trace, base_rate) = toy_trace();
+        let mut sc = toy_sweep();
+        sc.rates = vec![8.0, 0.5];
+        let report = sweep(&eng, &trace, base_rate, &toy_cfg(), &sc)
+            .unwrap();
+        assert_eq!(report.points[0].offered_rate, 0.5);
+        assert_eq!(report.points[1].offered_rate, 8.0);
+    }
+}

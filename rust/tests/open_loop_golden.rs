@@ -1,0 +1,221 @@
+//! Open-loop golden trace: one deterministic virtual-clock run — every
+//! request's (merged) token stream plus the completion order — must be
+//! reproduced **exactly** across `workers ∈ {1,4} × fuse on/off ×
+//! preempt on/off`, and must match the committed golden file so future
+//! scheduler/kernel rewrites cannot silently drift open-loop behavior.
+//!
+//! The trace is pool-constrained so preemption actually fires when
+//! enabled: a starved small request evicts the longest resident, which
+//! resumes by recompute.  Per the recompute bit-identity contract
+//! (`amla::serving` docs), the preempt-on and preempt-off runs must
+//! emit **identical per-request tokens** (only the completion order and
+//! schedule may differ), and preempt-off must reproduce the closed-loop
+//! tokens for the same request set.
+//!
+//! Bootstrap: if `rust/tests/golden/open_loop_trace.txt` is missing (or
+//! `AMLA_REGEN_GOLDEN=1` is set) the test writes it from the current
+//! build and reports success — commit the generated file to arm the
+//! cross-PR pin.  The cross-config identity assertions always run.
+
+use amla::config::{Algo, ServeConfig};
+use amla::coordinator::engine::HostLayerExecutor;
+use amla::coordinator::{serve, DecodeEngine, DecodeRequest, RequestId,
+                        TracedRequest};
+use amla::numerics::mla::MlaDims;
+use amla::serving::clock::{SimClock, StepCostModel};
+use amla::serving::serve_open_loop;
+
+const GOLDEN_PATH: &str = concat!(env!("CARGO_MANIFEST_DIR"),
+                                  "/rust/tests/golden/open_loop_trace.txt");
+
+fn engine() -> DecodeEngine<HostLayerExecutor> {
+    let dims = MlaDims { d_model: 64, n1: 2, d_head: 16, q_rank: 32,
+                         d_latent: 24, d_rope: 8, sq: 1 };
+    let exec = HostLayerExecutor::new(dims, 2, Algo::Amla, 32,
+                                      vec![64, 128], 7);
+    DecodeEngine::new(exec, 1024, 16)
+}
+
+/// 100-row/layer budget: r0 (27 rows) + r1 (70 rows, crosses into the
+/// 128 bucket at context 65) fill it at t = 0; r2 (6 rows) arrives at
+/// t = 0.08 and starves behind them, which with preemption on evicts r1
+/// — by then a few tokens into *decode*, so the recompute resume path
+/// replays prompt ⧺ generated — and r1 resumes once r0 drains.  r3
+/// flows through the busy pool at t = 0.5; r4 arrives at t = 1.2 after
+/// the engine idles, exercising the clock's idle jump.
+fn trace() -> Vec<TracedRequest> {
+    let mk = |id, prompt: Vec<u32>, gen, arrival| TracedRequest {
+        request: DecodeRequest::new(id, prompt, gen),
+        arrival,
+    };
+    vec![
+        mk(0, vec![11, 12, 13], 24, 0.0),
+        mk(1, vec![7; 10], 60, 0.0),
+        mk(2, vec![5, 6], 4, 0.08),
+        mk(3, vec![9; 30], 8, 0.5),
+        mk(4, vec![2, 3], 6, 1.2),
+    ]
+}
+
+fn cfg(workers: usize, fuse: bool, preempt: bool) -> ServeConfig {
+    ServeConfig { max_batch: 4, workers, batch_workers: workers,
+                  fuse_buckets: fuse,
+                  pool_pages: 50, page_size: 4, // 100 rows/layer budget
+                  starvation_steps: 4, preempt,
+                  ..ServeConfig::default() }
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+struct Trace {
+    /// Per request id (ascending): the merged generated token stream.
+    tokens: Vec<Vec<u32>>,
+    /// Request ids in completion order.
+    order: Vec<RequestId>,
+}
+
+fn run_open(workers: usize, fuse: bool, preempt: bool)
+            -> (Trace, u64, u64) {
+    let eng = engine();
+    let mut clock = SimClock::simulated(StepCostModel::new(0.01, 0.0));
+    let report = serve_open_loop(&eng, trace(), &cfg(workers, fuse, preempt),
+                                 &mut clock)
+        .expect("open-loop serve failed");
+    assert_eq!(report.results.len(), 5, "all requests must complete");
+    assert_eq!(eng.pool.lock().unwrap().stats().allocated_pages, 0,
+               "pages leaked");
+    let mut by_id: Vec<(RequestId, Vec<u32>)> = report.results.iter()
+        .map(|r| (r.id, r.tokens.clone()))
+        .collect();
+    by_id.sort_by_key(|(id, _)| *id);
+    let tokens = by_id.into_iter().map(|(_, t)| t).collect();
+    (Trace { tokens, order: report.completion_order },
+     report.metrics.preemptions, report.makespan.to_bits())
+}
+
+/// Render the comparable body of the golden file (no comment lines).
+fn render(off: &Trace, on: &Trace) -> String {
+    let mut out = String::new();
+    for (mode, tr) in [("preempt_off", off), ("preempt_on", on)] {
+        out.push_str(&format!("mode {mode}\n"));
+        let order: Vec<String> =
+            tr.order.iter().map(u64::to_string).collect();
+        out.push_str(&format!("order {}\n", order.join(" ")));
+        for (i, toks) in tr.tokens.iter().enumerate() {
+            let toks: Vec<String> = toks.iter().map(u32::to_string).collect();
+            out.push_str(&format!("seq {i}\ntokens {}\n", toks.join(" ")));
+        }
+    }
+    out
+}
+
+fn parse(text: &str) -> Option<(Trace, Trace)> {
+    let mut traces: Vec<Trace> = Vec::new();
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        if line.starts_with("mode ") {
+            traces.push(Trace { tokens: Vec::new(), order: Vec::new() });
+        } else if let Some(rest) = line.strip_prefix("order ") {
+            traces.last_mut()?.order = rest.split_whitespace()
+                .map(|t| t.parse::<u64>().ok())
+                .collect::<Option<Vec<_>>>()?;
+        } else if let Some(rest) = line.strip_prefix("tokens ") {
+            traces.last_mut()?.tokens.push(rest.split_whitespace()
+                .map(|t| t.parse::<u32>().ok())
+                .collect::<Option<Vec<_>>>()?);
+        } else if !line.starts_with("seq ") {
+            return None;
+        }
+    }
+    if traces.len() != 2 || traces.iter().any(|t| t.tokens.is_empty()) {
+        return None;
+    }
+    let on = traces.pop()?;
+    let off = traces.pop()?;
+    Some((off, on))
+}
+
+#[test]
+fn open_loop_golden_reproduces_across_all_configs() {
+    // determinism: for each preempt setting, the unfused serial run is
+    // the oracle every (workers, fuse) cell must match bit-for-bit —
+    // including the virtual-time makespan
+    let (reference_off, pre_off, makespan_off) = run_open(1, false, false);
+    let (reference_on, pre_on, makespan_on) = run_open(1, false, true);
+    assert_eq!(pre_off, 0, "preempt off must never evict");
+    assert!(pre_on > 0, "the constrained trace must trigger eviction");
+    for (workers, fuse) in [(1usize, true), (4, false), (4, true)] {
+        let got_off = run_open(workers, fuse, false);
+        assert_eq!(got_off, (reference_off.clone(), pre_off, makespan_off),
+                   "preempt=off workers={workers} fuse={fuse} diverged");
+        let got_on = run_open(workers, fuse, true);
+        assert_eq!(got_on, (reference_on.clone(), pre_on, makespan_on),
+                   "preempt=on workers={workers} fuse={fuse} diverged");
+    }
+
+    // recompute bit-identity: eviction + resume must not change any
+    // request's token stream (only scheduling may differ)
+    assert_eq!(reference_on.tokens, reference_off.tokens,
+               "preemption changed token streams");
+
+    // preempt off must reproduce the closed-loop tokens for the same
+    // request set (the open loop is an admission policy, not a fork)
+    let closed = {
+        let eng = engine();
+        let requests: Vec<DecodeRequest> =
+            trace().into_iter().map(|t| t.request).collect();
+        let report = serve(&eng, requests, &cfg(4, true, false))
+            .expect("closed-loop serve failed");
+        let mut by_id: Vec<(RequestId, Vec<u32>)> = report.results.iter()
+            .map(|r| (r.id, r.tokens.clone()))
+            .collect();
+        by_id.sort_by_key(|(id, _)| *id);
+        by_id.into_iter().map(|(_, t)| t).collect::<Vec<_>>()
+    };
+    assert_eq!(reference_off.tokens, closed,
+               "open-loop (preempt off) diverged from closed-loop tokens");
+
+    // golden-file pin (bootstraps on first toolchain run — commit it)
+    let path = std::path::Path::new(GOLDEN_PATH);
+    let regen = std::env::var("AMLA_REGEN_GOLDEN").is_ok();
+    if path.exists() && !regen {
+        let text = std::fs::read_to_string(path).expect("read golden file");
+        let (golden_off, golden_on) = parse(&text)
+            .expect("malformed golden file — regenerate with \
+                     AMLA_REGEN_GOLDEN=1");
+        assert_eq!((reference_off, reference_on), (golden_off, golden_on),
+                   "open-loop trace drifted from {GOLDEN_PATH}; if the \
+                    change is intended, regenerate with \
+                    AMLA_REGEN_GOLDEN=1 cargo test --test \
+                    open_loop_golden and commit the diff");
+    } else {
+        let header = "\
+# AMLA golden open-loop trace v1 (5 requests, 100-row pool budget,\n\
+# virtual clock 10ms/step, starvation 4 steps; preempt off vs on).\n\
+# Pinned bit-for-bit by rust/tests/open_loop_golden.rs across\n\
+# workers 1/4 x fuse on/off; per-request tokens must also be\n\
+# identical across the two preempt modes (recompute bit-identity).\n\
+# Regenerate: AMLA_REGEN_GOLDEN=1 cargo test --test open_loop_golden\n";
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir).expect("create golden dir");
+        }
+        std::fs::write(path,
+                       format!("{header}{}",
+                               render(&reference_off, &reference_on)))
+            .expect("write golden file");
+        eprintln!("open-loop golden trace written to {GOLDEN_PATH}; commit \
+                   it to arm the cross-PR regression pin");
+    }
+}
+
+#[test]
+fn golden_file_roundtrips_through_parser() {
+    let off = Trace { tokens: vec![vec![1, 2], vec![3]], order: vec![1, 0] };
+    let on = Trace { tokens: vec![vec![1, 2], vec![3]], order: vec![0, 1] };
+    let (p_off, p_on) = parse(&render(&off, &on)).expect("roundtrip parse");
+    assert_eq!((p_off, p_on), (off, on));
+    assert!(parse("garbage\n").is_none());
+    assert!(parse("mode only\n").is_none());
+}
