@@ -9,9 +9,12 @@
 //! Algorithm-1 kernel instead and compare.
 //!
 //! The serve loop is batched: every global step advances the whole
-//! active set one token through `DecodeEngine::step_batch`, with
+//! active set together through `DecodeEngine::step_batch_chunked`, with
 //! `--batch-workers` controlling in-batch attention parallelism
-//! (1 = the serial reference; outputs are bit-identical either way).
+//! (1 = the serial reference; outputs are bit-identical either way) and
+//! `--prefill-chunk` setting how many prompt tokens a prefilling
+//! sequence consumes per step (bit-identical to 1 = token-by-token;
+//! executors without a multi-row route — PJRT today — fall back to 1).
 //!
 //! With `--open-loop` the same trace is served **arrival-driven**: each
 //! request becomes visible at its Poisson arrival time, queue delays are
@@ -68,9 +71,10 @@ fn main() -> anyhow::Result<()> {
         trace.iter().map(|t| t.request.max_new_tokens).sum();
     eprintln!("[serve_decode] {n_requests} requests, {total_tokens} tokens \
                to generate, max batch {}, {} workers, {} batch workers, \
-               fuse-buckets {} (host-kernel route; PJRT still per-seq)",
+               fuse-buckets {}, prefill chunk {} (host-kernel routes; \
+               PJRT still per-seq, token-by-token prefill)",
               cfg.max_batch, cfg.workers, cfg.batch_workers,
-              cfg.fuse_buckets);
+              cfg.fuse_buckets, cfg.prefill_chunk);
 
     let (results, summary, metrics, completed) = if cfg.open_loop {
         let mut clock = if args.has_flag("virtual-clock") {

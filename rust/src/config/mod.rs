@@ -61,6 +61,15 @@ pub struct ServeConfig {
     /// default).  Bit-identical to the per-sequence path; singleton
     /// buckets fall back to the threaded path either way.
     pub fuse_buckets: bool,
+    /// Prompt tokens a prefilling sequence consumes per global step
+    /// (`--prefill-chunk`; default 8, 1 = the legacy token-per-step
+    /// path).  Chunked prefill runs one multi-row causal attention pass
+    /// over the chunk — bit-identical to token-by-token, but amortizing
+    /// per-step layer overhead, cutting long-prompt TTFT and the
+    /// recompute cost of preemption resume.  Clamped to the executor's
+    /// multi-row support (PJRT falls back to 1 pending variable-`sq`
+    /// executables).
+    pub prefill_chunk: usize,
     /// Per-request cap on generated tokens.
     pub max_new_tokens: usize,
     /// Serve arrival-timed traces open-loop (`--open-loop`): requests
@@ -97,6 +106,7 @@ impl Default for ServeConfig {
                 .map(|n| n.get().min(8))
                 .unwrap_or(4),
             fuse_buckets: true,
+            prefill_chunk: 8,
             max_new_tokens: 64,
             open_loop: false,
             rate: 4.0,
@@ -139,6 +149,7 @@ impl ServeConfig {
         num_field!("pool-pages", self.pool_pages);
         num_field!("workers", self.workers);
         num_field!("batch-workers", self.batch_workers);
+        num_field!("prefill-chunk", self.prefill_chunk);
         num_field!("max-new-tokens", self.max_new_tokens);
         num_field!("rate", self.rate);
         num_field!("starvation-steps", self.starvation_steps);
@@ -169,6 +180,9 @@ impl ServeConfig {
         }
         if self.batch_workers == 0 {
             bail!("batch_workers must be positive (1 = serial)");
+        }
+        if self.prefill_chunk == 0 {
+            bail!("prefill_chunk must be >= 1 (1 = token-by-token prefill)");
         }
         if !(self.rate > 0.0 && self.rate.is_finite()) {
             bail!("rate must be a positive, finite req/s value");
@@ -266,6 +280,18 @@ mod tests {
         cfg.apply_args(&args("--batch-workers 4")).unwrap();
         assert_eq!(cfg.batch_workers, 4);
         assert!(cfg.apply_args(&args("--batch-workers 0")).is_err());
+    }
+
+    #[test]
+    fn prefill_chunk_override_and_validation() {
+        let mut cfg = ServeConfig::default();
+        assert!(cfg.prefill_chunk > 1, "chunked prefill defaults on");
+        cfg.apply_args(&args("--prefill-chunk 4")).unwrap();
+        assert_eq!(cfg.prefill_chunk, 4);
+        cfg.apply_args(&args("--prefill-chunk 1")).unwrap();
+        assert_eq!(cfg.prefill_chunk, 1, "1 = legacy token-by-token path");
+        assert!(cfg.apply_args(&args("--prefill-chunk 0")).is_err());
+        assert!(cfg.apply_args(&args("--prefill-chunk x")).is_err());
     }
 
     #[test]

@@ -26,8 +26,8 @@ use crate::numerics::amla::{amla_attention_batched,
 use crate::numerics::flash_base::{base_flash_attention_batched,
                                   base_flash_attention_with_scratch,
                                   BatchedKv, FlashConfig};
-use crate::numerics::mla::{decode_step_finish, decode_step_prepare,
-                           decode_step_with, pack_k_rows, MlaDims,
+use crate::numerics::mla::{decode_step_finish_rows, decode_step_prepare_rows,
+                           decode_step_with_rows, pack_k_rows, MlaDims,
                            MlaWeights};
 use crate::numerics::Matrix;
 use crate::runtime::{Engine as PjrtEngine, TensorView};
@@ -47,6 +47,11 @@ pub struct StepJob {
     pub kr_buf: Vec<f32>,
     pub bucket: usize,
     pub valid_len: usize,
+    /// Query positions this job advances in the step: 1 on the decode
+    /// path, the chunk size `C` on the chunked-prefill path (the job
+    /// then carries `C` new token rows through projection, causal
+    /// multi-row attention, and write-back together).
+    pub sq: usize,
 }
 
 /// Runs one MLA decode layer over padded cache buffers.
@@ -75,13 +80,36 @@ pub trait LayerExecutor: Send + Sync {
     /// result per job (same order).  `workers` is the attention-level
     /// parallelism budget ([`ServeConfig::batch_workers`] on the
     /// serving path); implementations may ignore it.
+    ///
+    /// Jobs whose [`StepJob::sq`] differs from the executor's artifact
+    /// shape need a multi-row (chunked-prefill) route; the serial
+    /// reference rejects them per job, and the serving loop never sends
+    /// them to an executor whose [`Self::max_prefill_chunk`] is 1.
     fn step_batch(&self, layer: usize, jobs: &mut [&mut StepJob],
                   workers: usize) -> Vec<Result<Vec<f32>>> {
         let _ = workers; // serial reference implementation
+        let sq = self.dims().sq;
         jobs.iter_mut()
-            .map(|j| self.step(layer, &j.x, &mut j.c_buf, &mut j.kr_buf,
-                               j.bucket, j.valid_len))
+            .map(|j| {
+                if j.sq != sq {
+                    return Err(anyhow!(
+                        "executor has no chunked-prefill route (job rows \
+                         {} != artifact sq {sq})", j.sq));
+                }
+                self.step(layer, &j.x, &mut j.c_buf, &mut j.kr_buf,
+                          j.bucket, j.valid_len)
+            })
             .collect()
+    }
+
+    /// Largest prompt chunk ([`StepJob::sq`]) this executor can advance
+    /// in one layer call.  The serving loop clamps
+    /// [`ServeConfig::prefill_chunk`] to this, so executors without a
+    /// multi-row route — the default, e.g. [`PjrtLayerExecutor`] pending
+    /// variable-`sq` layer executables — transparently fall back to
+    /// token-by-token prefill.
+    fn max_prefill_chunk(&self) -> usize {
+        1
     }
 
     /// Cumulative fused-route counters `(groups, jobs)` since this
@@ -185,7 +213,11 @@ impl HostLayerExecutor {
 
     /// One layer forward on a job's buffers, reusing `scratch` for the
     /// attention block loop.  Moves the job's cache buffers into
-    /// matrices and back — no copies on the batched path.
+    /// matrices and back — no copies on the batched path.  Honors
+    /// [`StepJob::sq`]: a chunked-prefill job drives its `C` rows
+    /// through one multi-row attention call
+    /// ([`crate::numerics::amla::amla_prefill_chunk`] / its Base twin),
+    /// bit-identical per position to `C` single-row steps.
     fn step_job(&self, layer: usize, job: &mut StepJob,
                 scratch: &mut AmlaScratch) -> Vec<f32> {
         let d = self.dims();
@@ -196,9 +228,11 @@ impl HostLayerExecutor {
                                       std::mem::take(&mut job.kr_buf));
         let algo = self.algo;
         let block_kv = self.block_kv;
-        let y = decode_step_with(&job.x, &mut c, &mut kr, job.valid_len, w,
+        let sq = job.sq;
+        let y = decode_step_with_rows(&job.x, &mut c, &mut kr, job.valid_len,
+                                      w, sq,
             |q, k, v, valid| {
-                let cfg = FlashConfig { block_kv, n1: d.n1, sq: d.sq,
+                let cfg = FlashConfig { block_kv, n1: d.n1, sq,
                                         valid_len: valid, mixed_bf16: true };
                 match algo {
                     Algo::Amla =>
@@ -213,33 +247,37 @@ impl HostLayerExecutor {
         y
     }
 
-    /// One fused layer step over a same-bucket group: every job's
-    /// projection phase runs first ([`decode_step_prepare`], writing
-    /// the new cache rows into the job buffers and the absorbed queries
-    /// / packed keys into the [`BucketArena`]), then **one**
+    /// One fused layer step over a same-`(bucket, sq)` group: every
+    /// job's projection phase runs first ([`decode_step_prepare_rows`],
+    /// writing the new cache rows into the job buffers and the absorbed
+    /// queries / packed keys into the [`BucketArena`]), then **one**
     /// cross-sequence attention call covers the whole group, then the
-    /// per-job output projections ([`decode_step_finish`]).
+    /// per-job output projections ([`decode_step_finish_rows`]).
     ///
     /// Bit-identical to [`Self::step_job`] on each member: the phases
-    /// compose to exactly [`decode_step_with`], and the batched kernels
-    /// preserve per-row arithmetic across the stacked dimension.
+    /// compose to exactly [`decode_step_with_rows`], and the batched
+    /// kernels preserve per-row arithmetic across the stacked dimension.
+    /// Chunked-prefill jobs fuse too — a group's members share one
+    /// chunk size, so the stacked block keeps uniform `[g, Dk]` slabs.
     fn step_group_fused(&self, layer: usize, group: &mut [&mut StepJob],
                         bufs: &mut FusedBuffers) -> Vec<Vec<f32>> {
         let d = self.dims();
         let w = &self.weights[layer];
         let b = group.len();
         let bucket = group[0].bucket;
-        let g = d.sq * d.n1;
+        let sq = group[0].sq;
+        let g = sq * d.n1;
         let dk = d.dk();
         bufs.arena.reset(b, g, bucket, dk);
         for (i, job) in group.iter_mut().enumerate() {
             debug_assert_eq!(job.bucket, bucket, "mixed buckets in group");
+            debug_assert_eq!(job.sq, sq, "mixed chunk sizes in group");
             let mut c = Matrix::from_vec(bucket, d.d_latent,
                                          std::mem::take(&mut job.c_buf));
             let mut kr = Matrix::from_vec(bucket, d.d_rope,
                                           std::mem::take(&mut job.kr_buf));
-            let q_rows = decode_step_prepare(&job.x, &mut c, &mut kr,
-                                             job.valid_len, w);
+            let q_rows = decode_step_prepare_rows(&job.x, &mut c, &mut kr,
+                                                  job.valid_len, w, sq);
             bufs.arena.q_slab_mut(i).copy_from_slice(&q_rows.data);
             pack_k_rows(&c, &kr, bufs.arena.k_slab_mut(i));
             job.c_buf = c.data;
@@ -256,7 +294,7 @@ impl HostLayerExecutor {
                                  valid_len: job.valid_len });
         }
         let cfg = FlashConfig { block_kv: self.block_kv, n1: d.n1,
-                                sq: d.sq, valid_len: 0, mixed_bf16: true };
+                                sq, valid_len: 0, mixed_bf16: true };
         let o = match self.algo {
             Algo::Amla => amla_attention_batched(arena.q_rows(b), g, &kvs,
                                                  &cfg, scratch).0,
@@ -266,8 +304,8 @@ impl HostLayerExecutor {
         drop(kvs);
         let dl = d.d_latent;
         (0..b)
-            .map(|i| decode_step_finish(&o.data[i * g * dl..(i + 1) * g * dl],
-                                        w))
+            .map(|i| decode_step_finish_rows(
+                &o.data[i * g * dl..(i + 1) * g * dl], w, sq))
             .collect()
     }
 
@@ -327,7 +365,7 @@ impl LayerExecutor for HostLayerExecutor {
             -> Result<Vec<f32>> {
         let mut job = StepJob { x: x.to_vec(), c_buf: c_cache.to_vec(),
                                 kr_buf: kr_cache.to_vec(), bucket,
-                                valid_len };
+                                valid_len, sq: self.dims().sq };
         let mut scratch = AmlaScratch::new();
         let y = self.step_job(layer, &mut job, &mut scratch);
         c_cache.copy_from_slice(&job.c_buf);
@@ -336,12 +374,12 @@ impl LayerExecutor for HostLayerExecutor {
     }
 
     /// Batched layer step.  With `fuse_buckets` on, jobs sharing a KV
-    /// bucket are stacked into one cross-sequence fused kernel call
-    /// ([`Self::step_group_fused`]); singleton buckets — and the whole
-    /// batch when fusion is off or no bucket repeats — fall back to the
-    /// threaded per-sequence path.  Sequences are independent, so every
-    /// route is bit-identical to the serial default regardless of
-    /// `workers` or grouping.
+    /// bucket **and** a row count ([`StepJob::sq`]) are stacked into one
+    /// cross-sequence fused kernel call ([`Self::step_group_fused`]);
+    /// singleton groups — and the whole batch when fusion is off or no
+    /// group repeats — fall back to the threaded per-sequence path.
+    /// Sequences are independent, so every route is bit-identical to
+    /// the serial default regardless of `workers` or grouping.
     fn step_batch(&self, layer: usize, jobs: &mut [&mut StepJob],
                   workers: usize) -> Vec<Result<Vec<f32>>> {
         let n = jobs.len();
@@ -351,10 +389,12 @@ impl LayerExecutor for HostLayerExecutor {
         if !self.fuse_enabled() {
             return self.step_batch_threaded(layer, jobs, workers);
         }
-        // group job positions by bucket; only groups of >= 2 fuse
-        let mut groups: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+        // group job positions by (bucket, rows); only groups of >= 2
+        // fuse — the stacked kernel needs uniform per-sequence slabs
+        let mut groups: BTreeMap<(usize, usize), Vec<usize>> =
+            BTreeMap::new();
         for (i, job) in jobs.iter().enumerate() {
-            groups.entry(job.bucket).or_default().push(i);
+            groups.entry((job.bucket, job.sq)).or_default().push(i);
         }
         if groups.values().all(|idxs| idxs.len() < 2) {
             return self.step_batch_threaded(layer, jobs, workers);
@@ -448,6 +488,12 @@ impl LayerExecutor for HostLayerExecutor {
     fn set_fuse(&self, on: bool) -> bool {
         self.fuse_buckets.store(on, Ordering::Relaxed);
         true
+    }
+
+    /// The host numerics are shape-dynamic: any chunk that fits a KV
+    /// bucket is fine, so the engine's bucket check is the only limit.
+    fn max_prefill_chunk(&self) -> usize {
+        usize::MAX
     }
 }
 
@@ -770,9 +816,38 @@ impl<E: LayerExecutor> DecodeEngine<E> {
     /// kernel rewrites; the serving path uses the token-only wrapper.
     pub fn step_batch_traced(&self, rts: &mut [SeqRuntime], tokens: &[u32],
                              workers: usize) -> Vec<Result<StepTrace>> {
+        let feeds: Vec<Vec<u32>> = tokens.iter().map(|&t| vec![t]).collect();
+        self.step_batch_chunked(rts, &feeds, workers)
+    }
+
+    /// One batched step with a per-sequence **feed chunk**: sequence `i`
+    /// advances `feeds[i].len()` tokens together — 1 on the decode path,
+    /// a prompt chunk `C` while prefilling.  Per layer the chunk's `C`
+    /// cache rows are reserved in the paged pool and gathered, the
+    /// executor runs one multi-row causal attention pass over the chunk
+    /// ([`StepJob::sq`]), and all `C` new latent/rope rows scatter back.
+    /// The returned [`StepTrace`] carries the **last** position's
+    /// readout — the next-token logits proxy; interior positions only
+    /// feed the residual stream and the cache.
+    ///
+    /// ## Chunked-prefill bit-identity contract
+    ///
+    /// The cache state and the last position's trace are bit-identical
+    /// to feeding the same tokens through `C` single-token
+    /// [`Self::step`]s: the layer phases are row-independent
+    /// ([`crate::numerics::mla`]), the kernels' causal row limits
+    /// reproduce each position's single-token masking, and masked
+    /// bucket-padding blocks are exact no-ops — so even a chunk whose
+    /// token-by-token run would have crossed KV buckets mid-chunk
+    /// produces identical bits.  Pinned by the kernel property suites
+    /// (`prop_prefill_chunk_equals_token_by_token`, both algorithms)
+    /// and `chunked_prefill_bit_identical_to_token_steps` below.
+    pub fn step_batch_chunked(&self, rts: &mut [SeqRuntime],
+                              feeds: &[Vec<u32>], workers: usize)
+                              -> Vec<Result<StepTrace>> {
         let d = self.executor.dims();
         assert_eq!(d.sq, 1, "serving engine drives sq=1 artifacts");
-        assert_eq!(rts.len(), tokens.len());
+        assert_eq!(rts.len(), feeds.len());
         let n = rts.len();
         let n_layers = self.executor.n_layers();
 
@@ -782,16 +857,25 @@ impl<E: LayerExecutor> DecodeEngine<E> {
         let mut jobs: Vec<Option<StepJob>> = Vec::with_capacity(n);
         let mut ctxs = vec![0usize; n];
         for i in 0..n {
-            let ctx = rts[i].caches[0].len() + 1; // history + new token
+            let c = feeds[i].len();
+            assert!(c >= 1, "empty feed chunk for sequence {i}");
+            let ctx = rts[i].caches[0].len() + c; // history + chunk
             ctxs[i] = ctx;
             match self.bucket_for(ctx) {
-                Ok(bucket) => jobs.push(Some(StepJob {
-                    x: self.embed(tokens[i], d.d_model),
-                    c_buf: vec![0.0; bucket * d.d_latent],
-                    kr_buf: vec![0.0; bucket * d.d_rope],
-                    bucket,
-                    valid_len: ctx,
-                })),
+                Ok(bucket) => {
+                    let mut x = Vec::with_capacity(c * d.d_model);
+                    for &t in &feeds[i] {
+                        x.extend_from_slice(&self.embed(t, d.d_model));
+                    }
+                    jobs.push(Some(StepJob {
+                        x,
+                        c_buf: vec![0.0; bucket * d.d_latent],
+                        kr_buf: vec![0.0; bucket * d.d_rope],
+                        bucket,
+                        valid_len: ctx,
+                        sq: c,
+                    }));
+                }
                 Err(e) => {
                     out[i] = Err(e);
                     jobs.push(None);
@@ -799,15 +883,14 @@ impl<E: LayerExecutor> DecodeEngine<E> {
             }
         }
 
-        let zero_lat = vec![0.0; d.d_latent];
-        let zero_rope = vec![0.0; d.d_rope];
         for layer in 0..n_layers {
-            // gather: reserve the new row, materialize history + blank
+            // gather: reserve the chunk's rows, materialize history +
+            // blanks
             for i in 0..n {
                 let Some(job) = jobs[i].as_mut() else { continue };
                 let mut pool = self.pool.lock().unwrap();
                 match rts[i].caches[layer]
-                    .append(&mut pool, &zero_lat, &zero_rope)
+                    .reserve_rows(&mut pool, job.sq)
                     .context("latent pool exhausted")
                 {
                     Ok(()) => rts[i].caches[layer].materialize(
@@ -831,20 +914,22 @@ impl<E: LayerExecutor> DecodeEngine<E> {
             let ys = self.executor.step_batch(layer, &mut live, workers);
             drop(live);
 
-            // scatter: persist the new row, advance the residual stream
+            // scatter: persist the chunk's rows, advance the residual
             for (&i, y) in live_idx.iter().zip(ys) {
                 match y {
                     Ok(y) => {
                         let job = jobs[i].as_mut().unwrap();
-                        let row = ctxs[i] - 1;
+                        let first = ctxs[i] - job.sq;
                         {
                             let mut pool = self.pool.lock().unwrap();
-                            rts[i].caches[layer].write_row(
-                                &mut pool, row,
-                                &job.c_buf[row * d.d_latent
-                                           ..(row + 1) * d.d_latent],
-                                &job.kr_buf[row * d.d_rope
-                                            ..(row + 1) * d.d_rope]);
+                            for row in first..ctxs[i] {
+                                rts[i].caches[layer].write_row(
+                                    &mut pool, row,
+                                    &job.c_buf[row * d.d_latent
+                                               ..(row + 1) * d.d_latent],
+                                    &job.kr_buf[row * d.d_rope
+                                                ..(row + 1) * d.d_rope]);
+                            }
                         }
                         for (xi, yi) in job.x.iter_mut().zip(&y) {
                             *xi += yi;
@@ -860,20 +945,44 @@ impl<E: LayerExecutor> DecodeEngine<E> {
 
         for i in 0..n {
             if let Some(job) = jobs[i].take() {
-                out[i] = Ok(StepTrace { token: self.readout(&job.x),
-                                        x: job.x });
+                let last =
+                    job.x[(job.sq - 1) * d.d_model..].to_vec();
+                out[i] = Ok(StepTrace { token: self.readout(&last),
+                                        x: last });
             }
         }
         out
     }
 
-    /// Prefill: feed every prompt token (decode-style, one at a time).
-    pub fn prefill(&self, rt: &mut SeqRuntime, prompt: &[u32]) -> Result<u32> {
+    /// Advance one sequence a whole prompt chunk in a single step (the
+    /// single-sequence view of [`Self::step_batch_chunked`]); returns
+    /// the last position's trace.
+    pub fn prefill_chunk(&self, rt: &mut SeqRuntime, tokens: &[u32])
+                         -> Result<StepTrace> {
+        let feeds = vec![tokens.to_vec()];
+        self.step_batch_chunked(std::slice::from_mut(rt), &feeds, 1)
+            .pop()
+            .expect("step_batch_chunked returns one result per sequence")
+    }
+
+    /// Prefill a whole prompt in chunks of up to `chunk` tokens,
+    /// returning the token sampled after the final prompt position —
+    /// bit-identical for every chunk size (see
+    /// [`Self::step_batch_chunked`]).
+    pub fn prefill_chunked(&self, rt: &mut SeqRuntime, prompt: &[u32],
+                           chunk: usize) -> Result<u32> {
+        assert!(chunk >= 1, "chunk size must be >= 1");
         let mut last = 0;
-        for &t in prompt {
-            last = self.step(rt, t)?;
+        for ch in prompt.chunks(chunk) {
+            last = self.prefill_chunk(rt, ch)?.token;
         }
         Ok(last)
+    }
+
+    /// Prefill: feed every prompt token (decode-style, one at a time —
+    /// the `chunk = 1` legacy path of [`Self::prefill_chunked`]).
+    pub fn prefill(&self, rt: &mut SeqRuntime, prompt: &[u32]) -> Result<u32> {
+        self.prefill_chunked(rt, prompt, 1)
     }
 }
 
@@ -1005,6 +1114,139 @@ mod tests {
         assert!(stats_on.1 >= 2 * stats_on.0,
                 "fused groups must hold >= 2 jobs each");
         assert_eq!(stats_off, (0, 0), "fusion off must not fuse");
+    }
+
+    /// Bit-exact snapshot of every cache row of every layer.
+    fn cache_bits(eng: &DecodeEngine<HostLayerExecutor>,
+                  rt: &SeqRuntime) -> Vec<u32> {
+        let pool = eng.pool.lock().unwrap();
+        let mut bits = Vec::new();
+        for cache in &rt.caches {
+            for i in 0..cache.len() {
+                let (lat, rope) = cache.row(&pool, i);
+                bits.extend(lat.iter().chain(rope.iter())
+                    .map(|x| x.to_bits()));
+            }
+        }
+        bits
+    }
+
+    #[test]
+    fn chunked_prefill_bit_identical_to_token_steps() {
+        // The chunked-prefill tentpole pin at engine level: for chunk
+        // sizes {1, 3, page-size, page-size + 1} (page_size = 16 here),
+        // both algorithms, a prompt whose chunks straddle page
+        // boundaries mid-chunk (37 = 2*16 + 5) and one whose
+        // token-by-token run crosses the 64 -> 128 KV bucket mid-chunk
+        // (70), the chunked run must reproduce the token-by-token run's
+        // final cache bits, last sampled token, and the next decode
+        // step's token exactly.
+        for algo in [Algo::Amla, Algo::Base] {
+            for prompt_len in [37usize, 70] {
+                let prompt: Vec<u32> =
+                    (0..prompt_len as u32).map(|i| 5 + 3 * i).collect();
+                let (ref_tok, ref_next, ref_bits) = {
+                    let eng = host_engine(algo);
+                    let mut rt = SeqRuntime::new(2);
+                    let t = eng.prefill(&mut rt, &prompt).unwrap();
+                    let bits = cache_bits(&eng, &rt);
+                    let next = eng.step(&mut rt, t).unwrap();
+                    (t, next, bits)
+                };
+                for chunk in [1usize, 3, 16, 17] {
+                    let eng = host_engine(algo);
+                    let mut rt = SeqRuntime::new(2);
+                    let t = eng.prefill_chunked(&mut rt, &prompt, chunk)
+                        .unwrap();
+                    assert_eq!(t, ref_tok,
+                               "{algo:?} len {prompt_len} chunk {chunk}: \
+                                final prefill token diverged");
+                    assert_eq!(cache_bits(&eng, &rt), ref_bits,
+                               "{algo:?} len {prompt_len} chunk {chunk}: \
+                                cache bits diverged");
+                    let next = eng.step(&mut rt, t).unwrap();
+                    assert_eq!(next, ref_next,
+                               "{algo:?} len {prompt_len} chunk {chunk}: \
+                                first decode token diverged");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fused_chunked_prefill_matches_unfused() {
+        // two sequences prefilling same-size chunks share a
+        // (bucket, sq) group, so the fused cross-sequence route covers
+        // chunked jobs too — bit-identically, with the counters moving
+        // only when fusion is on
+        let dims = MlaDims { d_model: 64, n1: 2, d_head: 16, q_rank: 32,
+                             d_latent: 24, d_rope: 8, sq: 1 };
+        let prompts: Vec<Vec<u32>> = vec![
+            (0..20u32).map(|i| 2 + i).collect(),
+            (0..20u32).map(|i| 100 + 7 * i).collect(),
+        ];
+        let run = |fuse: bool| {
+            let exec = HostLayerExecutor::new(dims, 2, Algo::Amla, 32,
+                                              vec![64, 128], 7)
+                .with_fuse(fuse);
+            let eng = DecodeEngine::new(exec, 128, 16);
+            let mut rts: Vec<SeqRuntime> =
+                (0..prompts.len()).map(|_| SeqRuntime::new(2)).collect();
+            let mut toks = vec![0u32; prompts.len()];
+            for base in (0..20).step_by(4) {
+                let feeds: Vec<Vec<u32>> = prompts.iter()
+                    .map(|p| p[base..base + 4].to_vec())
+                    .collect();
+                let outs = eng.step_batch_chunked(&mut rts, &feeds, 2);
+                for (i, o) in outs.into_iter().enumerate() {
+                    toks[i] = o.unwrap().token;
+                }
+            }
+            (toks, eng.executor.fusion_stats().unwrap())
+        };
+        let (tok_on, stats_on) = run(true);
+        let (tok_off, stats_off) = run(false);
+        assert_eq!(tok_on, tok_off, "fused chunked prefill diverged");
+        assert!(stats_on.0 > 0, "chunked jobs never fused");
+        assert_eq!(stats_off, (0, 0));
+    }
+
+    #[test]
+    fn mixed_chunk_and_decode_batch_is_exact() {
+        // one sequence decoding (1-token feed) next to one prefilling a
+        // 5-token chunk in the same batched step: row counts differ, so
+        // they cannot fuse together — both must still match their solo
+        // runs bit-for-bit
+        let solo_decode = {
+            let eng = host_engine(Algo::Amla);
+            let mut rt = SeqRuntime::new(2);
+            let t = eng.prefill(&mut rt, &[1, 2, 3]).unwrap();
+            eng.step(&mut rt, t).unwrap()
+        };
+        let solo_chunk = {
+            let eng = host_engine(Algo::Amla);
+            let mut rt = SeqRuntime::new(2);
+            eng.prefill_chunk(&mut rt, &[10, 11, 12, 13, 14]).unwrap().token
+        };
+        let eng = host_engine(Algo::Amla);
+        let mut rts = vec![SeqRuntime::new(2), SeqRuntime::new(2)];
+        let t = {
+            let feeds = vec![vec![1], vec![2], vec![3]];
+            let mut last = 0;
+            for f in feeds {
+                let outs = eng.step_batch_chunked(
+                    &mut rts[..1], &[f], 1);
+                last = outs.into_iter().next().unwrap().unwrap().token;
+            }
+            last
+        };
+        let feeds = vec![vec![t], vec![10, 11, 12, 13, 14]];
+        let outs = eng.step_batch_chunked(&mut rts, &feeds, 2);
+        let toks: Vec<u32> =
+            outs.into_iter().map(|o| o.unwrap().token).collect();
+        assert_eq!(toks, vec![solo_decode, solo_chunk]);
+        assert_eq!(rts[0].caches[0].len(), 4);
+        assert_eq!(rts[1].caches[0].len(), 5);
     }
 
     #[test]

@@ -9,7 +9,7 @@ use std::time::Duration;
 /// 99th value — not the max, which the old truncated-index formula
 /// (`(n as f64 * q) as usize`) only reached through clamping.  Shared
 /// by [`crate::coordinator::request::DecodeResult`] and the rate-sweep
-/// percentiles in [`crate::serving::sweep`]; returns 0.0 on empty.
+/// percentiles in [`crate::serving::sweep()`]; returns 0.0 on empty.
 pub fn quantile_sorted(sorted: &[f64], q: f64) -> f64 {
     if sorted.is_empty() {
         return 0.0;
@@ -98,6 +98,16 @@ pub struct Metrics {
     /// (a preempted request is re-enqueued with `prompt ⧺ generated`
     /// and counted once per eviction).
     pub preemptions: u64,
+    /// Per-sequence prefill engine invocations: one per (sequence,
+    /// global step) pair in which the sequence consumed prompt tokens.
+    /// Equals `prompt_tokens` on the legacy token-by-token path
+    /// (`prefill_chunk = 1`); chunked prefill divides it by up to the
+    /// chunk size — the "fewer prefill steps per request" the chunk
+    /// path exists to buy.
+    pub prefill_chunks: u64,
+    /// Prompt tokens consumed across all sequences (resume prompts of
+    /// preempted requests re-count: recompute re-pays their prefill).
+    pub prompt_tokens: u64,
 }
 
 impl Metrics {
@@ -154,7 +164,11 @@ impl Metrics {
              # TYPE amla_fused_jobs counter\n\
              amla_fused_jobs {}\n\
              # TYPE amla_preemptions counter\n\
-             amla_preemptions {}\n",
+             amla_preemptions {}\n\
+             # TYPE amla_prefill_chunks counter\n\
+             amla_prefill_chunks {}\n\
+             # TYPE amla_prompt_tokens counter\n\
+             amla_prompt_tokens {}\n",
             self.requests_completed, self.tokens_generated, self.steps,
             self.step_latency.quantile_us(0.5),
             self.step_latency.quantile_us(0.99),
@@ -165,7 +179,9 @@ impl Metrics {
             self.steps_per_sec(),
             self.fused_groups,
             self.fused_jobs,
-            self.preemptions)
+            self.preemptions,
+            self.prefill_chunks,
+            self.prompt_tokens)
     }
 }
 
@@ -203,10 +219,14 @@ mod tests {
         m.fused_groups = 3;
         m.fused_jobs = 9;
         m.preemptions = 2;
+        m.prefill_chunks = 5;
+        m.prompt_tokens = 17;
         let text = m.render();
         assert!(text.contains("amla_fused_groups 3"));
         assert!(text.contains("amla_fused_jobs 9"));
         assert!(text.contains("amla_preemptions 2"));
+        assert!(text.contains("amla_prefill_chunks 5"));
+        assert!(text.contains("amla_prompt_tokens 17"));
     }
 
     #[test]

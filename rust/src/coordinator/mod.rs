@@ -8,8 +8,9 @@
 //!
 //! ```text
 //! requests → [batcher: admission + continuous batching]
-//!          → [scheduler: one batched step per iteration — every active
-//!             sequence advances one token together]
+//!          → [scheduler: one batched step per iteration — decoding
+//!             sequences advance one token, prefilling sequences a
+//!             prompt chunk of up to `prefill_chunk` tokens]
 //!          → [engine: N-layer MLA model; step_batch fans the per-
 //!             sequence attention calls over a scoped worker pool]
 //!          → [kvcache: paged latent pool, page-contiguous gather into
@@ -17,6 +18,10 @@
 //!          → streamed tokens + metrics (per-batch occupancy; the step
 //!             latency histogram is per batched step)
 //! ```
+//!
+//! `docs/ARCHITECTURE.md` walks one batched decode step and one chunked
+//! prefill step through this stack end to end, and indexes every
+//! bit-identity contract with its pinning tests.
 //!
 //! ## The batched-engine contract
 //!
@@ -67,6 +72,34 @@
 //! residual bits across PRs.  A change that breaks any of these is a
 //! numerics regression, never an acceptable "parallel rounding
 //! difference".
+//!
+//! ## The chunked-prefill bit-identity contract
+//!
+//! Prompts prefill **chunk-at-a-time**: a prefilling sequence consumes
+//! up to [`crate::config::ServeConfig::prefill_chunk`] prompt tokens
+//! per global step (`--prefill-chunk`, default 8; 1 = the legacy
+//! token-per-step path), carried as [`engine::StepJob::sq`] rows
+//! through one multi-row causal attention pass
+//! ([`crate::numerics::amla::amla_prefill_chunk`] /
+//! [`crate::numerics::flash_base::base_prefill_chunk`]).  Chunking
+//! amortizes the per-invocation layer overhead a long prompt otherwise
+//! pays per token, and makes recompute-style preemption resume
+//! (`prompt ⧺ generated` re-prefill, [`crate::serving::preempt`])
+//! proportionally cheaper.
+//!
+//! Like fusion, chunking must be **bit-identical** — cache state and
+//! next-token readout exactly equal to `C` single-token steps, for
+//! every chunk size, even when the token-by-token run would have
+//! crossed KV buckets mid-chunk (masked bucket-padding blocks are
+//! exact no-ops).  Executors advertise multi-row support via
+//! [`engine::LayerExecutor::max_prefill_chunk`]; the scheduler clamps
+//! to it, so [`engine::PjrtLayerExecutor`] (fixed-`sq` executables)
+//! transparently falls back to token-by-token.  Pinned by the kernel
+//! property suites (`prop_prefill_chunk_equals_token_by_token`, both
+//! algorithms, both precisions), the engine suite
+//! (`chunked_prefill_bit_identical_to_token_steps`, chunk sizes
+//! 1/3/page/page+1), and the open-loop chunk reruns in
+//! `rust/tests/open_loop_golden.rs`.
 //!
 //! ## One stepping core, two admission loops
 //!

@@ -73,6 +73,21 @@ impl RequestState {
         }
     }
 
+    /// The feed chunk for the next batched step: up to `cap` unfed
+    /// prompt tokens while prefilling (chunked prefill — the whole
+    /// remaining prompt if shorter), else the single last generated
+    /// token.  `cap = 1` reproduces [`Self::next_feed`] exactly.
+    pub fn next_feed_chunk(&self, cap: usize) -> Vec<u32> {
+        let cap = cap.max(1);
+        if self.prefilling() {
+            let end = (self.prompt_consumed + cap)
+                .min(self.request.prompt.len());
+            self.request.prompt[self.prompt_consumed..end].to_vec()
+        } else {
+            vec![*self.generated.last().expect("decode step before prefill")]
+        }
+    }
+
     /// Whether the next step consumes a prompt token (incremental
     /// prefill) rather than extending the generation.
     pub fn prefilling(&self) -> bool {
@@ -167,6 +182,22 @@ mod tests {
         let res = DecodeResult::from_state(&st);
         assert_eq!(res.tokens, vec![42, 43]);
         assert!((res.mean_tpot - 0.015).abs() < 1e-9);
+    }
+
+    #[test]
+    fn feed_chunks_walk_the_prompt_then_decode() {
+        let mut st = RequestState::new(
+            DecodeRequest::new(2, vec![10, 11, 12, 13, 14], 2));
+        assert_eq!(st.next_feed_chunk(3), vec![10, 11, 12]);
+        st.prompt_consumed = 3;
+        // tail shorter than the cap: the remainder, not a padded chunk
+        assert_eq!(st.next_feed_chunk(3), vec![13, 14]);
+        assert_eq!(st.next_feed_chunk(1), vec![13], "cap 1 = legacy path");
+        st.prompt_consumed = 5;
+        st.generated.push(42);
+        assert_eq!(st.next_feed_chunk(3), vec![42],
+                   "decode steps stay single-token");
+        assert_eq!(st.next_feed_chunk(0), vec![42], "cap clamps to >= 1");
     }
 
     #[test]

@@ -1,19 +1,26 @@
 //! The serving loop: continuous batching over the batched decode engine.
 //!
-//! Each global step, every active sequence advances **one token
-//! together** through [`DecodeEngine::step_batch`]: per layer the
-//! coordinator gathers all sequences' caches from the paged pool, the
-//! executor fans the independent attention calls across
-//! [`ServeConfig::batch_workers`] scoped threads, and the new rows
-//! scatter back.  Prompts prefill incrementally — one prompt token per
-//! global step — so a freshly admitted request joins the running batch
-//! immediately instead of serializing a whole-prompt prefill.  After
-//! each step, finished sequences are reaped, their pages released, and
-//! the batcher refills slots from the queue (continuous batching).
+//! Each global step, every active sequence advances **together**
+//! through [`DecodeEngine::step_batch_chunked`]: decoding sequences
+//! advance one token, prefilling sequences consume a **prompt chunk**
+//! of up to [`ServeConfig::prefill_chunk`] tokens in one multi-row
+//! causal attention pass (`--prefill-chunk`; 1 = the legacy
+//! token-per-step path).  Per layer the coordinator gathers all
+//! sequences' caches from the paged pool, the executor fans the
+//! independent attention calls across [`ServeConfig::batch_workers`]
+//! scoped threads, and the new rows scatter back.  Incremental chunked
+//! prefill keeps a freshly admitted request joining the running batch
+//! immediately while amortizing the per-step layer overhead that
+//! token-by-token prefill pays once per prompt token.  After each step,
+//! finished sequences are reaped, their pages released, and the batcher
+//! refills slots from the queue (continuous batching).
 //!
-//! Batching and parallelism are exact: sequences share no mutable
-//! state, so the emitted token streams are bit-identical for every
-//! `batch_workers` setting (see `rust/tests/end_to_end.rs`).
+//! Batching, parallelism, and chunking are exact: sequences share no
+//! mutable state and the chunked kernels are bit-identical per position
+//! to single-token steps, so the emitted token streams are
+//! bit-identical for every `batch_workers` **and** `prefill_chunk`
+//! setting (see `rust/tests/end_to_end.rs` and the chunked-prefill
+//! suites in [`crate::coordinator::engine`]).
 //!
 //! The engine-stepping machinery lives in [`StepCore`] — one shared
 //! implementation of "advance the active set one step / reap the
@@ -80,10 +87,32 @@ impl StepCore {
         Self { runtimes: HashMap::new(), n_layers }
     }
 
-    /// Advance every active sequence one token (one batched engine
-    /// step), doing token/latency/metrics accounting.  Returns the
-    /// batch size stepped.  A per-sequence engine failure aborts only
-    /// that sequence (its `max_new_tokens` shrinks so it reaps).
+    /// The prompt-chunk cap this run actually steps with:
+    /// [`ServeConfig::prefill_chunk`] clamped to what the executor can
+    /// advance in one layer call ([`LayerExecutor::max_prefill_chunk`]),
+    /// so executors without a multi-row route fall back to
+    /// token-by-token prefill transparently.
+    pub fn effective_prefill_chunk<E: LayerExecutor>(
+        engine: &DecodeEngine<E>, cfg: &ServeConfig) -> usize {
+        let cap = engine.executor.max_prefill_chunk().max(1);
+        cfg.prefill_chunk.clamp(1, cap)
+    }
+
+    /// Advance every active sequence one batched engine step: decoding
+    /// sequences advance one token, prefilling sequences consume a
+    /// prompt chunk of up to [`ServeConfig::prefill_chunk`] tokens
+    /// ([`DecodeEngine::step_batch_chunked`]) — token/latency/metrics
+    /// accounting included.  Returns the batch size stepped.  A
+    /// per-sequence engine failure aborts only that sequence (its
+    /// `max_new_tokens` shrinks so it reaps).
+    ///
+    /// TTFT accounting under chunking: interior prompt chunks only
+    /// accrue `pending_prefill`; the first generated token — and with
+    /// it the request's first-token latency — is stamped exactly once,
+    /// when the chunk containing the **last** prompt token completes.
+    /// The virtual clock books each step at its advanced-row count
+    /// (chunk sizes sum), so chunked prefill pays the per-row cost but
+    /// amortizes the per-step overhead.
     pub fn step<E: LayerExecutor>(&mut self, engine: &DecodeEngine<E>,
                                   batcher: &mut Batcher, cfg: &ServeConfig,
                                   metrics: &mut Metrics,
@@ -94,19 +123,23 @@ impl StepCore {
                 .or_insert_with(|| SeqRuntime::new(self.n_layers));
         }
 
+        let chunk = Self::effective_prefill_chunk(engine, cfg);
         let step_t0 = Instant::now();
         let states = batcher.active_mut();
         let ids: Vec<RequestId> =
             states.iter().map(|st| st.request.id).collect();
-        let feeds: Vec<u32> = states.iter().map(|st| st.next_feed()).collect();
+        let feeds: Vec<Vec<u32>> =
+            states.iter().map(|st| st.next_feed_chunk(chunk)).collect();
+        let rows: usize = feeds.iter().map(Vec::len).sum();
         // hand the batch exclusive access to its runtimes
         let mut rts: Vec<SeqRuntime> =
             ids.iter().map(|id| self.runtimes.remove(id).unwrap()).collect();
 
-        let outs = engine.step_batch(&mut rts, &feeds, cfg.batch_workers);
+        let outs = engine.step_batch_chunked(&mut rts, &feeds,
+                                             cfg.batch_workers);
 
         let measured = step_t0.elapsed().as_secs_f64();
-        let dt = clock.advance_step(ids.len(), measured);
+        let dt = clock.advance_step(rows, measured);
         for (id, rt) in ids.iter().zip(rts) {
             self.runtimes.insert(*id, rt);
         }
@@ -114,18 +147,21 @@ impl StepCore {
         for (i, out) in outs.into_iter().enumerate() {
             let st = &mut states[i];
             debug_assert_eq!(st.request.id, ids[i]);
+            let fed = feeds[i].len();
             match out {
-                Ok(token) => {
+                Ok(trace) => {
                     if st.prefilling() {
-                        st.prompt_consumed += 1;
+                        st.prompt_consumed += fed;
+                        metrics.prefill_chunks += 1;
+                        metrics.prompt_tokens += fed as u64;
                         if st.prefilling() {
-                            // interior prompt token: output discarded,
+                            // interior prompt chunk: output discarded,
                             // time accrues toward the first token
                             st.pending_prefill += dt;
                         } else {
-                            // last prompt token -> first generated token
+                            // last prompt chunk -> first generated token
                             let lat = st.pending_prefill + dt;
-                            st.generated.push(token);
+                            st.generated.push(trace.token);
                             st.token_latencies.push(lat);
                             st.pending_prefill = 0.0;
                             metrics.tokens_generated += 1;
@@ -133,7 +169,8 @@ impl StepCore {
                                 Duration::from_secs_f64(lat));
                         }
                     } else {
-                        st.generated.push(token);
+                        debug_assert_eq!(fed, 1, "decode steps feed 1 token");
+                        st.generated.push(trace.token);
                         st.token_latencies.push(dt);
                         metrics.tokens_generated += 1;
                         metrics.token_latency.record(
@@ -354,6 +391,78 @@ mod tests {
         assert!(groups_on > 0, "no fused groups recorded");
         assert!(jobs_on >= 2 * groups_on);
         assert_eq!(groups_off, 0, "--fuse-buckets off must disable fusion");
+    }
+
+    #[test]
+    fn chunked_prefill_serves_identical_tokens_with_fewer_chunks() {
+        // same request set at prefill_chunk 1 vs 4: token streams must
+        // be bit-identical, prompt-token totals equal, and the chunked
+        // run must reach the first token in fewer prefill invocations
+        let reqs = || -> Vec<DecodeRequest> {
+            vec![
+                DecodeRequest::new(0, (0..9).map(|t| 10 + t).collect(), 4),
+                DecodeRequest::new(1, vec![7, 8], 3),
+                DecodeRequest::new(2, (0..13).map(|t| 40 + t).collect(), 2),
+            ]
+        };
+        let run = |chunk: usize| {
+            let engine = small_engine();
+            let mut c = cfg(3, 2);
+            c.prefill_chunk = chunk;
+            let report = serve(&engine, reqs(), &c).unwrap();
+            let mut r = report.results;
+            r.sort_by_key(|x| x.id);
+            (r.into_iter().map(|x| x.tokens).collect::<Vec<_>>(),
+             report.metrics.prefill_chunks, report.metrics.prompt_tokens)
+        };
+        let (tok1, chunks1, prompt1) = run(1);
+        let (tok4, chunks4, prompt4) = run(4);
+        assert_eq!(tok1, tok4, "prefill chunking changed served tokens");
+        assert_eq!(prompt1, 9 + 2 + 13);
+        assert_eq!(prompt4, prompt1, "chunking must not change prompt work");
+        assert_eq!(chunks1, prompt1, "chunk=1 is one invocation per token");
+        // 9 -> 3 chunks, 2 -> 1 chunk, 13 -> 4 chunks
+        assert_eq!(chunks4, 3 + 1 + 4);
+    }
+
+    #[test]
+    fn executor_without_multi_row_route_falls_back_to_chunk_1() {
+        let engine = small_engine();
+        let mut c = cfg(2, 1);
+        c.prefill_chunk = 8;
+        assert_eq!(StepCore::effective_prefill_chunk(&engine, &c), 8,
+                   "host executor accepts any chunk");
+        // an executor that caps max_prefill_chunk at 1 must clamp
+        struct OneRow(HostLayerExecutor);
+        impl LayerExecutor for OneRow {
+            fn dims(&self) -> crate::numerics::mla::MlaDims {
+                self.0.dims()
+            }
+            fn n_layers(&self) -> usize {
+                self.0.n_layers()
+            }
+            fn buckets(&self) -> Vec<usize> {
+                self.0.buckets()
+            }
+            fn step(&self, layer: usize, x: &[f32], c: &mut [f32],
+                    kr: &mut [f32], bucket: usize, valid_len: usize)
+                    -> anyhow::Result<Vec<f32>> {
+                self.0.step(layer, x, c, kr, bucket, valid_len)
+            }
+        }
+        let dims = MlaDims { d_model: 48, n1: 2, d_head: 12, q_rank: 24,
+                             d_latent: 16, d_rope: 8, sq: 1 };
+        let inner = HostLayerExecutor::new(dims, 2, Algo::Amla, 32,
+                                           vec![32, 64], 11);
+        let engine = DecodeEngine::new(OneRow(inner), 256, 8);
+        assert_eq!(StepCore::effective_prefill_chunk(&engine, &c), 1,
+                   "default executors must fall back to token-by-token");
+        // and serving through it still completes correctly
+        let reqs = vec![DecodeRequest::new(0, vec![1, 2, 3, 4, 5], 3)];
+        let report = serve(&engine, reqs, &c).unwrap();
+        assert_eq!(report.results[0].tokens.len(), 3);
+        assert_eq!(report.metrics.prefill_chunks, 5,
+                   "fallback must step the prompt token-by-token");
     }
 
     #[test]

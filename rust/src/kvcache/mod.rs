@@ -6,8 +6,17 @@
 //! free list and per-page reference counts (vLLM-style block tables, so
 //! prefix sharing is possible); [`paged::SequenceCache`] is one
 //! sequence's view: a block table plus a logical length, with
-//! `materialize` gathering the pages into the padded bucket buffers the
-//! shape-static HLO executables consume.
+//! [`paged::SequenceCache::materialize`] gathering the pages into the
+//! padded bucket buffers the shape-static HLO executables consume.
+//!
+//! The batched decode path gathers page-contiguous runs
+//! ([`paged::SequenceCache::for_each_page_run`]) rather than doing a
+//! page lookup per row; chunked prefill reserves a whole chunk's rows
+//! at once ([`paged::SequenceCache::reserve_rows`]) and scatters all
+//! `C` new rows back after the multi-row layer pass.  The fused
+//! cross-sequence route stacks its gathered operands in a reusable
+//! [`paged::BucketArena`].  See `docs/ARCHITECTURE.md` for where each
+//! primitive sits in a serving step.
 
 pub mod paged;
 

@@ -140,20 +140,45 @@ impl SequenceCache {
         &self.pages
     }
 
+    /// Advance the sequence by one row slot, allocating a fresh page
+    /// when the slot crosses a page boundary; returns the `(page,
+    /// slot)` the new row lives in.  The one place page-growth policy
+    /// lives — [`Self::append`] and [`Self::reserve_rows`] both grow
+    /// through here, so an allocation-policy change (e.g. copy-on-write
+    /// prefix sharing) cannot drift between them.
+    fn grow_slot(&mut self, pool: &mut PagePool) -> Result<(PageId, usize)> {
+        let slot = self.len % pool.page_size();
+        if slot == 0 {
+            self.pages.push(pool.alloc()?);
+        }
+        self.len += 1;
+        Ok((*self.pages.last().unwrap(), slot))
+    }
+
     /// Append one token's latent+rope row.
     pub fn append(&mut self, pool: &mut PagePool, latent: &[f32],
                   rope: &[f32]) -> Result<()> {
         assert_eq!(latent.len(), pool.d_latent);
         assert_eq!(rope.len(), pool.d_rope);
-        let slot = self.len % pool.page_size();
-        if slot == 0 {
-            self.pages.push(pool.alloc()?);
-        }
-        let page = *self.pages.last().unwrap();
+        let (page, slot) = self.grow_slot(pool)?;
         let row = pool.row_slice_mut(page, slot);
         row[..latent.len()].copy_from_slice(latent);
         row[latent.len()..].copy_from_slice(rope);
-        self.len += 1;
+        Ok(())
+    }
+
+    /// Reserve `n` blank (zeroed) rows at the end of the sequence —
+    /// the chunked-prefill gather reserves a whole chunk's rows before
+    /// materializing, allocating pages as row slots cross page
+    /// boundaries.  Equivalent to `n` zero [`Self::append`]s; on a pool
+    /// allocation failure the rows reserved so far remain (the caller
+    /// aborts the sequence and frees the whole cache).
+    pub fn reserve_rows(&mut self, pool: &mut PagePool, n: usize)
+                        -> Result<()> {
+        for _ in 0..n {
+            let (page, slot) = self.grow_slot(pool)?;
+            pool.row_slice_mut(page, slot).fill(0.0);
+        }
         Ok(())
     }
 
@@ -362,6 +387,32 @@ mod tests {
             assert_eq!(kr[i * 2], -(i as f32));
         }
         assert!(c[10 * 6..].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn reserve_rows_zeroes_and_allocates_across_pages() {
+        let mut p = pool(); // page_size 4
+        let mut seq = SequenceCache::new();
+        seq.append(&mut p, &[7.0; 6], &[8.0; 2]).unwrap();
+        // 6 more rows: fills page 0 (slots 1-3) + allocates page 1
+        seq.reserve_rows(&mut p, 6).unwrap();
+        assert_eq!(seq.len(), 7);
+        assert_eq!(seq.pages().len(), 2);
+        let (l0, r0) = seq.row(&p, 0);
+        assert_eq!(l0, vec![7.0; 6], "existing row must be untouched");
+        assert_eq!(r0, vec![8.0; 2]);
+        for i in 1..7 {
+            let (l, r) = seq.row(&p, i);
+            assert!(l.iter().chain(r.iter()).all(|&x| x == 0.0),
+                    "reserved row {i} not zeroed");
+        }
+        // exhaustion mid-reserve errors; already-reserved rows remain
+        let mut small = PagePool::new(1, 4, 6, 2);
+        let mut s2 = SequenceCache::new();
+        assert!(s2.reserve_rows(&mut small, 9).is_err());
+        assert_eq!(s2.len(), 4, "rows before exhaustion are kept");
+        s2.free(&mut small);
+        assert_eq!(small.stats().allocated_pages, 0);
     }
 
     #[test]

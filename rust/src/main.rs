@@ -66,14 +66,17 @@ amla — AMLA reproduction coordinator
 USAGE:
   amla serve      [--requests N] [--algo amla|base] [--max-batch B]
                   [--workers W] [--batch-workers W] [--fuse-buckets on|off]
-                  [--max-new-tokens T] [--artifacts DIR]
+                  [--prefill-chunk C] [--max-new-tokens T] [--artifacts DIR]
                   [--open-loop] [--rate R] [--starvation-steps S]
                   [--preempt on|off] [--virtual-clock]
                   # --open-loop serves a Poisson trace arrival-driven:
                   # requests appear at their arrival times, starved heads
                   # may preempt (recompute eviction, bit-identical resume)
+                  # --prefill-chunk C consumes C prompt tokens per step
+                  # (bit-identical to 1 = token-by-token; PJRT clamps
+                  # to 1 pending variable-sq executables)
   amla sweep      [--rates R1,R2,...] [--requests N] [--algo amla|base]
-                  [--max-batch B] [--preempt on|off]
+                  [--max-batch B] [--preempt on|off] [--prefill-chunk C]
                   # open-loop rate sweep on the host substrate with a
                   # deterministic virtual clock: TTFT/TPOT/queue-delay
                   # percentiles vs offered rate + saturation throughput
@@ -169,8 +172,10 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         ..WorkloadSpec::default()
     };
     let trace = generate_trace(&spec);
-    eprintln!("[sweep] {} requests, {} rates, max_batch {}, preempt {}",
-              n_requests, rates.len(), cfg.max_batch, cfg.preempt);
+    eprintln!("[sweep] {} requests, {} rates, max_batch {}, preempt {}, \
+               prefill chunk {}",
+              n_requests, rates.len(), cfg.max_batch, cfg.preempt,
+              cfg.prefill_chunk);
     let sweep_cfg = SweepConfig { rates, ..SweepConfig::default() };
     let report = sweep(&engine, &trace, spec.rate, &cfg, &sweep_cfg)?;
     println!("{}", report.render_table());

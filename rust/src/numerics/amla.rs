@@ -251,6 +251,40 @@ pub fn amla_attention_with_scratch(q: &Matrix, k: &Matrix, v: &Matrix,
     (o, stats)
 }
 
+/// Algorithm 2 over a **prompt chunk**: `cfg.sq = C` query positions of
+/// one sequence (stacked `[C·n1, Dk]`, position-major) attend against
+/// the same KV bucket in a single score/rescale/accumulate block loop,
+/// with per-row causal limits (position `p`'s rows see KV rows
+/// `0 .. valid_len - (C-1-p)`, per [`row_limits`]) — the multi-row
+/// kernel shape chunked prefill amortizes per-invocation cost over.
+///
+/// ## Chunked-prefill bit-identity contract
+///
+/// The chunk call is **bit-identical, row for row, to `C` successive
+/// single-position calls** (`sq = 1`, `valid_len` stepping through the
+/// chunk): every per-row operation — score dot products, the online
+/// softmax / exponent-compensation recurrence, the `P·V` accumulation,
+/// the final normalization — is row-independent, and masked blocks past
+/// a row's causal limit are exact no-ops (the zero-mass-block property
+/// above), so neither the stacked row count nor the bucket padding
+/// changes any row's arithmetic.  Pinned bit-for-bit by
+/// `prop_prefill_chunk_equals_token_by_token` here, its Base twin, and
+/// the engine-level chunked-prefill suite in
+/// `crate::coordinator::engine`.
+///
+/// `cfg.valid_len` is the context length *after* the chunk (history +
+/// `C`); `q.rows` must be `cfg.sq * cfg.n1`.
+pub fn amla_prefill_chunk(q: &Matrix, k: &Matrix, v: &Matrix,
+                          cfg: &FlashConfig, scratch: &mut AmlaScratch)
+                          -> (Matrix, AmlaStats) {
+    assert!(cfg.sq >= 1, "prefill chunk must cover >= 1 position");
+    assert!(cfg.n1 >= 1, "prefill chunk needs explicit n1");
+    assert_eq!(q.rows, cfg.sq * cfg.n1, "q is not [C*n1, Dk]");
+    assert!(cfg.valid_len >= cfg.sq,
+            "valid_len counts the chunk's own rows");
+    amla_attention_with_scratch(q, k, v, cfg, scratch)
+}
+
 /// Algorithm 2 fused across sequences: `seqs.len()` same-bucket
 /// sequences stacked into one `[B·g, Dk]` query block (`q`, row-major,
 /// sequence-major) and driven through a **single** score/rescale/
@@ -566,6 +600,55 @@ mod tests {
             let got_bits: Vec<u32> =
                 got.data.iter().map(|x| x.to_bits()).collect();
             assert_eq!(got_bits, expect, "{}", case.describe());
+        });
+    }
+
+    #[test]
+    fn prop_prefill_chunk_equals_token_by_token() {
+        // Chunked-prefill pin (kernel level): a C-position chunk must be
+        // bit-identical, row block for row block, to C successive
+        // single-position calls whose valid_len steps through the chunk
+        // — across chunk sizes (1, 3, one block, one block + 1), both
+        // precisions, and chunk ends landing mid-block / on block
+        // boundaries.  The single-position references share one dirtied
+        // scratch with the chunk call, pinning scratch reuse too.
+        run_prop("amla_prefill_chunk_eq_steps", 60, |rng| {
+            let seed = rng.next_u64();
+            let n1 = *gen_choice(rng, &[1usize, 2, 4]);
+            let block_kv = 16usize;
+            let s2 = gen_usize(rng, 2, 5) * block_kv; // 32..64
+            let mixed = rng.next_u64() & 1 == 1;
+            let chunk = *gen_choice(rng, &[1usize, 3, 16, 17]);
+            let valid = gen_usize(rng, chunk, s2 + 1);
+            let (q, k, v) = inputs(seed, chunk * n1, s2, 32, 16, 1.0);
+            let ctx = format!("seed={seed} n1={n1} s2={s2} chunk={chunk} \
+                               valid={valid} bf16={mixed}");
+
+            let mut scratch = AmlaScratch::new();
+            let cfg = FlashConfig { block_kv, n1, sq: chunk,
+                                    valid_len: valid, mixed_bf16: mixed };
+            let (got, _) = amla_prefill_chunk(&q, &k, &v, &cfg, &mut scratch);
+
+            for p in 0..chunk {
+                let qp = Matrix::from_vec(
+                    n1, 32, q.data[p * n1 * 32..(p + 1) * n1 * 32].to_vec());
+                let cfg1 = FlashConfig {
+                    block_kv, n1, sq: 1,
+                    valid_len: valid - (chunk - 1 - p),
+                    mixed_bf16: mixed,
+                };
+                let (want, _) = amla_attention_with_scratch(&qp, &k, &v,
+                                                            &cfg1,
+                                                            &mut scratch);
+                let got_bits: Vec<u32> = got.data
+                    [p * n1 * 16..(p + 1) * n1 * 16]
+                    .iter()
+                    .map(|x| x.to_bits())
+                    .collect();
+                let want_bits: Vec<u32> =
+                    want.data.iter().map(|x| x.to_bits()).collect();
+                assert_eq!(got_bits, want_bits, "position {p}: {ctx}");
+            }
         });
     }
 

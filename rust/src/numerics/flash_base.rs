@@ -194,6 +194,31 @@ pub fn base_flash_attention_with_scratch(q: &Matrix, k: &Matrix, v: &Matrix,
     o
 }
 
+/// Algorithm 1 over a **prompt chunk** — the Base twin of
+/// [`super::amla::amla_prefill_chunk`]: `cfg.sq = C` query positions of
+/// one sequence (stacked `[C·n1, Dk]`, position-major) run through a
+/// single block loop with per-row causal limits ([`row_limits`]).
+///
+/// Bit-identical, row for row, to `C` successive `sq = 1` calls whose
+/// `valid_len` steps through the chunk: every per-row operation is
+/// row-independent, and blocks past a row's causal limit are exact
+/// no-ops (`alpha = exp(0) = 1`, zero row-sum — see
+/// `prop_trailing_masked_blocks_are_noops` below).  Pinned by
+/// `prop_prefill_chunk_equals_token_by_token`.
+///
+/// `cfg.valid_len` is the context length *after* the chunk; `q.rows`
+/// must be `cfg.sq * cfg.n1`.
+pub fn base_prefill_chunk(q: &Matrix, k: &Matrix, v: &Matrix,
+                          cfg: &FlashConfig,
+                          scratch: &mut super::amla::AmlaScratch) -> Matrix {
+    assert!(cfg.sq >= 1, "prefill chunk must cover >= 1 position");
+    assert!(cfg.n1 >= 1, "prefill chunk needs explicit n1");
+    assert_eq!(q.rows, cfg.sq * cfg.n1, "q is not [C*n1, Dk]");
+    assert!(cfg.valid_len >= cfg.sq,
+            "valid_len counts the chunk's own rows");
+    base_flash_attention_with_scratch(q, k, v, cfg, scratch)
+}
+
 /// Cross-sequence fused Algorithm 1: `seqs.len()` same-bucket sequences
 /// stacked into one `[B·g, Dk]` query block (`q`, row-major, sequence-
 /// major) and driven through a single block loop — the Base twin of
@@ -381,6 +406,83 @@ mod tests {
             let got_bits: Vec<u32> =
                 got.data.iter().map(|x| x.to_bits()).collect();
             assert_eq!(got_bits, expect, "{}", case.describe());
+        });
+    }
+
+    #[test]
+    fn prop_trailing_masked_blocks_are_noops() {
+        // Base twin of the AMLA masked-tail property: blocks fully past
+        // the valid prefix contribute alpha = exp(0) = 1 and a zero
+        // row-sum, so the output must be bit-identical to a run over
+        // only the covering blocks — the bucket-independence the
+        // chunked-prefill path relies on when token-by-token and chunked
+        // runs land in different KV buckets.
+        use crate::util::prop::{gen_usize, run_prop};
+        run_prop("base_masked_tail_noop", 24, |rng| {
+            let seed = rng.next_u64();
+            let valid = gen_usize(rng, 1, 129); // <= 2 of the 4 blocks
+            let (q, k, v) = inputs(seed, 4, 256, 32, 16);
+            let cfg = FlashConfig { block_kv: 64, n1: 4, sq: 1,
+                                    valid_len: valid, mixed_bf16: true };
+            let full = base_flash_attention(&q, &k, &v, &cfg);
+            let s2p = valid.div_ceil(64) * 64;
+            let kp = Matrix::from_vec(s2p, 32, k.data[..s2p * 32].to_vec());
+            let vp = Matrix::from_vec(s2p, 16, v.data[..s2p * 16].to_vec());
+            let trunc = base_flash_attention(&q, &kp, &vp, &cfg);
+            for (i, (a, b)) in full.data.iter().zip(&trunc.data).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(),
+                           "seed={seed} valid={valid} elem={i}: {a} vs {b}");
+            }
+        });
+    }
+
+    #[test]
+    fn prop_prefill_chunk_equals_token_by_token() {
+        // Base twin of the AMLA chunked-prefill pin: a C-position chunk
+        // must be bit-identical per position to C successive sq=1 calls
+        // (shared dirtied scratch, both precisions, chunk ends on and
+        // off block boundaries).
+        use crate::util::prop::{gen_choice, gen_usize, run_prop};
+        run_prop("base_prefill_chunk_eq_steps", 60, |rng| {
+            let seed = rng.next_u64();
+            let n1 = *gen_choice(rng, &[1usize, 2, 4]);
+            let block_kv = 16usize;
+            let s2 = gen_usize(rng, 2, 5) * block_kv; // 32..64
+            let mixed = rng.next_u64() & 1 == 1;
+            let chunk = *gen_choice(rng, &[1usize, 3, 16, 17]);
+            let valid = gen_usize(rng, chunk, s2 + 1);
+            let mut rng2 = crate::numerics::Rng::new(seed);
+            let q = rng2.gaussian_matrix(chunk * n1, 32, 1.0);
+            let k = rng2.gaussian_matrix(s2, 32, 1.0);
+            let v = rng2.gaussian_matrix(s2, 16, 1.0);
+            let ctx = format!("seed={seed} n1={n1} s2={s2} chunk={chunk} \
+                               valid={valid} bf16={mixed}");
+
+            let mut scratch = crate::numerics::amla::AmlaScratch::new();
+            let cfg = FlashConfig { block_kv, n1, sq: chunk,
+                                    valid_len: valid, mixed_bf16: mixed };
+            let got = base_prefill_chunk(&q, &k, &v, &cfg, &mut scratch);
+
+            for p in 0..chunk {
+                let qp = Matrix::from_vec(
+                    n1, 32, q.data[p * n1 * 32..(p + 1) * n1 * 32].to_vec());
+                let cfg1 = FlashConfig {
+                    block_kv, n1, sq: 1,
+                    valid_len: valid - (chunk - 1 - p),
+                    mixed_bf16: mixed,
+                };
+                let want = base_flash_attention_with_scratch(&qp, &k, &v,
+                                                             &cfg1,
+                                                             &mut scratch);
+                let got_bits: Vec<u32> = got.data
+                    [p * n1 * 16..(p + 1) * n1 * 16]
+                    .iter()
+                    .map(|x| x.to_bits())
+                    .collect();
+                let want_bits: Vec<u32> =
+                    want.data.iter().map(|x| x.to_bits()).collect();
+                assert_eq!(got_bits, want_bits, "position {p}: {ctx}");
+            }
         });
     }
 

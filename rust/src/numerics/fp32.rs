@@ -75,8 +75,9 @@ pub fn rescale_add(delta_n: i32, eps: f32) -> i32 {
     clamped * EXP_ONE + ((eps + ROUND_EPS) * EXP_ONE as f32).round() as i32
 }
 
-/// Apply one rescale add in place over an accumulator row ("AtomicAdd
-/// <INT32> in GM" — single-writer here, so a plain add is equivalent).
+/// Apply one rescale add in place over an accumulator row (the paper's
+/// "AtomicAdd `<INT32>` in GM" — single-writer here, so a plain add is
+/// equivalent).
 #[inline]
 pub fn rescale_row(row: &mut [f32], add: i32) {
     for x in row.iter_mut() {

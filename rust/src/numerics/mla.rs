@@ -134,18 +134,37 @@ fn matmul(x: &[f32], w: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
 /// the two paths cannot drift numerically.
 pub fn decode_step_with<F>(x: &[f32], c_cache: &mut Matrix,
                            kr_cache: &mut Matrix, valid_len: usize,
-                           w: &MlaWeights, mut attend: F) -> Vec<f32>
+                           w: &MlaWeights, attend: F) -> Vec<f32>
+where
+    F: FnMut(&Matrix, &Matrix, &Matrix, usize) -> Matrix,
+{
+    decode_step_with_rows(x, c_cache, kr_cache, valid_len, w, w.dims.sq,
+                          attend)
+}
+
+/// [`decode_step_with`] for an explicit number of query rows: `rows` new
+/// token positions (a prompt chunk) advance together through one
+/// projection → attention → output-projection pass.  Every phase is
+/// row-independent, so the result is **bit-identical** per position to
+/// `rows` successive single-token steps — the layer half of the
+/// chunked-prefill bit-identity contract (the attention half is
+/// [`crate::numerics::amla::amla_prefill_chunk`] and its Base twin).
+pub fn decode_step_with_rows<F>(x: &[f32], c_cache: &mut Matrix,
+                                kr_cache: &mut Matrix, valid_len: usize,
+                                w: &MlaWeights, rows: usize,
+                                mut attend: F) -> Vec<f32>
 where
     F: FnMut(&Matrix, &Matrix, &Matrix, usize) -> Matrix,
 {
     let d = w.dims;
-    let q_rows = decode_step_prepare(x, c_cache, kr_cache, valid_len, w);
+    let q_rows =
+        decode_step_prepare_rows(x, c_cache, kr_cache, valid_len, w, rows);
     // K = [c_cache | kr_cache], V = c_cache
     let s2 = c_cache.rows;
     let mut k_full = Matrix::zeros(s2, d.dk());
     pack_k_rows(c_cache, kr_cache, &mut k_full.data);
     let o_lat = attend(&q_rows, &k_full, c_cache, valid_len); // [g, d_latent]
-    decode_step_finish(&o_lat.data, w)
+    decode_step_finish_rows(&o_lat.data, w, rows)
 }
 
 /// Pre-attention phase of the absorbed decode step: projects the new
@@ -154,20 +173,33 @@ where
 pub fn decode_step_prepare(x: &[f32], c_cache: &mut Matrix,
                            kr_cache: &mut Matrix, valid_len: usize,
                            w: &MlaWeights) -> Matrix {
+    decode_step_prepare_rows(x, c_cache, kr_cache, valid_len, w, w.dims.sq)
+}
+
+/// [`decode_step_prepare`] for an explicit number of query positions:
+/// `x` is `[rows, d_model]`, the new cache rows land at
+/// `valid_len - rows .. valid_len`, and the returned query block is
+/// `[rows·n1, Dk]` (position-major).  All projections and the per-head
+/// RoPE are row-independent, so each position's outputs are bit-equal
+/// to a `rows = 1` call at the same absolute position — the guarantee
+/// the chunked-prefill path builds on.
+pub fn decode_step_prepare_rows(x: &[f32], c_cache: &mut Matrix,
+                                kr_cache: &mut Matrix, valid_len: usize,
+                                w: &MlaWeights, rows: usize) -> Matrix {
     let d = w.dims;
-    assert_eq!(x.len(), d.sq * d.d_model);
-    assert!(valid_len >= d.sq && valid_len <= c_cache.rows);
+    assert_eq!(x.len(), rows * d.d_model);
+    assert!(valid_len >= rows && valid_len <= c_cache.rows);
 
     // project + RoPE the new latent/key rows, write into the caches
     let (_, w_dkv) = w.get("w_dkv");
     let (_, w_kr) = w.get("w_kr");
-    let c_new = matmul(x, w_dkv, d.sq, d.d_model, d.d_latent);
-    let mut kr_new = matmul(x, w_kr, d.sq, d.d_model, d.d_rope);
+    let c_new = matmul(x, w_dkv, rows, d.d_model, d.d_latent);
+    let mut kr_new = matmul(x, w_kr, rows, d.d_model, d.d_rope);
     let positions: Vec<i64> =
-        (0..d.sq).map(|i| (valid_len - d.sq + i) as i64).collect();
-    apply_rope(&mut kr_new, d.sq, d.d_rope, &positions);
-    for i in 0..d.sq {
-        let row = valid_len - d.sq + i;
+        (0..rows).map(|i| (valid_len - rows + i) as i64).collect();
+    apply_rope(&mut kr_new, rows, d.d_rope, &positions);
+    for i in 0..rows {
+        let row = valid_len - rows + i;
         c_cache.row_mut(row)
             .copy_from_slice(&c_new[i * d.d_latent..(i + 1) * d.d_latent]);
         kr_cache.row_mut(row)
@@ -179,11 +211,12 @@ pub fn decode_step_prepare(x: &[f32], c_cache: &mut Matrix,
     let (_, w_uq_nope) = w.get("w_uq_nope");
     let (_, w_uq_rope) = w.get("w_uq_rope");
     let (_, w_uk) = w.get("w_uk");
-    let q_lat = matmul(x, w_dq, d.sq, d.d_model, d.q_rank);
-    let q_nope = matmul(&q_lat, w_uq_nope, d.sq, d.q_rank, d.n1 * d.d_head);
-    let mut q_rope = matmul(&q_lat, w_uq_rope, d.sq, d.q_rank, d.n1 * d.d_rope);
-    // RoPE per head: view as [sq, n1, d_rope] and rotate each head row
-    for s in 0..d.sq {
+    let q_lat = matmul(x, w_dq, rows, d.d_model, d.q_rank);
+    let q_nope = matmul(&q_lat, w_uq_nope, rows, d.q_rank, d.n1 * d.d_head);
+    let mut q_rope = matmul(&q_lat, w_uq_rope, rows, d.q_rank,
+                            d.n1 * d.d_rope);
+    // RoPE per head: view as [rows, n1, d_rope] and rotate each head row
+    for s in 0..rows {
         for h in 0..d.n1 {
             let off = (s * d.n1 + h) * d.d_rope;
             apply_rope(&mut q_rope[off..off + d.d_rope], 1, d.d_rope,
@@ -192,9 +225,9 @@ pub fn decode_step_prepare(x: &[f32], c_cache: &mut Matrix,
     }
 
     // absorbed latent query: q_c[s,h,:] = q_nope[s,h,:] @ W_UK[h]^T
-    let g = d.sq * d.n1;
+    let g = rows * d.n1;
     let mut q_rows = Matrix::zeros(g, d.dk());
-    for s in 0..d.sq {
+    for s in 0..rows {
         for h in 0..d.n1 {
             let r = s * d.n1 + h; // position-major kernel layout
             let qn = &q_nope[(s * d.n1 + h) * d.d_head..][..d.d_head];
@@ -234,13 +267,22 @@ pub fn pack_k_rows(c_cache: &Matrix, kr_cache: &Matrix, out: &mut [f32]) {
 /// attention rows `o_lat` (`[sq·n1, d_latent]`, row-major) back to the
 /// residual stream `[sq, d_model]`.
 pub fn decode_step_finish(o_lat: &[f32], w: &MlaWeights) -> Vec<f32> {
+    decode_step_finish_rows(o_lat, w, w.dims.sq)
+}
+
+/// [`decode_step_finish`] for an explicit number of query positions:
+/// `o_lat` is `[rows·n1, d_latent]`, the result `[rows, d_model]`.
+/// Row-independent like the other phases, so per-position bits match a
+/// `rows = 1` call.
+pub fn decode_step_finish_rows(o_lat: &[f32], w: &MlaWeights,
+                               rows: usize) -> Vec<f32> {
     let d = w.dims;
-    assert_eq!(o_lat.len(), d.sq * d.n1 * d.d_latent);
+    assert_eq!(o_lat.len(), rows * d.n1 * d.d_latent);
     // absorbed output: o_heads[s,h,:] = o_lat[s,h,:] @ W_UV[h]
     let (_, w_uv) = w.get("w_uv");
     let (_, w_o) = w.get("w_o");
-    let mut o_heads = vec![0f32; d.sq * d.n1 * d.d_head];
-    for s in 0..d.sq {
+    let mut o_heads = vec![0f32; rows * d.n1 * d.d_head];
+    for s in 0..rows {
         for h in 0..d.n1 {
             let r = s * d.n1 + h;
             let ol = &o_lat[r * d.d_latent..(r + 1) * d.d_latent];
@@ -258,7 +300,7 @@ pub fn decode_step_finish(o_lat: &[f32], w: &MlaWeights) -> Vec<f32> {
             }
         }
     }
-    matmul(&o_heads, w_o, d.sq, d.n1 * d.d_head, d.d_model)
+    matmul(&o_heads, w_o, rows, d.n1 * d.d_head, d.d_model)
 }
 
 #[cfg(test)]
@@ -328,6 +370,70 @@ mod tests {
                 crate::numerics::amla::amla_attention(q, k, v, &cfg)
             });
         assert!(rel_frobenius_error(&y_amla, &y_gold) < 1e-4);
+    }
+
+    #[test]
+    fn prepare_rows_bit_identical_to_successive_single_rows() {
+        // the chunked-prefill projection phase: preparing C positions at
+        // once must write the same cache rows and produce the same query
+        // rows, bit-for-bit, as C successive single-position prepares
+        let dims = small_dims(1);
+        let w = MlaWeights::init(dims, 3);
+        let mut rng = Rng::new(12);
+        let hist = 21usize; // history rows already in the cache
+        let chunk = 5usize;
+        let c0 = rng.gaussian_matrix(64, dims.d_latent, 0.1);
+        let kr0 = rng.gaussian_matrix(64, dims.d_rope, 0.1);
+        let x: Vec<f32> =
+            (0..chunk * dims.d_model).map(|_| rng.gaussian()).collect();
+
+        // reference: one position at a time
+        let mut c_ref = c0.clone();
+        let mut kr_ref = kr0.clone();
+        let mut q_ref: Vec<u32> = Vec::new();
+        for i in 0..chunk {
+            let xi = &x[i * dims.d_model..(i + 1) * dims.d_model];
+            let q = decode_step_prepare_rows(xi, &mut c_ref, &mut kr_ref,
+                                             hist + i + 1, &w, 1);
+            q_ref.extend(q.data.iter().map(|v| v.to_bits()));
+        }
+
+        // chunked: all positions in one call
+        let mut c_chunk = c0;
+        let mut kr_chunk = kr0;
+        let q_chunk = decode_step_prepare_rows(&x, &mut c_chunk,
+                                               &mut kr_chunk, hist + chunk,
+                                               &w, chunk);
+        let q_bits: Vec<u32> =
+            q_chunk.data.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(q_bits, q_ref, "query rows diverged");
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        for row in hist..hist + chunk {
+            assert_eq!(bits(c_chunk.row(row)), bits(c_ref.row(row)),
+                       "latent cache row {row} diverged");
+            assert_eq!(bits(kr_chunk.row(row)), bits(kr_ref.row(row)),
+                       "rope cache row {row} diverged");
+        }
+    }
+
+    #[test]
+    fn finish_rows_bit_identical_to_successive_single_rows() {
+        let dims = small_dims(1);
+        let w = MlaWeights::init(dims, 4);
+        let mut rng = Rng::new(13);
+        let chunk = 3usize;
+        let o: Vec<f32> = (0..chunk * dims.n1 * dims.d_latent)
+            .map(|_| rng.gaussian())
+            .collect();
+        let got = decode_step_finish_rows(&o, &w, chunk);
+        let per_row = dims.n1 * dims.d_latent;
+        let mut want = Vec::new();
+        for i in 0..chunk {
+            want.extend(decode_step_finish_rows(
+                &o[i * per_row..(i + 1) * per_row], &w, 1));
+        }
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&got), bits(&want));
     }
 
     #[test]

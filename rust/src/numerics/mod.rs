@@ -15,6 +15,22 @@
 //! * [`flash_base`] — Algorithm 1 (the "Base"), with optional BF16 P·V.
 //! * [`amla`] — Algorithm 2 with compensation, bit-faithful to the Pallas
 //!   kernel in `python/compile/kernels/amla.py`.
+//!
+//! Three serving-shaped kernel variants build on the per-sequence
+//! recurrences without forking them — each is pinned **bit-identical**
+//! to its per-sequence / per-position reference (see
+//! `docs/ARCHITECTURE.md` for the contracts index):
+//!
+//! * **fused cross-sequence** — [`amla::amla_attention_batched`] /
+//!   [`flash_base::base_flash_attention_batched`] stack same-bucket
+//!   sequences into one `[B·G, Dk]` block loop;
+//! * **chunked prefill** — [`amla::amla_prefill_chunk`] /
+//!   [`flash_base::base_prefill_chunk`] drive `C` query positions of
+//!   one sequence with per-row causal limits in a single
+//!   score/rescale/accumulate pass;
+//! * both compose with the row-generalized layer phases in [`mla`]
+//!   ([`mla::decode_step_prepare_rows`] → attend →
+//!   [`mla::decode_step_finish_rows`]).
 //! * [`naive`] — the unsafe Eq. (3) variant whose overflow motivates AMLA.
 //! * [`mla`] — the absorbed MLA decode layer math (host-side reference for
 //!   the serving path and the integration tests).

@@ -26,14 +26,18 @@ use std::time::{Duration, Instant};
 use crate::numerics::Rng;
 
 /// Deterministic per-step cost model for the virtual clock: a fixed
-/// overhead plus a marginal cost per active sequence, optionally
-/// perturbed by seeded multiplicative jitter (one draw per step, so the
-/// cost stream is reproducible from the seed).
+/// overhead plus a marginal cost per **advanced row** (one per decoding
+/// sequence, the chunk size for a prefilling sequence — so chunked
+/// prefill pays the per-token work but amortizes the per-step
+/// overhead), optionally perturbed by seeded multiplicative jitter
+/// (one draw per step, so the cost stream is reproducible from the
+/// seed).
 #[derive(Debug, Clone)]
 pub struct StepCostModel {
     /// Fixed cost per batched step (s).
     pub base_s: f64,
-    /// Marginal cost per active sequence in the step (s).
+    /// Marginal cost per advanced row in the step (s); at
+    /// `prefill_chunk = 1` this is exactly a per-sequence cost.
     pub per_seq_s: f64,
     /// Multiplicative jitter amplitude in `[0, 1)`: each step's cost is
     /// scaled by `1 + jitter * u`, `u` uniform in `[-1, 1]`.  0 = none.
@@ -56,8 +60,9 @@ impl StepCostModel {
         self
     }
 
-    /// Cost (s) of one batched step over `batch` sequences.  Consumes
-    /// one RNG draw per call when jitter is enabled.
+    /// Cost (s) of one batched step advancing `batch` rows (sequence
+    /// chunk sizes summed).  Consumes one RNG draw per call when jitter
+    /// is enabled.
     pub fn cost(&mut self, batch: usize) -> f64 {
         let base = self.base_s + self.per_seq_s * batch as f64;
         if self.jitter == 0.0 {
@@ -105,11 +110,12 @@ impl SimClock {
         }
     }
 
-    /// Account one batched step over `batch` sequences that measured
-    /// `measured_s` of wall time; returns the duration the run should
-    /// book for it.  Wall mode books the measurement (time advanced by
-    /// itself); Virtual mode ignores the measurement and advances `now`
-    /// by the modeled cost.
+    /// Account one batched step advancing `batch` rows (sequence chunk
+    /// sizes summed; equals the sequence count at `prefill_chunk = 1`)
+    /// that measured `measured_s` of wall time; returns the duration
+    /// the run should book for it.  Wall mode books the measurement
+    /// (time advanced by itself); Virtual mode ignores the measurement
+    /// and advances `now` by the modeled cost.
     pub fn advance_step(&mut self, batch: usize, measured_s: f64) -> f64 {
         match self {
             SimClock::Wall { .. } => measured_s,

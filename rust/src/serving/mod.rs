@@ -8,7 +8,7 @@
 //! only at its arrival time, the queue grows when the engine falls
 //! behind the offered rate, and TTFT/TPOT/queue-delay distributions vs
 //! offered rate (the Orca/vLLM serving-eval methodology the workload
-//! generator targets) come out of [`sweep`].
+//! generator targets) come out of [`sweep()`].
 //!
 //! Both loops share one engine-stepping path —
 //! [`crate::coordinator::scheduler::StepCore`] — so open-loop serving
@@ -26,6 +26,25 @@
 //! order, eviction decisions, makespan) is **bit-reproducible**.  The
 //! golden trace in `rust/tests/open_loop_golden.rs` pins exactly this
 //! across `workers ∈ {1,4} × fuse on/off × preempt on/off`.
+//!
+//! ## Chunked prefill on the open loop
+//!
+//! Both admission loops inherit chunked prompt prefill from the shared
+//! stepping core: a prefilling sequence consumes up to
+//! [`crate::config::ServeConfig::prefill_chunk`] prompt tokens per
+//! global step (`--prefill-chunk`; 1 = legacy token-by-token).  Tokens
+//! are bit-identical for every chunk size (the chunked-prefill
+//! bit-identity contract, [`crate::coordinator::engine`]); what changes
+//! is the *schedule*: long prompts reach their first token in fewer
+//! steps (sharper TTFT at load), and a preempted request's
+//! recompute-resume — which re-prefills `prompt ⧺ generated` — re-pays
+//! its prefill in `⌈len/C⌉` steps instead of `len`.  Starvation
+//! ([`crate::config::ServeConfig::starvation_steps`]) is still counted
+//! in global steps, so under chunking a starved head both trips the
+//! threshold after less wall/virtual time *and* costs its victim less
+//! recompute.  TTFT accounting stamps the first token once, when the
+//! chunk containing the last prompt token completes — never per chunk
+//! (pinned by `chunked_prefill_ttft_stamps_on_last_chunk` below).
 //!
 //! ## The preemption bit-identity contract
 //!
@@ -360,6 +379,109 @@ mod tests {
             assert_eq!(run(workers, fuse), reference,
                        "workers={workers} fuse={fuse} diverged");
         }
+    }
+
+    #[test]
+    fn chunked_prefill_matches_legacy_open_loop() {
+        // same trace at prefill_chunk 1 vs 4 (no pool pressure): token
+        // streams must be bit-identical; only the schedule — fewer
+        // prefill invocations — may change
+        let run = |chunk: usize| {
+            let eng = engine();
+            let mut clock = vclock();
+            let mut c = cfg(128, false, 2);
+            c.prefill_chunk = chunk;
+            let r = serve_open_loop(&eng, pressured_trace(), &c, &mut clock)
+                .unwrap();
+            (tokens_by_id(&r.results), r.metrics.prefill_chunks,
+             r.metrics.prompt_tokens)
+        };
+        let (tok1, chunks1, prompt1) = run(1);
+        let (tok4, chunks4, prompt4) = run(4);
+        assert_eq!(tok1, tok4, "prefill chunking changed open-loop tokens");
+        assert_eq!(prompt1, prompt4, "prompt work must be unchanged");
+        assert_eq!(chunks1, prompt1);
+        assert!(chunks4 < chunks1,
+                "chunked prefill must need fewer invocations \
+                 ({chunks4} vs {chunks1})");
+    }
+
+    #[test]
+    fn chunked_prefill_ttft_stamps_on_last_chunk() {
+        // Regression pin for the chunked TTFT contract: a 7-token
+        // prompt at chunk 3 prefills in 3 steps (3 + 3 + 1 rows); the
+        // first token must be stamped exactly once — when the last
+        // chunk completes — carrying the full prefill time, and each
+        // later token books one decode step.  Exact math under the
+        // virtual clock (base 10 ms + 1 ms per row).
+        let trace = vec![TracedRequest {
+            request: DecodeRequest::new(0, vec![1, 2, 3, 4, 5, 6, 7], 2),
+            arrival: 0.0,
+        }];
+        let eng = engine();
+        let mut clock =
+            SimClock::simulated(StepCostModel::new(0.01, 0.001));
+        let mut c = cfg(128, false, 1);
+        c.prefill_chunk = 3;
+        let report = serve_open_loop(&eng, trace, &c, &mut clock).unwrap();
+        assert_eq!(report.metrics.prefill_chunks, 3);
+        assert_eq!(report.metrics.prompt_tokens, 7);
+        let r = &report.results[0];
+        assert_eq!(r.tokens.len(), 2);
+        let chunk3 = 0.01 + 3.0 * 0.001; // 3-row prefill step
+        let single = 0.01 + 0.001; // 1-row step (last chunk / decode)
+        let ttft = chunk3 + chunk3 + single;
+        assert!((r.ttft - ttft).abs() < 1e-12,
+                "ttft {} != prefill total {ttft} — stamped per chunk?",
+                r.ttft);
+        // a per-chunk stamping bug would also inflate the latency count
+        // and drag the mean below the true value
+        let mean = (ttft + single) / 2.0;
+        assert!((r.mean_tpot - mean).abs() < 1e-12,
+                "mean tpot {} != {mean}", r.mean_tpot);
+    }
+
+    #[test]
+    fn chunked_resume_is_bit_identical_and_ttft_honest() {
+        // Chunked recompute-resume: r0 (40-token prompt) is evicted
+        // mid-prefill by the starved r1, then re-prefills its whole
+        // resume prompt in chunks.  Tokens must match the unconstrained
+        // run bit-for-bit, and r0's TTFT must cover the discarded
+        // prefill + re-queue wait (the ResumeLedger audit), not just
+        // the final admission's prefill.
+        let mk_trace = || {
+            vec![
+                TracedRequest {
+                    request: DecodeRequest::new(
+                        0, (0..40).map(|t| 3 + t).collect(), 24),
+                    arrival: 0.0,
+                },
+                TracedRequest {
+                    request: DecodeRequest::new(1, vec![5, 6], 2),
+                    arrival: 0.01,
+                },
+            ]
+        };
+        let run = |pool_pages: usize| {
+            let eng = engine();
+            let mut clock = vclock();
+            let mut c = cfg(pool_pages, true, 2);
+            c.prefill_chunk = 4;
+            let r = serve_open_loop(&eng, mk_trace(), &c, &mut clock)
+                .unwrap();
+            let ttft0 = r.results.iter().find(|x| x.id == 0).unwrap().ttft;
+            (tokens_by_id(&r.results), r.metrics.preemptions, ttft0)
+        };
+        // 64-row/layer budget: r0 (64 rows) fills it alone, r1 starves
+        let (toks_tight, evictions, ttft_tight) = run(16);
+        assert!(evictions > 0, "pool pressure must trigger eviction");
+        let (toks_free, no_evictions, ttft_free) = run(128);
+        assert_eq!(no_evictions, 0);
+        assert_eq!(toks_tight, toks_free,
+                   "chunked recompute-resume diverged");
+        assert!(ttft_tight > ttft_free + 0.04,
+                "evicted-mid-prefill TTFT must cover the lost prefill \
+                 ({ttft_tight} vs {ttft_free})");
     }
 
     #[test]

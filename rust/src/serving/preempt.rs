@@ -16,6 +16,21 @@
 //! tokens already generated, their latencies, and the first-admission
 //! queue delay, merging them into the final [`DecodeResult`] when the
 //! resumed request completes.
+//!
+//! ## Chunked resume
+//!
+//! With chunked prefill on
+//! ([`crate::config::ServeConfig::prefill_chunk`] > 1) the resume
+//! prompt re-prefills in `⌈len/C⌉` steps instead of `len` — recompute
+//! preemption gets proportionally cheaper, with identical tokens.  TTFT
+//! accounting is chunk-agnostic by construction: the stepping core
+//! stamps the first token only when the chunk containing the last
+//! prompt token completes (interior chunks accrue
+//! `RequestState::pending_prefill`), so the ledger's
+//! `lost_ttft`/`queue_delay` merge needs no per-chunk cases.  Pinned by
+//! `chunked_prefill_ttft_stamps_on_last_chunk` and
+//! `chunked_resume_is_bit_identical_and_ttft_honest` in
+//! [`crate::serving`]'s tests.
 
 use std::collections::HashMap;
 

@@ -62,6 +62,10 @@ fn cfg(workers: usize, fuse: bool, preempt: bool) -> ServeConfig {
                   fuse_buckets: fuse,
                   pool_pages: 50, page_size: 4, // 100 rows/layer budget
                   starvation_steps: 4, preempt,
+                  // the golden schedule (step counts, virtual times) is
+                  // pinned at the legacy token-per-step prefill; the
+                  // chunked rerun below asserts tokens separately
+                  prefill_chunk: 1,
                   ..ServeConfig::default() }
 }
 
@@ -207,6 +211,38 @@ fn open_loop_golden_reproduces_across_all_configs() {
             .expect("write golden file");
         eprintln!("open-loop golden trace written to {GOLDEN_PATH}; commit \
                    it to arm the cross-PR regression pin");
+    }
+}
+
+#[test]
+fn chunked_prefill_reproduces_golden_tokens() {
+    // chunked prefill (the default serving path) reschedules prefill
+    // but must never change what is generated: per-request token
+    // streams at prefill_chunk 3 must equal the chunk=1 golden
+    // reference for both preempt settings — chunked recompute-resume
+    // included — while taking strictly fewer prefill invocations
+    for preempt in [false, true] {
+        let (reference, _, _) = run_open(1, false, preempt);
+        let eng = engine();
+        let mut clock = SimClock::simulated(StepCostModel::new(0.01, 0.0));
+        let mut c = cfg(4, true, preempt);
+        c.prefill_chunk = 3;
+        let report = serve_open_loop(&eng, trace(), &c, &mut clock)
+            .expect("chunked open-loop serve failed");
+        let mut by_id: Vec<(RequestId, Vec<u32>)> = report.results.iter()
+            .map(|r| (r.id, r.tokens.clone()))
+            .collect();
+        by_id.sort_by_key(|(id, _)| *id);
+        let tokens: Vec<Vec<u32>> =
+            by_id.into_iter().map(|(_, t)| t).collect();
+        assert_eq!(tokens, reference.tokens,
+                   "preempt={preempt}: chunked prefill changed tokens");
+        assert!(report.metrics.prefill_chunks
+                    < report.metrics.prompt_tokens,
+                "preempt={preempt}: chunking did not reduce prefill \
+                 invocations ({} chunks for {} prompt tokens)",
+                report.metrics.prefill_chunks,
+                report.metrics.prompt_tokens);
     }
 }
 
