@@ -1,64 +1,94 @@
 //! End-to-end serving driver (DESIGN.md E10 — the mandated E2E workload).
 //!
-//! Loads a small real MLA model (4 decode layers, d_model 1024, 16 query
-//! heads — every weight live, every layer a PJRT executable compiled from
-//! the JAX/Pallas AMLA lowering), then serves a batch of decode requests
-//! through the full coordinator: continuous batcher → worker threads →
-//! PJRT layer calls → paged latent-KV cache.  Reports per-request TTFT /
-//! TPOT and aggregate throughput; run with `--algo base` to serve the
-//! Algorithm-1 kernel instead and compare.
+//! Serves a batch of decode requests through the full coordinator:
+//! continuous batcher → worker threads → layer executor → paged
+//! latent-KV cache.  Three modes:
 //!
-//! The serve loop is batched: every global step advances the whole
-//! active set together through `DecodeEngine::step_batch_chunked`, with
-//! `--batch-workers` controlling in-batch attention parallelism
-//! (1 = the serial reference; outputs are bit-identical either way) and
-//! `--prefill-chunk` setting how many prompt tokens a prefilling
-//! sequence consumes per step (bit-identical to 1 = token-by-token;
-//! executors without a multi-row route — PJRT today — fall back to 1).
+//! * **closed loop** (default): the whole trace runs to completion via
+//!   the [`amla::coordinator::serve`] wrapper.
+//! * **open loop** (`--open-loop`): the trace is served
+//!   arrival-driven; starved heads may trigger recompute preemption
+//!   (`--preempt on|off`, `--rate R`, `--starvation-steps S`;
+//!   `--virtual-clock` for the deterministic simulated clock).
+//! * **streaming session** (`--stream`): the trace is submitted live
+//!   to a long-running [`amla::serving::AmlaEngine`] with cycling
+//!   [`Priority`] classes; tokens are observed **incrementally**
+//!   through [`amla::serving::RequestHandle`]s, a live metrics
+//!   snapshot is taken mid-flight, and `--cancel-one` additionally
+//!   submits a background request and cancels it mid-flight (the
+//!   cancellation accounting demo).  This is the CI smoke mode.
 //!
-//! With `--open-loop` the same trace is served **arrival-driven**: each
-//! request becomes visible at its Poisson arrival time, queue delays are
-//! real, and starved heads may trigger recompute preemption
-//! (`--preempt on|off`, `--rate R`, `--starvation-steps S`;
-//! `--virtual-clock` replaces wall time with the deterministic
-//! simulated clock).
+//! Two substrates: `--substrate pjrt` (default) loads AOT-compiled
+//! layer executables (run `make artifacts` first); `--substrate host`
+//! uses the bit-exact in-process Rust numerics at small dims — no
+//! artifacts needed, which is what CI runs.
 //!
 //! ```bash
+//! # PJRT closed loop:
 //! make artifacts && cargo run --release --example serve_decode -- \
 //!     --requests 12 --max-batch 4 --batch-workers 4 --max-new-tokens 24
-//! # open-loop at 8 req/s offered:
+//! # streaming session on the host substrate (artifact-free):
 //! cargo run --release --example serve_decode -- \
-//!     --requests 12 --open-loop --rate 8 --max-new-tokens 24
+//!     --substrate host --stream --cancel-one --requests 6
 //! ```
 
-use amla::config::{Args, ServeConfig};
-use amla::coordinator::{serve, DecodeEngine, DecodeRequest,
-                        PjrtLayerExecutor};
+use amla::config::{Args, EngineConfig};
+use amla::coordinator::{requests_of, serve, DecodeEngine, DecodeRequest,
+                        HostLayerExecutor, LayerExecutor, Outcome,
+                        PjrtLayerExecutor, Priority, TracedRequest};
 use amla::numerics::mla::MlaDims;
 use amla::serving::clock::{SimClock, StepCostModel};
-use amla::serving::serve_open_loop;
+use amla::serving::{serve_open_loop, AmlaEngine, SubmitOptions};
 
 fn main() -> anyhow::Result<()> {
     let args = Args::parse(std::env::args().skip(1));
-    let mut cfg = ServeConfig::default();
-    cfg.max_new_tokens = 16;
-    cfg.apply_args(&args)?;
+    let engine_cfg = EngineConfig::builder()
+        .max_new_tokens(16)
+        .apply_args(&args)?
+        .build()?;
     let n_requests = args.get_usize("requests", 8)?;
-    let n_layers = args.get_usize("layers", 4)?;
+    let substrate =
+        args.get("substrate").map(String::as_str).unwrap_or("pjrt");
 
-    let dims = MlaDims { n1: cfg.n1, sq: cfg.sq, ..MlaDims::default() };
-    eprintln!("[serve_decode] model: {n_layers} layers, d_model {}, {} \
-               heads, algo {}", dims.d_model, dims.n1, cfg.algo.as_str());
-    let t0 = std::time::Instant::now();
-    let exec = PjrtLayerExecutor::new(&cfg, dims, n_layers, 42)?;
-    let compiled = exec.warmup()?;
-    eprintln!("[serve_decode] compiled {compiled} layer executables in {:.2?}",
-              t0.elapsed());
-    let engine = DecodeEngine::new(exec, cfg.pool_pages, cfg.page_size);
+    match substrate {
+        "host" => {
+            let dims = MlaDims { d_model: 64, n1: 2, d_head: 16,
+                                 q_rank: 32, d_latent: 24, d_rope: 8,
+                                 sq: 1 };
+            let n_layers = args.get_usize("layers", 2)?;
+            eprintln!("[serve_decode] host substrate: {n_layers} layers, \
+                       d_model {}, algo {}", dims.d_model,
+                      engine_cfg.model.algo.as_str());
+            let exec = HostLayerExecutor::new(dims, n_layers,
+                                              engine_cfg.model.algo, 32,
+                                              vec![64, 128], 7);
+            run(exec, engine_cfg, &args, n_requests)
+        }
+        "pjrt" => {
+            let cfg = engine_cfg.to_serve();
+            let dims = MlaDims { n1: cfg.n1, sq: cfg.sq,
+                                 ..MlaDims::default() };
+            let n_layers = args.get_usize("layers", 4)?;
+            eprintln!("[serve_decode] PJRT model: {n_layers} layers, \
+                       d_model {}, {} heads, algo {}", dims.d_model,
+                      dims.n1, cfg.algo.as_str());
+            let t0 = std::time::Instant::now();
+            let exec = PjrtLayerExecutor::new(&cfg, dims, n_layers, 42)?;
+            let compiled = exec.warmup()?;
+            eprintln!("[serve_decode] compiled {compiled} layer \
+                       executables in {:.2?}", t0.elapsed());
+            run(exec, engine_cfg, &args, n_requests)
+        }
+        other => anyhow::bail!(
+            "--substrate must be host or pjrt, got `{other}`"),
+    }
+}
 
+fn make_trace(cfg: &EngineConfig, n_requests: usize)
+              -> Vec<TracedRequest> {
     // Synthetic trace (Poisson arrivals, mixed lengths) from the
     // workload generator; closed-loop strips the arrivals, open-loop
-    // honors them.
+    // honors them, the streaming session submits live.
     let spec = amla::coordinator::WorkloadSpec {
         requests: n_requests,
         rate: cfg.rate,
@@ -66,16 +96,27 @@ fn main() -> anyhow::Result<()> {
         gen_len: amla::coordinator::LenDist::Fixed(cfg.max_new_tokens),
         ..amla::coordinator::WorkloadSpec::default()
     };
-    let trace = amla::coordinator::generate_trace(&spec);
+    amla::coordinator::generate_trace(&spec)
+}
+
+fn run<E: LayerExecutor + 'static>(exec: E, engine_cfg: EngineConfig,
+                                   args: &Args, n_requests: usize)
+                                   -> anyhow::Result<()> {
+    let cfg = engine_cfg.to_serve();
+    let trace = make_trace(&engine_cfg, n_requests);
     let total_tokens: usize =
         trace.iter().map(|t| t.request.max_new_tokens).sum();
     eprintln!("[serve_decode] {n_requests} requests, {total_tokens} tokens \
                to generate, max batch {}, {} workers, {} batch workers, \
-               fuse-buckets {}, prefill chunk {} (host-kernel routes; \
-               PJRT still per-seq, token-by-token prefill)",
+               fuse-buckets {}, prefill chunk {}",
               cfg.max_batch, cfg.workers, cfg.batch_workers,
               cfg.fuse_buckets, cfg.prefill_chunk);
 
+    if args.has_flag("stream") {
+        return run_stream(exec, engine_cfg, trace, args);
+    }
+
+    let engine = DecodeEngine::new(exec, cfg.pool_pages, cfg.page_size);
     let (results, summary, metrics, completed) = if cfg.open_loop {
         let mut clock = if args.has_flag("virtual-clock") {
             SimClock::simulated(StepCostModel::default())
@@ -90,8 +131,7 @@ fn main() -> anyhow::Result<()> {
         let completed = report.metrics.requests_completed;
         (report.results, summary, metrics, completed)
     } else {
-        let requests: Vec<DecodeRequest> =
-            amla::coordinator::requests_of(&trace);
+        let requests: Vec<DecodeRequest> = requests_of(&trace);
         let report = serve(&engine, requests, &cfg)?;
         let (summary, metrics) = (report.summary(), report.metrics.render());
         let completed = report.metrics.requests_completed;
@@ -114,5 +154,94 @@ fn main() -> anyhow::Result<()> {
     anyhow::ensure!(completed == n_requests as u64,
                     "not all requests completed");
     println!("serve_decode OK");
+    Ok(())
+}
+
+/// The streaming-session demo: live submissions with cycling priority
+/// classes, incremental token observation, a mid-flight metrics
+/// snapshot, and (with `--cancel-one`) a mid-flight cancellation.
+fn run_stream<E: LayerExecutor + 'static>(exec: E,
+                                          engine_cfg: EngineConfig,
+                                          trace: Vec<TracedRequest>,
+                                          args: &Args)
+                                          -> anyhow::Result<()> {
+    let cancel_one = args.has_flag("cancel-one");
+    let n = trace.len();
+    eprintln!("[serve_decode] streaming session: {n} live submissions, \
+               cycling priority classes{}",
+              if cancel_one { ", plus one cancelled mid-flight" }
+              else { "" });
+    let engine = AmlaEngine::start(engine_cfg, exec)?;
+
+    let classes = [Priority::Interactive, Priority::Batch,
+                   Priority::Background];
+    let mut handles = Vec::new();
+    for (i, t) in trace.into_iter().enumerate() {
+        let priority = classes[i % classes.len()];
+        let handle = engine.submit_with(
+            t.request, SubmitOptions::default().priority(priority))?;
+        println!("submitted req {:>3} as {}", handle.id(),
+                 priority.as_str());
+        handles.push(handle);
+    }
+    // the cancellation demo rides on a long background request whose
+    // tiny stream buffer stalls it (undrained) until the cancel lands
+    // — so it is mid-flight by construction, never completed
+    let victim = if cancel_one {
+        let handle = engine.submit_with(
+            DecodeRequest::new(n as u64 + 1000, vec![2, 3, 4, 5], 100),
+            SubmitOptions::default()
+                .priority(Priority::Background)
+                .stream_capacity(1))?;
+        handle.cancel();
+        Some(handle)
+    } else {
+        None
+    };
+
+    let snapshot = engine.metrics()?;
+    eprintln!("[serve_decode] live snapshot: {} active sessions, queue \
+               depth interactive/batch/background {}/{}/{}",
+              snapshot.active_sessions, snapshot.queue_depth[0],
+              snapshot.queue_depth[1], snapshot.queue_depth[2]);
+
+    println!("\n=== per-request (streamed) ===");
+    for mut h in handles {
+        let mut first: Vec<u32> = Vec::new();
+        let mut count = 0usize;
+        while let Some(tok) = h.next_token() {
+            count += 1;
+            if first.len() < 4 {
+                first.push(tok);
+            }
+        }
+        let res = h.wait()?;
+        println!("req {:>3}: {count:>3} tokens streamed incrementally \
+                  (first {first:?})  queue {:>6.1} ms  ttft {:>7.1} ms",
+                 res.id, res.queue_delay * 1e3, res.ttft * 1e3);
+        anyhow::ensure!(res.tokens.len() == count,
+                        "stream/result token count mismatch");
+        anyhow::ensure!(res.status == Outcome::Completed,
+                        "request {} did not complete: {:?}", res.id,
+                        res.status);
+    }
+    if let Some(handle) = victim {
+        let res = handle.wait()?;
+        println!("req {:>3}: CANCELLED after {} tokens", res.id,
+                 res.tokens.len());
+        anyhow::ensure!(res.status == Outcome::Cancelled,
+                        "cancel demo did not cancel: {:?}", res.status);
+    }
+
+    let report = engine.shutdown()?;
+    println!("\n=== aggregate ===");
+    println!("{}", report.metrics.render());
+    anyhow::ensure!(report.metrics.requests_completed == n as u64,
+                    "not all streamed requests completed");
+    if cancel_one {
+        anyhow::ensure!(report.metrics.requests_cancelled == 1,
+                        "expected exactly one cancellation");
+    }
+    println!("serve_decode OK (streaming)");
     Ok(())
 }

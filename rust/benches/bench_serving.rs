@@ -101,6 +101,23 @@ fn main() {
     let report = sweep(&engine, &trace, spec.rate, &cfg, &sweep_cfg)
         .expect("sweep failed");
     println!("{}", report.render_table());
+    // engine-level gauges of the hottest rate point (the session-API
+    // metrics snapshot: per-class queue peaks, cancellations, streamed
+    // tokens — streaming is zero here, the sweep attaches no clients)
+    if let Some(point) = report.points.last() {
+        let m = &point.metrics;
+        println!("engine gauges @ {:.1} req/s offered: queue depth peak \
+                  interactive/batch/background {}/{}/{}, cancelled {}, \
+                  streamed tokens {}",
+                 point.offered_rate,
+                 m.queue_depth_peak[0], m.queue_depth_peak[1],
+                 m.queue_depth_peak[2], m.requests_cancelled,
+                 m.streamed_tokens);
+        assert_eq!(m.requests_cancelled, 0,
+                   "nothing cancels in a sweep");
+        assert!(m.queue_depth_peak.iter().sum::<u64>() > 0,
+                "a saturating sweep must have queued somewhere");
+    }
     println!("(sweep wall time: {:.2?})", t0.elapsed());
 
     // smoke invariants: the harness must produce a well-formed,

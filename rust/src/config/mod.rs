@@ -3,6 +3,26 @@
 //! The launcher (`amla serve|simulate|reproduce|accuracy|roofline|
 //! pipeline`) reads flags of the form `--key value` / `--flag`; this
 //! module owns the schema.  In-tree stand-in for `clap` (offline build).
+//!
+//! Two configuration surfaces live here:
+//!
+//! * [`EngineConfig`] — the **public construction path** since the
+//!   session-API redesign: typed sub-structs ([`ModelSelect`],
+//!   [`PoolConfig`], [`BatchConfig`], [`PrefillConfig`],
+//!   [`PreemptConfig`]) assembled through [`EngineConfigBuilder`],
+//!   which validates at [`EngineConfigBuilder::build`] time (zero pool
+//!   pages, zero prefill chunk, zero workers, … are construction
+//!   errors, not runtime surprises).  `amla serve`/`amla sweep` and
+//!   [`crate::serving::AmlaEngine::start`] consume this.
+//! * [`ServeConfig`] — the flat **lowered form** the internals step
+//!   with (and the shape the pre-redesign tests construct directly).
+//!   [`EngineConfig::to_serve`] / [`EngineConfig::from_serve`] convert
+//!   losslessly in both directions, and the CLI schema
+//!   ([`ServeConfig::apply_args`]) is defined once on the flat form so
+//!   the builder's [`EngineConfigBuilder::apply_args`] cannot drift
+//!   from it (pinned by the round-trip tests in this module's test
+//!   suite — `engine_config_round_trips_through_serve_config`,
+//!   `builder_apply_args_uses_the_one_flag_schema`).
 
 use std::collections::BTreeMap;
 
@@ -32,8 +52,9 @@ impl Algo {
     }
 }
 
-/// Configuration of the decode-serving stack.
-#[derive(Debug, Clone)]
+/// Configuration of the decode-serving stack — the flat **lowered
+/// form** of [`EngineConfig`] (see module docs).
+#[derive(Debug, Clone, PartialEq)]
 pub struct ServeConfig {
     /// Directory containing `manifest.json` + HLO artifacts.
     pub artifact_dir: String,
@@ -178,6 +199,9 @@ impl ServeConfig {
         if self.max_batch == 0 || self.page_size == 0 || self.pool_pages == 0 {
             bail!("max_batch, page_size, pool_pages must be positive");
         }
+        if self.workers == 0 {
+            bail!("workers must be positive");
+        }
         if self.batch_workers == 0 {
             bail!("batch_workers must be positive (1 = serial)");
         }
@@ -188,6 +212,256 @@ impl ServeConfig {
             bail!("rate must be a positive, finite req/s value");
         }
         Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------
+// EngineConfig: the typed builder surface of the session API
+// ---------------------------------------------------------------------
+
+/// Which model/algorithm family the engine loads.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelSelect {
+    pub algo: Algo,
+    /// Query heads (must match an artifact family on the PJRT path).
+    pub n1: usize,
+    /// Query positions per step (1 = decode, 2 = MTP).
+    pub sq: usize,
+    /// Directory containing `manifest.json` + HLO artifacts (PJRT).
+    pub artifact_dir: String,
+}
+
+/// Latent-KV pool sizing.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PoolConfig {
+    /// Total pages in the pool.
+    pub pages: usize,
+    /// Rows per page.
+    pub page_size: usize,
+}
+
+/// Batching/parallelism knobs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BatchConfig {
+    /// Max concurrent sequences in one batch step.
+    pub max_batch: usize,
+    /// In-batch attention parallelism (1 = serial reference).
+    pub batch_workers: usize,
+    /// PJRT client pool size.
+    pub workers: usize,
+    /// Fuse same-bucket sequences into one cross-sequence kernel call.
+    pub fuse_buckets: bool,
+}
+
+/// Chunked prompt prefill.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PrefillConfig {
+    /// Prompt tokens consumed per global step (1 = token-by-token).
+    pub chunk: usize,
+}
+
+/// Recompute-preemption policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PreemptConfig {
+    pub enabled: bool,
+    /// Global steps the effective head may starve before eviction is
+    /// considered.
+    pub starvation_steps: usize,
+}
+
+/// Typed engine configuration — the session API's construction surface
+/// (see module docs).  Build one with [`EngineConfig::builder`]; lower
+/// to the flat stepping form with [`EngineConfig::to_serve`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct EngineConfig {
+    pub model: ModelSelect,
+    pub pool: PoolConfig,
+    pub batch: BatchConfig,
+    pub prefill: PrefillConfig,
+    pub preempt: PreemptConfig,
+    /// Per-request cap on generated tokens (workload default).
+    pub max_new_tokens: usize,
+    /// Serve arrival-timed traces open-loop (`amla serve --open-loop`).
+    pub open_loop: bool,
+    /// Offered arrival rate (req/s) of generated open-loop traces.
+    pub rate: f64,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        Self::from_serve(&ServeConfig::default())
+    }
+}
+
+impl EngineConfig {
+    pub fn builder() -> EngineConfigBuilder {
+        EngineConfigBuilder { cfg: EngineConfig::default() }
+    }
+
+    /// Lower to the flat form the stepping internals consume.
+    pub fn to_serve(&self) -> ServeConfig {
+        ServeConfig {
+            artifact_dir: self.model.artifact_dir.clone(),
+            algo: self.model.algo,
+            n1: self.model.n1,
+            sq: self.model.sq,
+            max_batch: self.batch.max_batch,
+            page_size: self.pool.page_size,
+            pool_pages: self.pool.pages,
+            workers: self.batch.workers,
+            batch_workers: self.batch.batch_workers,
+            fuse_buckets: self.batch.fuse_buckets,
+            prefill_chunk: self.prefill.chunk,
+            max_new_tokens: self.max_new_tokens,
+            open_loop: self.open_loop,
+            rate: self.rate,
+            starvation_steps: self.preempt.starvation_steps,
+            preempt: self.preempt.enabled,
+        }
+    }
+
+    /// Lift a flat config into the typed form (lossless inverse of
+    /// [`EngineConfig::to_serve`]).
+    pub fn from_serve(cfg: &ServeConfig) -> Self {
+        Self {
+            model: ModelSelect {
+                algo: cfg.algo,
+                n1: cfg.n1,
+                sq: cfg.sq,
+                artifact_dir: cfg.artifact_dir.clone(),
+            },
+            pool: PoolConfig {
+                pages: cfg.pool_pages,
+                page_size: cfg.page_size,
+            },
+            batch: BatchConfig {
+                max_batch: cfg.max_batch,
+                batch_workers: cfg.batch_workers,
+                workers: cfg.workers,
+                fuse_buckets: cfg.fuse_buckets,
+            },
+            prefill: PrefillConfig { chunk: cfg.prefill_chunk },
+            preempt: PreemptConfig {
+                enabled: cfg.preempt,
+                starvation_steps: cfg.starvation_steps,
+            },
+            max_new_tokens: cfg.max_new_tokens,
+            open_loop: cfg.open_loop,
+            rate: cfg.rate,
+        }
+    }
+
+    /// Validate the assembled configuration (the builder calls this at
+    /// [`EngineConfigBuilder::build`]; one rule set shared with the
+    /// flat form).
+    pub fn validate(&self) -> Result<()> {
+        self.to_serve().validate()
+    }
+}
+
+/// Builder for [`EngineConfig`]: chainable setters over the typed
+/// sub-structs, validation at [`EngineConfigBuilder::build`].
+#[derive(Debug, Clone, Default)]
+pub struct EngineConfigBuilder {
+    cfg: EngineConfig,
+}
+
+impl EngineConfigBuilder {
+    pub fn algo(mut self, algo: Algo) -> Self {
+        self.cfg.model.algo = algo;
+        self
+    }
+
+    pub fn n1(mut self, n1: usize) -> Self {
+        self.cfg.model.n1 = n1;
+        self
+    }
+
+    pub fn sq(mut self, sq: usize) -> Self {
+        self.cfg.model.sq = sq;
+        self
+    }
+
+    pub fn artifact_dir(mut self, dir: impl Into<String>) -> Self {
+        self.cfg.model.artifact_dir = dir.into();
+        self
+    }
+
+    pub fn pool_pages(mut self, pages: usize) -> Self {
+        self.cfg.pool.pages = pages;
+        self
+    }
+
+    pub fn page_size(mut self, page_size: usize) -> Self {
+        self.cfg.pool.page_size = page_size;
+        self
+    }
+
+    pub fn max_batch(mut self, max_batch: usize) -> Self {
+        self.cfg.batch.max_batch = max_batch;
+        self
+    }
+
+    pub fn batch_workers(mut self, batch_workers: usize) -> Self {
+        self.cfg.batch.batch_workers = batch_workers;
+        self
+    }
+
+    pub fn workers(mut self, workers: usize) -> Self {
+        self.cfg.batch.workers = workers;
+        self
+    }
+
+    pub fn fuse_buckets(mut self, on: bool) -> Self {
+        self.cfg.batch.fuse_buckets = on;
+        self
+    }
+
+    pub fn prefill_chunk(mut self, chunk: usize) -> Self {
+        self.cfg.prefill.chunk = chunk;
+        self
+    }
+
+    pub fn preempt(mut self, enabled: bool) -> Self {
+        self.cfg.preempt.enabled = enabled;
+        self
+    }
+
+    pub fn starvation_steps(mut self, steps: usize) -> Self {
+        self.cfg.preempt.starvation_steps = steps;
+        self
+    }
+
+    pub fn max_new_tokens(mut self, max_new_tokens: usize) -> Self {
+        self.cfg.max_new_tokens = max_new_tokens;
+        self
+    }
+
+    pub fn open_loop(mut self, on: bool) -> Self {
+        self.cfg.open_loop = on;
+        self
+    }
+
+    pub fn rate(mut self, rate: f64) -> Self {
+        self.cfg.rate = rate;
+        self
+    }
+
+    /// Apply `--key value` CLI overrides.  Delegates to the flat
+    /// schema ([`ServeConfig::apply_args`]) so there is exactly one
+    /// flag table — a flag the flat form accepts always lands on a
+    /// builder field and vice versa (pinned by the round-trip tests).
+    pub fn apply_args(mut self, args: &Args) -> Result<Self> {
+        let mut flat = self.cfg.to_serve();
+        flat.apply_args(args)?;
+        self.cfg = EngineConfig::from_serve(&flat);
+        Ok(self)
+    }
+
+    /// Validate and return the finished configuration.
+    pub fn build(self) -> Result<EngineConfig> {
+        self.cfg.validate()?;
+        Ok(self.cfg)
     }
 }
 
@@ -314,6 +588,84 @@ mod tests {
     fn negative_numbers_are_values_not_flags() {
         let a = args("--offset -5");
         assert_eq!(a.get("offset").unwrap(), "-5");
+    }
+
+    #[test]
+    fn engine_config_round_trips_through_serve_config() {
+        let built = EngineConfig::builder()
+            .algo(Algo::Base)
+            .n1(32)
+            .sq(2)
+            .artifact_dir("arts")
+            .pool_pages(64)
+            .page_size(16)
+            .max_batch(3)
+            .batch_workers(5)
+            .workers(6)
+            .fuse_buckets(false)
+            .prefill_chunk(4)
+            .preempt(false)
+            .starvation_steps(9)
+            .max_new_tokens(17)
+            .open_loop(true)
+            .rate(2.5)
+            .build()
+            .unwrap();
+        let flat = built.to_serve();
+        assert_eq!(flat.algo, Algo::Base);
+        assert_eq!(flat.pool_pages, 64);
+        assert_eq!(flat.batch_workers, 5);
+        assert_eq!(EngineConfig::from_serve(&flat), built,
+                   "to_serve/from_serve must be lossless");
+        // and the defaults of the two surfaces agree
+        assert_eq!(EngineConfig::default().to_serve(),
+                   ServeConfig::default());
+    }
+
+    #[test]
+    fn builder_rejects_invalid_configs_at_build_time() {
+        assert!(EngineConfig::builder().pool_pages(0).build().is_err());
+        assert!(EngineConfig::builder().page_size(0).build().is_err());
+        assert!(EngineConfig::builder().prefill_chunk(0).build().is_err());
+        assert!(EngineConfig::builder().workers(0).build().is_err());
+        assert!(EngineConfig::builder().batch_workers(0).build().is_err());
+        assert!(EngineConfig::builder().max_batch(0).build().is_err());
+        assert!(EngineConfig::builder().sq(3).build().is_err());
+        assert!(EngineConfig::builder().rate(0.0).build().is_err());
+        assert!(EngineConfig::builder().build().is_ok(),
+                "defaults must validate");
+    }
+
+    #[test]
+    fn builder_apply_args_uses_the_one_flag_schema() {
+        let built = EngineConfig::builder()
+            .apply_args(&args("--algo base --pool-pages 32 --page-size 4 \
+                               --max-batch 2 --batch-workers 3 --workers 2 \
+                               --fuse-buckets off --prefill-chunk 5 \
+                               --preempt off --starvation-steps 7 \
+                               --max-new-tokens 9 --open-loop --rate 6.5 \
+                               --n1 8 --sq 2 --artifacts mydir"))
+            .unwrap()
+            .build()
+            .unwrap();
+        assert_eq!(built.model.algo, Algo::Base);
+        assert_eq!(built.model.n1, 8);
+        assert_eq!(built.model.sq, 2);
+        assert_eq!(built.model.artifact_dir, "mydir");
+        assert_eq!(built.pool, PoolConfig { pages: 32, page_size: 4 });
+        assert_eq!(built.batch,
+                   BatchConfig { max_batch: 2, batch_workers: 3,
+                                 workers: 2, fuse_buckets: false });
+        assert_eq!(built.prefill, PrefillConfig { chunk: 5 });
+        assert_eq!(built.preempt,
+                   PreemptConfig { enabled: false, starvation_steps: 7 });
+        assert_eq!(built.max_new_tokens, 9);
+        assert!(built.open_loop);
+        assert_eq!(built.rate, 6.5);
+        // invalid flag values surface as builder errors
+        assert!(EngineConfig::builder()
+            .apply_args(&args("--prefill-chunk 0"))
+            .is_err());
     }
 
     #[test]

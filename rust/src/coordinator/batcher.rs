@@ -6,17 +6,32 @@
 //! drain.  Admission also respects the latent-pool budget: a request is
 //! only admitted if the pool can hold its prompt plus max generation.
 //!
-//! Admission stays FIFO with head-of-line blocking by design; the
-//! open-loop scheduler ([`crate::serving`]) breaks pathological
-//! head-of-line stalls from *outside* via recompute eviction
-//! ([`Batcher::evict`]) when the head has starved past
-//! `ServeConfig::starvation_steps`.  All timestamps are clock seconds
-//! from the serving clock ([`crate::serving::clock::SimClock`]), so the
-//! batcher works identically under wall and virtual time.
+//! ## Priority-class admission
+//!
+//! The queue is **tiered by [`Priority`]** ([`Batcher::enqueue_with`]):
+//! one FIFO queue per class, scanned `Interactive → Batch →
+//! Background`.  The *effective head* is the front of the
+//! highest-priority non-empty queue; admission pops effective heads
+//! while slots and pool rows allow, and blocks head-of-line at the
+//! first head that does not fit — **across classes**, so a pool-blocked
+//! `Interactive` head is never overtaken by a smaller `Background`
+//! request (no priority inversion through the pool budget).  With a
+//! single class in play this is exactly the pre-redesign global FIFO,
+//! bit-for-bit — the property the golden traces pin.
+//!
+//! Pathological head-of-line stalls are still broken from *outside* by
+//! the session loop via recompute eviction ([`Batcher::evict`]) when
+//! the effective head has starved past
+//! `ServeConfig::starvation_steps`; victim selection is
+//! priority-aware ([`crate::serving::preempt::select_victim`]).  All
+//! timestamps are clock seconds from the serving clock
+//! ([`crate::serving::clock::SimClock`]), so the batcher works
+//! identically under wall and virtual time.
 
 use std::collections::VecDeque;
 
-use crate::coordinator::request::{DecodeRequest, RequestState};
+use crate::coordinator::request::{DecodeRequest, Priority, RequestId,
+                                  RequestState};
 
 /// Occupancy/throughput counters.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
@@ -26,7 +41,13 @@ pub struct BatcherStats {
     /// Active sequences evicted for recompute-resume (each re-admission
     /// counts in `admitted` again).
     pub preempted: u64,
+    /// Sequences removed by client cancellation — queued or active
+    /// ([`Batcher::cancel_queued`] / [`Batcher::cancel_active`]).
+    pub cancelled: u64,
     pub queued_peak: usize,
+    /// Peak queue depth per priority class
+    /// (`[interactive, batch, background]`).
+    pub queued_peak_by_class: [usize; 3],
     /// Sum over steps of active-batch sizes (for mean occupancy).
     pub active_area: u64,
     pub steps: u64,
@@ -52,6 +73,7 @@ struct Queued {
     /// the entry's queue wait in steps (the starvation signal for the
     /// preemption policy) — O(1) per step, no queue walk.
     enqueued_step: u64,
+    priority: Priority,
 }
 
 /// Admission queue + active set.
@@ -61,7 +83,8 @@ pub struct Batcher {
     free_rows: usize,
     /// Full pool budget (rows per layer) — `free_rows`' starting value.
     total_rows: usize,
-    queue: VecDeque<Queued>,
+    /// One FIFO per priority class, indexed by [`Priority::rank`].
+    queues: [VecDeque<Queued>; 3],
     active: Vec<RequestState>,
     stats: BatcherStats,
 }
@@ -69,39 +92,69 @@ pub struct Batcher {
 impl Batcher {
     pub fn new(max_batch: usize, pool_rows: usize) -> Self {
         Self { max_batch, free_rows: pool_rows, total_rows: pool_rows,
-               queue: VecDeque::new(), active: Vec::new(),
+               queues: [VecDeque::new(), VecDeque::new(), VecDeque::new()],
+               active: Vec::new(),
                stats: BatcherStats::default() }
     }
 
-    /// Enqueue `req` as of clock time `now_s` (its trace arrival time on
-    /// the open-loop path).
+    /// Enqueue `req` in the default class as of clock time `now_s` (its
+    /// trace arrival time on the open-loop path).
     pub fn enqueue(&mut self, req: DecodeRequest, now_s: f64) {
-        self.queue.push_back(Queued { req, enqueued_s: now_s,
-                                      enqueued_step: self.stats.steps });
-        self.stats.queued_peak = self.stats.queued_peak.max(self.queue.len());
+        self.enqueue_with(req, now_s, Priority::default());
+    }
+
+    /// Enqueue `req` into its priority-class queue as of clock time
+    /// `now_s`.
+    pub fn enqueue_with(&mut self, req: DecodeRequest, now_s: f64,
+                        priority: Priority) {
+        let rank = priority.rank();
+        self.queues[rank].push_back(Queued {
+            req, enqueued_s: now_s, enqueued_step: self.stats.steps,
+            priority,
+        });
+        self.stats.queued_peak_by_class[rank] =
+            self.stats.queued_peak_by_class[rank]
+                .max(self.queues[rank].len());
+        self.stats.queued_peak = self.stats.queued_peak.max(self.queue_len());
     }
 
     fn rows_needed(req: &DecodeRequest) -> usize {
         req.prompt.len() + req.max_new_tokens
     }
 
+    /// Rank of the class holding the effective head (the front of the
+    /// highest-priority non-empty queue).
+    fn head_rank(&self) -> Option<usize> {
+        (0..self.queues.len()).find(|&r| !self.queues[r].is_empty())
+    }
+
+    fn head(&self) -> Option<&Queued> {
+        self.head_rank().and_then(|r| self.queues[r].front())
+    }
+
     /// Move queued requests into the active set while slots + pool rows
-    /// allow, stamping admission at clock time `now_s`.  Returns how
-    /// many were admitted.
+    /// allow, stamping admission at clock time `now_s`.  Classes are
+    /// scanned in priority order; the first non-fitting effective head
+    /// blocks admission for everyone behind it (see module docs).
+    /// Returns how many were admitted.
     pub fn admit(&mut self, now_s: f64) -> usize {
         let mut n = 0;
         while self.active.len() < self.max_batch {
-            let Some(front) = self.queue.front() else { break };
-            let need = Self::rows_needed(&front.req);
+            let Some(rank) = self.head_rank() else { break };
+            let need = {
+                let front = self.queues[rank].front().unwrap();
+                Self::rows_needed(&front.req)
+            };
             if need > self.free_rows {
-                break; // head-of-line blocking by design: FIFO fairness
+                break; // head-of-line blocking by design: tiered FIFO
             }
-            let q = self.queue.pop_front().unwrap();
+            let q = self.queues[rank].pop_front().unwrap();
             self.free_rows -= need;
             let mut st = RequestState::new(q.req);
             st.enqueued_s = q.enqueued_s;
             st.started_s = Some(now_s);
             st.admitted_rows = need;
+            st.priority = q.priority;
             self.active.push(st);
             self.stats.admitted += 1;
             n += 1;
@@ -124,7 +177,13 @@ impl Batcher {
     }
 
     pub fn queue_len(&self) -> usize {
-        self.queue.len()
+        self.queues.iter().map(VecDeque::len).sum()
+    }
+
+    /// Live queue depth per priority class
+    /// (`[interactive, batch, background]`) — the engine-gauge feed.
+    pub fn queue_depths(&self) -> [usize; 3] {
+        [self.queues[0].len(), self.queues[1].len(), self.queues[2].len()]
     }
 
     /// Record one global step over the current active set.
@@ -133,25 +192,32 @@ impl Batcher {
         self.stats.active_area += self.active.len() as u64;
     }
 
-    /// Whether the head-of-line request has waited in the queue for
+    /// Whether the effective head request has waited in the queue for
     /// more than `threshold` global steps.
     pub fn head_starved(&self, threshold: u64) -> bool {
-        self.queue.front()
+        self.head()
             .is_some_and(|q| self.stats.steps - q.enqueued_step > threshold)
     }
 
-    /// Whether the head-of-line request could be admitted into an
+    /// Whether the effective head request could be admitted into an
     /// *empty* pool — false means no amount of eviction will ever fit
     /// it and it must be rejected instead.
     pub fn head_can_ever_fit(&self) -> bool {
-        self.queue.front()
+        self.head()
             .is_some_and(|q| Self::rows_needed(&q.req) <= self.total_rows)
     }
 
-    /// The head-of-line request, if any (victim-selection input for the
-    /// preemption policy).
+    /// The effective head request, if any (victim-selection input for
+    /// the preemption policy).
     pub fn head_request(&self) -> Option<&DecodeRequest> {
-        self.queue.front().map(|q| &q.req)
+        self.head().map(|q| &q.req)
+    }
+
+    /// Priority class of the effective head (victim-selection input:
+    /// the preemptor never evicts a sequence more important than the
+    /// starved head).
+    pub fn head_priority(&self) -> Option<Priority> {
+        self.head().map(|q| q.priority)
     }
 
     /// Remove finished sequences, returning them; their pool budget is
@@ -174,25 +240,56 @@ impl Batcher {
         done
     }
 
+    /// The one implementation of "remove an active sequence early":
+    /// credit exactly the `admitted_rows` stamped at admission — never
+    /// a recomputation from the (possibly shrunken) request — per the
+    /// PR-1 abort contract.  [`Batcher::evict`] and
+    /// [`Batcher::cancel_active`] differ only in which counter they
+    /// bump.
+    fn remove_active(&mut self, idx: usize) -> RequestState {
+        let st = self.active.swap_remove(idx);
+        self.free_rows += st.admitted_rows;
+        st
+    }
+
     /// Evict the active sequence at `idx` for recompute-resume: its
     /// admission budget is credited back and its state returned so the
     /// caller can release its cache pages and re-enqueue it with
     /// `prompt ⧺ generated` ([`crate::serving::preempt`]).
     pub fn evict(&mut self, idx: usize) -> RequestState {
-        let st = self.active.swap_remove(idx);
-        self.free_rows += st.admitted_rows;
         self.stats.preempted += 1;
-        st
+        self.remove_active(idx)
     }
 
-    /// Remove the head-of-line request (used when it can never be
+    /// Remove the active sequence at `idx` for client cancellation:
+    /// exactly the credit mechanics of [`Batcher::evict`], counted as
+    /// a cancellation instead of a preemption.
+    pub fn cancel_active(&mut self, idx: usize) -> RequestState {
+        self.stats.cancelled += 1;
+        self.remove_active(idx)
+    }
+
+    /// Remove a still-queued request by id (client cancellation before
+    /// admission; nothing was deducted, so nothing is credited).
+    pub fn cancel_queued(&mut self, id: RequestId) -> Option<DecodeRequest> {
+        for q in &mut self.queues {
+            if let Some(pos) = q.iter().position(|e| e.req.id == id) {
+                self.stats.cancelled += 1;
+                return q.remove(pos).map(|e| e.req);
+            }
+        }
+        None
+    }
+
+    /// Remove the effective head request (used when it can never be
     /// admitted: its row requirement exceeds the whole pool budget).
     pub fn pop_blocked(&mut self) -> Option<DecodeRequest> {
-        self.queue.pop_front().map(|q| q.req)
+        let rank = self.head_rank()?;
+        self.queues[rank].pop_front().map(|q| q.req)
     }
 
     pub fn idle(&self) -> bool {
-        self.active.is_empty() && self.queue.is_empty()
+        self.active.is_empty() && self.queues.iter().all(VecDeque::is_empty)
     }
 
     pub fn stats(&self) -> BatcherStats {
@@ -271,6 +368,40 @@ mod tests {
     }
 
     #[test]
+    fn priority_classes_admit_in_tier_order() {
+        let mut b = Batcher::new(1, 1000);
+        b.enqueue_with(req(0, 2, 1), 0.0, Priority::Background);
+        b.enqueue_with(req(1, 2, 1), 0.0, Priority::Batch);
+        b.enqueue_with(req(2, 2, 1), 0.0, Priority::Interactive);
+        assert_eq!(b.queue_depths(), [1, 1, 1]);
+        assert_eq!(b.head_request().unwrap().id, 2);
+        assert_eq!(b.head_priority(), Some(Priority::Interactive));
+        b.admit(0.0);
+        assert_eq!(b.active()[0].request.id, 2);
+        assert_eq!(b.active()[0].priority, Priority::Interactive);
+        // drain and readmit: batch before background
+        b.active_mut()[0].generated.push(1);
+        b.reap();
+        b.admit(0.0);
+        assert_eq!(b.active()[0].request.id, 1);
+        assert_eq!(b.stats().queued_peak_by_class, [1, 1, 1]);
+        assert_eq!(b.stats().queued_peak, 3);
+    }
+
+    #[test]
+    fn blocked_interactive_head_blocks_lower_classes() {
+        // a pool-blocked Interactive head must not be overtaken by a
+        // smaller Background request (no priority inversion via pool)
+        let mut b = Batcher::new(4, 10);
+        b.enqueue_with(req(0, 4, 4), 0.0, Priority::Batch); // 8 rows
+        assert_eq!(b.admit(0.0), 1);
+        b.enqueue_with(req(1, 4, 4), 0.0, Priority::Interactive); // blocked
+        b.enqueue_with(req(2, 1, 1), 0.0, Priority::Background); // would fit
+        assert_eq!(b.admit(0.0), 0, "lower class overtook a blocked head");
+        assert_eq!(b.head_request().unwrap().id, 1);
+    }
+
+    #[test]
     fn occupancy_accounting() {
         let mut b = Batcher::new(4, 1000);
         for i in 0..4 {
@@ -322,6 +453,36 @@ mod tests {
         // the credited budget admits the queued request
         assert_eq!(b.admit(0.0), 1);
         assert_eq!(b.active_mut()[0].request.id, 1);
+    }
+
+    #[test]
+    fn cancel_active_credits_exact_admission_rows() {
+        let mut b = Batcher::new(2, 10);
+        b.enqueue(req(0, 4, 4), 0.0); // deducts 8
+        b.admit(0.0);
+        // the abort contract: shrink max_new_tokens, credit stays 8
+        b.active_mut()[0].generated.push(1);
+        b.active_mut()[0].request.max_new_tokens = 1;
+        let st = b.cancel_active(0);
+        assert_eq!(st.admitted_rows, 8);
+        assert_eq!(b.stats().cancelled, 1);
+        assert_eq!(b.stats().preempted, 0);
+        // full budget is back: a 10-row request admits
+        b.enqueue(req(1, 5, 5), 0.0);
+        assert_eq!(b.admit(0.0), 1, "cancel leaked admission budget");
+    }
+
+    #[test]
+    fn cancel_queued_removes_without_credit_side_effects() {
+        let mut b = Batcher::new(1, 1000);
+        b.enqueue_with(req(0, 2, 2), 0.0, Priority::Batch);
+        b.enqueue_with(req(1, 2, 2), 0.0, Priority::Background);
+        assert_eq!(b.cancel_queued(1).unwrap().id, 1);
+        assert!(b.cancel_queued(42).is_none());
+        assert_eq!(b.queue_len(), 1);
+        assert_eq!(b.stats().cancelled, 1);
+        b.admit(0.0);
+        assert_eq!(b.active()[0].request.id, 0);
     }
 
     #[test]

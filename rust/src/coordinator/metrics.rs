@@ -108,6 +108,25 @@ pub struct Metrics {
     /// Prompt tokens consumed across all sequences (resume prompts of
     /// preempted requests re-count: recompute re-pays their prefill).
     pub prompt_tokens: u64,
+    /// Requests cancelled by the client mid-flight
+    /// ([`crate::serving::RequestHandle::cancel`]) — queued, prefilling,
+    /// or decoding; their pool pages and admission budget are credited
+    /// back exactly.
+    pub requests_cancelled: u64,
+    /// Tokens delivered into live per-request streams
+    /// ([`crate::serving::RequestHandle`]); zero on the run-to-completion
+    /// wrapper paths, which attach no stream subscribers.
+    pub streamed_tokens: u64,
+    /// Live admission-queue depth per priority class
+    /// (`[interactive, batch, background]`) — a gauge sampled when the
+    /// snapshot is taken ([`crate::serving::AmlaEngine::metrics`]); zero
+    /// in a drained end-of-run report.
+    pub queue_depth: [u64; 3],
+    /// Peak admission-queue depth per priority class over the run.
+    pub queue_depth_peak: [u64; 3],
+    /// Live in-flight sessions (admitted, unfinished) at snapshot time —
+    /// like `queue_depth`, zero once the run has drained.
+    pub active_sessions: u64,
 }
 
 impl Metrics {
@@ -168,7 +187,21 @@ impl Metrics {
              # TYPE amla_prefill_chunks counter\n\
              amla_prefill_chunks {}\n\
              # TYPE amla_prompt_tokens counter\n\
-             amla_prompt_tokens {}\n",
+             amla_prompt_tokens {}\n\
+             # TYPE amla_requests_cancelled counter\n\
+             amla_requests_cancelled {}\n\
+             # TYPE amla_streamed_tokens counter\n\
+             amla_streamed_tokens {}\n\
+             # TYPE amla_active_sessions gauge\n\
+             amla_active_sessions {}\n\
+             # TYPE amla_queue_depth gauge\n\
+             amla_queue_depth{{class=\"interactive\"}} {}\n\
+             amla_queue_depth{{class=\"batch\"}} {}\n\
+             amla_queue_depth{{class=\"background\"}} {}\n\
+             # TYPE amla_queue_depth_peak gauge\n\
+             amla_queue_depth_peak{{class=\"interactive\"}} {}\n\
+             amla_queue_depth_peak{{class=\"batch\"}} {}\n\
+             amla_queue_depth_peak{{class=\"background\"}} {}\n",
             self.requests_completed, self.tokens_generated, self.steps,
             self.step_latency.quantile_us(0.5),
             self.step_latency.quantile_us(0.99),
@@ -181,7 +214,13 @@ impl Metrics {
             self.fused_jobs,
             self.preemptions,
             self.prefill_chunks,
-            self.prompt_tokens)
+            self.prompt_tokens,
+            self.requests_cancelled,
+            self.streamed_tokens,
+            self.active_sessions,
+            self.queue_depth[0], self.queue_depth[1], self.queue_depth[2],
+            self.queue_depth_peak[0], self.queue_depth_peak[1],
+            self.queue_depth_peak[2])
     }
 }
 
@@ -227,6 +266,28 @@ mod tests {
         assert!(text.contains("amla_preemptions 2"));
         assert!(text.contains("amla_prefill_chunks 5"));
         assert!(text.contains("amla_prompt_tokens 17"));
+    }
+
+    #[test]
+    fn engine_gauges_rendered() {
+        let mut m = Metrics::default();
+        m.requests_cancelled = 2;
+        m.streamed_tokens = 41;
+        m.active_sessions = 3;
+        m.queue_depth = [4, 5, 6];
+        m.queue_depth_peak = [7, 8, 9];
+        let text = m.render();
+        assert!(text.contains("amla_requests_cancelled 2"));
+        assert!(text.contains("amla_streamed_tokens 41"));
+        assert!(text.contains("amla_active_sessions 3"));
+        assert!(text.contains("amla_queue_depth{class=\"interactive\"} 4"));
+        assert!(text.contains("amla_queue_depth{class=\"batch\"} 5"));
+        assert!(text.contains("amla_queue_depth{class=\"background\"} 6"));
+        assert!(text.contains(
+            "amla_queue_depth_peak{class=\"interactive\"} 7"));
+        assert!(text.contains("amla_queue_depth_peak{class=\"batch\"} 8"));
+        assert!(text.contains(
+            "amla_queue_depth_peak{class=\"background\"} 9"));
     }
 
     #[test]

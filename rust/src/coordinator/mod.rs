@@ -101,16 +101,22 @@
 //! 1/3/page/page+1), and the open-loop chunk reruns in
 //! `rust/tests/open_loop_golden.rs`.
 //!
-//! ## One stepping core, two admission loops
+//! ## One stepping core, one session loop
 //!
 //! The engine-stepping machinery (batched step + token accounting +
-//! reap/release) lives once in [`scheduler::StepCore`].  The closed-loop
-//! driver here ([`scheduler::serve`], everything enqueued up front) and
-//! the arrival-timed open-loop driver
-//! ([`crate::serving::serve_open_loop`], with virtual-clock determinism
-//! and recompute preemption) are both thin admission policies around
-//! it, so the two paths cannot drift apart in token accounting or page
-//! lifecycle.
+//! reap/release/evict/cancel) lives once in [`scheduler::StepCore`],
+//! and since the session redesign exactly **one loop** drives it: the
+//! session loop of [`crate::serving::session`], which adds command
+//! intake (submit / cancel / snapshot), [`Priority`]-tiered admission,
+//! and per-request token streaming on top.  Every serving entry point
+//! is an admission script over that loop — [`scheduler::serve`]
+//! (everything submitted up front at one stamp, bit-identical to the
+//! pre-redesign closed loop), [`crate::serving::serve_open_loop`]
+//! (arrival-stamped trace release, virtual-clock determinism, recompute
+//! preemption), [`crate::serving::sweep()`] (rate-rescaled open-loop
+//! runs), and the live long-lived [`crate::serving::AmlaEngine`]
+//! session — so the paths cannot drift apart in token accounting or
+//! page lifecycle.
 //!
 //! Python never appears here — the executables were AOT-compiled by
 //! `make artifacts`.  The stack is generic over [`engine::LayerExecutor`]
@@ -130,7 +136,8 @@ pub use batcher::{Batcher, BatcherStats};
 pub use engine::{DecodeEngine, HostLayerExecutor, LayerExecutor,
                  PjrtLayerExecutor, StepJob, StepTrace};
 pub use metrics::Metrics;
-pub use request::{DecodeRequest, DecodeResult, RequestId, RequestState};
+pub use request::{DecodeRequest, DecodeResult, Outcome, Priority,
+                  RequestId, RequestState};
 pub use scheduler::{serve, ServeReport, StepCore};
 pub use workload::{generate_trace, requests_of, ArrivalProcess, LenDist,
                    TracedRequest, WorkloadSpec};

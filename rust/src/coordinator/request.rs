@@ -8,6 +8,72 @@
 
 pub type RequestId = u64;
 
+/// SLO priority class of a request ([`crate::serving::SubmitOptions`]).
+///
+/// Ordering is by importance: `Interactive < Batch < Background`, so
+/// `a < b` means "a is more latency-sensitive than b".  Admission scans
+/// classes in that order (FIFO within a class), and the recompute
+/// preemptor prefers evicting the least important eligible victim
+/// ([`crate::serving::preempt::select_victim`]) while never evicting a
+/// sequence *more* important than the starved head.  A run in which
+/// every request carries one class — any class — is bit-identical to
+/// the priority-free FIFO order (per-class FIFO with a single class
+/// *is* FIFO), which is how the pre-redesign golden traces stay pinned.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub enum Priority {
+    /// Latency-sensitive traffic: admitted first, evicted last.
+    Interactive,
+    /// The default class — throughput traffic without an SLO edge.
+    #[default]
+    Batch,
+    /// Best-effort traffic: admitted last, preferred eviction victim.
+    Background,
+}
+
+impl Priority {
+    /// Queue index of the class (0 = most important).
+    pub fn rank(self) -> usize {
+        match self {
+            Priority::Interactive => 0,
+            Priority::Batch => 1,
+            Priority::Background => 2,
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Priority::Interactive => "interactive",
+            Priority::Batch => "batch",
+            Priority::Background => "background",
+        }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "interactive" => Ok(Priority::Interactive),
+            "batch" => Ok(Priority::Batch),
+            "background" => Ok(Priority::Background),
+            other => anyhow::bail!(
+                "unknown priority `{other}` \
+                 (expected interactive|batch|background)"),
+        }
+    }
+}
+
+/// How a request left the engine ([`DecodeResult::status`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Outcome {
+    /// Ran to its token budget.
+    #[default]
+    Completed,
+    /// Cancelled by the client mid-flight
+    /// ([`crate::serving::RequestHandle::cancel`]); `tokens` holds
+    /// whatever was generated before the cancel was processed.
+    Cancelled,
+    /// Rejected at admission: the request can never fit the pool.
+    Rejected,
+}
+
 /// An inbound decode request.  The serving demo has no tokenizer; a
 /// "prompt" is a list of token ids that the engine embeds
 /// deterministically (hash-based), which is all the attention stack
@@ -49,6 +115,9 @@ pub struct RequestState {
     /// reap (the request's `max_new_tokens` may shrink on abort, so the
     /// credit must not be recomputed from it).
     pub admitted_rows: usize,
+    /// SLO class the request was submitted with; stamped by the batcher
+    /// at admission and carried across recompute evictions.
+    pub priority: Priority,
 }
 
 impl RequestState {
@@ -56,7 +125,7 @@ impl RequestState {
         Self { request, generated: Vec::new(), enqueued_s: 0.0,
                started_s: None, token_latencies: Vec::new(),
                prompt_consumed: 0, pending_prefill: 0.0,
-               admitted_rows: 0 }
+               admitted_rows: 0, priority: Priority::default() }
     }
 
     pub fn done(&self) -> bool {
@@ -124,6 +193,8 @@ pub struct DecodeResult {
     /// Mean inter-token latency (s).
     pub mean_tpot: f64,
     pub p99_tpot: f64,
+    /// Terminal state: completed, cancelled mid-flight, or rejected.
+    pub status: Outcome,
 }
 
 impl DecodeResult {
@@ -148,6 +219,7 @@ impl DecodeResult {
             ttft: latencies.first().copied().unwrap_or(0.0) + queue_delay,
             mean_tpot: mean,
             p99_tpot: p99,
+            status: Outcome::Completed,
         }
     }
 
@@ -159,7 +231,9 @@ impl DecodeResult {
     /// Empty result for a request rejected at admission (can never fit
     /// the pool).
     pub fn rejected(id: RequestId) -> Self {
-        Self::from_parts(id, Vec::new(), &[], 0.0)
+        let mut res = Self::from_parts(id, Vec::new(), &[], 0.0);
+        res.status = Outcome::Rejected;
+        res
     }
 }
 
@@ -236,6 +310,35 @@ mod tests {
         assert!(res.tokens.is_empty());
         assert_eq!(res.ttft, 0.0);
         assert_eq!(res.p99_tpot, 0.0);
+        assert_eq!(res.status, Outcome::Rejected);
+    }
+
+    #[test]
+    fn priority_orders_by_importance() {
+        assert!(Priority::Interactive < Priority::Batch);
+        assert!(Priority::Batch < Priority::Background);
+        assert_eq!(Priority::default(), Priority::Batch);
+        assert_eq!(Priority::Interactive.rank(), 0);
+        assert_eq!(Priority::Background.rank(), 2);
+        for p in [Priority::Interactive, Priority::Batch,
+                  Priority::Background] {
+            assert_eq!(Priority::parse(p.as_str()).unwrap(), p);
+        }
+        assert!(Priority::parse("urgent").is_err());
+    }
+
+    #[test]
+    fn results_default_to_completed() {
+        let st = state_with_tokens();
+        let res = DecodeResult::from_state(&st);
+        assert_eq!(res.status, Outcome::Completed);
+    }
+
+    fn state_with_tokens() -> RequestState {
+        let mut st = RequestState::new(DecodeRequest::new(1, vec![1], 1));
+        st.generated.push(4);
+        st.token_latencies.push(0.01);
+        st
     }
 
     #[test]

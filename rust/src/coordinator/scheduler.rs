@@ -24,11 +24,15 @@
 //!
 //! The engine-stepping machinery lives in [`StepCore`] — one shared
 //! implementation of "advance the active set one step / reap the
-//! finished" used by both this closed-loop driver and the arrival-timed
-//! open-loop driver ([`crate::serving::serve_open_loop`]), so the two
-//! loops cannot drift apart in token accounting or page lifecycle.
-//! Time flows through [`SimClock`]: this loop always runs it in wall
-//! mode; the open loop may run it virtually.
+//! finished / evict or cancel mid-flight".  Since the session redesign
+//! there is exactly **one loop** driving it — the session loop in
+//! [`crate::serving::session`] — and every serving entry point is an
+//! admission script over that loop: [`serve`] submits everything up
+//! front at one stamp and drains (this file), `serve_open_loop`
+//! releases a trace at its arrival times, and [`crate::serving::AmlaEngine`]
+//! feeds it live submissions over a channel.  Time flows through
+//! [`SimClock`]: the closed-loop wrapper always runs it in wall mode;
+//! the open loop may run it virtually.
 
 use std::collections::HashMap;
 use std::time::{Duration, Instant};
@@ -190,6 +194,18 @@ impl StepCore {
         ids.len()
     }
 
+    /// Release a departing sequence's runtime: every cache page it
+    /// holds goes back to the pool.  The one page-lifecycle exit point
+    /// shared by reap, evict, and cancel.
+    fn release_runtime<E: LayerExecutor>(&mut self,
+                                         engine: &DecodeEngine<E>,
+                                         st: &RequestState) {
+        if let Some(mut rt) = self.runtimes.remove(&st.request.id) {
+            let mut pool = engine.pool.lock().unwrap();
+            rt.free(&mut pool);
+        }
+    }
+
     /// Remove finished sequences from the active set, release their
     /// cache pages, and return their states (the caller converts them
     /// to [`DecodeResult`]s — directly, or merged across preemptions).
@@ -198,10 +214,7 @@ impl StepCore {
                                   -> Vec<RequestState> {
         let done = batcher.reap();
         for st in &done {
-            if let Some(mut rt) = self.runtimes.remove(&st.request.id) {
-                let mut pool = engine.pool.lock().unwrap();
-                rt.free(&mut pool);
-            }
+            self.release_runtime(engine, st);
         }
         done
     }
@@ -214,23 +227,24 @@ impl StepCore {
                                    batcher: &mut Batcher, idx: usize)
                                    -> RequestState {
         let st = batcher.evict(idx);
-        if let Some(mut rt) = self.runtimes.remove(&st.request.id) {
-            let mut pool = engine.pool.lock().unwrap();
-            rt.free(&mut pool);
-        }
+        self.release_runtime(engine, &st);
         st
     }
-}
 
-/// Pop and reject the head-of-line request that can never be admitted
-/// (its row requirement exceeds the whole pool budget), returning its
-/// empty result; `None` when the queue is empty.
-pub(crate) fn reject_blocked_head(batcher: &mut Batcher)
-                                  -> Option<DecodeResult> {
-    let req = batcher.pop_blocked()?;
-    eprintln!("[serve] request {} rejected: needs more pool rows than the \
-               pool holds", req.id);
-    Some(DecodeResult::rejected(req.id))
+    /// Remove the active sequence at `idx` for client cancellation:
+    /// identical pool/budget mechanics to [`StepCore::evict`] — every
+    /// cache page released, the admission-stamped `admitted_rows`
+    /// credited verbatim (the PR-1 abort contract) — but counted as a
+    /// cancellation, not a preemption.  The session loop turns the
+    /// returned state into an [`crate::coordinator::Outcome::Cancelled`]
+    /// result.
+    pub fn cancel<E: LayerExecutor>(&mut self, engine: &DecodeEngine<E>,
+                                    batcher: &mut Batcher, idx: usize)
+                                    -> RequestState {
+        let st = batcher.cancel_active(idx);
+        self.release_runtime(engine, &st);
+        st
+    }
 }
 
 /// Shared run setup for both serve loops: build the admission batcher
@@ -264,41 +278,34 @@ pub(crate) fn finish_run_metrics<E: LayerExecutor>(engine: &DecodeEngine<E>,
 }
 
 /// Drive all `requests` to completion on `engine` and return the report.
+///
+/// Since the session redesign this is a thin **compatibility wrapper**
+/// over the one session loop ([`crate::serving::run_scripted`] /
+/// [`crate::serving::AmlaEngine`]): the whole batch is submitted up
+/// front at a single stamp (the legacy `t0`) and the session drains.
+/// Closed-loop semantics are preserved exactly — in particular the
+/// batch never preempts itself (recompute eviction exists to break
+/// *arrival-pressure* starvation, which a run-to-completion batch has
+/// none of), so token streams, rejection behavior, and metrics are
+/// bit-identical to the pre-redesign loop.  See `docs/API_MIGRATION.md`
+/// for moving call sites to the session API.
 pub fn serve<E: LayerExecutor>(engine: &DecodeEngine<E>,
                                requests: Vec<DecodeRequest>,
                                cfg: &ServeConfig) -> Result<ServeReport> {
+    use crate::serving::session::{run_scripted, ScriptedCommand,
+                                  SessionAction, SessionSubmit};
+    let mut batch_cfg = cfg.clone();
+    batch_cfg.preempt = false; // closed loop never preempted itself
     let mut clock = SimClock::wall();
-    let (mut batcher, fused0) = init_run(engine, cfg);
-    let t0 = clock.now();
-    for r in requests {
-        batcher.enqueue(r, t0);
-    }
-
-    let mut metrics = Metrics::default();
-    let mut results = Vec::new();
-    let mut core = StepCore::new(engine.executor.n_layers());
-
-    while !batcher.idle() {
-        if batcher.admit(clock.now()) == 0 && batcher.active_len() == 0 {
-            // the active set is empty (all rows free), so the head
-            // request can never fit: reject it with an empty result and
-            // keep serving instead of deadlocking the loop
-            let Some(res) = reject_blocked_head(&mut batcher) else { break };
-            results.push(res);
-            continue;
-        }
-
-        core.step(engine, &mut batcher, cfg, &mut metrics, &mut clock);
-
-        for st in core.reap(engine, &mut batcher) {
-            results.push(DecodeResult::from_state(&st));
-            metrics.requests_completed += 1;
-        }
-    }
-
-    metrics.wall_time = clock.elapsed();
-    finish_run_metrics(engine, fused0, &mut metrics);
-    Ok(ServeReport { results, metrics, batcher: batcher.stats() })
+    let subs: Vec<SessionSubmit> =
+        requests.into_iter().map(SessionSubmit::new).collect();
+    let script = vec![
+        ScriptedCommand::immediately(SessionAction::Submit(subs)),
+        ScriptedCommand::immediately(SessionAction::Drain),
+    ];
+    let report = run_scripted(engine, &batch_cfg, &mut clock, script)?;
+    Ok(ServeReport { results: report.results, metrics: report.metrics,
+                     batcher: report.batcher })
 }
 
 #[cfg(test)]

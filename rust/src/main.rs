@@ -14,7 +14,7 @@
 
 use anyhow::{bail, Result};
 
-use amla::config::{Algo, Args, ServeConfig};
+use amla::config::{Algo, Args, EngineConfig};
 use amla::coordinator::{generate_trace, serve, DecodeEngine, DecodeRequest,
                         HostLayerExecutor, LenDist, PjrtLayerExecutor,
                         WorkloadSpec};
@@ -90,8 +90,10 @@ USAGE:
 ";
 
 fn cmd_serve(args: &Args) -> Result<()> {
-    let mut cfg = ServeConfig::default();
-    cfg.apply_args(args)?;
+    // CLI flags land on the typed EngineConfig builder (validated at
+    // build time), then lower to the flat stepping form
+    let engine_cfg = EngineConfig::builder().apply_args(args)?.build()?;
+    let cfg = engine_cfg.to_serve();
     let n_requests = args.get_usize("requests", 8)?;
     let n_layers = args.get_usize("layers", 2)?;
     let dims = MlaDims { n1: cfg.n1, sq: cfg.sq, ..MlaDims::default() };
@@ -142,8 +144,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
 /// Open-loop rate sweep on the host substrate (bit-exact Rust numerics,
 /// no artifacts needed) under the deterministic virtual clock.
 fn cmd_sweep(args: &Args) -> Result<()> {
-    let mut cfg = ServeConfig::default();
-    cfg.apply_args(args)?;
+    let engine_cfg = EngineConfig::builder().apply_args(args)?.build()?;
+    let cfg = engine_cfg.to_serve();
     let n_requests = args.get_usize("requests", 32)?;
     let n_layers = args.get_usize("layers", 2)?;
     let rates: Vec<f64> = match args.get("rates") {
@@ -179,6 +181,16 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     let sweep_cfg = SweepConfig { rates, ..SweepConfig::default() };
     let report = sweep(&engine, &trace, spec.rate, &cfg, &sweep_cfg)?;
     println!("{}", report.render_table());
+    if let Some(point) = report.points.last() {
+        let m = &point.metrics;
+        println!("engine gauges @ {:.2} req/s offered: queue depth peak \
+                  interactive/batch/background {}/{}/{}, preemptions {}, \
+                  cancelled {}, streamed tokens {}",
+                 point.offered_rate,
+                 m.queue_depth_peak[0], m.queue_depth_peak[1],
+                 m.queue_depth_peak[2], m.preemptions,
+                 m.requests_cancelled, m.streamed_tokens);
+    }
     println!("{}", report.to_json());
     Ok(())
 }

@@ -14,6 +14,18 @@
 //! [`crate::coordinator::scheduler::StepCore`] — so open-loop serving
 //! is an *admission policy*, not a fork of the decode machinery.
 //!
+//! Since the session redesign ([`session`]) the sharing goes further:
+//! there is exactly **one loop** ([`session::run_scripted`] /
+//! [`AmlaEngine`]) implementing admission, preemption, stepping,
+//! streaming, cancellation, and accounting; [`serve_open_loop`], the
+//! closed-loop [`crate::coordinator::serve`], and [`sweep()`] are thin
+//! scripts over it, and the live [`AmlaEngine`] session feeds the same
+//! loop from a command channel.  Long-lived clients submit at any time
+//! with an SLO [`crate::coordinator::Priority`] class, stream tokens
+//! incrementally through [`RequestHandle`]s, and cancel mid-flight
+//! with exact pool/budget credit (the cancellation accounting
+//! contract, [`session`] docs).
+//!
 //! ## Virtual-clock semantics
 //!
 //! Time flows through [`clock::SimClock`].  In **wall** mode the loop
@@ -68,9 +80,8 @@
 
 pub mod clock;
 pub mod preempt;
+pub mod session;
 pub mod sweep;
-
-use std::collections::VecDeque;
 
 use anyhow::Result;
 
@@ -79,12 +90,13 @@ use crate::coordinator::batcher::BatcherStats;
 use crate::coordinator::engine::{DecodeEngine, LayerExecutor};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::request::{DecodeResult, RequestId};
-use crate::coordinator::scheduler::{finish_run_metrics, init_run, StepCore};
 use crate::coordinator::workload::TracedRequest;
 use clock::SimClock;
-use preempt::{select_victim, ResumeLedger};
 
 pub use clock::StepCostModel;
+pub use session::{run_scripted, AmlaEngine, EngineReport, RequestHandle,
+                  ScriptedCommand, SessionAction, SessionCue, SessionSubmit,
+                  SubmitOptions};
 pub use sweep::{sweep, RatePoint, ServeLoadReport, SweepConfig};
 
 /// Outcome of one [`serve_open_loop`] run.
@@ -124,94 +136,41 @@ impl OpenLoopReport {
 
 /// Serve an arrival-timed `trace` open-loop on `engine` under `clock`.
 ///
-/// Requests enter the admission queue at their arrival times (the trace
-/// is sorted by arrival internally; ids must be unique).  When the
+/// Requests enter the admission queue at their arrival times (released
+/// in `(arrival, id)` order internally; ids must be unique).  When the
 /// engine is idle and no request is visible yet, the clock jumps (or
 /// sleeps) to the next arrival.  With [`ServeConfig::preempt`] on,
 /// head-of-line starvation past [`ServeConfig::starvation_steps`]
 /// triggers recompute eviction (see module docs).
+///
+/// Since the session redesign this is a thin **compatibility wrapper**
+/// over the one session loop ([`session::run_scripted`] — the same loop
+/// [`AmlaEngine`] runs live): the trace is submitted as one scripted
+/// batch with explicit arrival stamps and the session drains.  The
+/// wrapper is bit-identical to the pre-redesign open loop — tokens,
+/// completion order, eviction decisions, and makespan — pinned by
+/// `rust/tests/open_loop_golden.rs`.  See `docs/API_MIGRATION.md` for
+/// moving call sites to the session API.
 pub fn serve_open_loop<E: LayerExecutor>(engine: &DecodeEngine<E>,
-                                         mut trace: Vec<TracedRequest>,
+                                         trace: Vec<TracedRequest>,
                                          cfg: &ServeConfig,
                                          clock: &mut SimClock)
                                          -> Result<OpenLoopReport> {
-    let (mut batcher, fused0) = init_run(engine, cfg);
-    trace.sort_by(|a, b| {
-        a.arrival
-            .partial_cmp(&b.arrival)
-            .unwrap()
-            .then(a.request.id.cmp(&b.request.id))
-    });
-    let mut pending: VecDeque<TracedRequest> = trace.into();
-
-    let mut metrics = Metrics::default();
-    let mut results = Vec::new();
-    let mut completion_order = Vec::new();
-    let mut ledger = ResumeLedger::default();
-    let mut core = StepCore::new(engine.executor.n_layers());
-
-    while !batcher.idle() || !pending.is_empty() {
-        let now = clock.now();
-        // release every request that has arrived by `now`; its queue
-        // clock starts at the *trace* arrival, not the release instant
-        while pending.front().is_some_and(|t| t.arrival <= now) {
-            let tr = pending.pop_front().unwrap();
-            batcher.enqueue(tr.request, tr.arrival);
-        }
-        if batcher.idle() {
-            // engine drained before the next arrival: jump to it
-            let next = pending.front().expect("loop invariant").arrival;
-            clock.advance_to(next);
-            continue;
-        }
-
-        let admitted = batcher.admit(now);
-        if admitted == 0 && batcher.active_len() == 0 {
-            // all rows free yet the head cannot be admitted: it can
-            // never fit — reject it (returning any pre-eviction tokens)
-            let Some(req) = batcher.pop_blocked() else { break };
-            eprintln!("[serve-open] request {} rejected: needs more pool \
-                       rows than the pool holds", req.id);
-            completion_order.push(req.id);
-            results.push(ledger.reject(req.id));
-            continue;
-        }
-
-        if cfg.preempt
-            && admitted == 0
-            && batcher.active_len() > 0
-            && batcher.head_starved(cfg.starvation_steps as u64)
-            && batcher.head_can_ever_fit()
-        {
-            // anti-livelock progress guard: only evict a sequence with
-            // strictly more remaining work than the starved head needs
-            // in total (see preempt::select_victim)
-            let head_need = batcher.head_request()
-                .map(|r| r.prompt.len() + r.max_new_tokens)
-                .unwrap_or(usize::MAX);
-            if let Some(victim) = select_victim(batcher.active(), head_need) {
-                let st = core.evict(engine, &mut batcher, victim);
-                metrics.preemptions += 1;
-                let resume = ledger.note_eviction(st);
-                batcher.enqueue(resume, now);
-                batcher.admit(now);
-            }
-        }
-
-        core.step(engine, &mut batcher, cfg, &mut metrics, clock);
-
-        for st in core.reap(engine, &mut batcher) {
-            completion_order.push(st.request.id);
-            results.push(ledger.finish(&st));
-            metrics.requests_completed += 1;
-        }
-    }
-
-    let makespan = clock.now();
-    metrics.wall_time = clock.elapsed();
-    finish_run_metrics(engine, fused0, &mut metrics);
-    Ok(OpenLoopReport { results, completion_order, metrics,
-                        batcher: batcher.stats(), makespan })
+    let subs: Vec<SessionSubmit> = trace.into_iter()
+        .map(|t| SessionSubmit::new(t.request).at(t.arrival))
+        .collect();
+    let script = vec![
+        ScriptedCommand::immediately(SessionAction::Submit(subs)),
+        ScriptedCommand::immediately(SessionAction::Drain),
+    ];
+    let report = run_scripted(engine, cfg, clock, script)?;
+    Ok(OpenLoopReport {
+        results: report.results,
+        completion_order: report.completion_order,
+        metrics: report.metrics,
+        batcher: report.batcher,
+        makespan: report.makespan,
+    })
 }
 
 #[cfg(test)]

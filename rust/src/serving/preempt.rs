@@ -34,13 +34,23 @@
 
 use std::collections::HashMap;
 
-use crate::coordinator::request::{DecodeRequest, DecodeResult, RequestId,
-                                  RequestState};
+use crate::coordinator::request::{DecodeRequest, DecodeResult, Outcome,
+                                  Priority, RequestId, RequestState};
 
-/// Pick the eviction victim among `active`: the sequence with the most
-/// remaining engine steps ([`RequestState::remaining_steps`]), breaking
-/// ties toward the larger request id (the younger admission) so the
-/// choice is deterministic.
+/// Pick the eviction victim among `active`: the **least important**
+/// eligible sequence first ([`Priority`] — `Background` before `Batch`
+/// before `Interactive`), then the one with the most remaining engine
+/// steps ([`RequestState::remaining_steps`]), breaking ties toward the
+/// larger request id (the younger admission) so the choice is
+/// deterministic.
+///
+/// **Priority guard**: only sequences whose class is *no more
+/// important* than the starved head's (`st.priority >= head_priority`)
+/// are eligible — a `Background` head can never evict an `Interactive`
+/// resident.  In a single-class run every resident ties the head, so
+/// the guard is a no-op and the selection reduces exactly to the
+/// pre-redesign `(remaining_steps, id)` key — bit-identical FIFO-era
+/// behavior, pinned by the open-loop golden trace.
 ///
 /// **Progress guard (anti-livelock)**: only sequences with *strictly
 /// more* than `min_remaining` steps left are eligible, where the caller
@@ -50,14 +60,18 @@ use crate::coordinator::request::{DecodeRequest, DecodeResult, RequestId,
 /// time would rotate requests through the pool forever, none ever
 /// finishing.  With it, every eviction replaces a sequence by one with
 /// strictly less remaining work, so some sequence always runs to
-/// completion and the system drains.  `None` if no sequence qualifies
-/// (the starved head then waits FIFO-style).
-pub fn select_victim(active: &[RequestState], min_remaining: usize)
-                     -> Option<usize> {
+/// completion and the system drains.  The progress guard is absolute:
+/// priority never overrides it.  `None` if no sequence qualifies (the
+/// starved head then waits FIFO-style).
+pub fn select_victim(active: &[RequestState], min_remaining: usize,
+                     head_priority: Priority) -> Option<usize> {
     active.iter()
         .enumerate()
-        .filter(|(_, st)| !st.done() && st.remaining_steps() > min_remaining)
-        .max_by_key(|(_, st)| (st.remaining_steps(), st.request.id))
+        .filter(|(_, st)| !st.done()
+            && st.remaining_steps() > min_remaining
+            && st.priority >= head_priority)
+        .max_by_key(|(_, st)| (st.priority, st.remaining_steps(),
+                               st.request.id))
         .map(|(i, _)| i)
 }
 
@@ -144,12 +158,18 @@ impl ResumeLedger {
     }
 
     /// Result for a request rejected at (re-)admission: tokens carried
-    /// from before any eviction are still returned to the client.
+    /// from before any eviction are still returned to the client, with
+    /// [`Outcome::Rejected`] status either way.
     pub fn reject(&mut self, id: RequestId) -> DecodeResult {
         match self.carried.remove(&id) {
             None => DecodeResult::rejected(id),
-            Some(c) => DecodeResult::from_parts(id, c.tokens, &c.latencies,
-                                                c.queue_delay),
+            Some(c) => {
+                let mut res = DecodeResult::from_parts(id, c.tokens,
+                                                       &c.latencies,
+                                                       c.queue_delay);
+                res.status = Outcome::Rejected;
+                res
+            }
         }
     }
 }
@@ -175,7 +195,7 @@ mod tests {
             state(1, 2, 20, &[1]),       // 19 remaining
             state(2, 2, 5, &[1, 2]),     // 3 remaining
         ];
-        assert_eq!(select_victim(&active, 0), Some(1));
+        assert_eq!(select_victim(&active, 0, Priority::Batch), Some(1));
     }
 
     #[test]
@@ -185,10 +205,10 @@ mod tests {
             state(7, 2, 5, &[1]),            // 4 remaining, larger id
             state(9, 2, 2, &[1, 2]),         // done
         ];
-        assert_eq!(select_victim(&active, 0), Some(1));
+        assert_eq!(select_victim(&active, 0, Priority::Batch), Some(1));
         let all_done = vec![state(0, 2, 1, &[4])];
-        assert_eq!(select_victim(&all_done, 0), None);
-        assert_eq!(select_victim(&[], 0), None);
+        assert_eq!(select_victim(&all_done, 0, Priority::Batch), None);
+        assert_eq!(select_victim(&[], 0, Priority::Batch), None);
     }
 
     #[test]
@@ -198,9 +218,62 @@ mod tests {
             state(0, 2, 6, &[1, 2]),     // 4 remaining: protected
             state(1, 2, 30, &[1]),       // 29 remaining: eligible
         ];
-        assert_eq!(select_victim(&active, 6), Some(1));
+        assert_eq!(select_victim(&active, 6, Priority::Batch), Some(1));
         // nobody has more work than the head: FIFO wait, no eviction
-        assert_eq!(select_victim(&active, 29), None);
+        assert_eq!(select_victim(&active, 29, Priority::Batch), None);
+    }
+
+    fn state_with_priority(id: RequestId, max_new: usize,
+                           priority: Priority) -> RequestState {
+        let mut st = state(id, 2, max_new, &[]);
+        st.priority = priority;
+        st
+    }
+
+    #[test]
+    fn victim_prefers_least_important_class() {
+        // the Background resident is picked even though the Batch one
+        // has more remaining work — class dominates the key
+        let active = vec![
+            state_with_priority(0, 50, Priority::Batch),      // 50 left
+            state_with_priority(1, 10, Priority::Background), // 10 left
+        ];
+        assert_eq!(select_victim(&active, 4, Priority::Interactive),
+                   Some(1));
+        // within a class the old (remaining, id) key still decides
+        let uniform = vec![
+            state_with_priority(0, 50, Priority::Batch),
+            state_with_priority(1, 10, Priority::Batch),
+        ];
+        assert_eq!(select_victim(&uniform, 4, Priority::Interactive),
+                   Some(0));
+    }
+
+    #[test]
+    fn victim_never_outranks_the_starved_head() {
+        // a Background head cannot evict Interactive/Batch residents
+        let active = vec![
+            state_with_priority(0, 50, Priority::Interactive),
+            state_with_priority(1, 50, Priority::Batch),
+        ];
+        assert_eq!(select_victim(&active, 4, Priority::Background), None);
+        // a Batch head may evict Batch or Background, not Interactive
+        let mixed = vec![
+            state_with_priority(0, 60, Priority::Interactive),
+            state_with_priority(1, 50, Priority::Batch),
+        ];
+        assert_eq!(select_victim(&mixed, 4, Priority::Batch), Some(1));
+    }
+
+    #[test]
+    fn progress_guard_is_absolute_even_for_interactive_heads() {
+        // priority never overrides the anti-livelock guard: a
+        // Background resident with too little remaining work is
+        // protected even from an Interactive head
+        let active = vec![state_with_priority(0, 5, Priority::Background)];
+        assert_eq!(select_victim(&active, 5, Priority::Interactive), None);
+        assert_eq!(select_victim(&active, 4, Priority::Interactive),
+                   Some(0));
     }
 
     #[test]

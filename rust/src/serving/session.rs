@@ -1,0 +1,1146 @@
+//! The session-oriented streaming engine API: [`AmlaEngine`].
+//!
+//! Everything before this module served **run-to-completion traces**:
+//! `serve()` / `serve_open_loop()` swallowed a `Vec` of requests and
+//! returned one report at the end.  A serving deployment needs the
+//! opposite shape — a **long-lived engine session** that requests enter
+//! at any time, stream tokens out of incrementally, and leave early by
+//! cancellation, with SLO [`Priority`] classes deciding who waits.
+//! This module is that shape, built as *one more admission policy* over
+//! the same stepping core ([`crate::coordinator::scheduler::StepCore`])
+//! the batch loops already share — there is exactly one
+//! stepping/admission/accounting path in the crate, and the legacy
+//! entry points are thin wrappers over it (see
+//! [`crate::coordinator::serve`] / [`crate::serving::serve_open_loop`]).
+//!
+//! ## Two frontends, one loop
+//!
+//! * **Live** — [`AmlaEngine::start`] moves the executor into a
+//!   dedicated engine thread that owns the stepping loop.
+//!   [`AmlaEngine::submit`] admits a request at any time and returns a
+//!   [`RequestHandle`] whose bounded channel streams tokens as they
+//!   are generated, ending with the final [`DecodeResult`] (delivered
+//!   out of band — see "Streaming backpressure" below);
+//!   [`RequestHandle::cancel`] (or [`AmlaEngine::cancel`]) removes the
+//!   request mid-flight.
+//! * **Scripted** — [`run_scripted`] drives the identical loop inline
+//!   on the caller's thread against a borrowed engine, with commands
+//!   released at deterministic [`SessionCue`]s (a step count, a
+//!   token count of a given request).  Under the virtual clock a
+//!   scripted session is **bit-reproducible**, which is how the legacy
+//!   wrappers keep their pre-redesign golden traces pinned and how the
+//!   cancellation/priority regression tests hit exact mid-prefill /
+//!   mid-decode instants.
+//!
+//! ## The cancellation accounting contract
+//!
+//! Cancelling a request — queued, prefilling mid-chunk, or decoding —
+//! must return the batcher admission budget **exactly as the PR-1
+//! abort fix defined it**: the `admitted_rows` stamped at admission are
+//! credited verbatim (never recomputed from a shrunken
+//! `max_new_tokens`), and every pool page the sequence held is
+//! released.  A cancel therefore leaves pool occupancy exactly where
+//! it was before the request was admitted; the regression tests in
+//! `rust/tests/session_api.rs` pin this for mid-decode and
+//! mid-prefill-chunk cancellation, including the "a full-budget request
+//! admits immediately afterwards" consequence.
+//!
+//! ## Priority classes
+//!
+//! [`SubmitOptions::priority`] places a request in one of three tiers
+//! ([`Priority`]): admission scans `Interactive → Batch → Background`
+//! (FIFO within a tier, head-of-line blocking across tiers — see
+//! [`crate::coordinator::batcher`]), and the recompute preemptor
+//! prefers the least important eligible victim while never evicting a
+//! sequence more important than the starved head
+//! ([`crate::serving::preempt::select_victim`]).  The anti-livelock
+//! progress guard is absolute — priority never overrides it.  A run in
+//! which every request carries one class is bit-identical to the
+//! pre-redesign FIFO schedule.
+//!
+//! ## Streaming backpressure
+//!
+//! Each handle's token channel is bounded.  By default it is sized to
+//! the request's full token budget, so the engine never stalls on a
+//! slow consumer; an explicit [`SubmitOptions::stream_capacity`] opts
+//! into real backpressure — the engine stalls token delivery while
+//! that request's buffer is full, which serializes the whole session.
+//! The stall is **command-responsive**: submit / cancel / snapshot /
+//! shutdown commands keep being processed while the engine waits, so a
+//! lagging client can always cancel its request and
+//! [`AmlaEngine::shutdown`] can never deadlock on an undrained stream
+//! — once the session is draining or aborting, a still-full stream is
+//! disconnected instead of waited on (its result still reaches the
+//! session report).  Terminal results travel out of band — a
+//! per-handle slot written exactly once, never through the bounded
+//! channel — so result delivery cannot wedge the engine either.
+//! Dropping a handle's receiver just stops streaming; the request
+//! keeps decoding into the session report.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender,
+                      TrySendError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{anyhow, Result};
+
+use crate::config::{EngineConfig, ServeConfig};
+use crate::coordinator::batcher::{Batcher, BatcherStats};
+use crate::coordinator::engine::{DecodeEngine, LayerExecutor};
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::request::{DecodeRequest, DecodeResult, Outcome,
+                                  Priority, RequestId};
+use crate::coordinator::scheduler::{finish_run_metrics, init_run, StepCore};
+use crate::serving::clock::SimClock;
+use crate::serving::preempt::{select_victim, ResumeLedger};
+
+/// Per-submission options ([`AmlaEngine::submit_with`]).
+#[derive(Debug, Clone, Default)]
+pub struct SubmitOptions {
+    /// SLO class; defaults to [`Priority::Batch`].
+    pub priority: Priority,
+    /// Token-stream buffer size.  `None` (default) sizes the buffer to
+    /// the request's full token budget, so the engine never stalls on
+    /// this stream; `Some(n)` bounds it at `n` (min 1) and applies
+    /// backpressure to the engine when full (see module docs).
+    pub stream_capacity: Option<usize>,
+}
+
+impl SubmitOptions {
+    pub fn priority(mut self, priority: Priority) -> Self {
+        self.priority = priority;
+        self
+    }
+
+    pub fn stream_capacity(mut self, capacity: usize) -> Self {
+        self.stream_capacity = Some(capacity);
+        self
+    }
+}
+
+/// One request of a scripted submission batch ([`SessionAction::Submit`]).
+#[derive(Debug, Clone)]
+pub struct SessionSubmit {
+    pub request: DecodeRequest,
+    /// Explicit arrival stamp (clock seconds): the request becomes
+    /// visible to admission at this time, like a
+    /// [`crate::coordinator::TracedRequest`].  `None` = "now" — the
+    /// request is enqueued the moment the command is processed, in
+    /// command order (the closed-loop semantics).
+    pub arrival: Option<f64>,
+    pub priority: Priority,
+}
+
+impl SessionSubmit {
+    pub fn new(request: DecodeRequest) -> Self {
+        Self { request, arrival: None, priority: Priority::default() }
+    }
+
+    /// Stamp an explicit arrival time (trace semantics).
+    pub fn at(mut self, arrival: f64) -> Self {
+        self.arrival = Some(arrival);
+        self
+    }
+
+    pub fn priority(mut self, priority: Priority) -> Self {
+        self.priority = priority;
+        self
+    }
+}
+
+/// When a scripted command fires ([`ScriptedCommand`]).  Cues are
+/// evaluated at the loop's command-intake point, strictly in script
+/// order: the front command blocks those behind it until its cue is
+/// met.  If the engine drains fully while the front cue is still
+/// unmet (its step/token counts can no longer advance), the script is
+/// forced forward so a session never hangs on an unreachable cue.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum SessionCue {
+    /// Fire at the next intake point.
+    Immediately,
+    /// Fire once the engine has executed at least this many global
+    /// steps.
+    AfterSteps(u64),
+    /// Fire once request `id` has emitted at least `count` tokens —
+    /// the hook the cancellation regression tests use to cancel at an
+    /// exact mid-decode instant.
+    AfterTokens { id: RequestId, count: usize },
+}
+
+/// A scripted command for [`run_scripted`].
+#[derive(Debug, Clone)]
+pub enum SessionAction {
+    Submit(Vec<SessionSubmit>),
+    Cancel(RequestId),
+    /// Finish all submitted work, then end the session.
+    Drain,
+}
+
+/// A cue plus the action it releases ([`run_scripted`]).
+#[derive(Debug, Clone)]
+pub struct ScriptedCommand {
+    pub cue: SessionCue,
+    pub action: SessionAction,
+}
+
+impl ScriptedCommand {
+    pub fn immediately(action: SessionAction) -> Self {
+        Self { cue: SessionCue::Immediately, action }
+    }
+
+    pub fn after_steps(steps: u64, action: SessionAction) -> Self {
+        Self { cue: SessionCue::AfterSteps(steps), action }
+    }
+
+    pub fn after_tokens(id: RequestId, count: usize,
+                        action: SessionAction) -> Self {
+        Self { cue: SessionCue::AfterTokens { id, count }, action }
+    }
+}
+
+/// Outcome of one engine session ([`AmlaEngine::shutdown`] /
+/// [`run_scripted`]).
+#[derive(Debug)]
+pub struct EngineReport {
+    /// Per-request terminal results in completion order — completed,
+    /// cancelled, and rejected requests alike (see
+    /// [`DecodeResult::status`]); preempted requests are merged across
+    /// evictions.
+    pub results: Vec<DecodeResult>,
+    /// Request ids in the order they reached a terminal state.
+    pub completion_order: Vec<RequestId>,
+    pub metrics: Metrics,
+    pub batcher: BatcherStats,
+    /// Clock time (s) from session start to the last terminal event.
+    pub makespan: f64,
+}
+
+// ---------------------------------------------------------------------
+// Commands and command sources
+// ---------------------------------------------------------------------
+
+/// Engine side of one live token stream: the bounded token channel
+/// plus the terminal-result slot.  The slot is written exactly once —
+/// never through the bounded channel, so result delivery cannot block
+/// — just before the sender is dropped to end the stream.
+struct LiveStream {
+    tx: SyncSender<u32>,
+    slot: Arc<Mutex<Option<DecodeResult>>>,
+}
+
+/// An internal submission: the public [`SessionSubmit`] plus an
+/// optional live token stream.
+struct Submission {
+    sub: SessionSubmit,
+    stream: Option<LiveStream>,
+}
+
+enum Command {
+    Submit(Vec<Submission>),
+    Cancel(RequestId),
+    Snapshot(Sender<Metrics>),
+    Drain,
+    Abort,
+}
+
+/// Loop-progress snapshot handed to [`CommandSource::poll`] for cue
+/// evaluation.
+struct Progress<'a> {
+    steps: u64,
+    emitted: &'a HashMap<RequestId, usize>,
+}
+
+fn cue_met(cue: &SessionCue, p: &Progress) -> bool {
+    match *cue {
+        SessionCue::Immediately => true,
+        SessionCue::AfterSteps(n) => p.steps >= n,
+        SessionCue::AfterTokens { id, count } => {
+            p.emitted.get(&id).copied().unwrap_or(0) >= count
+        }
+    }
+}
+
+/// Where the session loop's commands come from: a channel (live
+/// engine) or a cue-gated script (wrappers, deterministic tests).
+trait CommandSource {
+    /// Non-blocking: every command whose trigger has fired.
+    fn poll(&mut self, progress: &Progress) -> Vec<Command>;
+    /// Blocking wait once the engine is fully idle; `None` = source
+    /// exhausted / disconnected, ending the session.
+    fn wait_idle(&mut self) -> Option<Command>;
+}
+
+struct ChannelSource {
+    rx: Receiver<Command>,
+}
+
+impl CommandSource for ChannelSource {
+    fn poll(&mut self, _progress: &Progress) -> Vec<Command> {
+        let mut out = Vec::new();
+        while let Ok(cmd) = self.rx.try_recv() {
+            out.push(cmd);
+        }
+        out
+    }
+
+    fn wait_idle(&mut self) -> Option<Command> {
+        self.rx.recv().ok()
+    }
+}
+
+struct ScriptSource {
+    script: VecDeque<ScriptedCommand>,
+}
+
+impl ScriptSource {
+    fn command(action: SessionAction) -> Command {
+        match action {
+            SessionAction::Submit(subs) => Command::Submit(
+                subs.into_iter()
+                    .map(|sub| Submission { sub, stream: None })
+                    .collect()),
+            SessionAction::Cancel(id) => Command::Cancel(id),
+            SessionAction::Drain => Command::Drain,
+        }
+    }
+}
+
+impl CommandSource for ScriptSource {
+    fn poll(&mut self, progress: &Progress) -> Vec<Command> {
+        let mut out = Vec::new();
+        while self.script.front().is_some_and(|c| cue_met(&c.cue, progress))
+        {
+            let c = self.script.pop_front().unwrap();
+            out.push(Self::command(c.action));
+        }
+        out
+    }
+
+    fn wait_idle(&mut self) -> Option<Command> {
+        // the engine is fully idle: step/token cues can no longer
+        // advance, so force the script forward (see SessionCue docs)
+        self.script.pop_front().map(|c| Self::command(c.action))
+    }
+}
+
+// ---------------------------------------------------------------------
+// The session loop
+// ---------------------------------------------------------------------
+
+/// A not-yet-released explicit-arrival submission.
+struct Pending {
+    request: DecodeRequest,
+    arrival: f64,
+    priority: Priority,
+}
+
+/// The one session loop every serving entry point runs: command intake
+/// → arrival release → admission (+ rejection of never-fits heads) →
+/// starvation preemption → one batched engine step → token streaming →
+/// reap.  Structurally identical to the pre-redesign open loop, so a
+/// scripted session that submits a whole trace up front reproduces it
+/// bit-for-bit (the wrapper migration contract, pinned by both golden
+/// tiers).
+struct Session<'e, E: LayerExecutor> {
+    engine: &'e DecodeEngine<E>,
+    cfg: &'e ServeConfig,
+    batcher: Batcher,
+    core: StepCore,
+    ledger: ResumeLedger,
+    metrics: Metrics,
+    results: Vec<DecodeResult>,
+    completion_order: Vec<RequestId>,
+    /// Explicit-arrival submissions not yet visible, sorted by
+    /// `(arrival, id)` — the open-loop release order.  Kept as a
+    /// sorted deque (batch submissions sort once and merge), so the
+    /// wrapper path pays exactly the legacy one-shot sort + O(1) pops.
+    pending: VecDeque<Pending>,
+    /// Live token streams by request id.
+    streams: HashMap<RequestId, LiveStream>,
+    /// Tokens of the *current admission* already streamed, per active
+    /// request (reset on eviction: resumed tokens are genuinely new).
+    cur_len: HashMap<RequestId, usize>,
+    /// Total tokens emitted per request across admissions — the
+    /// scripted-cue feed ([`SessionCue::AfterTokens`]).
+    emitted: HashMap<RequestId, usize>,
+    /// Whether to maintain `emitted` at all.  Off on the live path —
+    /// no cue ever reads it there, so a long-lived session does not
+    /// grow one counter per request ever served.
+    track_emitted: bool,
+    fused0: Option<(u64, u64)>,
+    draining: bool,
+    abort: bool,
+}
+
+impl<'e, E: LayerExecutor> Session<'e, E> {
+    fn new(engine: &'e DecodeEngine<E>, cfg: &'e ServeConfig) -> Self {
+        let (batcher, fused0) = init_run(engine, cfg);
+        Self {
+            engine,
+            cfg,
+            batcher,
+            core: StepCore::new(engine.executor.n_layers()),
+            ledger: ResumeLedger::default(),
+            metrics: Metrics::default(),
+            results: Vec::new(),
+            completion_order: Vec::new(),
+            pending: VecDeque::new(),
+            streams: HashMap::new(),
+            cur_len: HashMap::new(),
+            emitted: HashMap::new(),
+            track_emitted: true,
+            fused0,
+            draining: false,
+            abort: false,
+        }
+    }
+
+    fn run(mut self, clock: &mut SimClock,
+           source: &mut dyn CommandSource) -> Result<EngineReport> {
+        loop {
+            let cmds = {
+                let progress = Progress { steps: self.metrics.steps,
+                                          emitted: &self.emitted };
+                source.poll(&progress)
+            };
+            for cmd in cmds {
+                self.apply(cmd, clock);
+            }
+            if self.abort {
+                break;
+            }
+
+            let now = clock.now();
+            // release every explicit arrival that is due; its queue
+            // clock starts at the arrival stamp, not the release instant
+            while self.pending.front().is_some_and(|p| p.arrival <= now) {
+                let p = self.pending.pop_front().unwrap();
+                self.batcher.enqueue_with(p.request, p.arrival, p.priority);
+            }
+
+            if self.batcher.idle() {
+                if let Some(p) = self.pending.front() {
+                    // engine drained before the next arrival: jump to it
+                    let next = p.arrival;
+                    clock.advance_to(next);
+                    continue;
+                }
+                if self.draining {
+                    break;
+                }
+                match source.wait_idle() {
+                    Some(cmd) => {
+                        self.apply(cmd, clock);
+                        continue;
+                    }
+                    None => break,
+                }
+            }
+
+            let admitted = self.batcher.admit(now);
+            if admitted == 0 && self.batcher.active_len() == 0 {
+                // all rows free yet the head cannot be admitted: it can
+                // never fit — reject it (returning any carried tokens)
+                let Some(req) = self.batcher.pop_blocked() else { break };
+                eprintln!("[session] request {} rejected: needs more pool \
+                           rows than the pool holds", req.id);
+                let res = self.ledger.reject(req.id);
+                self.record(res);
+                continue;
+            }
+
+            if self.cfg.preempt
+                && admitted == 0
+                && self.batcher.active_len() > 0
+                && self.batcher.head_starved(self.cfg.starvation_steps as u64)
+                && self.batcher.head_can_ever_fit()
+            {
+                // anti-livelock progress guard: only evict a sequence
+                // with strictly more remaining work than the starved
+                // head needs in total; priority-aware preference (see
+                // preempt::select_victim)
+                let head_need = self.batcher.head_request()
+                    .map(|r| r.prompt.len() + r.max_new_tokens)
+                    .unwrap_or(usize::MAX);
+                let head_priority =
+                    self.batcher.head_priority().unwrap_or_default();
+                if let Some(victim) = select_victim(self.batcher.active(),
+                                                    head_need,
+                                                    head_priority) {
+                    let st = self.core.evict(self.engine, &mut self.batcher,
+                                             victim);
+                    self.cur_len.remove(&st.request.id);
+                    self.metrics.preemptions += 1;
+                    let priority = st.priority;
+                    let resume = self.ledger.note_eviction(st);
+                    self.batcher.enqueue_with(resume, now, priority);
+                    self.batcher.admit(now);
+                }
+            }
+
+            self.core.step(self.engine, &mut self.batcher, self.cfg,
+                           &mut self.metrics, clock);
+            self.stream_fresh_tokens(clock, source);
+
+            for st in self.core.reap(self.engine, &mut self.batcher) {
+                self.cur_len.remove(&st.request.id);
+                let res = self.ledger.finish(&st);
+                self.record(res);
+                self.metrics.requests_completed += 1;
+            }
+        }
+
+        // anything still in flight (abort / client disappeared) is
+        // cancelled so the pool drains to zero
+        self.cancel_in_flight();
+
+        let makespan = clock.now();
+        self.metrics.wall_time = clock.elapsed();
+        finish_run_metrics(self.engine, self.fused0, &mut self.metrics);
+        let mut metrics = std::mem::take(&mut self.metrics);
+        self.fill_gauges(&mut metrics);
+        Ok(EngineReport {
+            results: self.results,
+            completion_order: self.completion_order,
+            metrics,
+            batcher: self.batcher.stats(),
+            makespan,
+        })
+    }
+
+    fn apply(&mut self, cmd: Command, clock: &mut SimClock) {
+        match cmd {
+            Command::Submit(subs) => {
+                // one clock reading per submit command: a batch submit
+                // shares one enqueue stamp (legacy closed-loop `t0`)
+                let stamp = clock.now();
+                let mut arrivals: Vec<Pending> = Vec::new();
+                for s in subs {
+                    let id = s.sub.request.id;
+                    if let Some(stream) = s.stream {
+                        if self.streams.contains_key(&id) {
+                            // duplicate live id: the in-flight handle
+                            // wins; the duplicate's stream ends
+                            // immediately with a Rejected result
+                            // instead of silently clobbering it
+                            eprintln!("[session] duplicate request id \
+                                       {id} rejected");
+                            *stream.slot.lock().unwrap() =
+                                Some(DecodeResult::rejected(id));
+                            continue;
+                        }
+                        self.streams.insert(id, stream);
+                    }
+                    match s.sub.arrival {
+                        // "now": enqueue immediately, in command order
+                        None => self.batcher.enqueue_with(s.sub.request,
+                                                          stamp,
+                                                          s.sub.priority),
+                        // trace semantics: visible at the arrival stamp
+                        Some(arrival) => arrivals.push(Pending {
+                            request: s.sub.request,
+                            arrival,
+                            priority: s.sub.priority,
+                        }),
+                    }
+                }
+                if !arrivals.is_empty() {
+                    self.merge_pending(arrivals);
+                }
+            }
+            Command::Cancel(id) => self.cancel_request(id),
+            Command::Snapshot(reply) => {
+                let mut m = self.metrics.clone();
+                self.fill_gauges(&mut m);
+                let _ = reply.send(m);
+            }
+            Command::Drain => self.draining = true,
+            Command::Abort => {
+                self.draining = true;
+                self.abort = true;
+            }
+        }
+    }
+
+    /// Merge a submission batch into `pending`, keeping it sorted by
+    /// `(arrival, id)` — the open-loop trace release order.  The batch
+    /// sorts once (the legacy `serve_open_loop` sort, same comparator)
+    /// and merges in O(old + new); the common wrapper case — one whole
+    /// trace into an empty queue — is exactly the legacy cost.
+    fn merge_pending(&mut self, mut batch: Vec<Pending>) {
+        batch.sort_by(|a, b| {
+            a.arrival
+                .partial_cmp(&b.arrival)
+                .unwrap()
+                .then(a.request.id.cmp(&b.request.id))
+        });
+        if self.pending.is_empty() {
+            self.pending = batch.into();
+            return;
+        }
+        let old = std::mem::take(&mut self.pending);
+        let mut merged = VecDeque::with_capacity(old.len() + batch.len());
+        let mut incoming = batch.into_iter().peekable();
+        for p in old {
+            let key = (p.arrival, p.request.id);
+            while incoming.peek()
+                .is_some_and(|q| (q.arrival, q.request.id) < key)
+            {
+                merged.push_back(incoming.next().unwrap());
+            }
+            merged.push_back(p);
+        }
+        merged.extend(incoming);
+        self.pending = merged;
+    }
+
+    /// Remove request `id` wherever it currently lives — unreleased,
+    /// queued, or active — crediting admission budget and freeing pool
+    /// pages exactly as eviction would (the cancellation accounting
+    /// contract, module docs).  Unknown / already-finished ids are a
+    /// no-op.
+    fn cancel_request(&mut self, id: RequestId) {
+        if let Some(pos) = self.pending.iter()
+            .position(|p| p.request.id == id)
+        {
+            self.pending.remove(pos); // rare path: linear is fine
+            let res = self.ledger.reject(id);
+            self.finish_cancel(res);
+            return;
+        }
+        if self.batcher.cancel_queued(id).is_some() {
+            let res = self.ledger.reject(id);
+            self.finish_cancel(res);
+            return;
+        }
+        if let Some(idx) = self.batcher.active().iter()
+            .position(|st| st.request.id == id)
+        {
+            let st = self.core.cancel(self.engine, &mut self.batcher, idx);
+            self.cur_len.remove(&id);
+            let res = self.ledger.finish(&st);
+            self.finish_cancel(res);
+        }
+    }
+
+    fn finish_cancel(&mut self, mut res: DecodeResult) {
+        res.status = Outcome::Cancelled;
+        self.metrics.requests_cancelled += 1;
+        self.record(res);
+    }
+
+    /// Deliver a terminal result: completion order, the live handle's
+    /// result slot (written once, never blocking; dropping the sender
+    /// then ends the token stream), and the session report.
+    fn record(&mut self, res: DecodeResult) {
+        let id = res.id;
+        self.completion_order.push(id);
+        if let Some(stream) = self.streams.remove(&id) {
+            *stream.slot.lock().unwrap() = Some(res.clone());
+        }
+        self.results.push(res);
+    }
+
+    /// Push every token generated by the last step into its request's
+    /// live stream (and the emitted-token counters the scripted cues
+    /// read).
+    fn stream_fresh_tokens(&mut self, clock: &mut SimClock,
+                           source: &mut dyn CommandSource) {
+        let mut fresh: Vec<(RequestId, u32)> = Vec::new();
+        for st in self.batcher.active() {
+            let id = st.request.id;
+            let n = st.generated.len();
+            let prev = self.cur_len.get(&id).copied().unwrap_or(0);
+            if n == prev {
+                continue;
+            }
+            fresh.extend(st.generated[prev..].iter().map(|&tok| (id, tok)));
+            self.cur_len.insert(id, n);
+        }
+        for (id, tok) in fresh {
+            if self.track_emitted {
+                *self.emitted.entry(id).or_insert(0) += 1;
+            }
+            self.deliver_token(id, tok, clock, source);
+        }
+    }
+
+    /// Deliver one token to its live stream, if any.  A full buffer
+    /// applies backpressure — the engine stalls on this stream — but
+    /// the stall stays **command-responsive**: commands keep being
+    /// processed mid-stall, so a lagging client can still cancel and a
+    /// shutdown can never deadlock here (module docs).  Once the
+    /// session is draining or aborting, a still-full stream is
+    /// disconnected instead of waited on.  A hung-up client just stops
+    /// streaming; the request keeps decoding into the session report.
+    fn deliver_token(&mut self, id: RequestId, tok: u32,
+                     clock: &mut SimClock,
+                     source: &mut dyn CommandSource) {
+        loop {
+            let attempt = match self.streams.get(&id) {
+                None => return, // no subscriber (or cancelled mid-stall)
+                Some(stream) => stream.tx.try_send(tok),
+            };
+            match attempt {
+                Ok(()) => {
+                    self.metrics.streamed_tokens += 1;
+                    return;
+                }
+                Err(TrySendError::Disconnected(_)) => {
+                    self.streams.remove(&id);
+                    return;
+                }
+                Err(TrySendError::Full(_)) => {
+                    if self.draining || self.abort {
+                        self.streams.remove(&id);
+                        return;
+                    }
+                    let cmds = {
+                        let progress = Progress {
+                            steps: self.metrics.steps,
+                            emitted: &self.emitted,
+                        };
+                        source.poll(&progress)
+                    };
+                    if cmds.is_empty() {
+                        std::thread::sleep(Duration::from_micros(50));
+                    } else {
+                        for cmd in cmds {
+                            self.apply(cmd, clock);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Cancel everything still in flight at session end (abort path);
+    /// a drained session has nothing left and this is a no-op.
+    fn cancel_in_flight(&mut self) {
+        while self.batcher.active_len() > 0 {
+            let st = self.core.cancel(self.engine, &mut self.batcher, 0);
+            self.cur_len.remove(&st.request.id);
+            let res = self.ledger.finish(&st);
+            self.finish_cancel(res);
+        }
+        while let Some(req) = self.batcher.pop_blocked() {
+            let res = self.ledger.reject(req.id);
+            self.finish_cancel(res);
+        }
+        while let Some(p) = self.pending.pop_front() {
+            let res = self.ledger.reject(p.request.id);
+            self.finish_cancel(res);
+        }
+    }
+
+    /// Fill the engine-level gauges of a metrics snapshot: live queue
+    /// depth per priority class (admission queues plus unreleased
+    /// arrivals), live active sessions, and per-class queue peaks.
+    fn fill_gauges(&self, m: &mut Metrics) {
+        let depths = self.batcher.queue_depths();
+        let mut live = [depths[0] as u64, depths[1] as u64,
+                        depths[2] as u64];
+        for p in &self.pending {
+            live[p.priority.rank()] += 1;
+        }
+        m.queue_depth = live;
+        let stats = self.batcher.stats();
+        m.queue_depth_peak = [stats.queued_peak_by_class[0] as u64,
+                              stats.queued_peak_by_class[1] as u64,
+                              stats.queued_peak_by_class[2] as u64];
+        m.active_sessions = self.batcher.active_len() as u64;
+    }
+}
+
+/// Run a deterministic scripted session inline on the caller's thread:
+/// `script` commands fire at their [`SessionCue`]s against the borrowed
+/// `engine`.  This is both the wrapper substrate (`serve`,
+/// `serve_open_loop`, and `sweep` are scripts that submit everything up
+/// front and drain) and the regression harness for exact mid-flight
+/// cancellation / priority schedules — under a virtual `clock` the
+/// whole run is bit-reproducible.
+pub fn run_scripted<E: LayerExecutor>(engine: &DecodeEngine<E>,
+                                      cfg: &ServeConfig,
+                                      clock: &mut SimClock,
+                                      script: Vec<ScriptedCommand>)
+                                      -> Result<EngineReport> {
+    // per-token emitted accounting is only needed if some cue reads it
+    // — wrappers (Immediately-only scripts) skip it on the hot loop
+    let track_emitted = script.iter()
+        .any(|c| matches!(c.cue, SessionCue::AfterTokens { .. }));
+    let mut source = ScriptSource { script: script.into() };
+    let mut session = Session::new(engine, cfg);
+    session.track_emitted = track_emitted;
+    session.run(clock, &mut source)
+}
+
+// ---------------------------------------------------------------------
+// The live engine frontend
+// ---------------------------------------------------------------------
+
+/// A long-lived streaming engine session (see module docs).
+///
+/// [`AmlaEngine::start`] moves the executor into a dedicated engine
+/// thread running the session loop; [`AmlaEngine::submit`] /
+/// [`AmlaEngine::submit_with`] admit requests at any time and return
+/// streaming [`RequestHandle`]s; [`AmlaEngine::metrics`] snapshots the
+/// live gauges; [`AmlaEngine::shutdown`] drains and returns the
+/// [`EngineReport`].  Dropping the engine aborts the session
+/// (in-flight requests are cancelled and their pool pages freed).
+///
+/// A session accumulates one [`DecodeResult`] per request into its
+/// final report, so its memory grows with total traffic served;
+/// very-long-lived deployments should recycle sessions periodically
+/// (shutdown + start) to bound that history.
+pub struct AmlaEngine {
+    cmd: Sender<Command>,
+    thread: Option<JoinHandle<Result<EngineReport>>>,
+}
+
+impl AmlaEngine {
+    /// Start an engine session on a wall clock (production mode).
+    pub fn start<E>(config: EngineConfig, executor: E) -> Result<Self>
+    where
+        E: LayerExecutor + 'static,
+    {
+        Self::start_with_clock(config, executor, SimClock::wall())
+    }
+
+    /// Start an engine session on an explicit clock (a virtual clock
+    /// makes live-session schedules deterministic up to command
+    /// timing).
+    pub fn start_with_clock<E>(config: EngineConfig, executor: E,
+                               mut clock: SimClock) -> Result<Self>
+    where
+        E: LayerExecutor + 'static,
+    {
+        let cfg = config.to_serve();
+        cfg.validate()?;
+        let (cmd, rx) = channel();
+        let thread = std::thread::Builder::new()
+            .name("amla-engine".into())
+            .spawn(move || {
+                let engine = DecodeEngine::new(executor, cfg.pool_pages,
+                                               cfg.page_size);
+                let mut source = ChannelSource { rx };
+                let mut session = Session::new(&engine, &cfg);
+                // no scripted cue reads the emitted counters on the
+                // live path: skip them so a long-lived session stays
+                // bounded in traffic served
+                session.track_emitted = false;
+                session.run(&mut clock, &mut source)
+            })
+            .map_err(|e| anyhow!("failed to spawn engine thread: {e}"))?;
+        Ok(Self { cmd, thread: Some(thread) })
+    }
+
+    /// Submit a request in the default class with the default stream
+    /// buffer; see [`AmlaEngine::submit_with`].
+    pub fn submit(&self, request: DecodeRequest) -> Result<RequestHandle> {
+        self.submit_with(request, SubmitOptions::default())
+    }
+
+    /// Submit a request for decoding at any point in the session's
+    /// life; returns a [`RequestHandle`] streaming its tokens.  Request
+    /// ids must be unique within the session.
+    pub fn submit_with(&self, request: DecodeRequest,
+                       opts: SubmitOptions) -> Result<RequestHandle> {
+        let capacity = opts.stream_capacity
+            .unwrap_or(request.max_new_tokens)
+            .max(1);
+        let (tx, rx) = sync_channel(capacity);
+        let slot = Arc::new(Mutex::new(None));
+        let id = request.id;
+        let sub = Submission {
+            sub: SessionSubmit {
+                request,
+                arrival: None,
+                priority: opts.priority,
+            },
+            stream: Some(LiveStream { tx, slot: Arc::clone(&slot) }),
+        };
+        self.cmd.send(Command::Submit(vec![sub]))
+            .map_err(|_| anyhow!("engine session has shut down"))?;
+        Ok(RequestHandle { id, rx, cmd: self.cmd.clone(), slot,
+                           result: None })
+    }
+
+    /// Cancel a request by id (equivalent to
+    /// [`RequestHandle::cancel`]); unknown or already-finished ids are
+    /// a no-op.
+    pub fn cancel(&self, id: RequestId) -> Result<()> {
+        self.cmd.send(Command::Cancel(id))
+            .map_err(|_| anyhow!("engine session has shut down"))
+    }
+
+    /// Snapshot the live metrics — counters so far plus the engine
+    /// gauges (per-class queue depth, active sessions, streamed
+    /// tokens).
+    pub fn metrics(&self) -> Result<Metrics> {
+        let (tx, rx) = channel();
+        self.cmd.send(Command::Snapshot(tx))
+            .map_err(|_| anyhow!("engine session has shut down"))?;
+        rx.recv().map_err(|_| anyhow!("engine session has shut down"))
+    }
+
+    /// Finish every submitted request, stop the engine thread, and
+    /// return the session report.
+    pub fn shutdown(mut self) -> Result<EngineReport> {
+        let _ = self.cmd.send(Command::Drain);
+        self.join()
+    }
+
+    /// Stop immediately: in-flight requests are cancelled (pool pages
+    /// freed, each handle's terminal result written) and the session
+    /// report returned.
+    pub fn abort(mut self) -> Result<EngineReport> {
+        let _ = self.cmd.send(Command::Abort);
+        self.join()
+    }
+
+    fn join(&mut self) -> Result<EngineReport> {
+        let handle = self.thread.take()
+            .ok_or_else(|| anyhow!("engine session already joined"))?;
+        match handle.join() {
+            Ok(report) => report,
+            Err(_) => Err(anyhow!("engine thread panicked")),
+        }
+    }
+}
+
+impl Drop for AmlaEngine {
+    fn drop(&mut self) {
+        if self.thread.is_some() {
+            let _ = self.cmd.send(Command::Abort);
+            let _ = self.join();
+        }
+    }
+}
+
+/// A submitted request's client end: a bounded incremental token
+/// stream plus cancellation and the terminal [`DecodeResult`].
+pub struct RequestHandle {
+    id: RequestId,
+    rx: Receiver<u32>,
+    cmd: Sender<Command>,
+    /// Terminal-result slot, written once by the engine just before it
+    /// ends the stream (see [`LiveStream`]).
+    slot: Arc<Mutex<Option<DecodeResult>>>,
+    result: Option<DecodeResult>,
+}
+
+impl RequestHandle {
+    pub fn id(&self) -> RequestId {
+        self.id
+    }
+
+    /// Block for the next generated token; `None` once the stream has
+    /// ended — the request reached a terminal state (its result is
+    /// then available via [`RequestHandle::result`] /
+    /// [`RequestHandle::wait`]), or the engine disconnected the stream
+    /// (session shutdown with this buffer still full, or engine gone).
+    pub fn next_token(&mut self) -> Option<u32> {
+        if self.result.is_some() {
+            return None;
+        }
+        match self.rx.recv() {
+            Ok(tok) => Some(tok),
+            Err(_) => {
+                self.result = self.slot.lock().unwrap().take();
+                None
+            }
+        }
+    }
+
+    /// Drain iterator over the remaining tokens (blocking per item).
+    pub fn tokens(&mut self) -> impl Iterator<Item = u32> + '_ {
+        std::iter::from_fn(move || self.next_token())
+    }
+
+    /// Ask the engine to cancel this request mid-flight.  The stream
+    /// still terminates with a result carrying [`Outcome::Cancelled`]
+    /// and any tokens generated before the cancel was processed.
+    pub fn cancel(&self) {
+        let _ = self.cmd.send(Command::Cancel(self.id));
+    }
+
+    /// The terminal result, once the stream has been drained to its
+    /// end ([`RequestHandle::next_token`] returned `None`).
+    pub fn result(&self) -> Option<&DecodeResult> {
+        self.result.as_ref()
+    }
+
+    /// Drain the stream and return the terminal result.  Errs only if
+    /// the stream ended without one — the engine was shut down while
+    /// this request was still in flight with its buffer full, or the
+    /// engine thread is gone; in the former case the result is still
+    /// in the session's final [`EngineReport`].
+    pub fn wait(mut self) -> Result<DecodeResult> {
+        while self.next_token().is_some() {}
+        let id = self.id;
+        self.result.take()
+            .ok_or_else(|| anyhow!(
+                "engine session ended before request {id} finished"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Algo;
+    use crate::coordinator::engine::HostLayerExecutor;
+    use crate::numerics::mla::MlaDims;
+    use crate::serving::clock::StepCostModel;
+    use crate::serving::serve_open_loop;
+    use crate::coordinator::TracedRequest;
+
+    fn host_executor() -> HostLayerExecutor {
+        let dims = MlaDims { d_model: 48, n1: 2, d_head: 12, q_rank: 24,
+                             d_latent: 16, d_rope: 8, sq: 1 };
+        HostLayerExecutor::new(dims, 2, Algo::Amla, 32, vec![32, 64], 11)
+    }
+
+    fn engine() -> DecodeEngine<HostLayerExecutor> {
+        DecodeEngine::new(host_executor(), 512, 8)
+    }
+
+    fn cfg() -> ServeConfig {
+        ServeConfig { max_batch: 4, workers: 2, batch_workers: 2,
+                      pool_pages: 128, page_size: 8,
+                      ..ServeConfig::default() }
+    }
+
+    #[test]
+    fn cue_predicates() {
+        let mut emitted = HashMap::new();
+        emitted.insert(7u64, 3usize);
+        let p = Progress { steps: 5, emitted: &emitted };
+        assert!(cue_met(&SessionCue::Immediately, &p));
+        assert!(cue_met(&SessionCue::AfterSteps(5), &p));
+        assert!(!cue_met(&SessionCue::AfterSteps(6), &p));
+        assert!(cue_met(&SessionCue::AfterTokens { id: 7, count: 3 }, &p));
+        assert!(!cue_met(&SessionCue::AfterTokens { id: 7, count: 4 }, &p));
+        assert!(!cue_met(&SessionCue::AfterTokens { id: 8, count: 1 }, &p));
+    }
+
+    #[test]
+    fn pending_merges_sorted_by_arrival_then_id() {
+        let eng = engine();
+        let c = cfg();
+        let mut s = Session::new(&eng, &c);
+        let mk = |id, arrival| Pending {
+            request: DecodeRequest::new(id, vec![1], 1),
+            arrival,
+            priority: Priority::Batch,
+        };
+        // first batch: the wrapper case (sort into an empty queue)
+        s.merge_pending(vec![mk(3, 0.5), mk(1, 0.1), mk(2, 0.5)]);
+        let order: Vec<RequestId> =
+            s.pending.iter().map(|p| p.request.id).collect();
+        assert_eq!(order, vec![1, 2, 3]);
+        // second batch interleaves with the existing queue
+        s.merge_pending(vec![mk(0, 0.9), mk(4, 0.2), mk(5, 0.5)]);
+        let order: Vec<RequestId> =
+            s.pending.iter().map(|p| p.request.id).collect();
+        assert_eq!(order, vec![1, 4, 2, 3, 5, 0]);
+    }
+
+    #[test]
+    fn scripted_trace_session_matches_open_loop_wrapper() {
+        // the wrapper IS a script; an explicitly written script with
+        // identical submissions must reproduce it exactly
+        let trace = || {
+            vec![
+                TracedRequest {
+                    request: DecodeRequest::new(0, vec![1, 2, 3], 6),
+                    arrival: 0.0,
+                },
+                TracedRequest {
+                    request: DecodeRequest::new(1, vec![4, 5], 4),
+                    arrival: 0.3,
+                },
+            ]
+        };
+        let via_wrapper = {
+            let eng = engine();
+            let mut clock =
+                SimClock::simulated(StepCostModel::new(0.01, 0.0));
+            let r = serve_open_loop(&eng, trace(), &cfg(), &mut clock)
+                .unwrap();
+            (r.completion_order.clone(),
+             r.results.iter().map(|x| (x.id, x.tokens.clone()))
+                 .collect::<Vec<_>>(),
+             r.makespan.to_bits())
+        };
+        let via_script = {
+            let eng = engine();
+            let mut clock =
+                SimClock::simulated(StepCostModel::new(0.01, 0.0));
+            let subs = trace().into_iter()
+                .map(|t| SessionSubmit::new(t.request).at(t.arrival))
+                .collect();
+            let r = run_scripted(&eng, &cfg(), &mut clock, vec![
+                ScriptedCommand::immediately(SessionAction::Submit(subs)),
+                ScriptedCommand::immediately(SessionAction::Drain),
+            ]).unwrap();
+            (r.completion_order.clone(),
+             r.results.iter().map(|x| (x.id, x.tokens.clone()))
+                 .collect::<Vec<_>>(),
+             r.makespan.to_bits())
+        };
+        assert_eq!(via_wrapper, via_script);
+    }
+
+    #[test]
+    fn live_engine_streams_and_drains() {
+        let config = EngineConfig::builder()
+            .pool_pages(128)
+            .page_size(8)
+            .max_batch(4)
+            .build()
+            .unwrap();
+        let engine = AmlaEngine::start(config, host_executor()).unwrap();
+        let mut h = engine
+            .submit(DecodeRequest::new(0, vec![5, 6, 7], 6))
+            .unwrap();
+        let streamed: Vec<u32> = h.tokens().collect();
+        assert_eq!(streamed.len(), 6);
+        let res = h.wait().unwrap();
+        assert_eq!(res.status, Outcome::Completed);
+        assert_eq!(res.tokens, streamed);
+        // a second submission after the first completed: the session
+        // is long-lived
+        let h2 = engine
+            .submit(DecodeRequest::new(1, vec![9], 3))
+            .unwrap();
+        let res2 = h2.wait().unwrap();
+        assert_eq!(res2.tokens.len(), 3);
+        let report = engine.shutdown().unwrap();
+        assert_eq!(report.metrics.requests_completed, 2);
+        assert_eq!(report.metrics.streamed_tokens, 9);
+        assert_eq!(report.results.len(), 2);
+    }
+
+    #[test]
+    fn abort_cancels_in_flight_work() {
+        let config = EngineConfig::builder()
+            .pool_pages(128)
+            .page_size(8)
+            .build()
+            .unwrap();
+        let engine = AmlaEngine::start(config, host_executor()).unwrap();
+        // a long request the abort must interrupt; stream_capacity 1
+        // with nothing drained guarantees it is still in flight
+        // (stalled after ~2 of 60 tokens) when the abort lands
+        let _h = engine
+            .submit_with(DecodeRequest::new(0, vec![1, 2], 60),
+                         SubmitOptions::default().stream_capacity(1))
+            .unwrap();
+        let report = engine.abort().unwrap();
+        assert_eq!(report.metrics.requests_cancelled, 1);
+        assert_eq!(report.results.len(), 1);
+        assert_eq!(report.results[0].status, Outcome::Cancelled);
+    }
+}

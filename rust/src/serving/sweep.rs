@@ -24,7 +24,7 @@ use anyhow::Result;
 
 use crate::config::ServeConfig;
 use crate::coordinator::engine::{DecodeEngine, LayerExecutor};
-use crate::coordinator::metrics::quantile_sorted;
+use crate::coordinator::metrics::{quantile_sorted, Metrics};
 use crate::coordinator::workload::TracedRequest;
 use crate::serving::clock::{SimClock, StepCostModel};
 use crate::serving::serve_open_loop;
@@ -73,6 +73,10 @@ pub struct RatePoint {
     pub mean_occupancy: f64,
     pub preemptions: u64,
     pub saturated: bool,
+    /// Full metrics snapshot of this point's run, engine gauges
+    /// included (per-class queue-depth peaks, cancellations, streamed
+    /// tokens) — what `amla sweep` and `bench_serving` print.
+    pub metrics: Metrics,
 }
 
 /// The sweep's load report (see module docs).
@@ -150,6 +154,12 @@ impl ServeLoadReport {
 /// `sweep.rates` by rescaling its arrival gaps, on a fresh virtual
 /// clock per rate.  The engine's pool drains completely between rates,
 /// so one engine serves the whole sweep.
+///
+/// Each rate point is one scripted session over the unified session
+/// loop (via [`serve_open_loop`], itself a wrapper over
+/// [`crate::serving::session::run_scripted`]) — the sweep shares every
+/// contract of the session API, and each [`RatePoint::metrics`]
+/// carries that run's engine gauges.
 pub fn sweep<E: LayerExecutor>(engine: &DecodeEngine<E>,
                                trace: &[TracedRequest], base_rate: f64,
                                cfg: &ServeConfig, sweep_cfg: &SweepConfig)
@@ -215,6 +225,7 @@ pub fn sweep<E: LayerExecutor>(engine: &DecodeEngine<E>,
             preemptions: report.metrics.preemptions,
             saturated: achieved
                 < sweep_cfg.saturation_fraction * realized_rate,
+            metrics: report.metrics.clone(),
         });
     }
     let saturation_throughput = points.iter()

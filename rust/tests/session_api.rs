@@ -1,0 +1,549 @@
+//! Session-API regression tier: mid-flight cancellation accounting,
+//! priority-class scheduling properties, live streaming, and the
+//! wrapper bit-identity contract.
+//!
+//! The scripted tests drive the one session loop
+//! (`amla::serving::run_scripted`) deterministically under the virtual
+//! clock — a `SessionCue` fires a cancel at an exact step / token
+//! count, so "cancel mid-prefill-chunk" and "cancel mid-decode" are
+//! reproducible instants, not races.  The live tests exercise the
+//! threaded `AmlaEngine` frontend with bounded-channel backpressure so
+//! incremental observation and mid-flight cancellation are guaranteed
+//! by construction (the engine cannot run ahead of the client).
+
+use amla::config::{Algo, EngineConfig, ServeConfig};
+use amla::coordinator::{DecodeEngine, DecodeRequest, HostLayerExecutor,
+                        Outcome, Priority, RequestId, TracedRequest};
+use amla::numerics::mla::MlaDims;
+use amla::serving::clock::SimClock;
+use amla::serving::{run_scripted, serve_open_loop, AmlaEngine,
+                    ScriptedCommand, SessionAction, SessionSubmit,
+                    StepCostModel, SubmitOptions};
+use amla::util::prop::{gen_usize, run_prop};
+
+fn host_executor() -> HostLayerExecutor {
+    let dims = MlaDims { d_model: 48, n1: 2, d_head: 12, q_rank: 24,
+                         d_latent: 16, d_rope: 8, sq: 1 };
+    HostLayerExecutor::new(dims, 2, Algo::Amla, 32, vec![32, 64], 11)
+}
+
+/// Real pool is generous (512 pages); admission pressure comes from
+/// the cfg's `pool_pages` *budget*, like the serving test tier.
+fn engine() -> DecodeEngine<HostLayerExecutor> {
+    DecodeEngine::new(host_executor(), 512, 8)
+}
+
+fn vclock() -> SimClock {
+    SimClock::simulated(StepCostModel::new(0.01, 0.0))
+}
+
+/// pool budget rows/layer = pool_pages * page_size(8) / n_layers(2)
+fn cfg(preempt: bool) -> ServeConfig {
+    ServeConfig { max_batch: 4, workers: 2, batch_workers: 2,
+                  page_size: 8, preempt, starvation_steps: 2,
+                  ..ServeConfig::default() }
+}
+
+fn submit_all(subs: Vec<SessionSubmit>) -> Vec<ScriptedCommand> {
+    vec![
+        ScriptedCommand::immediately(SessionAction::Submit(subs)),
+        ScriptedCommand::immediately(SessionAction::Drain),
+    ]
+}
+
+fn tokens_by_id(results: &[amla::coordinator::DecodeResult])
+                -> Vec<(RequestId, Vec<u32>)> {
+    let mut t: Vec<_> = results.iter()
+        .map(|r| (r.id, r.tokens.clone()))
+        .collect();
+    t.sort_by_key(|(id, _)| *id);
+    t
+}
+
+// ---------------------------------------------------------------------
+// Cancellation accounting (the PR-1 abort-contract audit)
+// ---------------------------------------------------------------------
+
+#[test]
+fn cancel_mid_decode_credits_exact_budget_and_frees_pool() {
+    // 48-row/layer budget.  r0 (3 + 40 = 43 rows) decodes; r1 needs
+    // the ENTIRE budget (8 + 40 = 48 rows), so it can only ever admit
+    // if cancellation credits r0's admitted_rows verbatim.  The cancel
+    // fires deterministically after r0's 5th token (mid-decode).
+    let eng = engine();
+    let mut clock = vclock();
+    let mut c = cfg(false);
+    c.pool_pages = 12;
+    let subs = vec![
+        SessionSubmit::new(DecodeRequest::new(0, vec![1, 2, 3], 40))
+            .at(0.0),
+        SessionSubmit::new(DecodeRequest::new(1, vec![4; 8], 40)).at(0.0),
+    ];
+    let script = vec![
+        ScriptedCommand::immediately(SessionAction::Submit(subs)),
+        ScriptedCommand::after_tokens(0, 5, SessionAction::Cancel(0)),
+        ScriptedCommand::immediately(SessionAction::Drain),
+    ];
+    let report = run_scripted(&eng, &c, &mut clock, script).unwrap();
+
+    let toks = tokens_by_id(&report.results);
+    assert_eq!(toks.len(), 2);
+    let r0 = report.results.iter().find(|r| r.id == 0).unwrap();
+    assert_eq!(r0.status, Outcome::Cancelled);
+    assert_eq!(r0.tokens.len(), 5,
+               "cancel must land exactly after the 5th token");
+    let r1 = report.results.iter().find(|r| r.id == 1).unwrap();
+    assert_eq!(r1.status, Outcome::Completed);
+    assert_eq!(r1.tokens.len(), 40,
+               "full-budget request must admit after the credit");
+    assert_eq!(report.completion_order, vec![0, 1]);
+    assert_eq!(report.metrics.requests_cancelled, 1);
+    assert_eq!(report.metrics.requests_completed, 1);
+    assert_eq!(report.batcher.cancelled, 1);
+    assert_eq!(eng.pool.lock().unwrap().stats().allocated_pages, 0,
+               "cancelled sequence leaked pool pages");
+}
+
+#[test]
+fn cancel_mid_prefill_chunk_frees_everything() {
+    // 28-row/layer budget, prefill chunk 4.  r0 (20 + 8 = 28 rows)
+    // is cancelled after exactly 2 chunk steps — 8 of 20 prompt tokens
+    // consumed, zero tokens generated, squarely mid-prefill.  r1 then
+    // needs the whole budget (4 + 24 = 28 rows).
+    let eng = engine();
+    let mut clock = vclock();
+    let mut c = cfg(false);
+    c.pool_pages = 7;
+    c.prefill_chunk = 4;
+    let subs = vec![
+        SessionSubmit::new(DecodeRequest::new(0, vec![9; 20], 8)).at(0.0),
+        SessionSubmit::new(DecodeRequest::new(1, vec![5; 4], 24)).at(0.0),
+    ];
+    let script = vec![
+        ScriptedCommand::immediately(SessionAction::Submit(subs)),
+        ScriptedCommand::after_steps(2, SessionAction::Cancel(0)),
+        ScriptedCommand::immediately(SessionAction::Drain),
+    ];
+    let report = run_scripted(&eng, &c, &mut clock, script).unwrap();
+
+    let r0 = report.results.iter().find(|r| r.id == 0).unwrap();
+    assert_eq!(r0.status, Outcome::Cancelled);
+    assert!(r0.tokens.is_empty(),
+            "cancelled mid-prefill: no tokens were generated");
+    let r1 = report.results.iter().find(|r| r.id == 1).unwrap();
+    assert_eq!(r1.status, Outcome::Completed);
+    assert_eq!(r1.tokens.len(), 24);
+    // exactly 2 chunks of r0's prompt were consumed before the cancel
+    assert_eq!(report.metrics.prompt_tokens, 8 + 4);
+    assert_eq!(report.metrics.prefill_chunks, 2 + 1);
+    assert_eq!(report.metrics.requests_cancelled, 1);
+    assert_eq!(eng.pool.lock().unwrap().stats().allocated_pages, 0,
+               "mid-prefill cancel leaked pool pages");
+}
+
+#[test]
+fn cancel_of_unknown_or_finished_request_is_noop() {
+    let eng = engine();
+    let mut clock = vclock();
+    let mut c = cfg(false);
+    c.pool_pages = 128;
+    let subs = vec![
+        SessionSubmit::new(DecodeRequest::new(0, vec![1, 2, 3], 3)).at(0.0),
+    ];
+    let script = vec![
+        ScriptedCommand::immediately(SessionAction::Submit(subs)),
+        ScriptedCommand::immediately(SessionAction::Cancel(99)),
+        // r0 finishes at step 3; this cue can then never fire and is
+        // forced once the engine idles — by which point r0 is gone
+        ScriptedCommand::after_steps(1000, SessionAction::Cancel(0)),
+        ScriptedCommand::immediately(SessionAction::Drain),
+    ];
+    let report = run_scripted(&eng, &c, &mut clock, script).unwrap();
+    assert_eq!(report.results.len(), 1);
+    assert_eq!(report.results[0].status, Outcome::Completed);
+    assert_eq!(report.results[0].tokens.len(), 3);
+    assert_eq!(report.metrics.requests_cancelled, 0);
+    assert_eq!(eng.pool.lock().unwrap().stats().allocated_pages, 0);
+}
+
+#[test]
+fn cancel_of_queued_request_returns_no_tokens_and_no_credit_damage() {
+    // r1 is cancelled while still QUEUED (pool-blocked behind r0):
+    // nothing was deducted, so nothing may be credited — afterwards the
+    // budget still fits exactly r2.
+    let eng = engine(); // 48 rows/layer
+    let mut clock = vclock();
+    let mut c = cfg(false);
+    c.pool_pages = 12;
+    let subs = vec![
+        SessionSubmit::new(DecodeRequest::new(0, vec![1, 2], 38)).at(0.0),
+        SessionSubmit::new(DecodeRequest::new(1, vec![2; 4], 20)).at(0.0),
+        SessionSubmit::new(DecodeRequest::new(2, vec![3; 8], 40)).at(0.0),
+    ];
+    let script = vec![
+        ScriptedCommand::immediately(SessionAction::Submit(subs)),
+        ScriptedCommand::after_steps(1, SessionAction::Cancel(1)),
+        ScriptedCommand::immediately(SessionAction::Drain),
+    ];
+    let report = run_scripted(&eng, &c, &mut clock, script).unwrap();
+    let r1 = report.results.iter().find(|r| r.id == 1).unwrap();
+    assert_eq!(r1.status, Outcome::Cancelled);
+    assert!(r1.tokens.is_empty());
+    let r2 = report.results.iter().find(|r| r.id == 2).unwrap();
+    assert_eq!(r2.status, Outcome::Completed);
+    assert_eq!(r2.tokens.len(), 40, "full-budget r2 must still admit");
+    assert_eq!(report.metrics.requests_cancelled, 1);
+    assert_eq!(eng.pool.lock().unwrap().stats().allocated_pages, 0);
+}
+
+// ---------------------------------------------------------------------
+// Priority-class scheduling
+// ---------------------------------------------------------------------
+
+#[test]
+fn interactive_admits_before_batch_under_saturated_pool() {
+    // 12-row/layer budget.  An Interactive filler (submitted first,
+    // FIFO within its class) fills the pool; four same-shape requests
+    // (2 batch, 2 interactive) queue behind it with identical arrival
+    // stamps.  As budget frees, the Interactive class must drain
+    // first, one at a time (each needs 8 of the 12 rows).
+    let eng = engine();
+    let mut clock = vclock();
+    let mut c = cfg(false);
+    c.pool_pages = 3;
+    let mk = |id| DecodeRequest::new(id, vec![10 + id as u32, 2], 6);
+    let subs = vec![
+        SessionSubmit::new(DecodeRequest::new(0, vec![1, 2], 10))
+            .at(0.0)
+            .priority(Priority::Interactive),
+        SessionSubmit::new(mk(1)).at(0.0).priority(Priority::Batch),
+        SessionSubmit::new(mk(2)).at(0.0).priority(Priority::Batch),
+        SessionSubmit::new(mk(3)).at(0.0).priority(Priority::Interactive),
+        SessionSubmit::new(mk(4)).at(0.0).priority(Priority::Interactive),
+    ];
+    let report = run_scripted(&eng, &c, &mut clock, submit_all(subs))
+        .unwrap();
+    assert_eq!(report.completion_order, vec![0, 3, 4, 1, 2],
+               "interactive class must drain before batch");
+    let delay = |id: RequestId| report.results.iter()
+        .find(|r| r.id == id).unwrap().queue_delay;
+    assert!(delay(3) < delay(1) && delay(3) < delay(2));
+    assert!(delay(4) < delay(1) && delay(4) < delay(2));
+    assert_eq!(report.metrics.queue_depth_peak[Priority::Batch.rank()], 2);
+    assert_eq!(
+        report.metrics.queue_depth_peak[Priority::Interactive.rank()], 3);
+    assert_eq!(eng.pool.lock().unwrap().stats().allocated_pages, 0);
+}
+
+#[test]
+fn prop_interactive_queue_delay_never_worse_than_batch() {
+    // Property: with every request arriving at t=0 behind a
+    // pool-filling resident, every Interactive queue delay <= every
+    // Batch queue delay <= every Background queue delay, for random
+    // shapes and class assignments.
+    run_prop("priority_queue_delay", 12, |rng| {
+        let n = gen_usize(rng, 3, 8);
+        let classes = [Priority::Interactive, Priority::Batch,
+                       Priority::Background];
+        let mut subs = vec![
+            SessionSubmit::new(DecodeRequest::new(0, vec![1, 2], 10))
+                .at(0.0),
+        ];
+        let mut assigned: Vec<(RequestId, Priority)> = Vec::new();
+        for i in 0..n {
+            let id = i as RequestId + 1;
+            let prompt = gen_usize(rng, 1, 4);
+            let gen = gen_usize(rng, 2, 8);
+            let class = classes[gen_usize(rng, 0, 3)];
+            assigned.push((id, class));
+            subs.push(
+                SessionSubmit::new(
+                    DecodeRequest::new(id, vec![7 + id as u32; prompt],
+                                       gen))
+                    .at(0.0)
+                    .priority(class));
+        }
+        let eng = engine(); // 12-row/layer budget: saturated
+        let mut clock = vclock();
+        let mut c = cfg(false);
+        c.pool_pages = 3;
+        let report = run_scripted(&eng, &c, &mut clock,
+                                  submit_all(subs)).unwrap();
+        let delay = |id: RequestId| report.results.iter()
+            .find(|r| r.id == id).unwrap().queue_delay;
+        for &(a, ca) in &assigned {
+            for &(b, cb) in &assigned {
+                if ca < cb {
+                    assert!(delay(a) <= delay(b),
+                            "{ca:?} req {a} delayed {} vs {cb:?} req {b} \
+                             {}", delay(a), delay(b));
+                }
+            }
+        }
+        assert_eq!(eng.pool.lock().unwrap().stats().allocated_pages, 0);
+    });
+}
+
+#[test]
+fn priority_preemption_evicts_background_before_batch() {
+    // Two long residents (one Background, one Batch) fill the pool; a
+    // small Interactive request starves behind them.  The preemptor
+    // must evict the BACKGROUND resident even though both are
+    // eligible, and recompute-resume must keep tokens bit-identical to
+    // an unconstrained run.
+    let run = |pool_pages: usize| {
+        let eng = engine();
+        let mut clock = vclock();
+        let mut c = cfg(true);
+        c.pool_pages = pool_pages;
+        let subs = vec![
+            SessionSubmit::new(DecodeRequest::new(0, vec![1, 2], 20))
+                .at(0.0)
+                .priority(Priority::Background),
+            SessionSubmit::new(DecodeRequest::new(1, vec![3, 4], 20))
+                .at(0.0)
+                .priority(Priority::Batch),
+            SessionSubmit::new(DecodeRequest::new(2, vec![5, 6], 4))
+                .at(0.05)
+                .priority(Priority::Interactive),
+        ];
+        let report = run_scripted(&eng, &c, &mut clock,
+                                  submit_all(subs)).unwrap();
+        assert_eq!(eng.pool.lock().unwrap().stats().allocated_pages, 0);
+        report
+    };
+    // 44-row/layer budget: residents take 22 + 22, r2 (6 rows) starves
+    let constrained = run(11);
+    assert!(constrained.metrics.preemptions > 0,
+            "pool pressure must trigger eviction");
+    assert_eq!(constrained.batcher.preempted,
+               constrained.metrics.preemptions);
+    // the evicted (recompute-resumed) resident finishes last — and it
+    // must be the Background one
+    assert_eq!(*constrained.completion_order.last().unwrap(), 0,
+               "preemption must pick the Background resident");
+    let unconstrained = run(128);
+    assert_eq!(unconstrained.metrics.preemptions, 0);
+    assert_eq!(tokens_by_id(&constrained.results),
+               tokens_by_id(&unconstrained.results),
+               "priority preemption broke recompute bit-identity");
+}
+
+#[test]
+fn priority_preemption_respects_anti_livelock_guard() {
+    // The starved Interactive head needs MORE work than any resident
+    // has remaining: the progress guard must win over priority — no
+    // eviction, FIFO wait, everything completes.
+    let eng = engine(); // 20-row/layer budget
+    let mut clock = vclock();
+    let mut c = cfg(true);
+    c.pool_pages = 5;
+    let subs = vec![
+        SessionSubmit::new(DecodeRequest::new(0, vec![1, 2], 8))
+            .at(0.0)
+            .priority(Priority::Background), // 10 rows, 10 steps total
+        SessionSubmit::new(DecodeRequest::new(1, vec![3, 4], 18))
+            .at(0.05)
+            .priority(Priority::Interactive), // needs all 20 rows
+    ];
+    let report = run_scripted(&eng, &c, &mut clock, submit_all(subs))
+        .unwrap();
+    assert_eq!(report.metrics.preemptions, 0,
+               "priority must never override the progress guard");
+    assert_eq!(report.completion_order, vec![0, 1]);
+    for r in &report.results {
+        assert_eq!(r.status, Outcome::Completed);
+    }
+    assert_eq!(eng.pool.lock().unwrap().stats().allocated_pages, 0);
+}
+
+#[test]
+fn uniform_priority_is_bit_identical_to_fifo_wrapper() {
+    // A session whose requests all carry one class — any class — must
+    // reproduce the pre-redesign FIFO schedule exactly (tokens,
+    // completion order, makespan bits).  The wrapper run is itself the
+    // FIFO reference (pinned against the committed golden trace by
+    // rust/tests/open_loop_golden.rs).
+    let trace = || {
+        vec![
+            TracedRequest { request: DecodeRequest::new(0, vec![1, 2, 3], 24),
+                            arrival: 0.0 },
+            TracedRequest { request: DecodeRequest::new(1, vec![4; 4], 24),
+                            arrival: 0.0 },
+            TracedRequest { request: DecodeRequest::new(2, vec![8, 9], 4),
+                            arrival: 0.05 },
+        ]
+    };
+    let mut c = cfg(true);
+    c.pool_pages = 14; // 56-row budget: preemption fires
+    c.starvation_steps = 4;
+    let fifo = {
+        let eng = engine();
+        let mut clock = vclock();
+        let r = serve_open_loop(&eng, trace(), &c, &mut clock).unwrap();
+        (tokens_by_id(&r.results), r.completion_order.clone(),
+         r.makespan.to_bits(), r.metrics.preemptions)
+    };
+    assert!(fifo.3 > 0, "reference run must actually preempt");
+    for class in [Priority::Interactive, Priority::Batch,
+                  Priority::Background] {
+        let eng = engine();
+        let mut clock = vclock();
+        let subs = trace().into_iter()
+            .map(|t| SessionSubmit::new(t.request)
+                .at(t.arrival)
+                .priority(class))
+            .collect();
+        let r = run_scripted(&eng, &c, &mut clock, submit_all(subs))
+            .unwrap();
+        let got = (tokens_by_id(&r.results), r.completion_order.clone(),
+                   r.makespan.to_bits(), r.metrics.preemptions);
+        assert_eq!(got, fifo,
+                   "uniform {class:?} session diverged from FIFO");
+    }
+}
+
+// ---------------------------------------------------------------------
+// Live streaming sessions (threaded AmlaEngine)
+// ---------------------------------------------------------------------
+
+fn live_config(pool_pages: usize) -> EngineConfig {
+    EngineConfig::builder()
+        .pool_pages(pool_pages)
+        .page_size(8)
+        .max_batch(4)
+        .batch_workers(2)
+        .preempt(false)
+        .build()
+        .unwrap()
+}
+
+#[test]
+fn live_session_streams_incrementally_with_backpressure() {
+    // stream_capacity 2 bounds how far the engine can run ahead of the
+    // client, so observing tokens before completion is guaranteed by
+    // construction, not by timing.
+    let engine = AmlaEngine::start(live_config(16), host_executor())
+        .unwrap();
+    let mut h = engine
+        .submit_with(DecodeRequest::new(0, vec![5, 6, 7], 30),
+                     SubmitOptions::default().stream_capacity(2))
+        .unwrap();
+    let first = h.next_token().expect("first token streams");
+    let mut streamed = vec![first];
+    streamed.extend(h.tokens());
+    assert_eq!(streamed.len(), 30);
+    let res = h.wait().unwrap();
+    assert_eq!(res.status, Outcome::Completed);
+    assert_eq!(res.tokens, streamed,
+               "streamed tokens must equal the terminal result's");
+    // live snapshot between requests: the session is drained but alive
+    let snapshot = engine.metrics().unwrap();
+    assert_eq!(snapshot.requests_completed, 1);
+    assert_eq!(snapshot.active_sessions, 0);
+    assert_eq!(snapshot.streamed_tokens, 30);
+    // submit AFTER the engine served a request: long-lived session
+    let res2 = engine
+        .submit(DecodeRequest::new(1, vec![9, 9], 5))
+        .unwrap()
+        .wait()
+        .unwrap();
+    assert_eq!(res2.tokens.len(), 5);
+    let report = engine.shutdown().unwrap();
+    assert_eq!(report.metrics.requests_completed, 2);
+    assert_eq!(report.metrics.streamed_tokens, 35);
+    assert_eq!(report.metrics.requests_cancelled, 0);
+}
+
+#[test]
+fn live_snapshot_sees_in_flight_session() {
+    // stream_capacity 1 with nothing drained: the engine stalls after
+    // ~2 tokens of 60, so the request CANNOT have completed when the
+    // snapshot is taken — and the stall must stay command-responsive
+    // (the snapshot is answered mid-stall, the deadlock regression of
+    // the backpressure design).
+    let engine = AmlaEngine::start(live_config(16), host_executor())
+        .unwrap();
+    let h = engine
+        .submit_with(DecodeRequest::new(0, vec![1, 2, 3, 4], 60),
+                     SubmitOptions::default().stream_capacity(1))
+        .unwrap();
+    let snapshot = engine.metrics().unwrap();
+    assert_eq!(snapshot.requests_completed, 0,
+               "snapshot must precede completion");
+    let in_system: u64 = snapshot.queue_depth.iter().sum::<u64>()
+        + snapshot.active_sessions;
+    assert_eq!(in_system, 1, "one session queued or active");
+    let res = h.wait().unwrap();
+    assert_eq!(res.tokens.len(), 60);
+    let report = engine.shutdown().unwrap();
+    assert_eq!(report.metrics.requests_completed, 1);
+}
+
+#[test]
+fn live_cancel_mid_flight_credits_budget_and_keeps_serving() {
+    // 64-row/layer pool.  r0 needs the whole budget (4 + 60); with
+    // stream_capacity 1 the engine is throttled to the client, so
+    // cancelling after the first token is guaranteed mid-flight.  r1
+    // then needs the whole budget again — it only admits if the cancel
+    // credited r0 exactly.
+    let engine = AmlaEngine::start(live_config(16), host_executor())
+        .unwrap();
+    let mut h = engine
+        .submit_with(DecodeRequest::new(0, vec![1, 2, 3, 4], 60),
+                     SubmitOptions::default().stream_capacity(1))
+        .unwrap();
+    let _first = h.next_token().expect("first token streams");
+    h.cancel();
+    let res = h.wait().unwrap();
+    assert_eq!(res.status, Outcome::Cancelled);
+    assert!(!res.tokens.is_empty(), "cancel landed after a token");
+    assert!(res.tokens.len() < 60,
+            "cancel must land mid-flight, got a full generation");
+    // the full budget is back: another whole-pool request completes
+    let res2 = engine
+        .submit(DecodeRequest::new(1, vec![5, 6, 7, 8], 60))
+        .unwrap()
+        .wait()
+        .unwrap();
+    assert_eq!(res2.status, Outcome::Completed);
+    assert_eq!(res2.tokens.len(), 60,
+               "cancelled request leaked admission budget");
+    let report = engine.shutdown().unwrap();
+    assert_eq!(report.metrics.requests_cancelled, 1);
+    assert_eq!(report.metrics.requests_completed, 1);
+    assert_eq!(report.batcher.cancelled, 1);
+}
+
+// ---------------------------------------------------------------------
+// Wrapper equivalence (serve == scripted closed-loop session)
+// ---------------------------------------------------------------------
+
+#[test]
+fn closed_loop_wrapper_matches_direct_session_script() {
+    // serve() is a script (submit-all-now + drain, preempt off); an
+    // explicitly written equivalent script must reproduce its tokens
+    let requests = || -> Vec<DecodeRequest> {
+        (0..5).map(|i| DecodeRequest::new(i, vec![3 + i as u32, 7], 6))
+            .collect()
+    };
+    let mut c = cfg(true);
+    c.pool_pages = 128;
+    let via_serve = {
+        let eng = engine();
+        let r = amla::coordinator::serve(&eng, requests(), &c).unwrap();
+        tokens_by_id(&r.results)
+    };
+    let via_script = {
+        let eng = engine();
+        let mut clock = SimClock::wall();
+        let mut script_cfg = c.clone();
+        script_cfg.preempt = false;
+        let subs = requests().into_iter().map(SessionSubmit::new).collect();
+        let r = run_scripted(&eng, &script_cfg, &mut clock,
+                             submit_all(subs))
+            .unwrap();
+        tokens_by_id(&r.results)
+    };
+    assert_eq!(via_serve, via_script);
+}
