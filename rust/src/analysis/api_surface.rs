@@ -1,0 +1,137 @@
+//! The api-surface pass: regenerate and diff `docs/api_surface.txt`
+//! in-process, replacing the legacy CI shell pipeline (`grep -roE` +
+//! `LC_ALL=C sort` + `diff`).
+//!
+//! Semantics match the shell version exactly on the committed tree —
+//! one line per `pub fn|struct|enum|trait|type <name>` declaration in
+//! `rust/src/serving` + `rust/src/coordinator`, formatted
+//! `<path>:pub <kind> <name>`, byte-lexicographically sorted,
+//! duplicates kept, `pub(crate)` excluded — but the scan here is
+//! comment- and string-aware (the lexer skips both), so a doc comment
+//! mentioning `pub fn foo` can never pollute the listing.
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::io;
+use std::path::Path;
+
+use super::lexer::{lex, Tok};
+use super::rules::Finding;
+
+/// Directories whose public items the surface file pins.
+pub const SURFACE_DIRS: [&str; 2] =
+    ["rust/src/serving", "rust/src/coordinator"];
+
+/// The committed listing, relative to the repo root.
+pub const SURFACE_FILE: &str = "docs/api_surface.txt";
+
+const KINDS: [&str; 5] = ["fn", "struct", "enum", "trait", "type"];
+
+const HEADER: [&str; 6] = [
+    "# Public API surface of rust/src/serving + rust/src/coordinator.",
+    "# Checked in CI by the `amla lint` api-surface pass (and by the",
+    "# tier-1 `lint_clean` test): an accidental rename/removal (or an",
+    "# unreviewed addition) fails loudly.  Regenerate with:",
+    "#   cargo run --bin amla -- lint --write-api-surface",
+    "# and commit the diff when the change is intentional.",
+];
+
+/// Extract `pub <kind> <name>` declarations from one file's source.
+pub fn extract_decls(rel_path: &str, source: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    for line in lex(source) {
+        for w in line.tokens.windows(3) {
+            if !w[0].is_ident("pub") {
+                continue;
+            }
+            let (Tok::Ident(kind), Tok::Ident(name)) = (&w[1], &w[2]) else {
+                continue;
+            };
+            if !KINDS.contains(&kind.as_str()) {
+                continue;
+            }
+            if name.starts_with(|c: char| c.is_ascii_digit()) {
+                continue;
+            }
+            out.push(format!("{rel_path}:pub {kind} {name}"));
+        }
+    }
+    out
+}
+
+/// Regenerate the full sorted listing from the tree.
+pub fn generate(root: &Path) -> io::Result<Vec<String>> {
+    let mut out = Vec::new();
+    for dir in SURFACE_DIRS {
+        let mut files = Vec::new();
+        super::walk_rs(&root.join(dir), &mut files)?;
+        for f in &files {
+            let src = fs::read_to_string(f)?;
+            out.extend(extract_decls(&super::rel_path(root, f), &src));
+        }
+    }
+    out.sort_unstable();
+    Ok(out)
+}
+
+/// Diff the committed listing against a fresh regeneration.  Header
+/// lines (`#`-prefixed) and blank lines in the committed file are
+/// ignored; every other divergence is a finding.
+pub fn check(root: &Path) -> io::Result<Vec<Finding>> {
+    let committed = match fs::read_to_string(root.join(SURFACE_FILE)) {
+        Ok(s) => s,
+        Err(e) if e.kind() == io::ErrorKind::NotFound => {
+            return Ok(vec![surface_finding(
+                "docs/api_surface.txt is missing — regenerate with \
+                 `amla lint --write-api-surface` and commit it"
+                    .to_string(),
+            )]);
+        }
+        Err(e) => return Err(e),
+    };
+    let generated = generate(root)?;
+    let mut counts: BTreeMap<&str, i64> = BTreeMap::new();
+    for l in committed
+        .lines()
+        .filter(|l| !l.starts_with('#') && !l.trim().is_empty())
+    {
+        *counts.entry(l).or_insert(0) += 1;
+    }
+    for l in &generated {
+        *counts.entry(l.as_str()).or_insert(0) -= 1;
+    }
+    let mut findings = Vec::new();
+    for (l, c) in counts {
+        match c.cmp(&0) {
+            std::cmp::Ordering::Greater => findings.push(surface_finding(
+                format!("stale entry (public item no longer in the tree): \
+                         {l} — regenerate with `amla lint \
+                         --write-api-surface`"))),
+            std::cmp::Ordering::Less => findings.push(surface_finding(
+                format!("undocumented public item: {l} — if the API change \
+                         is intentional, regenerate with `amla lint \
+                         --write-api-surface` and commit the diff"))),
+            std::cmp::Ordering::Equal => {}
+        }
+    }
+    Ok(findings)
+}
+
+/// Rewrite `docs/api_surface.txt` from the tree (header + sorted body).
+pub fn write(root: &Path) -> io::Result<()> {
+    let mut out = String::new();
+    for l in HEADER {
+        out.push_str(l);
+        out.push('\n');
+    }
+    for l in generate(root)? {
+        out.push_str(&l);
+        out.push('\n');
+    }
+    fs::write(root.join(SURFACE_FILE), out)
+}
+
+fn surface_finding(message: String) -> Finding {
+    Finding { path: SURFACE_FILE.to_string(), line: 0, rule: "api-surface",
+              message }
+}

@@ -1,0 +1,376 @@
+//! Per-rule fixture suite: every rule has at least one must-fire and
+//! one must-not-fire case, exercised through [`lint_source`] exactly as
+//! the repo walk would.  Fixture sources live in raw strings, which the
+//! lexer treats as opaque — so this file never trips the linter on its
+//! own source when `lint_repo` walks `rust/src/analysis/`.
+
+use super::api_surface::extract_decls;
+use super::rules::lint_source;
+
+const DET: &str = "rust/src/serving/worker.rs";
+const NON_DET: &str = "rust/src/roofline/model.rs";
+const SESSION: &str = "rust/src/serving/session.rs";
+const NUMERICS: &str = "rust/src/numerics/helper.rs";
+
+fn rules_hit(path: &str, src: &str) -> Vec<&'static str> {
+    lint_source(path, src).into_iter().map(|f| f.rule).collect()
+}
+
+fn fires(path: &str, src: &str, rule: &'static str) -> bool {
+    rules_hit(path, src).contains(&rule)
+}
+
+fn clean(path: &str, src: &str) {
+    let found = lint_source(path, src);
+    assert!(found.is_empty(), "expected no findings, got: {found:?}");
+}
+
+// ---------------------------------------------------------- det-wallclock
+
+#[test]
+fn det_wallclock_fires_on_instant_now_in_det_path() {
+    let src = r#"
+fn stamp() -> std::time::Instant {
+    Instant::now()
+}
+"#;
+    assert!(fires(DET, src, "det-wallclock"));
+}
+
+#[test]
+fn det_wallclock_fires_on_systemtime() {
+    assert!(fires(DET, "fn t() { let _ = SystemTime::now(); }",
+                  "det-wallclock"));
+}
+
+#[test]
+fn det_wallclock_silent_outside_det_paths() {
+    clean(NON_DET, "fn stamp() { let t0 = Instant::now(); drop(t0); }");
+}
+
+#[test]
+fn det_wallclock_silent_in_test_code() {
+    let src = r#"
+fn real() {}
+#[cfg(test)]
+mod tests {
+    fn stamp() { let t0 = Instant::now(); drop(t0); }
+}
+"#;
+    clean(DET, src);
+}
+
+#[test]
+fn det_wallclock_suppressed_by_audited_marker() {
+    let src = r#"
+fn stamp() -> f64 {
+    // lint:allow(det-wallclock): measurement only, discarded virtually
+    let t0 = Instant::now();
+    t0.elapsed().as_secs_f64()
+}
+"#;
+    clean(DET, src);
+}
+
+// ---------------------------------------------------------------- det-map
+
+#[test]
+fn det_map_fires_on_hashmap_in_det_path() {
+    let src = "use std::collections::HashMap;\n";
+    assert!(fires("rust/src/coordinator/plan.rs", src, "det-map"));
+    assert!(fires(DET, "fn f() { let s = HashSet::new(); drop(s); }",
+                  "det-map"));
+}
+
+#[test]
+fn det_map_silent_on_btreemap_and_outside_det_paths() {
+    clean(DET, "use std::collections::BTreeMap;\n");
+    clean(NON_DET, "use std::collections::HashMap;\n");
+}
+
+#[test]
+fn det_map_suppressed_by_marker_on_same_line() {
+    let src =
+        "use std::collections::HashMap; // lint:allow(det-map): keyed only\n";
+    clean(DET, src);
+}
+
+// --------------------------------------------------------------- add-only
+
+#[test]
+fn add_only_fires_on_multiplication_in_region() {
+    let src = r#"
+// lint:region(add-only)
+fn rescale(a: i32, b: i32) -> i32 {
+    a * b
+}
+// lint:endregion(add-only)
+"#;
+    assert!(fires(NUMERICS, src, "add-only"));
+}
+
+#[test]
+fn add_only_fires_on_injected_f32_multiply_at_a_call_site() {
+    // the acceptance case: sneaking a float multiply into an audited
+    // region around the rescale calls must fail the build
+    let src = r#"
+// lint:region(add-only)
+fn step(o: &mut [f32], d: i32, eps: f32) {
+    let add = rescale_add(d, eps) + (eps * 8388608.0) as i32;
+    rescale_row(o, add);
+}
+// lint:endregion(add-only)
+"#;
+    assert!(fires(NUMERICS, src, "add-only"));
+}
+
+#[test]
+fn add_only_ignores_deref_raw_pointers_and_shifts() {
+    let src = r#"
+// lint:region(add-only)
+fn ok(p: &i32, n: i32) -> i32 {
+    let q = p as *const i32;
+    let r = unsafe { *q }; // SAFETY: fixture — q derives from a live ref
+    r + *p + (n << 23)
+}
+// lint:endregion(add-only)
+"#;
+    clean(NUMERICS, src);
+}
+
+#[test]
+fn add_only_coverage_fires_on_rescale_call_outside_region() {
+    assert!(fires(NUMERICS,
+                  "fn f(row: &mut [f32]) { rescale_row(row, 8); }",
+                  "add-only"));
+    assert!(fires(NUMERICS,
+                  "fn g(x: f32) -> f32 { mul_pow2_by_add(x, 3) }",
+                  "add-only"));
+}
+
+#[test]
+fn add_only_coverage_exempts_use_lines_regions_and_tests() {
+    clean(NUMERICS, "use super::fp32::{rescale_add, rescale_row};\n");
+    let in_region = r#"
+// lint:region(add-only)
+fn f(row: &mut [f32]) { rescale_row(row, 8); }
+// lint:endregion(add-only)
+"#;
+    clean(NUMERICS, in_region);
+    let in_tests = r#"
+fn real() {}
+#[cfg(test)]
+mod tests {
+    fn f(row: &mut [f32]) { rescale_row(row, 8); }
+}
+"#;
+    clean(NUMERICS, in_tests);
+}
+
+#[test]
+fn add_only_is_not_suppressible() {
+    let src = r#"
+// lint:region(add-only)
+// lint:allow(add-only): should be rejected
+fn f(a: i32, b: i32) -> i32 { a * b }
+// lint:endregion(add-only)
+"#;
+    let hits = rules_hit(NUMERICS, src);
+    assert!(hits.contains(&"add-only"), "multiply must still fire");
+    assert!(hits.contains(&"marker"), "non-suppressible rule in allow");
+}
+
+// ----------------------------------------------------------------- safety
+
+#[test]
+fn safety_fires_on_unsafe_without_comment() {
+    assert!(fires(NON_DET, "unsafe impl Send for Thing {}\n", "safety"));
+}
+
+#[test]
+fn safety_fires_even_in_test_code() {
+    let src = r#"
+#[cfg(test)]
+mod tests {
+    fn f(p: *const i32) -> i32 { unsafe { *p } }
+}
+"#;
+    assert!(fires(NON_DET, src, "safety"));
+}
+
+#[test]
+fn safety_satisfied_by_comment_block_above_or_same_line() {
+    let above = r#"
+// SAFETY: Thing owns no interior references; moves are plain memcpy
+// and the API serializes all access.
+unsafe impl Send for Thing {}
+"#;
+    clean(NON_DET, above);
+    clean(NON_DET,
+          "fn f(p: *const i32) -> i32 { unsafe { *p } } // SAFETY: p is live\n");
+}
+
+#[test]
+fn safety_blank_line_breaks_the_comment_block() {
+    let src = r#"
+// SAFETY: too far away — the blank line below detaches this comment
+
+unsafe impl Send for Thing {}
+"#;
+    assert!(fires(NON_DET, src, "safety"));
+}
+
+// ------------------------------------------------------------------ panic
+
+#[test]
+fn panic_fires_on_unwrap_expect_and_panic_in_session() {
+    assert!(fires(SESSION, "fn f(x: Option<u32>) -> u32 { x.unwrap() }",
+                  "panic"));
+    let expect_src =
+        "fn f(x: Option<u32>) -> u32 { x.expect(\"present\") }";
+    assert!(fires(SESSION, expect_src, "panic"));
+    assert!(fires(SESSION, "fn f() { panic!(\"boom\"); }", "panic"));
+}
+
+#[test]
+fn panic_silent_outside_the_session_loop_and_in_tests() {
+    clean(DET, "fn f(x: Option<u32>) -> u32 { x.unwrap() }");
+    let in_tests = r#"
+fn real() {}
+#[cfg(test)]
+mod tests {
+    fn f(x: Option<u32>) -> u32 { x.unwrap() }
+}
+"#;
+    clean(SESSION, in_tests);
+}
+
+#[test]
+fn panic_suppressed_by_marker_on_the_line_above() {
+    let src = r#"
+fn f(x: Option<u32>) -> u32 {
+    // lint:allow(panic): guarded — caller checked is_some()
+    x.unwrap()
+}
+"#;
+    clean(SESSION, src);
+}
+
+// ----------------------------------------------------------------- escape
+
+#[test]
+fn escape_fires_on_unaudited_allow_attribute() {
+    assert!(fires(DET, "#[allow(dead_code)]\nfn f() {}\n", "escape"));
+    // cfg_attr form: `allow(` preceded by a comma
+    assert!(fires(DET, "#[cfg_attr(test, allow(dead_code))]\nfn f() {}\n",
+                  "escape"));
+}
+
+#[test]
+fn escape_suppressed_by_marker_outside_numerics() {
+    let src = r#"
+// lint:allow(escape): generated match arms are intentionally verbose
+#[allow(clippy::match_like_matches_macro)]
+fn f() {}
+"#;
+    clean(DET, src);
+}
+
+#[test]
+fn escape_unconditional_in_numerics_even_with_marker() {
+    let src = r#"
+// lint:allow(escape): should not help here
+#[allow(dead_code)]
+fn f() {}
+"#;
+    assert!(fires(NUMERICS, src, "escape"),
+            "numerics is an escape-free zone");
+}
+
+#[test]
+fn escape_silent_on_method_calls_named_allow() {
+    clean(DET, "fn f(b: &Budget) -> bool { b.allow(3) }\n");
+}
+
+// ----------------------------------------------------------------- marker
+
+#[test]
+fn marker_fires_on_unknown_rule_and_missing_reason() {
+    assert!(fires(DET, "// lint:allow(no-such-rule): reason\nfn f() {}\n",
+                  "marker"));
+    assert!(fires(DET, "// lint:allow(det-map)\nfn f() {}\n", "marker"));
+    assert!(fires(DET, "// lint:allow(det-map):   \nfn f() {}\n", "marker"));
+}
+
+#[test]
+fn marker_fires_on_stale_allow() {
+    // the governed line no longer triggers det-map: the marker is stale
+    let src = r#"
+// lint:allow(det-map): leftover from a HashMap long since migrated
+use std::collections::BTreeMap;
+"#;
+    assert!(fires(DET, src, "marker"));
+}
+
+#[test]
+fn marker_fires_on_unbalanced_regions() {
+    assert!(fires(NUMERICS, "// lint:endregion(add-only)\nfn f() {}\n",
+                  "marker"));
+    assert!(fires(NUMERICS, "// lint:region(add-only)\nfn f() {}\n",
+                  "marker"));
+    assert!(fires(NUMERICS, "// lint:region(mystery)\nfn f() {}\n",
+                  "marker"));
+}
+
+#[test]
+fn marker_prose_mentions_do_not_parse_as_markers() {
+    // a doc comment *describing* the grammar must not register a
+    // marker: only a comment that leads with the directive counts
+    let src = r#"
+/// Escapes use a `// lint:allow(det-map): reason` comment.
+fn f() {}
+"#;
+    clean(DET, src);
+}
+
+// ------------------------------------------------------------ api-surface
+
+#[test]
+fn extract_decls_matches_grep_semantics() {
+    let src = r#"
+pub struct Gauge;
+pub fn read(g: &Gauge) -> u64 { 0 }
+pub(crate) fn hidden() {}
+fn private() {}
+// a doc mentioning pub fn phantom must not leak
+pub enum Mode { A, B }
+pub trait Probe {}
+pub type Alias = u64;
+"#;
+    let got = extract_decls("rust/src/serving/gauge.rs", src);
+    assert_eq!(got, vec![
+        "rust/src/serving/gauge.rs:pub struct Gauge",
+        "rust/src/serving/gauge.rs:pub fn read",
+        "rust/src/serving/gauge.rs:pub enum Mode",
+        "rust/src/serving/gauge.rs:pub trait Probe",
+        "rust/src/serving/gauge.rs:pub type Alias",
+    ]);
+}
+
+#[test]
+fn extract_decls_skips_strings_and_comments() {
+    let src = "const DOC: &str = \"pub fn fake\"; // pub fn also_fake\n";
+    assert!(extract_decls("rust/src/serving/x.rs", src).is_empty());
+}
+
+// ------------------------------------------------------- report structure
+
+#[test]
+fn findings_carry_one_based_lines_and_render_paths() {
+    let found = lint_source(DET, "fn f() { let t0 = Instant::now(); }\n");
+    assert_eq!(found.len(), 1);
+    assert_eq!(found[0].line, 1);
+    let shown = found[0].to_string();
+    assert!(shown.starts_with("rust/src/serving/worker.rs:1: [det-wallclock]"),
+            "unexpected rendering: {shown}");
+}

@@ -1,0 +1,369 @@
+//! A miniature, dependency-free Rust lexer for the invariant linter.
+//!
+//! `amla lint` needs just enough lexical structure to tell *code* from
+//! *comments* and *string literals*: rule matching runs over code
+//! tokens, marker parsing runs over comments, and string contents are
+//! discarded entirely (so rule fixtures embedded in raw strings never
+//! trip the linter on its own source).  The token model is deliberately
+//! coarse — identifier/number words plus single punctuation characters
+//! — which is exactly the granularity the rules in
+//! [`crate::analysis::rules`] match on.  No `syn`, consistent with the
+//! offline vendoring policy.
+//!
+//! Handled lexical shapes: line comments (`//`, `///`, `//!`), nested
+//! block comments, string literals (including multi-line bodies and
+//! `\`-escapes), raw and byte strings (`r"…"`, `r#"…"#`, `b"…"`,
+//! `br#"…"#`), char literals with escapes, and the char-vs-lifetime
+//! ambiguity (`'a'` vs `&'a str`).  Numeric literals keep their
+//! decimal point and exponent glued (`2.5e-4` is one token) so `.`
+//! inside a number never reads as punctuation, while ranges (`0..n`)
+//! still split.
+
+/// A code token: an identifier/number word, or one punctuation char.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Tok {
+    Ident(String),
+    Punct(char),
+}
+
+impl Tok {
+    /// True when the token is exactly the identifier `s`.
+    pub fn is_ident(&self, s: &str) -> bool {
+        matches!(self, Tok::Ident(w) if w == s)
+    }
+
+    /// True when the token is exactly the punctuation char `c`.
+    pub fn is_punct(&self, c: char) -> bool {
+        matches!(self, Tok::Punct(p) if *p == c)
+    }
+}
+
+/// One source line after lexing: its code tokens and the text of every
+/// comment (or comment fragment) that touches the line.
+#[derive(Debug, Default)]
+pub struct LexedLine {
+    pub tokens: Vec<Tok>,
+    pub comments: Vec<String>,
+}
+
+/// Lexer state carried across line boundaries.
+enum Mode {
+    Code,
+    /// Inside a (possibly nested) block comment.
+    Block { depth: u32 },
+    /// Inside a string literal; `raw_hashes` is `Some(k)` for a raw
+    /// string closed by `"` followed by `k` hashes, `None` for a
+    /// normal string with `\`-escapes.
+    Str { raw_hashes: Option<u32> },
+}
+
+/// Lex `source` into one [`LexedLine`] per input line.
+pub fn lex(source: &str) -> Vec<LexedLine> {
+    let mut out = Vec::new();
+    let mut mode = Mode::Code;
+    for raw in source.lines() {
+        let mut line = LexedLine::default();
+        mode = lex_line(raw, mode, &mut line);
+        out.push(line);
+    }
+    out
+}
+
+fn lex_line(raw: &str, mut mode: Mode, line: &mut LexedLine) -> Mode {
+    let cs: Vec<char> = raw.chars().collect();
+    let n = cs.len();
+    let mut i = 0usize;
+    loop {
+        match mode {
+            Mode::Block { mut depth } => {
+                let start = i;
+                while i < n {
+                    if cs[i] == '*' && i + 1 < n && cs[i + 1] == '/' {
+                        i += 2;
+                        depth -= 1;
+                        if depth == 0 {
+                            break;
+                        }
+                    } else if cs[i] == '/' && i + 1 < n && cs[i + 1] == '*' {
+                        i += 2;
+                        depth += 1;
+                    } else {
+                        i += 1;
+                    }
+                }
+                line.comments.push(cs[start..i].iter().collect());
+                if depth == 0 {
+                    mode = Mode::Code;
+                } else {
+                    return Mode::Block { depth };
+                }
+            }
+            Mode::Str { raw_hashes } => {
+                if scan_str_tail(&cs, &mut i, raw_hashes) {
+                    mode = Mode::Code;
+                } else {
+                    return Mode::Str { raw_hashes };
+                }
+            }
+            Mode::Code => {
+                if i >= n {
+                    return Mode::Code;
+                }
+                let c = cs[i];
+                if c.is_whitespace() {
+                    i += 1;
+                    continue;
+                }
+                if c == '/' && i + 1 < n && cs[i + 1] == '/' {
+                    line.comments.push(cs[i + 2..].iter().collect());
+                    i = n;
+                    continue;
+                }
+                if c == '/' && i + 1 < n && cs[i + 1] == '*' {
+                    i += 2;
+                    mode = Mode::Block { depth: 1 };
+                    continue;
+                }
+                if let Some(start) = raw_string_start(&cs, i) {
+                    i += start.prefix_len;
+                    if !scan_str_tail(&cs, &mut i, Some(start.hashes)) {
+                        return Mode::Str { raw_hashes: Some(start.hashes) };
+                    }
+                    continue;
+                }
+                if c == '"' || (c == 'b' && i + 1 < n && cs[i + 1] == '"') {
+                    i += if c == 'b' { 2 } else { 1 };
+                    if !scan_str_tail(&cs, &mut i, None) {
+                        return Mode::Str { raw_hashes: None };
+                    }
+                    continue;
+                }
+                if c == 'b' && i + 1 < n && cs[i + 1] == '\'' {
+                    i += 1;
+                    scan_char_or_lifetime(&cs, &mut i);
+                    continue;
+                }
+                if c == '\'' {
+                    scan_char_or_lifetime(&cs, &mut i);
+                    continue;
+                }
+                if c == '_' || c.is_ascii_alphanumeric() {
+                    let start = i;
+                    let numeric = c.is_ascii_digit();
+                    i += 1;
+                    loop {
+                        if i < n && (cs[i] == '_' || cs[i].is_ascii_alphanumeric()) {
+                            i += 1;
+                        } else if numeric
+                            && i < n
+                            && cs[i] == '.'
+                            && i + 1 < n
+                            && cs[i + 1].is_ascii_digit()
+                        {
+                            // decimal point (but not the `..` of a range)
+                            i += 2;
+                        } else if numeric
+                            && i < n
+                            && (cs[i] == '+' || cs[i] == '-')
+                            && matches!(cs[i - 1], 'e' | 'E')
+                            && i + 1 < n
+                            && cs[i + 1].is_ascii_digit()
+                        {
+                            // exponent sign: 1e-6 stays one token
+                            i += 2;
+                        } else {
+                            break;
+                        }
+                    }
+                    line.tokens.push(Tok::Ident(cs[start..i].iter().collect()));
+                    continue;
+                }
+                line.tokens.push(Tok::Punct(c));
+                i += 1;
+            }
+        }
+    }
+}
+
+/// Consume the body of a string literal from `*i`; returns true when
+/// the closing quote was found on this line (`*i` then points past it).
+fn scan_str_tail(cs: &[char], i: &mut usize, raw_hashes: Option<u32>) -> bool {
+    let n = cs.len();
+    if let Some(k) = raw_hashes {
+        let k = k as usize;
+        while *i < n {
+            if cs[*i] == '"'
+                && n - *i - 1 >= k
+                && cs[*i + 1..*i + 1 + k].iter().all(|&c| c == '#')
+            {
+                *i += 1 + k;
+                return true;
+            }
+            *i += 1;
+        }
+        false
+    } else {
+        while *i < n {
+            match cs[*i] {
+                '\\' => {
+                    if *i + 1 >= n {
+                        // trailing backslash: line-continuation escape
+                        *i = n;
+                        return false;
+                    }
+                    *i += 2;
+                }
+                '"' => {
+                    *i += 1;
+                    return true;
+                }
+                _ => *i += 1,
+            }
+        }
+        false
+    }
+}
+
+struct RawStart {
+    prefix_len: usize,
+    hashes: u32,
+}
+
+/// Detect `r"`, `r#…"`, `br"`, `br#…"` at `cs[i]`.
+fn raw_string_start(cs: &[char], i: usize) -> Option<RawStart> {
+    let mut j = i;
+    if cs[j] == 'b' {
+        j += 1;
+    }
+    if j >= cs.len() || cs[j] != 'r' {
+        return None;
+    }
+    j += 1;
+    let mut hashes = 0u32;
+    while j < cs.len() && cs[j] == '#' {
+        hashes += 1;
+        j += 1;
+    }
+    if j < cs.len() && cs[j] == '"' {
+        Some(RawStart { prefix_len: j + 1 - i, hashes })
+    } else {
+        None
+    }
+}
+
+/// At a `'`: consume either a lifetime (`'a`, `'static`, `'_`) or a
+/// char literal (`'x'`, `'\n'`, `'\u{1F600}'`), leniently.
+fn scan_char_or_lifetime(cs: &[char], i: &mut usize) {
+    let n = cs.len();
+    let next_is_word = *i + 1 < n
+        && (cs[*i + 1] == '_' || cs[*i + 1].is_ascii_alphabetic());
+    let closes = *i + 2 < n && cs[*i + 2] == '\'';
+    if next_is_word && !closes {
+        // lifetime: skip the quote and the identifier
+        *i += 2;
+        while *i < n && (cs[*i] == '_' || cs[*i].is_ascii_alphanumeric()) {
+            *i += 1;
+        }
+        return;
+    }
+    // char literal: opening quote, optional escape, scan to the close
+    *i += 1;
+    if *i < n && cs[*i] == '\\' {
+        *i = (*i + 2).min(n); // backslash + escape head (covers '\'')
+    }
+    while *i < n && cs[*i] != '\'' {
+        *i += 1;
+    }
+    if *i < n {
+        *i += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<String> {
+        lex(src)
+            .into_iter()
+            .flat_map(|l| l.tokens)
+            .filter_map(|t| match t {
+                Tok::Ident(w) => Some(w),
+                Tok::Punct(_) => None,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn comments_are_separated_from_code() {
+        let lines = lex("let x = 1; // trailing note\n// full-line note\n");
+        assert_eq!(lines.len(), 2);
+        assert_eq!(lines[0].comments, vec![" trailing note".to_string()]);
+        assert!(lines[0].tokens.iter().any(|t| t.is_ident("x")));
+        assert!(lines[1].tokens.is_empty());
+        assert_eq!(lines[1].comments, vec![" full-line note".to_string()]);
+    }
+
+    #[test]
+    fn string_contents_produce_no_tokens() {
+        let src = "let s = \"HashMap Instant::now unsafe\"; s.len()";
+        let ids = idents(src);
+        assert!(!ids.iter().any(|w| w == "HashMap"));
+        assert!(!ids.iter().any(|w| w == "unsafe"));
+        assert!(ids.iter().any(|w| w == "len"));
+    }
+
+    #[test]
+    fn raw_strings_swallow_everything_until_their_terminator() {
+        let src = "let f = r#\"fn bad() { 1 * 2 }\n\"quoted\" more\"#; done()";
+        let lines = lex(src);
+        assert!(!idents(src).iter().any(|w| w == "bad"));
+        assert!(lines[1].tokens.iter().any(|t| t.is_ident("done")));
+    }
+
+    #[test]
+    fn multiline_and_nested_block_comments() {
+        let src = "a /* one /* nested */ still comment */ b\n/* open\nclose */ c";
+        let lines = lex(src);
+        assert!(lines[0].tokens.iter().any(|t| t.is_ident("a")));
+        assert!(lines[0].tokens.iter().any(|t| t.is_ident("b")));
+        assert!(lines[1].tokens.is_empty());
+        assert!(lines[2].tokens.iter().any(|t| t.is_ident("c")));
+    }
+
+    #[test]
+    fn lifetimes_are_not_char_literals() {
+        let src = "fn f<'a>(s: &'a str, c: char) -> bool { c == 'a' && s.len() > '\\n' as usize }";
+        let ids = idents(src);
+        // the lifetime 'a is skipped; the char 'a' is skipped; neither
+        // injects a stray token or derails the rest of the line
+        assert!(ids.iter().any(|w| w == "len"));
+        assert!(ids.iter().any(|w| w == "usize"));
+    }
+
+    #[test]
+    fn numbers_keep_decimal_points_and_exponents() {
+        let ids = idents("let eps = 2.5e-4 + 1.0; for i in 0..n {}");
+        assert!(ids.iter().any(|w| w == "2.5e-4"));
+        assert!(ids.iter().any(|w| w == "1.0"));
+        // the range split survives: `0..n` is 0, '.', '.', n
+        assert!(ids.iter().any(|w| w == "0"));
+        assert!(ids.iter().any(|w| w == "n"));
+    }
+
+    #[test]
+    fn byte_strings_and_char_escapes() {
+        let src = "let b = b\"unsafe\"; let c = b'\\''; let d = '\\u{1F600}'; end()";
+        let ids = idents(src);
+        assert!(!ids.iter().any(|w| w == "unsafe"));
+        assert!(ids.iter().any(|w| w == "end"));
+    }
+
+    #[test]
+    fn multiline_string_state_carries_across_lines() {
+        let src = "let s = \"first\nsecond unsafe\nthird\"; after()";
+        let lines = lex(src);
+        assert!(lines[1].tokens.is_empty(), "string body leaked tokens");
+        assert!(lines[2].tokens.iter().any(|t| t.is_ident("after")));
+    }
+}

@@ -1,0 +1,104 @@
+//! `amla lint` — the in-process invariant checker.
+//!
+//! The repo's contracts — the deterministic virtual-clock tier, the
+//! paper's MUL-by-ADD rescale purity (Lemma 3.1), engine-thread
+//! liveness, the pinned public API surface — were enforced by tests
+//! plus two ad-hoc CI greps.  This module turns them into machine
+//! checks: a hand-rolled lexer ([`lexer`]) feeds repo-specific rules
+//! ([`rules`]) plus an in-process `docs/api_surface.txt` diff
+//! ([`api_surface`]).  Escapes are audited, not silent: every
+//! suppression is a `lint:allow(<rule>): <reason>` comment the linter
+//! itself validates (unknown rules, missing reasons, and stale markers
+//! are errors).
+//!
+//! Entry points: `amla lint` (CLI subcommand), `cargo run --bin
+//! amla-lint` (CI), and the tier-1 `lint_clean` test, which runs
+//! [`lint_repo`] on every `cargo test`.
+//!
+//! Scope: the rules walk `rust/src` only — vendored dependencies,
+//! benches, integration tests, and examples are out of scope (the
+//! deterministic paths and the rescale core all live under
+//! `rust/src`); the api-surface pass covers `rust/src/serving` +
+//! `rust/src/coordinator`, matching the committed listing.
+
+pub mod api_surface;
+pub mod lexer;
+pub mod rules;
+
+#[cfg(test)]
+mod fixtures;
+
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Result};
+
+pub use rules::{lint_source, Finding};
+
+/// Subtree the source rules walk, relative to the repo root.
+pub const LINT_ROOT: &str = "rust/src";
+
+/// Collect every `.rs` file under `dir`, sorted for stable output.
+pub(crate) fn walk_rs(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    let mut entries: Vec<PathBuf> = fs::read_dir(dir)?
+        .map(|e| e.map(|e| e.path()))
+        .collect::<io::Result<Vec<_>>>()?;
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            walk_rs(&p, out)?;
+        } else if p.extension().is_some_and(|x| x == "rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+/// Repo-relative path with `/` separators (stable across platforms,
+/// and the form the path-scoped rules match on).
+pub(crate) fn rel_path(root: &Path, p: &Path) -> String {
+    p.strip_prefix(root)
+        .unwrap_or(p)
+        .components()
+        .map(|c| c.as_os_str().to_string_lossy().into_owned())
+        .collect::<Vec<_>>()
+        .join("/")
+}
+
+/// Run every source rule over `rust/src`, then the api-surface pass.
+/// Returns all findings (empty = clean tree).
+pub fn lint_repo(root: &Path) -> Result<Vec<Finding>> {
+    let mut files = Vec::new();
+    walk_rs(&root.join(LINT_ROOT), &mut files)?;
+    let mut findings = Vec::new();
+    for p in &files {
+        let src = fs::read_to_string(p)?;
+        findings.extend(rules::lint_source(&rel_path(root, p), &src));
+    }
+    findings.extend(api_surface::check(root)?);
+    Ok(findings)
+}
+
+/// CLI entry shared by `amla lint` and the standalone `amla-lint`
+/// binary: optionally rewrite the surface file, then lint and report.
+/// Errors (non-zero exit) when any finding survives.
+pub fn run_cli(root: &Path, write_api: bool) -> Result<()> {
+    if !root.join(LINT_ROOT).is_dir() {
+        bail!("`{}` has no {LINT_ROOT}/ tree — run from the repo root or \
+               pass --root", root.display());
+    }
+    if write_api {
+        api_surface::write(root)?;
+        println!("regenerated {}", api_surface::SURFACE_FILE);
+    }
+    let findings = lint_repo(root)?;
+    if findings.is_empty() {
+        println!("amla-lint: tree is clean");
+        return Ok(());
+    }
+    for f in &findings {
+        eprintln!("{f}");
+    }
+    bail!("amla-lint: {} finding(s)", findings.len())
+}

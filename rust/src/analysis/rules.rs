@@ -1,0 +1,434 @@
+//! The invariant rules `amla lint` enforces, and the marker grammar
+//! that audits their escapes.
+//!
+//! Rules (see `docs/ARCHITECTURE.md` § "Invariants & static analysis"
+//! for the contract each one guards):
+//!
+//! * **det-wallclock** — no `Instant::now`/`SystemTime` in the
+//!   deterministic paths (`numerics/`, `kvcache/`, `coordinator/`,
+//!   `serving/`): time must flow through `SimClock` or carry an
+//!   audited marker.
+//! * **det-map** — no `HashMap`/`HashSet` in the deterministic paths:
+//!   iteration order can leak into schedules; use `BTreeMap`/`BTreeSet`
+//!   or carry an audited marker.
+//! * **add-only** — inside `lint:region(add-only)` blocks, any binary
+//!   `*` is an error (the paper's MUL-by-ADD claim, Lemma 3.1), and
+//!   every reference to the rescale primitives *outside* a region is a
+//!   coverage error.  Not suppressible.
+//! * **safety** — every `unsafe` token needs a `SAFETY:` comment on
+//!   the same line or in the comment block directly above.  Not
+//!   suppressible, and applies to test code too.
+//! * **panic** — `unwrap()`/`expect()`/`panic!` in the engine session
+//!   loop (`serving/session.rs`) needs an audited marker: a panic
+//!   there poisons the engine thread and strands every client.
+//! * **escape** — `#[allow(...)]` attributes are banned outright in
+//!   `numerics/` (the bit-exactness core) and need an audited marker
+//!   everywhere else.
+//! * **marker** — the marker grammar itself: unknown rule names,
+//!   missing reasons, unmatched regions, and stale (unused) markers
+//!   are all errors, so the escape ledger can never rot silently.
+//!
+//! Marker grammar (each must start its comment):
+//!
+//! * `// lint:allow(<rule>): <reason>` — suppress one suppressible
+//!   rule on the same line (when the comment trails code) or on the
+//!   next code line (when the comment stands alone).
+//! * `// lint:region(add-only)` … `// lint:endregion(add-only)` —
+//!   delimit a MUL-free region.
+//!
+//! Test code — everything from the first `#[cfg(test)]` line to end of
+//! file, which is how every module in this tree lays tests out — is
+//! exempt from the determinism and panic rules (tests may time and
+//! unwrap freely) but **not** from the safety or add-only rules.
+
+use super::lexer::{lex, LexedLine, Tok};
+
+/// Deterministic-path directories (relative to `rust/src/`).
+pub const DET_PATHS: [&str; 4] =
+    ["numerics/", "kvcache/", "coordinator/", "serving/"];
+
+/// Rules a `lint:allow` marker may suppress.
+const SUPPRESSIBLE: [&str; 4] = ["det-wallclock", "det-map", "panic", "escape"];
+
+/// The rescale primitives whose every call-site must sit inside an
+/// add-only region.
+const RESCALE_FNS: [&str; 4] =
+    ["rescale_element", "rescale_add", "rescale_row", "mul_pow2_by_add"];
+
+/// Identifiers after which a `*` is a unary/deref/type context, not a
+/// binary multiply.
+const UNARY_CONTEXT_KEYWORDS: [&str; 20] = [
+    "as", "break", "const", "continue", "dyn", "else", "fn", "if", "impl",
+    "in", "let", "match", "mod", "move", "mut", "pub", "ref", "return",
+    "use", "where",
+];
+
+/// One lint violation.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    pub path: String,
+    /// 1-based source line (0 = file-level finding).
+    pub line: usize,
+    pub rule: &'static str,
+    pub message: String,
+}
+
+impl std::fmt::Display for Finding {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.path, self.line, self.rule,
+               self.message)
+    }
+}
+
+fn finding(path: &str, idx: usize, rule: &'static str, message: String)
+           -> Finding {
+    Finding { path: path.to_string(), line: idx + 1, rule, message }
+}
+
+/// A parsed `lint:allow` marker and whether any rule hit consumed it.
+struct Allow {
+    /// 0-based line the marker comment sits on.
+    line: usize,
+    /// 0-based code line the marker governs.
+    target: usize,
+    rule: String,
+    used: bool,
+}
+
+enum Marker {
+    None,
+    Allow { rule: String },
+    Region { name: String },
+    EndRegion { name: String },
+    Malformed { what: &'static str },
+}
+
+fn parse_marker(comment: &str) -> Marker {
+    // doc-comment slashes and `//!` bangs are part of the captured
+    // comment text; a marker must lead the remaining content
+    let body = comment.trim_start_matches(['/', '!']).trim_start();
+    if let Some(rest) = body.strip_prefix("lint:allow(") {
+        let Some(close) = rest.find(')') else {
+            return Marker::Malformed { what: "unterminated lint:allow(" };
+        };
+        let rule = rest[..close].trim().to_string();
+        let after = rest[close + 1..].trim_start();
+        return match after.strip_prefix(':') {
+            Some(reason) if !reason.trim().is_empty() =>
+                Marker::Allow { rule },
+            _ => Marker::Malformed {
+                what: "lint:allow marker must carry a `: reason` tail",
+            },
+        };
+    }
+    for (prefix, end) in [("lint:region(", false), ("lint:endregion(", true)] {
+        if let Some(rest) = body.strip_prefix(prefix) {
+            let Some(close) = rest.find(')') else {
+                return Marker::Malformed { what: "unterminated region marker" };
+            };
+            let name = rest[..close].trim().to_string();
+            return if end {
+                Marker::EndRegion { name }
+            } else {
+                Marker::Region { name }
+            };
+        }
+    }
+    Marker::None
+}
+
+/// Consume an allow marker governing `target` for `rule`.  A marker
+/// suppresses every same-rule hit on its one target line.
+fn take_allow(allows: &mut [Allow], target: usize, rule: &str) -> bool {
+    let mut hit = false;
+    for a in allows.iter_mut() {
+        if a.target == target && a.rule == rule {
+            a.used = true;
+            hit = true;
+        }
+    }
+    hit
+}
+
+fn is_cfg_test_line(l: &LexedLine) -> bool {
+    let t = &l.tokens;
+    t.len() == 7
+        && t[0].is_punct('#')
+        && t[1].is_punct('[')
+        && t[2].is_ident("cfg")
+        && t[3].is_punct('(')
+        && t[4].is_ident("test")
+        && t[5].is_punct(')')
+        && t[6].is_punct(']')
+}
+
+fn in_det_path(path: &str) -> bool {
+    DET_PATHS.iter().any(|d| path.contains(&format!("rust/src/{d}")))
+}
+
+fn has_wallclock(t: &[Tok]) -> bool {
+    if t.iter().any(|tok| tok.is_ident("SystemTime")) {
+        return true;
+    }
+    t.windows(4).any(|w| {
+        w[0].is_ident("Instant")
+            && w[1].is_punct(':')
+            && w[2].is_punct(':')
+            && w[3].is_ident("now")
+    })
+}
+
+fn det_map_ident(t: &[Tok]) -> Option<&str> {
+    t.iter().find_map(|tok| match tok {
+        Tok::Ident(w) if w == "HashMap" || w == "HashSet" => Some(w.as_str()),
+        _ => None,
+    })
+}
+
+fn panic_site(t: &[Tok]) -> Option<&'static str> {
+    for w in t.windows(2) {
+        if w[0].is_ident("unwrap") && w[1].is_punct('(') {
+            return Some("unwrap()");
+        }
+        if w[0].is_ident("expect") && w[1].is_punct('(') {
+            return Some("expect()");
+        }
+        if w[0].is_ident("panic") && w[1].is_punct('!') {
+            return Some("panic!");
+        }
+    }
+    None
+}
+
+fn has_safety_comment(lines: &[LexedLine], idx: usize) -> bool {
+    let mentions = |l: &LexedLine| l.comments.iter().any(|c| c.contains("SAFETY:"));
+    if mentions(&lines[idx]) {
+        return true;
+    }
+    // walk the contiguous comment-only block directly above
+    let mut j = idx;
+    while j > 0 {
+        j -= 1;
+        let l = &lines[j];
+        if !l.tokens.is_empty() || l.comments.is_empty() {
+            break;
+        }
+        if mentions(l) {
+            return true;
+        }
+    }
+    false
+}
+
+/// Run every source-level rule over one file.  `path` is the
+/// repo-relative path with `/` separators (it selects which path-scoped
+/// rules apply); findings come back sorted by line.
+pub fn lint_source(path: &str, source: &str) -> Vec<Finding> {
+    let lines = lex(source);
+    let n = lines.len();
+    let mut findings = Vec::new();
+
+    // ---- marker & region collection --------------------------------
+    let mut allows: Vec<Allow> = Vec::new();
+    let mut regions: Vec<(usize, usize)> = Vec::new();
+    let mut open_regions: Vec<usize> = Vec::new();
+    for (idx, line) in lines.iter().enumerate() {
+        for comment in &line.comments {
+            match parse_marker(comment) {
+                Marker::None => {}
+                Marker::Malformed { what } => {
+                    findings.push(finding(path, idx, "marker",
+                                          what.to_string()));
+                }
+                Marker::Allow { rule } => {
+                    if !SUPPRESSIBLE.contains(&rule.as_str()) {
+                        findings.push(finding(path, idx, "marker", format!(
+                            "`{rule}` is not a suppressible rule \
+                             (suppressible: {})", SUPPRESSIBLE.join(", "))));
+                        continue;
+                    }
+                    let target = if line.tokens.is_empty() {
+                        lines.iter().enumerate().skip(idx + 1)
+                            .find(|(_, l)| !l.tokens.is_empty())
+                            .map(|(j, _)| j)
+                    } else {
+                        Some(idx)
+                    };
+                    match target {
+                        Some(t) => allows.push(Allow {
+                            line: idx, target: t, rule, used: false,
+                        }),
+                        None => findings.push(finding(path, idx, "marker",
+                            "lint:allow marker with no code line to govern"
+                                .to_string())),
+                    }
+                }
+                Marker::Region { name } => {
+                    if name == "add-only" {
+                        open_regions.push(idx);
+                    } else {
+                        findings.push(finding(path, idx, "marker", format!(
+                            "unknown region `{name}` (known: add-only)")));
+                    }
+                }
+                Marker::EndRegion { name } => {
+                    if name != "add-only" {
+                        findings.push(finding(path, idx, "marker", format!(
+                            "unknown region `{name}` (known: add-only)")));
+                    } else if let Some(s) = open_regions.pop() {
+                        regions.push((s, idx));
+                    } else {
+                        findings.push(finding(path, idx, "marker",
+                            "unmatched lint:endregion(add-only)".to_string()));
+                    }
+                }
+            }
+        }
+    }
+    for s in open_regions {
+        findings.push(finding(path, s, "marker",
+                              "unclosed lint:region(add-only)".to_string()));
+    }
+
+    let test_start =
+        lines.iter().position(is_cfg_test_line).unwrap_or(n);
+    let in_region =
+        |idx: usize| regions.iter().any(|&(s, e)| s <= idx && idx <= e);
+
+    // ---- determinism + panic rules (non-test code only) ------------
+    let det = in_det_path(path);
+    let is_session = path.ends_with("serving/session.rs");
+    for (idx, line) in lines.iter().enumerate().take(test_start) {
+        let t = &line.tokens;
+        if det {
+            if has_wallclock(t)
+                && !take_allow(&mut allows, idx, "det-wallclock")
+            {
+                findings.push(finding(path, idx, "det-wallclock",
+                    "wall-clock read (`Instant::now`/`SystemTime`) in a \
+                     deterministic path — route time through `SimClock` or \
+                     justify with a `lint:allow(det-wallclock)` marker"
+                        .to_string()));
+            }
+            if let Some(name) = det_map_ident(t) {
+                let name = name.to_string();
+                if !take_allow(&mut allows, idx, "det-map") {
+                    findings.push(finding(path, idx, "det-map", format!(
+                        "`{name}` in a deterministic path — iteration order \
+                         can leak into schedules; use `BTreeMap`/`BTreeSet` \
+                         or justify with a `lint:allow(det-map)` marker")));
+                }
+            }
+        }
+        if is_session {
+            if let Some(what) = panic_site(t) {
+                if !take_allow(&mut allows, idx, "panic") {
+                    findings.push(finding(path, idx, "panic", format!(
+                        "`{what}` in the engine session loop — a panic here \
+                         poisons the engine thread and strands every client; \
+                         handle the error or justify with a \
+                         `lint:allow(panic)` marker")));
+                }
+            }
+        }
+    }
+
+    // ---- unsafe/SAFETY audit (test code included) ------------------
+    for (idx, line) in lines.iter().enumerate() {
+        if line.tokens.iter().any(|t| t.is_ident("unsafe"))
+            && !has_safety_comment(&lines, idx)
+        {
+            findings.push(finding(path, idx, "safety",
+                "`unsafe` without a `SAFETY:` comment on the same line or \
+                 in the comment block directly above (not suppressible)"
+                    .to_string()));
+        }
+    }
+
+    // ---- escape audit: #[allow(...)] attributes --------------------
+    for (idx, line) in lines.iter().enumerate() {
+        let t = &line.tokens;
+        let hit = t.iter().enumerate().any(|(p, tok)| {
+            tok.is_ident("allow")
+                && t.get(p + 1).is_some_and(|x| x.is_punct('('))
+                && (p == 0
+                    || t[p - 1].is_punct('[')
+                    || t[p - 1].is_punct(','))
+        });
+        if !hit {
+            continue;
+        }
+        if path.contains("rust/src/numerics/") {
+            findings.push(finding(path, idx, "escape",
+                "`#[allow(...)]` in the numerics tree — the bit-exactness \
+                 core is an escape-free zone (not suppressible)".to_string()));
+        } else if !take_allow(&mut allows, idx, "escape") {
+            findings.push(finding(path, idx, "escape",
+                "`#[allow(...)]` without an audited justification — add a \
+                 `lint:allow(escape)` marker explaining why the compiler \
+                 lint must be waved off".to_string()));
+        }
+    }
+
+    // ---- add-only purity: no binary `*` inside regions -------------
+    let flat: Vec<(usize, &Tok)> = lines.iter().enumerate()
+        .flat_map(|(idx, l)| l.tokens.iter().map(move |t| (idx, t)))
+        .collect();
+    for (k, &(idx, tok)) in flat.iter().enumerate() {
+        if !tok.is_punct('*') || !in_region(idx) {
+            continue;
+        }
+        let prev = k.checked_sub(1).map(|j| flat[j].1);
+        let next = flat.get(k + 1).map(|x| x.1);
+        let prev_operand = match prev {
+            Some(Tok::Ident(w)) =>
+                !UNARY_CONTEXT_KEYWORDS.contains(&w.as_str()),
+            Some(Tok::Punct(c)) => matches!(c, ')' | ']'),
+            None => false,
+        };
+        let raw_ptr_type = matches!(next, Some(Tok::Ident(w))
+                                    if w == "const" || w == "mut");
+        if prev_operand && !raw_ptr_type {
+            findings.push(finding(path, idx, "add-only",
+                "multiplication inside a lint:region(add-only) block — the \
+                 AMLA rescale must stay MUL-free (Lemma 3.1: exponent-field \
+                 adds only; not suppressible)".to_string()));
+        }
+    }
+
+    // ---- add-only coverage: rescale call-sites must be in a region -
+    for (idx, line) in lines.iter().enumerate().take(test_start) {
+        if in_region(idx) {
+            continue;
+        }
+        let t = &line.tokens;
+        let is_use = t.first().is_some_and(|x| x.is_ident("use"))
+            || (t.first().is_some_and(|x| x.is_ident("pub"))
+                && t.get(1).is_some_and(|x| x.is_ident("use")));
+        if is_use {
+            continue;
+        }
+        if let Some(name) = t.iter().find_map(|tok| match tok {
+            Tok::Ident(w) if RESCALE_FNS.contains(&w.as_str()) =>
+                Some(w.clone()),
+            _ => None,
+        }) {
+            findings.push(finding(path, idx, "add-only", format!(
+                "`{name}` referenced outside a lint:region(add-only) block \
+                 — every rescale call-site must sit inside an audited \
+                 add-only region (not suppressible)")));
+        }
+    }
+
+    // ---- stale markers ---------------------------------------------
+    for a in &allows {
+        if !a.used {
+            findings.push(finding(path, a.line, "marker", format!(
+                "stale lint:allow({}) marker — its target line no longer \
+                 triggers the rule; remove the marker", a.rule)));
+        }
+    }
+
+    findings.sort_by(|a, b| a.line.cmp(&b.line).then(a.rule.cmp(b.rule)));
+    findings
+}

@@ -1,0 +1,32 @@
+//! `amla-lint` — standalone entry for the invariant linter.
+//!
+//! A thin argv shim over [`amla::analysis::run_cli`] so CI can run the
+//! checks as one step (`cargo run --release --bin amla-lint`) without
+//! dragging in the full `amla` CLI surface.  `amla lint` is the same
+//! code behind the main binary.
+//!
+//! ```text
+//! amla-lint [--root DIR] [--write-api-surface]
+//! ```
+//!
+//! Exits non-zero when any finding survives.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use amla::config::Args;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let args = Args::from_env();
+    let root = args.get("root").map(String::as_str).unwrap_or(".");
+    amla::analysis::run_cli(Path::new(root),
+                            args.has_flag("write-api-surface"))
+}

@@ -508,12 +508,18 @@ struct PjrtState {
     /// Per-layer weights as *device-resident* buffers, uploaded once
     /// (§Perf L3 steps 2+4: avoids copying ~22 MB of weights across the
     /// host boundary on every layer call).
-    weight_buffers: std::collections::HashMap<usize, Vec<xla::PjRtBuffer>>,
+    weight_buffers: std::collections::BTreeMap<usize, Vec<xla::PjRtBuffer>>,
 }
 
-// SAFETY: see comment above — `PjrtState` is only ever touched under the
-// executor's Mutex, and none of its interior Rc handles are cloned or
-// leaked outside the lock.
+// SAFETY: `PjrtState` is `!Send` only because the vendored xla handles
+// hold `Rc`s and raw PJRT pointers.  The claim audited here (see the
+// struct docs above) is that no alias to those Rcs can exist outside
+// `self`: every handle is created inside the state, methods never clone
+// an Rc out of the lock scope, and the executor only moves the state
+// *between* threads with exclusive access (`Mutex<PjrtState>`, one
+// try-locked slot per worker) — so reference counts are only ever
+// touched by one thread at a time, and the PJRT C API is thread-safe
+// for such serialized calls.  Re-audit on any xla-binding upgrade.
 unsafe impl Send for PjrtState {}
 
 /// Production executor: one PJRT layer executable per KV bucket.
@@ -573,7 +579,7 @@ impl PjrtLayerExecutor {
             states.push(Mutex::new(PjrtState {
                 engine,
                 buckets_cache,
-                weight_buffers: std::collections::HashMap::new(),
+                weight_buffers: std::collections::BTreeMap::new(),
             }));
         }
         let weights = (0..n_layers)

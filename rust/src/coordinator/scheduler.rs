@@ -34,7 +34,7 @@
 //! [`SimClock`]: the closed-loop wrapper always runs it in wall mode;
 //! the open loop may run it virtually.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
@@ -82,13 +82,17 @@ impl ServeReport {
 /// the measurement itself in wall mode, the deterministic modeled cost
 /// in virtual mode.
 pub struct StepCore {
-    runtimes: HashMap<RequestId, SeqRuntime>,
+    // BTreeMap, not HashMap: the stepping core is on the deterministic
+    // tier's golden path, and ordered maps make iteration order a
+    // function of keys alone (`map_order_perturbation_is_bit_neutral`
+    // pins this; rule det-map enforces it).
+    runtimes: BTreeMap<RequestId, SeqRuntime>,
     n_layers: usize,
 }
 
 impl StepCore {
     pub fn new(n_layers: usize) -> Self {
-        Self { runtimes: HashMap::new(), n_layers }
+        Self { runtimes: BTreeMap::new(), n_layers }
     }
 
     /// The prompt-chunk cap this run actually steps with:
@@ -128,6 +132,9 @@ impl StepCore {
         }
 
         let chunk = Self::effective_prefill_chunk(engine, cfg);
+        // lint:allow(det-wallclock): measurement only — the reading is
+        // handed to `SimClock::advance_step`, which discards it under
+        // the virtual clock (the deterministic tier books modeled cost)
         let step_t0 = Instant::now();
         let states = batcher.active_mut();
         let ids: Vec<RequestId> =
@@ -332,6 +339,64 @@ mod tests {
         ServeConfig { max_batch, workers, batch_workers: workers,
                       pool_pages: 256, page_size: 8,
                       ..ServeConfig::default() }
+    }
+
+    impl StepCore {
+        /// Test-only layout churn: insert and drop high-keyed dummy
+        /// runtimes between steps.  A hash map's bucket layout (and so
+        /// its iteration order) depends on this history; the ordered
+        /// map's must not.
+        fn perturb_runtime_layout(&mut self, n: u64) {
+            for i in 0..n {
+                self.runtimes.insert(u64::MAX - i,
+                                     SeqRuntime::new(self.n_layers));
+            }
+            for i in 0..n {
+                self.runtimes.remove(&(u64::MAX - i));
+            }
+        }
+    }
+
+    #[test]
+    fn map_order_perturbation_is_bit_neutral() {
+        // Regression test for the det-map migration: churn the runtime
+        // map's internal layout between steps and require the full
+        // golden trace — token streams AND latency bits — unchanged.
+        let run = |perturb: bool| {
+            let engine = small_engine();
+            let c = cfg(3, 2);
+            let mut core = StepCore::new(engine.executor.n_layers());
+            let mut batcher = Batcher::new(c.max_batch, 1024);
+            let mut metrics = Metrics::default();
+            let mut clock = SimClock::simulated(
+                crate::serving::clock::StepCostModel::default());
+            for i in 0..6u64 {
+                batcher.enqueue(
+                    DecodeRequest::new(i, vec![5 + i as u32, 2, 3], 4), 0.0);
+            }
+            let mut done = Vec::new();
+            loop {
+                batcher.admit(clock.now());
+                if perturb {
+                    core.perturb_runtime_layout(17);
+                }
+                let stepped = core.step(&engine, &mut batcher, &c,
+                                        &mut metrics, &mut clock);
+                for st in core.reap(&engine, &mut batcher) {
+                    done.push((st.request.id, st.generated.clone(),
+                               st.token_latencies.iter()
+                                   .map(|l| l.to_bits())
+                                   .collect::<Vec<_>>()));
+                }
+                if stepped == 0 && batcher.idle() {
+                    break;
+                }
+            }
+            done.sort_by_key(|(id, ..)| *id);
+            done
+        };
+        assert_eq!(run(false), run(true),
+                   "map-layout churn changed the golden trace");
     }
 
     #[test]

@@ -22,6 +22,7 @@
 //! See `DESIGN.md` for the system inventory and per-experiment index, and
 //! `EXPERIMENTS.md` for paper-vs-measured results.
 
+pub mod analysis;
 pub mod bench_util;
 pub mod config;
 pub mod coordinator;

@@ -50,6 +50,7 @@ fn run() -> Result<()> {
             Ok(())
         }
         Some("artifacts") => cmd_artifacts(&args),
+        Some("lint") => cmd_lint(&args),
         other => {
             if let Some(cmd) = other {
                 eprintln!("unknown command `{cmd}`\n");
@@ -87,6 +88,13 @@ USAGE:
   amla roofline
   amla pipeline
   amla artifacts  [--artifacts DIR]
+  amla lint       [--root DIR] [--write-api-surface]
+                  # static invariant checks: determinism (wall-clock and
+                  # map-order escapes in numerics/kvcache/coordinator/
+                  # serving), MUL-by-ADD purity regions over the rescale
+                  # core, SAFETY/panic audits, allow-escape audit, and
+                  # the docs/api_surface.txt diff (--write-api-surface
+                  # regenerates it); exits non-zero on any finding
 ";
 
 fn cmd_serve(args: &Args) -> Result<()> {
@@ -273,4 +281,10 @@ fn cmd_artifacts(args: &Args) -> Result<()> {
                  e.name, e.kind, e.algo, e.n1, e.sq, e.bucket);
     }
     Ok(())
+}
+
+fn cmd_lint(args: &Args) -> Result<()> {
+    let root = args.get("root").map(String::as_str).unwrap_or(".");
+    amla::analysis::run_cli(std::path::Path::new(root),
+                            args.has_flag("write-api-surface"))
 }

@@ -189,8 +189,10 @@ pub fn amla_attention_with_scratch(q: &Matrix, k: &Matrix, v: &Matrix,
             if st.seen[r] {
                 // the MUL-by-ADD: rescale Õ row in place in "GM"
                 let eps = 1.5 * (c_new / st.c[r] - 1.0);
+                // lint:region(add-only)
                 let add = rescale_add(n_new - st.n[r], eps);
                 rescale_row(o.row_mut(r), add);
+                // lint:endregion(add-only)
                 stats.rescale_adds += 1;
             }
             // P <- P * S16 (line 10): fold 1/r'_i into P pre-cast
@@ -387,8 +389,10 @@ pub fn amla_attention_batched(q: &[f32], g: usize, seqs: &[BatchedKv],
 
             if st.seen[r] {
                 let eps = 1.5 * (c_new / st.c[r] - 1.0);
+                // lint:region(add-only)
                 let add = rescale_add(n_new - st.n[r], eps);
                 rescale_row(o.row_mut(r), add);
+                // lint:endregion(add-only)
                 stats.rescale_adds += 1;
             }
             for x in &mut p[r * bs..(r + 1) * bs] {

@@ -31,6 +31,11 @@ pub const DELTA_CLAMP_HI: i32 = 30;
 /// Tie-break epsilon folded into the compensation add (Algorithm 2 line 11).
 pub const ROUND_EPS: f32 = 1e-6;
 
+// lint:region(add-only) — Lemma 3.1 core.  Everything down to
+// `rescale_row` is the paper's MUL-by-ADD: rescaling must be integer
+// adds/shifts on the FP32 bit pattern, and `amla lint` rejects any
+// binary `*` in here (rule add-only, not suppressible).
+
 /// Unsigned exponent field of `f` (0..=255).
 #[inline]
 pub fn exponent_field(f: f32) -> i32 {
@@ -51,7 +56,8 @@ pub fn lemma_applies(f: f32, n: i32) -> bool {
 /// guarding zero bit patterns.
 #[inline]
 pub fn mul_pow2_by_add(f: f32, n: i32) -> f32 {
-    f32::from_bits((f.to_bits() as i32).wrapping_add(n * EXP_ONE) as u32)
+    // n · 2²³ as a shift — the add-only region bans `*` outright
+    f32::from_bits((f.to_bits() as i32).wrapping_add(n << 23) as u32)
 }
 
 /// The guarded form used on accumulator tiles: zeros (E = 0 bit patterns)
@@ -69,10 +75,21 @@ pub fn rescale_element(f: f32, add: i32) -> f32 {
 /// lines 10–12): the exact power-of-two part plus the first-order BF16
 /// compensation `eps = 1.5 (c_i/c_{i-1} - 1)` mapped to the integer
 /// domain with the mantissa-midpoint estimate `M ~ 2^22`.
+///
+/// MUL-free: the compensation term needs `(eps + ROUND_EPS) · 2²³`,
+/// which is itself a power-of-two scaling — so it goes through the
+/// lemma too ([`rescale_element`] with an exponent-field add of 23)
+/// instead of a float multiply.  Bit-identical to the multiply form
+/// for every reachable input (zeros and subnormal sums round to the
+/// same integer; normal sums scale exactly — power-of-two scaling
+/// never rounds, and `|eps| < 2` keeps the exponent far from the
+/// field's edges).  `prop_rescale_add_matches_float_multiply_reference`
+/// pins the equivalence.
 #[inline]
 pub fn rescale_add(delta_n: i32, eps: f32) -> i32 {
     let clamped = delta_n.clamp(DELTA_CLAMP, DELTA_CLAMP_HI);
-    clamped * EXP_ONE + ((eps + ROUND_EPS) * EXP_ONE as f32).round() as i32
+    let eps_scaled = rescale_element(eps + ROUND_EPS, 23 << 23);
+    (clamped << 23) + eps_scaled.round() as i32
 }
 
 /// Apply one rescale add in place over an accumulator row (the paper's
@@ -84,6 +101,8 @@ pub fn rescale_row(row: &mut [f32], add: i32) {
         *x = rescale_element(*x, add);
     }
 }
+
+// lint:endregion(add-only)
 
 /// `round(-m / ln2)` — the running power-of-two exponent n_i.
 #[inline]
@@ -141,6 +160,33 @@ mod tests {
         assert_eq!(rescale_add(3, 0.0), 3 * EXP_ONE + 8); // 1e-6*2^23 ~ 8
         // ...the +8 residue is ~1e-6 relative — the paper's deliberate
         // tie-break bias, also present in the CANN kernel (line 11).
+    }
+
+    #[test]
+    fn rescale_add_matches_float_multiply_reference() {
+        // The MUL-free body must be bit-identical to the float-multiply
+        // form it replaced (test code sits outside the add-only region,
+        // so the reference may multiply).
+        for &(d, eps) in &[(0, 0.0f32), (3, 0.0), (-3, 1e-3), (30, -1e-6),
+                           (-30, -2e-6), (7, 0.25), (-12, -0.75),
+                           (100, 1.5), (-100, -1.5), (0, -1e-6)] {
+            let clamped = d.clamp(DELTA_CLAMP, DELTA_CLAMP_HI);
+            let want = clamped * EXP_ONE
+                + ((eps + ROUND_EPS) * EXP_ONE as f32).round() as i32;
+            assert_eq!(rescale_add(d, eps), want, "d={d} eps={eps}");
+        }
+    }
+
+    #[test]
+    fn prop_rescale_add_matches_float_multiply_reference() {
+        run_prop("rescale_add_mul_free", 4000, |rng| {
+            let d = gen_range(rng, -200, 200) as i32;
+            let eps = rng.uniform_in(-4.0, 4.0);
+            let clamped = d.clamp(DELTA_CLAMP, DELTA_CLAMP_HI);
+            let want = clamped * EXP_ONE
+                + ((eps + ROUND_EPS) * EXP_ONE as f32).round() as i32;
+            assert_eq!(rescale_add(d, eps), want, "d={d} eps={eps}");
+        });
     }
 
     #[test]

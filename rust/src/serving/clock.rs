@@ -91,6 +91,9 @@ pub enum SimClock {
 
 impl SimClock {
     pub fn wall() -> Self {
+        // lint:allow(det-wallclock): Wall mode is the one audited
+        // real-time seam; the deterministic tier always runs Virtual,
+        // which never reads it
         SimClock::Wall { start: Instant::now() }
     }
 

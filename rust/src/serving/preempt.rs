@@ -32,7 +32,7 @@
 //! `chunked_resume_is_bit_identical_and_ttft_honest` in
 //! [`crate::serving`]'s tests.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use crate::coordinator::request::{DecodeRequest, DecodeResult, Outcome,
                                   Priority, RequestId, RequestState};
@@ -96,7 +96,7 @@ struct Carried {
 /// it back into the final result.
 #[derive(Debug, Default)]
 pub struct ResumeLedger {
-    carried: HashMap<RequestId, Carried>,
+    carried: BTreeMap<RequestId, Carried>,
 }
 
 impl ResumeLedger {

@@ -1,0 +1,19 @@
+//! Tier-1 gate: the committed tree must satisfy every `amla-lint`
+//! invariant — determinism markers audited, add-only regions intact
+//! over the rescale core, SAFETY/panic justifications present, no
+//! unaudited `#[allow(...)]`, and `docs/api_surface.txt` in sync —
+//! so `cargo test -q` runs the linter on every push.
+
+use std::path::Path;
+
+#[test]
+fn lint_tree_is_clean() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let findings = amla::analysis::lint_repo(root)
+        .expect("lint walk over rust/src failed");
+    assert!(findings.is_empty(),
+            "amla-lint found {} violation(s):\n{}",
+            findings.len(),
+            findings.iter().map(ToString::to_string)
+                .collect::<Vec<_>>().join("\n"));
+}
