@@ -11,12 +11,17 @@
 //! `BENCH_serving.json` (committed placeholder at the repo root),
 //! mirroring `BENCH_coordinator.json`.
 
+use std::collections::BTreeMap;
+
 use amla::config::{Algo, ServeConfig};
-use amla::coordinator::{generate_trace, DecodeEngine, HostLayerExecutor,
-                        LenDist, WorkloadSpec};
+use amla::coordinator::engine::SeqRuntime;
+use amla::coordinator::{generate_trace, long_context_spec, DecodeEngine,
+                        HostLayerExecutor, LayerExecutor, LenDist,
+                        WorkloadSpec, LONG_CONTEXT_TOKENS};
 use amla::numerics::mla::MlaDims;
 use amla::serving::clock::SimClock;
 use amla::serving::{serve_open_loop, sweep, StepCostModel, SweepConfig};
+use amla::util::json::Json;
 
 fn main() {
     let smoke = std::env::var("AMLA_BENCH_SMOKE").is_ok();
@@ -139,10 +144,78 @@ fn main() {
              report_off.points.last().unwrap().ttft_p99,
              report.points.last().unwrap().ttft_p99);
 
+    // long-context split-KV contrast: the 128k scenario from
+    // `long_context_spec` — a single decoding sequence whose KV history
+    // dwarfs the batch, so every batch worker but one would sit idle
+    // unless the KV scan itself is partitioned.  The history is stood
+    // up synthetically (`warm_synthetic_context`; prefilling 128k
+    // tokens through the layers would dominate the bench), then the
+    // same decode steps run single-pass vs split across 4 workers.
+    // Asserted: bit-identical tokens (the split kernel's frame-replay
+    // contract) and >1 partition per split call (the >1-worker
+    // utilization the route exists for).
+    let long_context = {
+        let ctx = if smoke { 8192 } else { LONG_CONTEXT_TOKENS };
+        let lc_spec = long_context_spec(1, ctx, 5);
+        let gen = match lc_spec.gen_len {
+            LenDist::Fixed(n) => n,
+            _ => unreachable!("long-context generation length is fixed"),
+        };
+        let bucket = ctx + 128;
+        let run = |workers: usize, threshold: usize| {
+            let exec = HostLayerExecutor::new(dims, 2, Algo::Amla, 64,
+                                              vec![64, bucket], 3)
+                .with_split_kv(threshold);
+            let engine = DecodeEngine::new(exec, bucket * 2 / 16 + 16, 16);
+            let mut rt = SeqRuntime::new(2);
+            engine.warm_synthetic_context(&mut rt, ctx, lc_spec.seed)
+                .expect("synthetic long-context warm failed");
+            let mut tokens = Vec::with_capacity(gen);
+            let mut last = 7u32;
+            for _ in 0..gen {
+                last = engine
+                    .step_batch(std::slice::from_mut(&mut rt), &[last],
+                                workers)
+                    .pop()
+                    .expect("one result per sequence")
+                    .expect("long-context decode step failed");
+                tokens.push(last);
+            }
+            (tokens, engine.executor.split_stats()
+                .expect("host executor exposes split counters"))
+        };
+        let t0 = std::time::Instant::now();
+        let (tok_single, stats_single) = run(1, 0);
+        let (tok_split, (calls, parts)) = run(4, 1024);
+        assert_eq!(tok_single, tok_split,
+                   "split-KV flash decoding changed long-context tokens");
+        assert_eq!(stats_single, (0, 0), "single-worker run must not split");
+        assert!(calls > 0, "long-context decode must route through split-KV");
+        assert!(parts >= 2 * calls,
+                "each split call must utilize >1 worker \
+                 ({parts} partitions over {calls} calls)");
+        println!("long-context scenario ({} KV rows{}): {} decode steps, \
+                  {} split calls, mean {:.1} partitions/call, tokens \
+                  bit-identical to the single-pass loop ({:.2?})",
+                 ctx, if smoke { ", SMOKE" } else { "" }, gen, calls,
+                 parts as f64 / calls as f64, t0.elapsed());
+        (ctx, gen, calls, parts)
+    };
+
     // perf-trajectory baseline: BENCH_serving.json at the repo root
     // (opt-in so routine bench runs do not dirty the tree)
     if std::env::var("AMLA_BENCH_RECORD").is_ok() {
-        let json = report.to_json().to_string();
+        let mut json = report.to_json();
+        if let Json::Obj(ref mut root) = json {
+            let (ctx, gen, calls, parts) = long_context;
+            let mut lc = BTreeMap::new();
+            lc.insert("context_rows".into(), Json::Num(ctx as f64));
+            lc.insert("decode_steps".into(), Json::Num(gen as f64));
+            lc.insert("split_calls".into(), Json::Num(calls as f64));
+            lc.insert("split_partitions".into(), Json::Num(parts as f64));
+            root.insert("long_context".into(), Json::Obj(lc));
+        }
+        let json = json.to_string();
         std::fs::write("BENCH_serving.json", format!("{json}\n"))
             .expect("write BENCH_serving.json");
         println!("recorded BENCH_serving.json");

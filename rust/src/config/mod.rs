@@ -28,6 +28,8 @@ use std::collections::BTreeMap;
 
 use anyhow::{anyhow, bail, Result};
 
+pub use crate::numerics::mla::DecodePath;
+
 /// Which attention algorithm the engine serves.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Algo {
@@ -108,6 +110,19 @@ pub struct ServeConfig {
     /// (`--preempt on|off`; on by default).  Evicted sequences resume
     /// with bit-identical tokens — see [`crate::serving::preempt`].
     pub preempt: bool,
+    /// KV length at which a decode sequence's attention block loop is
+    /// partitioned across idle `batch_workers` slots — split-KV flash
+    /// decoding (`--split-kv-threshold`; `0` = off, the default).
+    /// Bit-identical to the single-pass loop at any threshold: the
+    /// split path replays the sequential frame schedule (see
+    /// `docs/ARCHITECTURE.md`, contract 8).
+    pub split_kv_threshold: usize,
+    /// Query-side decode formulation (`--decode-path naive|absorbed`).
+    /// `absorbed` precomputes `W_UQ_nope·W_UK^T` at weight init and
+    /// scores against the latent cache with one GEMM per step — same
+    /// results to ~1e-4 relative, not bit-identical, so `naive` stays
+    /// the default.
+    pub decode_path: DecodePath,
 }
 
 impl Default for ServeConfig {
@@ -133,6 +148,8 @@ impl Default for ServeConfig {
             rate: 4.0,
             starvation_steps: 32,
             preempt: true,
+            split_kv_threshold: 0,
+            decode_path: DecodePath::Naive,
         }
     }
 }
@@ -171,7 +188,13 @@ impl ServeConfig {
         num_field!("workers", self.workers);
         num_field!("batch-workers", self.batch_workers);
         num_field!("prefill-chunk", self.prefill_chunk);
+        num_field!("split-kv-threshold", self.split_kv_threshold);
         num_field!("max-new-tokens", self.max_new_tokens);
+        if let Some(v) = args.get("decode-path") {
+            self.decode_path = DecodePath::parse(v).ok_or_else(|| {
+                anyhow!("--decode-path: expected naive|absorbed, got `{v}`")
+            })?;
+        }
         num_field!("rate", self.rate);
         num_field!("starvation-steps", self.starvation_steps);
         if let Some(v) = args.get("fuse-buckets") {
@@ -229,6 +252,8 @@ pub struct ModelSelect {
     pub sq: usize,
     /// Directory containing `manifest.json` + HLO artifacts (PJRT).
     pub artifact_dir: String,
+    /// Query-side decode formulation (naive vs precomputed absorption).
+    pub decode_path: DecodePath,
 }
 
 /// Latent-KV pool sizing.
@@ -251,6 +276,9 @@ pub struct BatchConfig {
     pub workers: usize,
     /// Fuse same-bucket sequences into one cross-sequence kernel call.
     pub fuse_buckets: bool,
+    /// Split-KV flash-decoding threshold (0 = off): KV length at which
+    /// a decode job partitions its block loop across idle worker slots.
+    pub split_kv_threshold: usize,
 }
 
 /// Chunked prompt prefill.
@@ -317,6 +345,8 @@ impl EngineConfig {
             rate: self.rate,
             starvation_steps: self.preempt.starvation_steps,
             preempt: self.preempt.enabled,
+            split_kv_threshold: self.batch.split_kv_threshold,
+            decode_path: self.model.decode_path,
         }
     }
 
@@ -329,6 +359,7 @@ impl EngineConfig {
                 n1: cfg.n1,
                 sq: cfg.sq,
                 artifact_dir: cfg.artifact_dir.clone(),
+                decode_path: cfg.decode_path,
             },
             pool: PoolConfig {
                 pages: cfg.pool_pages,
@@ -339,6 +370,7 @@ impl EngineConfig {
                 batch_workers: cfg.batch_workers,
                 workers: cfg.workers,
                 fuse_buckets: cfg.fuse_buckets,
+                split_kv_threshold: cfg.split_kv_threshold,
             },
             prefill: PrefillConfig { chunk: cfg.prefill_chunk },
             preempt: PreemptConfig {
@@ -414,6 +446,16 @@ impl EngineConfigBuilder {
 
     pub fn fuse_buckets(mut self, on: bool) -> Self {
         self.cfg.batch.fuse_buckets = on;
+        self
+    }
+
+    pub fn split_kv_threshold(mut self, threshold: usize) -> Self {
+        self.cfg.batch.split_kv_threshold = threshold;
+        self
+    }
+
+    pub fn decode_path(mut self, path: DecodePath) -> Self {
+        self.cfg.model.decode_path = path;
         self
     }
 
@@ -609,12 +651,16 @@ mod tests {
             .max_new_tokens(17)
             .open_loop(true)
             .rate(2.5)
+            .split_kv_threshold(4096)
+            .decode_path(DecodePath::Absorbed)
             .build()
             .unwrap();
         let flat = built.to_serve();
         assert_eq!(flat.algo, Algo::Base);
         assert_eq!(flat.pool_pages, 64);
         assert_eq!(flat.batch_workers, 5);
+        assert_eq!(flat.split_kv_threshold, 4096);
+        assert_eq!(flat.decode_path, DecodePath::Absorbed);
         assert_eq!(EngineConfig::from_serve(&flat), built,
                    "to_serve/from_serve must be lossless");
         // and the defaults of the two surfaces agree
@@ -644,7 +690,9 @@ mod tests {
                                --fuse-buckets off --prefill-chunk 5 \
                                --preempt off --starvation-steps 7 \
                                --max-new-tokens 9 --open-loop --rate 6.5 \
-                               --n1 8 --sq 2 --artifacts mydir"))
+                               --n1 8 --sq 2 --artifacts mydir \
+                               --split-kv-threshold 64 \
+                               --decode-path absorbed"))
             .unwrap()
             .build()
             .unwrap();
@@ -652,10 +700,12 @@ mod tests {
         assert_eq!(built.model.n1, 8);
         assert_eq!(built.model.sq, 2);
         assert_eq!(built.model.artifact_dir, "mydir");
+        assert_eq!(built.model.decode_path, DecodePath::Absorbed);
         assert_eq!(built.pool, PoolConfig { pages: 32, page_size: 4 });
         assert_eq!(built.batch,
                    BatchConfig { max_batch: 2, batch_workers: 3,
-                                 workers: 2, fuse_buckets: false });
+                                 workers: 2, fuse_buckets: false,
+                                 split_kv_threshold: 64 });
         assert_eq!(built.prefill, PrefillConfig { chunk: 5 });
         assert_eq!(built.preempt,
                    PreemptConfig { enabled: false, starvation_steps: 7 });
@@ -666,6 +716,25 @@ mod tests {
         assert!(EngineConfig::builder()
             .apply_args(&args("--prefill-chunk 0"))
             .is_err());
+    }
+
+    #[test]
+    fn split_kv_and_decode_path_flags() {
+        let mut cfg = ServeConfig::default();
+        assert_eq!(cfg.split_kv_threshold, 0, "split-KV defaults off");
+        assert_eq!(cfg.decode_path, DecodePath::Naive,
+                   "naive decode is the bit-stable default");
+        cfg.apply_args(&args("--split-kv-threshold 4096 \
+                              --decode-path absorbed"))
+            .unwrap();
+        assert_eq!(cfg.split_kv_threshold, 4096);
+        assert_eq!(cfg.decode_path, DecodePath::Absorbed);
+        cfg.apply_args(&args("--decode-path naive")).unwrap();
+        assert_eq!(cfg.decode_path, DecodePath::Naive);
+        cfg.apply_args(&args("--split-kv-threshold 0")).unwrap();
+        assert_eq!(cfg.split_kv_threshold, 0, "0 switches splitting off");
+        assert!(cfg.apply_args(&args("--decode-path fused")).is_err());
+        assert!(cfg.apply_args(&args("--split-kv-threshold x")).is_err());
     }
 
     #[test]

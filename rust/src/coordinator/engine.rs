@@ -14,22 +14,23 @@
 //! is the attention/cache machinery, not language modelling.
 
 use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::Mutex;
 
 use anyhow::{anyhow, Context, Result};
 
 use crate::config::{Algo, ServeConfig};
 use crate::kvcache::{BucketArena, PagePool, SequenceCache};
-use crate::numerics::amla::{amla_attention_batched,
-                            amla_attention_with_scratch, AmlaScratch};
+use crate::numerics::amla::{amla_attention_batched, amla_attention_split_kv,
+                            amla_attention_with_scratch, AmlaScratch,
+                            SplitKvScratch};
 use crate::numerics::flash_base::{base_flash_attention_batched,
                                   base_flash_attention_with_scratch,
                                   BatchedKv, FlashConfig};
-use crate::numerics::mla::{decode_step_finish_rows, decode_step_prepare_rows,
-                           decode_step_with_rows, pack_k_rows, MlaDims,
-                           MlaWeights};
-use crate::numerics::Matrix;
+use crate::numerics::mla::{decode_step_finish_rows, decode_step_prepare_spec,
+                           decode_step_spec, pack_k_rows, DecodePath,
+                           MlaDims, MlaWeights, StepSpec};
+use crate::numerics::{Matrix, Rng};
 use crate::runtime::{Engine as PjrtEngine, TensorView};
 
 /// One sequence's slot in a batched layer step: the residual-stream
@@ -130,6 +131,32 @@ pub trait LayerExecutor: Send + Sync {
         let _ = on;
         false
     }
+
+    /// Apply the serving config's split-KV threshold
+    /// ([`ServeConfig::split_kv_threshold`] / `--split-kv-threshold`;
+    /// `0` disables); returns whether the executor has a split-KV
+    /// decode route to configure.
+    fn set_split_kv(&self, threshold: usize) -> bool {
+        let _ = threshold;
+        false
+    }
+
+    /// Apply the serving config's decode-path selection
+    /// ([`ServeConfig::decode_path`] / `--decode-path`); returns
+    /// whether the executor routes it.
+    fn set_decode_path(&self, path: DecodePath) -> bool {
+        let _ = path;
+        false
+    }
+
+    /// Cumulative split-KV route counters `(calls, partitions)` since
+    /// this executor was built — one call per attention invocation
+    /// that actually partitioned its KV blocks, with the partition
+    /// count summed — or `None` when the executor has no split route
+    /// (the default).
+    fn split_stats(&self) -> Option<(u64, u64)> {
+        None
+    }
 }
 
 /// Reusable buffers of the fused cross-sequence route: the gather
@@ -162,6 +189,22 @@ pub struct HostLayerExecutor {
     /// Cumulative fused-call counters for [`LayerExecutor::fusion_stats`].
     fused_groups: AtomicU64,
     fused_jobs: AtomicU64,
+    /// KV length (valid rows) at which a lone decode sequence's block
+    /// loop is partitioned across idle worker slots via
+    /// [`amla_attention_split_kv`].  `0` disables splitting (the
+    /// default).  Atomic for [`LayerExecutor::set_split_kv`].
+    split_kv_threshold: AtomicUsize,
+    /// Whether the query projection uses the precomputed absorbed
+    /// weight ([`DecodePath::Absorbed`]).  Atomic for
+    /// [`LayerExecutor::set_decode_path`].
+    decode_absorbed: AtomicBool,
+    /// Pool of reusable split-KV scratch buffers (grow-only slabs; see
+    /// [`SplitKvScratch`]), pooled like the fused buffers so steady-
+    /// state splitting does not allocate.
+    split_scratch: Mutex<Vec<SplitKvScratch>>,
+    /// Cumulative split-route counters for [`LayerExecutor::split_stats`].
+    split_calls: AtomicU64,
+    split_partitions: AtomicU64,
 }
 
 impl HostLayerExecutor {
@@ -174,7 +217,12 @@ impl HostLayerExecutor {
                buckets,
                fused: Mutex::new(Vec::new()),
                fused_groups: AtomicU64::new(0),
-               fused_jobs: AtomicU64::new(0) }
+               fused_jobs: AtomicU64::new(0),
+               split_kv_threshold: AtomicUsize::new(0),
+               decode_absorbed: AtomicBool::new(false),
+               split_scratch: Mutex::new(Vec::new()),
+               split_calls: AtomicU64::new(0),
+               split_partitions: AtomicU64::new(0) }
     }
 
     /// Pop reusable fused buffers from the pool (grows on demand; the
@@ -211,6 +259,44 @@ impl HostLayerExecutor {
         self.fuse_buckets.load(Ordering::Relaxed)
     }
 
+    /// Builder for the split-KV flash-decoding threshold
+    /// ([`crate::config::ServeConfig::split_kv_threshold`]): decode
+    /// jobs whose KV length reaches `threshold` partition their block
+    /// loop across idle worker slots.  `0` disables (the default).
+    /// Bit-identical either way — the split path replays the
+    /// sequential frame schedule (see [`amla_attention_split_kv`]).
+    pub fn with_split_kv(self, threshold: usize) -> Self {
+        self.split_kv_threshold.store(threshold, Ordering::Relaxed);
+        self
+    }
+
+    /// Builder for the decode-path selection
+    /// ([`crate::config::ServeConfig::decode_path`]); see
+    /// [`DecodePath`] for the naive/absorbed accuracy contract.
+    pub fn with_decode_path(self, path: DecodePath) -> Self {
+        self.decode_absorbed.store(path == DecodePath::Absorbed,
+                                   Ordering::Relaxed);
+        self
+    }
+
+    fn decode_path(&self) -> DecodePath {
+        if self.decode_absorbed.load(Ordering::Relaxed) {
+            DecodePath::Absorbed
+        } else {
+            DecodePath::Naive
+        }
+    }
+
+    /// Pop a reusable split-KV scratch from the pool (grows on demand,
+    /// like the fused-buffer pool).
+    fn acquire_split(&self) -> SplitKvScratch {
+        self.split_scratch.lock().unwrap().pop().unwrap_or_default()
+    }
+
+    fn release_split(&self, scratch: SplitKvScratch) {
+        self.split_scratch.lock().unwrap().push(scratch);
+    }
+
     /// One layer forward on a job's buffers, reusing `scratch` for the
     /// attention block loop.  Moves the job's cache buffers into
     /// matrices and back — no copies on the batched path.  Honors
@@ -218,8 +304,16 @@ impl HostLayerExecutor {
     /// through one multi-row attention call
     /// ([`crate::numerics::amla::amla_prefill_chunk`] / its Base twin),
     /// bit-identical per position to `C` single-row steps.
+    ///
+    /// `split_parts` is the worker budget for split-KV flash decoding
+    /// (spare batch-worker slots + 1, see [`Self::step_batch_threaded`]):
+    /// an AMLA decode job (`sq == 1`) whose KV length has crossed the
+    /// configured `split_kv_threshold` partitions its block loop across
+    /// that many workers via [`amla_attention_split_kv`] —
+    /// bit-identical to the single-pass loop by the frame-replay
+    /// construction, so routing decisions never change output bits.
     fn step_job(&self, layer: usize, job: &mut StepJob,
-                scratch: &mut AmlaScratch) -> Vec<f32> {
+                scratch: &mut AmlaScratch, split_parts: usize) -> Vec<f32> {
         let d = self.dims();
         let w = &self.weights[layer];
         let mut c = Matrix::from_vec(job.bucket, d.d_latent,
@@ -229,14 +323,38 @@ impl HostLayerExecutor {
         let algo = self.algo;
         let block_kv = self.block_kv;
         let sq = job.sq;
-        let y = decode_step_with_rows(&job.x, &mut c, &mut kr, job.valid_len,
-                                      w, sq,
+        let threshold = self.split_kv_threshold.load(Ordering::Relaxed);
+        let spec = StepSpec { valid_len: job.valid_len, rows: sq,
+                              path: self.decode_path() };
+        let y = decode_step_spec(&job.x, &mut c, &mut kr, w, spec,
             |q, k, v, valid| {
                 let cfg = FlashConfig { block_kv, n1: d.n1, sq,
                                         valid_len: valid, mixed_bf16: true };
                 match algo {
-                    Algo::Amla =>
-                        amla_attention_with_scratch(q, k, v, &cfg, scratch).0,
+                    Algo::Amla => {
+                        let parts = if split_parts >= 2 && sq == 1
+                            && threshold > 0 && valid >= threshold
+                        {
+                            split_parts.min(k.rows / block_kv.max(1))
+                        } else {
+                            1
+                        };
+                        if parts >= 2 {
+                            let mut sks = self.acquire_split();
+                            let o = amla_attention_split_kv(q, k, v, &cfg,
+                                                            parts,
+                                                            &mut sks).0;
+                            self.release_split(sks);
+                            self.split_calls
+                                .fetch_add(1, Ordering::Relaxed);
+                            self.split_partitions
+                                .fetch_add(parts as u64, Ordering::Relaxed);
+                            o
+                        } else {
+                            amla_attention_with_scratch(q, k, v, &cfg,
+                                                        scratch).0
+                        }
+                    }
                     Algo::Base =>
                         base_flash_attention_with_scratch(q, k, v, &cfg,
                                                           scratch),
@@ -248,14 +366,14 @@ impl HostLayerExecutor {
     }
 
     /// One fused layer step over a same-`(bucket, sq)` group: every
-    /// job's projection phase runs first ([`decode_step_prepare_rows`],
+    /// job's projection phase runs first ([`decode_step_prepare_spec`],
     /// writing the new cache rows into the job buffers and the absorbed
     /// queries / packed keys into the [`BucketArena`]), then **one**
     /// cross-sequence attention call covers the whole group, then the
     /// per-job output projections ([`decode_step_finish_rows`]).
     ///
     /// Bit-identical to [`Self::step_job`] on each member: the phases
-    /// compose to exactly [`decode_step_with_rows`], and the batched
+    /// compose to exactly [`decode_step_spec`], and the batched
     /// kernels preserve per-row arithmetic across the stacked dimension.
     /// Chunked-prefill jobs fuse too — a group's members share one
     /// chunk size, so the stacked block keeps uniform `[g, Dk]` slabs.
@@ -269,6 +387,7 @@ impl HostLayerExecutor {
         let g = sq * d.n1;
         let dk = d.dk();
         bufs.arena.reset(b, g, bucket, dk);
+        let path = self.decode_path();
         for (i, job) in group.iter_mut().enumerate() {
             debug_assert_eq!(job.bucket, bucket, "mixed buckets in group");
             debug_assert_eq!(job.sq, sq, "mixed chunk sizes in group");
@@ -276,8 +395,9 @@ impl HostLayerExecutor {
                                          std::mem::take(&mut job.c_buf));
             let mut kr = Matrix::from_vec(bucket, d.d_rope,
                                           std::mem::take(&mut job.kr_buf));
-            let q_rows = decode_step_prepare_rows(&job.x, &mut c, &mut kr,
-                                                  job.valid_len, w, sq);
+            let spec = StepSpec { valid_len: job.valid_len, rows: sq, path };
+            let q_rows =
+                decode_step_prepare_spec(&job.x, &mut c, &mut kr, w, spec);
             bufs.arena.q_slab_mut(i).copy_from_slice(&q_rows.data);
             pack_k_rows(&c, &kr, bufs.arena.k_slab_mut(i));
             job.c_buf = c.data;
@@ -312,17 +432,26 @@ impl HostLayerExecutor {
     /// The PR-1 threaded per-sequence path: jobs fan out over a scoped
     /// worker pool, one reusable [`AmlaScratch`] per worker.  Also the
     /// fallback for singleton buckets when fusion is on.
+    ///
+    /// Worker slots the batch leaves idle (`workers > n`) are handed to
+    /// split-KV flash decoding: each job may partition its block loop
+    /// across `workers - n + 1` threads ([`Self::step_job`]), so a lone
+    /// long sequence no longer leaves the pool idle.  The budget is a
+    /// pure function of `(workers, n)` — deterministic, and harmless to
+    /// output bits since the split path is bit-identical.
     fn step_batch_threaded(&self, layer: usize, jobs: &mut [&mut StepJob],
                            workers: usize) -> Vec<Result<Vec<f32>>> {
         let n = jobs.len();
         if n == 0 {
             return Vec::new();
         }
+        let split_parts = workers.saturating_sub(n) + 1;
         let workers = workers.clamp(1, n);
         if workers == 1 {
             let mut scratch = AmlaScratch::new();
             return jobs.iter_mut()
-                .map(|j| Ok(self.step_job(layer, j, &mut scratch)))
+                .map(|j| Ok(self.step_job(layer, j, &mut scratch,
+                                          split_parts)))
                 .collect();
         }
         let chunk = n.div_ceil(workers);
@@ -334,7 +463,8 @@ impl HostLayerExecutor {
                     scope.spawn(move || {
                         let mut scratch = AmlaScratch::new();
                         ch.iter_mut()
-                            .map(|j| self.step_job(layer, j, &mut scratch))
+                            .map(|j| self.step_job(layer, j, &mut scratch,
+                                                   split_parts))
                             .collect::<Vec<_>>()
                     })
                 })
@@ -367,7 +497,7 @@ impl LayerExecutor for HostLayerExecutor {
                                 kr_buf: kr_cache.to_vec(), bucket,
                                 valid_len, sq: self.dims().sq };
         let mut scratch = AmlaScratch::new();
-        let y = self.step_job(layer, &mut job, &mut scratch);
+        let y = self.step_job(layer, &mut job, &mut scratch, 1);
         c_cache.copy_from_slice(&job.c_buf);
         kr_cache.copy_from_slice(&job.kr_buf);
         Ok(y)
@@ -488,6 +618,22 @@ impl LayerExecutor for HostLayerExecutor {
     fn set_fuse(&self, on: bool) -> bool {
         self.fuse_buckets.store(on, Ordering::Relaxed);
         true
+    }
+
+    fn set_split_kv(&self, threshold: usize) -> bool {
+        self.split_kv_threshold.store(threshold, Ordering::Relaxed);
+        true
+    }
+
+    fn set_decode_path(&self, path: DecodePath) -> bool {
+        self.decode_absorbed.store(path == DecodePath::Absorbed,
+                                   Ordering::Relaxed);
+        true
+    }
+
+    fn split_stats(&self) -> Option<(u64, u64)> {
+        Some((self.split_calls.load(Ordering::Relaxed),
+              self.split_partitions.load(Ordering::Relaxed)))
     }
 
     /// The host numerics are shape-dynamic: any chunk that fits a KV
@@ -990,6 +1136,43 @@ impl<E: LayerExecutor> DecodeEngine<E> {
     pub fn prefill(&self, rt: &mut SeqRuntime, prompt: &[u32]) -> Result<u32> {
         self.prefill_chunked(rt, prompt, 1)
     }
+
+    /// Seed a sequence's caches with `ctx` rows of deterministic
+    /// synthetic latent/rope state, as if a `ctx`-token prompt had
+    /// been prefilled — without running `ctx` layer forwards.  The
+    /// long-context bench tier uses this to stand up 128k-row KV
+    /// states in milliseconds; decode steps on top of the synthetic
+    /// history exercise exactly the same gather/attend/scatter path
+    /// as real history (the kernels never see where rows came from).
+    ///
+    /// Requires empty caches (the synthetic rows are the whole
+    /// history) and room for at least one decode step on top.
+    pub fn warm_synthetic_context(&self, rt: &mut SeqRuntime, ctx: usize,
+                                  seed: u64) -> Result<()> {
+        let d = self.executor.dims();
+        self.bucket_for(ctx + 1)
+            .context("synthetic context leaves no decode headroom")?;
+        let mut pool = self.pool.lock().unwrap();
+        let mut lat = vec![0f32; d.d_latent];
+        let mut rope = vec![0f32; d.d_rope];
+        for (layer, cache) in rt.caches.iter_mut().enumerate() {
+            assert_eq!(cache.len(), 0,
+                       "synthetic warm requires an empty sequence");
+            cache.reserve_rows(&mut pool, ctx)
+                .context("latent pool exhausted")?;
+            let mut rng = Rng::new(seed ^ ((layer as u64) << 32));
+            for row in 0..ctx {
+                for x in lat.iter_mut() {
+                    *x = rng.gaussian() * 0.1;
+                }
+                for x in rope.iter_mut() {
+                    *x = rng.gaussian() * 0.1;
+                }
+                cache.write_row(&mut pool, row, &lat, &rope);
+            }
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -1120,6 +1303,78 @@ mod tests {
         assert!(stats_on.1 >= 2 * stats_on.0,
                 "fused groups must hold >= 2 jobs each");
         assert_eq!(stats_off, (0, 0), "fusion off must not fuse");
+    }
+
+    #[test]
+    fn split_kv_route_bit_identical_and_counted() {
+        // same prompts, split-KV on (threshold 16, 4 workers over 2
+        // sequences => 3-way splits) vs off: token streams must be
+        // bit-identical — the split path replays the sequential frame
+        // schedule — and the split counters must move only when the
+        // route actually partitioned a block loop
+        let dims = MlaDims { d_model: 64, n1: 2, d_head: 16, q_rank: 32,
+                             d_latent: 24, d_rope: 8, sq: 1 };
+        let prompts: Vec<Vec<u32>> = vec![
+            vec![9; 70], // long sequence: crosses into the 128 bucket
+            vec![1, 2, 3],
+        ];
+        let run = |threshold: usize| {
+            let exec = HostLayerExecutor::new(dims, 2, Algo::Amla, 32,
+                                              vec![64, 128], 7)
+                .with_fuse(false)
+                .with_split_kv(threshold);
+            let eng = DecodeEngine::new(exec, 128, 16);
+            let mut rts: Vec<SeqRuntime> =
+                (0..prompts.len()).map(|_| SeqRuntime::new(2)).collect();
+            let toks =
+                crate::testing::drive_prompts(&eng, &mut rts, &prompts, 4);
+            let last: Vec<u32> =
+                toks.iter().map(|t| *t.last().unwrap()).collect();
+            let finals = eng.step_batch(&mut rts, &last, 4);
+            let finals: Vec<u32> =
+                finals.into_iter().map(|r| r.unwrap()).collect();
+            (finals, eng.executor.split_stats().unwrap())
+        };
+        let (tokens_on, stats_on) = run(16);
+        let (tokens_off, stats_off) = run(0);
+        assert_eq!(tokens_on, tokens_off,
+                   "split-KV route diverged from single-pass route");
+        assert!(stats_on.0 > 0, "split route never taken");
+        assert!(stats_on.1 >= 2 * stats_on.0,
+                "each split call must cover >= 2 partitions");
+        assert_eq!(stats_off, (0, 0), "threshold 0 must never split");
+    }
+
+    #[test]
+    fn absorbed_decode_path_tracks_naive() {
+        // engine-level accuracy contract for DecodePath::Absorbed: the
+        // final residual stream stays within 1e-2 relative Frobenius of
+        // the naive path.  Token equality is deliberately NOT asserted
+        // — the readout quantization can sit on a knife edge under a
+        // 1e-4-level perturbation.
+        let dims = MlaDims { d_model: 64, n1: 2, d_head: 16, q_rank: 32,
+                             d_latent: 24, d_rope: 8, sq: 1 };
+        let run = |path| {
+            let exec = HostLayerExecutor::new(dims, 2, Algo::Amla, 32,
+                                              vec![64, 128], 7)
+                .with_decode_path(path);
+            let eng = DecodeEngine::new(exec, 64, 16);
+            let mut rt = SeqRuntime::new(2);
+            let mut x = Vec::new();
+            for t in [5u32, 6, 7, 8] {
+                let traces = eng.step_batch_traced(
+                    std::slice::from_mut(&mut rt), &[t], 1);
+                x = traces.into_iter().next().unwrap().unwrap().x;
+            }
+            assert_eq!(rt.caches[0].len(), 4);
+            x
+        };
+        use crate::numerics::mla::DecodePath;
+        let x_naive = run(DecodePath::Naive);
+        let x_abs = run(DecodePath::Absorbed);
+        let err = crate::numerics::rel_frobenius_error(&x_abs, &x_naive);
+        assert!(err < 1e-2, "absorbed residual error {err}");
+        assert!(x_abs.iter().all(|v| v.is_finite()));
     }
 
     /// Bit-exact snapshot of every cache row of every layer.

@@ -94,6 +94,13 @@ pub struct Metrics {
     pub fused_groups: u64,
     /// Sequence-layer jobs that went through a fused call.
     pub fused_jobs: u64,
+    /// Attention calls routed through split-KV flash decoding (a long
+    /// sequence's KV blocks partitioned across spare batch workers and
+    /// merged back — see [`crate::numerics::amla::amla_attention_split_kv`]).
+    pub split_calls: u64,
+    /// Partitions executed across all split-KV calls; the mean
+    /// partitions-per-call is `split_partitions / split_calls`.
+    pub split_partitions: u64,
     /// Recompute-style evictions performed by the open-loop scheduler
     /// (a preempted request is re-enqueued with `prompt ⧺ generated`
     /// and counted once per eviction).
@@ -182,6 +189,10 @@ impl Metrics {
              amla_fused_groups {}\n\
              # TYPE amla_fused_jobs counter\n\
              amla_fused_jobs {}\n\
+             # TYPE amla_split_calls counter\n\
+             amla_split_calls {}\n\
+             # TYPE amla_split_partitions counter\n\
+             amla_split_partitions {}\n\
              # TYPE amla_preemptions counter\n\
              amla_preemptions {}\n\
              # TYPE amla_prefill_chunks counter\n\
@@ -212,6 +223,8 @@ impl Metrics {
             self.steps_per_sec(),
             self.fused_groups,
             self.fused_jobs,
+            self.split_calls,
+            self.split_partitions,
             self.preemptions,
             self.prefill_chunks,
             self.prompt_tokens,
@@ -257,12 +270,16 @@ mod tests {
         let mut m = Metrics::default();
         m.fused_groups = 3;
         m.fused_jobs = 9;
+        m.split_calls = 4;
+        m.split_partitions = 11;
         m.preemptions = 2;
         m.prefill_chunks = 5;
         m.prompt_tokens = 17;
         let text = m.render();
         assert!(text.contains("amla_fused_groups 3"));
         assert!(text.contains("amla_fused_jobs 9"));
+        assert!(text.contains("amla_split_calls 4"));
+        assert!(text.contains("amla_split_partitions 11"));
         assert!(text.contains("amla_preemptions 2"));
         assert!(text.contains("amla_prefill_chunks 5"));
         assert!(text.contains("amla_prompt_tokens 17"));

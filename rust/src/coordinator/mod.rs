@@ -139,5 +139,6 @@ pub use metrics::Metrics;
 pub use request::{DecodeRequest, DecodeResult, Outcome, Priority,
                   RequestId, RequestState};
 pub use scheduler::{serve, ServeReport, StepCore};
-pub use workload::{generate_trace, requests_of, ArrivalProcess, LenDist,
-                   TracedRequest, WorkloadSpec};
+pub use workload::{generate_trace, long_context_spec, requests_of,
+                   ArrivalProcess, LenDist, TracedRequest, WorkloadSpec,
+                   LONG_CONTEXT_TOKENS};

@@ -254,33 +254,57 @@ impl StepCore {
     }
 }
 
+/// Cumulative executor-counter baselines captured by [`init_run`]:
+/// the executor's fused / split counters are monotone across runs, so
+/// [`finish_run_metrics`] reports per-run deltas against this snapshot.
+#[derive(Debug, Clone, Copy, Default)]
+pub(crate) struct RunBaseline {
+    /// `(fused_groups, fused_jobs)` at run start, if the executor
+    /// exposes fusion counters.
+    fused: Option<(u64, u64)>,
+    /// `(split_calls, split_partitions)` at run start, if the executor
+    /// exposes split-KV counters.
+    split: Option<(u64, u64)>,
+}
+
 /// Shared run setup for both serve loops: build the admission batcher
 /// (the pool-row budget is **per layer** — a token consumes one row in
-/// every layer) and apply the config's fusion toggle (no-op on
-/// executors without a fused route, e.g. PJRT pending `[B>1]`
-/// executables).  Returns the batcher plus the cumulative
-/// fused-counter baseline for [`finish_run_metrics`].
+/// every layer) and apply the config's executor toggles — bucket
+/// fusion, the split-KV flash-decoding threshold, and the MLA decode
+/// path (each a no-op on executors without the corresponding route,
+/// e.g. PJRT pending `[B>1]` executables).  Returns the batcher plus
+/// the cumulative counter baselines for [`finish_run_metrics`].
 pub(crate) fn init_run<E: LayerExecutor>(engine: &DecodeEngine<E>,
                                          cfg: &ServeConfig)
-                                         -> (Batcher, Option<(u64, u64)>) {
+                                         -> (Batcher, RunBaseline) {
     let n_layers = engine.executor.n_layers();
     let pool_rows = cfg.pool_pages * cfg.page_size;
     let batcher = Batcher::new(cfg.max_batch, pool_rows / n_layers.max(1));
     engine.executor.set_fuse(cfg.fuse_buckets);
-    (batcher, engine.executor.fusion_stats())
+    engine.executor.set_split_kv(cfg.split_kv_threshold);
+    engine.executor.set_decode_path(cfg.decode_path);
+    let baseline = RunBaseline { fused: engine.executor.fusion_stats(),
+                                 split: engine.executor.split_stats() };
+    (batcher, baseline)
 }
 
-/// Shared run teardown: executor-level fused counters are cumulative
-/// across runs, so the run's metrics report deltas against the
-/// [`init_run`] baseline.
+/// Shared run teardown: executor-level fused / split counters are
+/// cumulative across runs, so the run's metrics report deltas against
+/// the [`init_run`] baseline.
 pub(crate) fn finish_run_metrics<E: LayerExecutor>(engine: &DecodeEngine<E>,
-                                                   fused0: Option<(u64, u64)>,
+                                                   baseline: RunBaseline,
                                                    metrics: &mut Metrics) {
     if let (Some((g0, j0)), Some((g1, j1))) =
-        (fused0, engine.executor.fusion_stats())
+        (baseline.fused, engine.executor.fusion_stats())
     {
         metrics.fused_groups = g1.saturating_sub(g0);
         metrics.fused_jobs = j1.saturating_sub(j0);
+    }
+    if let (Some((c0, p0)), Some((c1, p1))) =
+        (baseline.split, engine.executor.split_stats())
+    {
+        metrics.split_calls = c1.saturating_sub(c0);
+        metrics.split_partitions = p1.saturating_sub(p0);
     }
 }
 
@@ -463,6 +487,34 @@ mod tests {
         assert!(groups_on > 0, "no fused groups recorded");
         assert!(jobs_on >= 2 * groups_on);
         assert_eq!(groups_off, 0, "--fuse-buckets off must disable fusion");
+    }
+
+    #[test]
+    fn split_kv_serving_matches_unsplit_and_records_metrics() {
+        // one long sequence with a spare batch worker: decode steps in
+        // the 64-row bucket split the KV scan across 2 partitions.  The
+        // split kernel is bit-identical to the single pass, so the
+        // served tokens must not change; the run metrics must show the
+        // split-route deltas, and threshold 0 must disable the route.
+        let reqs = || -> Vec<DecodeRequest> {
+            vec![DecodeRequest::new(0, (0..40).map(|t| 3 + t).collect(), 6)]
+        };
+        let run = |threshold: usize| {
+            let engine = small_engine();
+            let mut c = cfg(1, 2);
+            c.split_kv_threshold = threshold;
+            let report = serve(&engine, reqs(), &c).unwrap();
+            (report.results[0].tokens.clone(),
+             report.metrics.split_calls, report.metrics.split_partitions)
+        };
+        let (tok_on, calls_on, parts_on) = run(16);
+        let (tok_off, calls_off, _) = run(0);
+        assert_eq!(tok_on.len(), 6);
+        assert_eq!(tok_on, tok_off, "split-KV decoding changed tokens");
+        assert!(calls_on > 0, "no split-KV calls recorded");
+        assert!(parts_on >= 2 * calls_on, "splits must use >= 2 partitions");
+        assert_eq!(calls_off, 0,
+                   "--split-kv-threshold 0 must disable splitting");
     }
 
     #[test]

@@ -136,6 +136,32 @@ pub fn requests_of(trace: &[TracedRequest]) -> Vec<DecodeRequest> {
     trace.iter().map(|t| t.request.clone()).collect()
 }
 
+/// Context length of the full long-context scenario: 128k tokens.
+pub const LONG_CONTEXT_TOKENS: usize = 131_072;
+
+/// The long-context serving scenario: a few sequences whose KV history
+/// dwarfs the batch — the regime split-KV flash decoding exists for
+/// (one decode row against a 128k-row cache leaves every spare batch
+/// worker idle unless the KV scan itself is partitioned; see
+/// [`crate::numerics::amla::amla_attention_split_kv`]).  Prompts are
+/// fixed at `context` tokens ([`LONG_CONTEXT_TOKENS`] for the full
+/// scenario; benches scale it down for smoke runs) and generation is
+/// short and fixed so the run is decode-dominated over a huge cache
+/// rather than prefill-dominated.  Arrivals are sparse Poisson: the
+/// batch stays near-empty, which is exactly when
+/// [`crate::config::ServeConfig::split_kv_threshold`] pays off.
+pub fn long_context_spec(requests: usize, context: usize, seed: u64)
+                         -> WorkloadSpec {
+    WorkloadSpec {
+        requests,
+        rate: 0.5,
+        arrivals: ArrivalProcess::Poisson,
+        prompt_len: LenDist::Fixed(context),
+        gen_len: LenDist::Fixed(32),
+        seed,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -238,6 +264,21 @@ mod tests {
         // heavy tail: p99 well above the median
         let p99 = xs[n * 99 / 100] as f64;
         assert!(p99 > 3.0 * median, "p99 {p99} vs median {median}");
+    }
+
+    #[test]
+    fn long_context_spec_generates_fixed_huge_prompts() {
+        let spec = long_context_spec(2, LONG_CONTEXT_TOKENS, 9);
+        let trace = generate_trace(&spec);
+        assert_eq!(trace.len(), 2);
+        for t in &trace {
+            assert_eq!(t.request.prompt.len(), 131_072);
+            assert_eq!(t.request.max_new_tokens, 32);
+        }
+        // deterministic across regenerations, like every other spec
+        let again = generate_trace(&spec);
+        assert_eq!(trace[0].request.prompt, again[0].request.prompt);
+        assert_eq!(trace[0].arrival, again[0].arrival);
     }
 
     #[test]

@@ -70,6 +70,14 @@ USAGE:
                   [--prefill-chunk C] [--max-new-tokens T] [--artifacts DIR]
                   [--open-loop] [--rate R] [--starvation-steps S]
                   [--preempt on|off] [--virtual-clock]
+                  [--split-kv-threshold N] [--decode-path naive|absorbed]
+                  # --split-kv-threshold N partitions a long decode
+                  # step's KV scan across idle batch workers once its
+                  # context reaches N rows (0 = off; bit-identical to
+                  # the single-pass loop)
+                  # --decode-path absorbed scores queries against the
+                  # latent cache via the precomputed absorbed weights
+                  # (~1e-4 accuracy contract vs naive, not bitwise)
                   # --open-loop serves a Poisson trace arrival-driven:
                   # requests appear at their arrival times, starved heads
                   # may preempt (recompute eviction, bit-identical resume)

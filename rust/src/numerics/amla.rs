@@ -17,7 +17,8 @@
 use super::bf16::{bf16_round, matmul_nn_bf16};
 use super::flash_base::{score_block_into, BatchedKv, FlashConfig,
                         ScoreBlock};
-use super::fp32::{exponent_of_max, rescale_add, rescale_row};
+use super::fp32::{exponent_of_max, rescale_add, rescale_row, DELTA_CLAMP,
+                  DELTA_CLAMP_HI};
 use super::golden::row_limits;
 use super::Matrix;
 
@@ -46,6 +47,115 @@ impl AmlaState {
                n: vec![0; g], c: vec![1.0; g], s16: vec![1.0; g],
                seen: vec![false; g] }
     }
+
+    /// Flash-decoding combine: fold `other`'s partial state and
+    /// accumulator rows into `self`/`o_self`.  Both operands must
+    /// cover the same query rows over **disjoint** KV ranges, with
+    /// un-normalized accumulators (normalization happens once, after
+    /// the last merge, exactly like the single-pass loop's last [V]).
+    ///
+    /// The loser frame's accumulator is rebased onto the winner frame
+    /// with the paper's MUL-by-ADD: the exact factor
+    /// `e^{m_l - m_w} · S16_w / S16_l == 2^{n_w - n_l} · (c_w / c_l)`
+    /// is the same `rescale_add(Δn, 1.5·(c_w/c_l - 1))` shape the
+    /// block loop applies — except Δn is walked in clamp-sized hops
+    /// (each an exact Lemma 3.1 power-of-two add) so merges whose row
+    /// maxima differ by more than `DELTA_CLAMP_HI` frames stay exact
+    /// instead of silently saturating at ±30.
+    ///
+    /// Contracts (pinned in the test module):
+    /// * merging a partial that never saw an unmasked key
+    ///   (`seen == false`, `m == -inf`, `l == 0`) is an exact bitwise
+    ///   no-op on the other operand, under either operand order;
+    /// * the iterative Δn stepping is bit-identical to a hypothetical
+    ///   single *unclamped* exponent add (`merge_clamp_hops_match_
+    ///   unclamped_reference`, Δn ∈ {±29, ±30, ±31, ±60});
+    /// * merged-then-normalized output tracks the unsplit loop to
+    ///   ~1e-5 relative error.  It is **not** bit-identical to the
+    ///   sequential loop (the `ℓ·α + Σp` chain does not telescope in
+    ///   floats, and the compensation residue is not distributive over
+    ///   the accumulator sum) — the production split path uses frame
+    ///   replay for bit-identity instead; see
+    ///   [`amla_attention_split_kv`].
+    pub fn merge(&mut self, o_self: &mut Matrix, other: &AmlaState,
+                 o_other: &Matrix) {
+        let g = self.m.len();
+        assert_eq!(other.m.len(), g, "merge row-count mismatch");
+        assert_eq!(o_self.rows, g, "merge accumulator mismatch");
+        assert_eq!(o_other.rows, g, "merge accumulator mismatch");
+        for r in 0..g {
+            if !other.seen[r] {
+                continue; // masked partition row: exact bitwise no-op
+            }
+            if !self.seen[r] {
+                // we never saw a key: adopt the other frame bitwise
+                self.m[r] = other.m[r];
+                self.l[r] = other.l[r];
+                self.n[r] = other.n[r];
+                self.c[r] = other.c[r];
+                self.s16[r] = other.s16[r];
+                self.seen[r] = true;
+                o_self.row_mut(r).copy_from_slice(o_other.row(r));
+                continue;
+            }
+            // winner = the larger running max; ties keep self's frame
+            if other.m[r] > self.m[r] {
+                // self is the loser: rebase our accumulator row onto
+                // the winner frame, then add the winner row in
+                let alpha = (self.m[r] - other.m[r]).exp();
+                let eps = 1.5 * (other.c[r] / self.c[r] - 1.0);
+                rebase_row(o_self.row_mut(r), other.n[r] - self.n[r], eps);
+                for (x, &w) in
+                    o_self.row_mut(r).iter_mut().zip(o_other.row(r))
+                {
+                    *x += w;
+                }
+                self.l[r] = other.l[r] + self.l[r] * alpha;
+                self.m[r] = other.m[r];
+                self.n[r] = other.n[r];
+                self.c[r] = other.c[r];
+                self.s16[r] = other.s16[r];
+            } else {
+                // other is the loser: rebase a copy of its row into ours
+                let alpha = (other.m[r] - self.m[r]).exp();
+                let eps = 1.5 * (self.c[r] / other.c[r] - 1.0);
+                let mut tmp = o_other.row(r).to_vec();
+                rebase_row(&mut tmp, self.n[r] - other.n[r], eps);
+                for (x, &w) in o_self.row_mut(r).iter_mut().zip(&tmp) {
+                    *x += w;
+                }
+                self.l[r] += other.l[r] * alpha;
+            }
+        }
+    }
+}
+
+/// Rebase one un-normalized accumulator row across frames: multiply by
+/// `2^delta_n` times the first-order compensation encoded by `eps`, as
+/// integer exponent adds.  `delta_n` beyond the ±`DELTA_CLAMP_HI`
+/// window is walked in clamp-sized hops — each hop is an exact
+/// power-of-two multiply (Lemma 3.1, no compensation residue), and the
+/// in-window remainder plus `eps` goes through the block loop's
+/// combined [`rescale_add`].  Because the hops and the final add are
+/// all integer adds on the same bit pattern, the walk is bit-identical
+/// to a single unclamped add of `delta_n·2²³` plus the residue, for
+/// every element whose exponent field stays inside the lemma domain
+/// along the way (guaranteed for accumulators the AMLA loop produces:
+/// rebasing always scales the *smaller*-max partial toward zero).
+fn rebase_row(row: &mut [f32], delta_n: i32, eps: f32) {
+    let mut dn = delta_n;
+    // lint:region(add-only)
+    while dn > DELTA_CLAMP_HI {
+        rescale_row(row, DELTA_CLAMP_HI << 23);
+        dn -= DELTA_CLAMP_HI;
+    }
+    while dn < DELTA_CLAMP {
+        rescale_row(row, DELTA_CLAMP << 23);
+        dn -= DELTA_CLAMP;
+    }
+    let add = rescale_add(dn, eps);
+    rescale_row(row, add);
+    // lint:endregion(add-only)
 }
 
 /// Reusable scratch for the block loop of [`amla_attention_with_scratch`]
@@ -125,6 +235,31 @@ pub fn amla_attention_with_scratch(q: &Matrix, k: &Matrix, v: &Matrix,
                                    cfg: &FlashConfig,
                                    scratch: &mut AmlaScratch)
                                    -> (Matrix, AmlaStats) {
+    let (o, _, stats) = amla_attention_with_state(q, k, v, cfg, scratch);
+    (o, stats)
+}
+
+/// [`amla_attention_with_scratch`] also returning the final per-row
+/// [`AmlaState`] — the split-KV suites compare it bit-for-bit against
+/// the replayed state of [`amla_attention_split_kv_with_state`].
+pub fn amla_attention_with_state(q: &Matrix, k: &Matrix, v: &Matrix,
+                                 cfg: &FlashConfig,
+                                 scratch: &mut AmlaScratch)
+                                 -> (Matrix, AmlaState, AmlaStats) {
+    let (mut o, st, stats) = amla_attention_partial(q, k, v, cfg, scratch);
+    amla_normalize(&mut o, &st);
+    (o, st, stats)
+}
+
+/// The block loop **without** the final normalization — the
+/// flash-decoding partial producer: run one KV partition into an
+/// un-normalized accumulator + [`AmlaState`], combine partials with
+/// [`AmlaState::merge`], then [`amla_normalize`] once after the last
+/// merge (mirroring the single pass, which normalizes exactly once).
+pub fn amla_attention_partial(q: &Matrix, k: &Matrix, v: &Matrix,
+                              cfg: &FlashConfig,
+                              scratch: &mut AmlaScratch)
+                              -> (Matrix, AmlaState, AmlaStats) {
     let (g, s2, dv) = (q.rows, k.rows, v.cols);
     assert_eq!(s2 % cfg.block_kv, 0, "S2 must be a multiple of block_kv");
     let n1 = if cfg.n1 == 0 { g } else { cfg.n1 };
@@ -233,12 +368,18 @@ pub fn amla_attention_with_scratch(q: &Matrix, k: &Matrix, v: &Matrix,
         }
     }
 
-    // Last [V]: O <- O / (l_N * S16)  (Algorithm 2 line 20).  The
-    // normalization reads the S16 stored in `st` — the same state the
-    // per-block updates maintain — so a trailing fully-masked block
-    // (which `continue`s every row) cannot leave the denominator out of
-    // sync with `st.n`/`st.c`.
-    for r in 0..g {
+    (o, st, stats)
+}
+
+/// Last [V]: `O ← O / (ℓ_N · S16)` (Algorithm 2 line 20) as a
+/// standalone step, applied by [`amla_attention_with_state`] and once
+/// after the final [`AmlaState::merge`] of a flash-decoding combine.
+/// The denominator reads the `S16` stored in `st` — the same state the
+/// per-block updates maintain — so a trailing fully-masked block
+/// (which `continue`s every row) cannot leave it out of sync with
+/// `st.n`/`st.c`; fully-masked rows stay zero.
+pub fn amla_normalize(o: &mut Matrix, st: &AmlaState) {
+    for r in 0..o.rows {
         if !st.seen[r] {
             continue; // fully-masked row: output stays zero
         }
@@ -250,7 +391,6 @@ pub fn amla_attention_with_scratch(q: &Matrix, k: &Matrix, v: &Matrix,
             }
         }
     }
-    (o, stats)
 }
 
 /// Algorithm 2 over a **prompt chunk**: `cfg.sq = C` query positions of
@@ -450,6 +590,326 @@ pub fn amla_attention_batched(q: &[f32], g: usize, seqs: &[BatchedKv],
         }
     }
     (o, stats)
+}
+
+/// Reusable scratch for [`amla_attention_split_kv`]: whole-sequence
+/// score/probability slabs, per-(block, row) maxima / frame maxima /
+/// row sums, and per-block `T = P·V` slabs.  Grow-never-shrink like
+/// [`AmlaScratch`]; every slot a call reads is rewritten by an earlier
+/// phase of the *same* call (phase A writes all `nblk` score/max slabs
+/// before the prefix pass reads them, phase B rewrites `sp` in place
+/// and fills `rowsum`/`t` before phase C reads them), so reuse across
+/// shrinking partition counts or sequence lengths cannot leak stale
+/// values — pinned by `split_scratch_shrink_then_reuse_is_bit_
+/// identical`.
+#[derive(Debug, Default)]
+pub struct SplitKvScratch {
+    /// `[nblk, g, block_kv]`: masked scores (phase A), overwritten in
+    /// place with the S16-folded `P` values (phase B).
+    sp: Vec<f32>,
+    /// `[nblk, g]` per-(block, row) score maxima (phase A).
+    blk_max: Vec<f32>,
+    /// `[nblk, g]` sequential frame maxima (serial prefix pass).
+    frame: Vec<f32>,
+    /// `[nblk, g]` per-(block, row) `P` row sums in the true frame
+    /// (phase B).
+    rowsum: Vec<f32>,
+    /// `[nblk, g, dv]` per-block `T = P·V` slabs (phase B).
+    t: Vec<f32>,
+}
+
+impl SplitKvScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Grow (never shrink) to fit an `nblk`-block `[g, block_kv] x
+    /// [block_kv, dv]` sequence.
+    fn ensure(&mut self, nblk: usize, g: usize, block_kv: usize,
+              dv: usize) {
+        let grow = |v: &mut Vec<f32>, len: usize| {
+            if v.len() < len {
+                v.resize(len, 0.0);
+            }
+        };
+        grow(&mut self.sp, nblk * g * block_kv);
+        grow(&mut self.blk_max, nblk * g);
+        grow(&mut self.frame, nblk * g);
+        grow(&mut self.rowsum, nblk * g);
+        grow(&mut self.t, nblk * g * dv);
+    }
+}
+
+/// Split-KV flash decoding: Algorithm 2 over the full KV range with
+/// the expensive block work partitioned across `parts` workers —
+/// **bit-identical to the single-pass loop**
+/// ([`amla_attention_with_scratch`]) for every partition count, by
+/// construction.
+///
+/// A naive flash-decoding split (independent per-partition softmax
+/// frames + [`AmlaState::merge`]) cannot be bit-identical: the
+/// `ℓ ← ℓ·α + Σp` recurrence does not telescope in floats, and the
+/// `rescale_add` compensation residue is neither a uniform multiply
+/// nor distributive over the accumulator sum.  Instead the split path
+/// **replays the sequential frame schedule**:
+///
+/// * **Phase A (parallel)** — each partition scores its contiguous
+///   block range ([C1] + mask) and records per-(block, row) maxima;
+/// * **serial prefix pass** — a per-row running max over the block
+///   maxima reconstructs the exact frame `m_new` the sequential loop
+///   uses at every block.  This is sound because skipped zero-mass
+///   blocks never advance the frame (`Σp == 0` forces
+///   `blk_max < m`), and a row's first contributing block always has
+///   `Σp >= 1`, so the sequential `st.m` *is* the prefix max;
+/// * **Phase B (parallel)** — each partition recomputes its `P`
+///   blocks in the true frames, folds `S16` (a pure function of the
+///   frame; skipped rows are all `+0`, and `0·S16 == +0` bitwise),
+///   and forms its per-block `T = P·V` slabs with the exact [C2]
+///   operand shapes;
+/// * **Phase C (serial, cheap)** — replay the scalar [V1] recurrence
+///   (state + `rescale_add`/`rescale_row` on the accumulator) block
+///   by block from the recorded frames/row sums, interleaved with the
+///   per-block `O += T` adds, exactly as the single pass orders them.
+///
+/// Every float expression is the single-pass expression evaluated on
+/// the same operands in the same order, so the output *and* the final
+/// [`AmlaState`] match bit for bit — pinned across partition counts,
+/// precisions, and valid-len block edges by
+/// `prop_split_kv_equals_single_pass` and the engine/golden tiers.
+pub fn amla_attention_split_kv(q: &Matrix, k: &Matrix, v: &Matrix,
+                               cfg: &FlashConfig, parts: usize,
+                               scratch: &mut SplitKvScratch)
+                               -> (Matrix, AmlaStats) {
+    let (o, _, stats) =
+        amla_attention_split_kv_with_state(q, k, v, cfg, parts, scratch);
+    (o, stats)
+}
+
+/// [`amla_attention_split_kv`] also returning the replayed final
+/// [`AmlaState`] (bit-identical to the single-pass state).
+pub fn amla_attention_split_kv_with_state(q: &Matrix, k: &Matrix,
+                                          v: &Matrix, cfg: &FlashConfig,
+                                          parts: usize,
+                                          scratch: &mut SplitKvScratch)
+                                          -> (Matrix, AmlaState,
+                                              AmlaStats) {
+    let (g, s2, dv) = (q.rows, k.rows, v.cols);
+    assert_eq!(s2 % cfg.block_kv, 0, "S2 must be a multiple of block_kv");
+    let bs = cfg.block_kv;
+    let nblk = s2 / bs;
+    let mut stats = AmlaStats::default();
+    if nblk == 0 {
+        return (Matrix::zeros(g, dv), AmlaState::new(g), stats);
+    }
+    let parts = parts.clamp(1, nblk);
+    let n1 = if cfg.n1 == 0 { g } else { cfg.n1 };
+    let limits = row_limits(g, n1, cfg.sq, cfg.valid_len);
+    let scale = 1.0 / (q.cols as f32).sqrt();
+
+    scratch.ensure(nblk, g, bs, dv);
+    // contiguous block ranges map to contiguous slab ranges, so the
+    // shared buffers split into disjoint per-partition chunks
+    let per = nblk.div_ceil(parts);
+
+    // Phase A: score every block, record per-(block, row) maxima
+    {
+        let sp = &mut scratch.sp[..nblk * g * bs];
+        let bm = &mut scratch.blk_max[..nblk * g];
+        let limits = &limits;
+        std::thread::scope(|scope| {
+            for (pi, (sp_c, bm_c)) in sp.chunks_mut(per * g * bs)
+                .zip(bm.chunks_mut(per * g))
+                .enumerate()
+            {
+                scope.spawn(move || {
+                    let first = pi * per;
+                    for (bi, (srow, mrow)) in sp_c.chunks_mut(g * bs)
+                        .zip(bm_c.chunks_mut(g))
+                        .enumerate()
+                    {
+                        let blk = ScoreBlock { base: (first + bi) * bs,
+                                               bs, scale, limits,
+                                               mixed_bf16: cfg.mixed_bf16 };
+                        score_block_into(&q.data, g, q.cols, &k.data,
+                                         &blk, srow);
+                        for r in 0..g {
+                            mrow[r] = srow[r * bs..(r + 1) * bs].iter()
+                                .fold(f32::NEG_INFINITY,
+                                      |a, &b| a.max(b));
+                        }
+                    }
+                });
+            }
+        });
+    }
+
+    // Serial prefix pass: the exact sequential frame schedule (same
+    // `max` call, same operand order as the single pass)
+    {
+        let mut run = vec![f32::NEG_INFINITY; g];
+        for b in 0..nblk {
+            for r in 0..g {
+                run[r] = run[r].max(scratch.blk_max[b * g + r]);
+                scratch.frame[b * g + r] = run[r];
+            }
+        }
+    }
+
+    // Phase B: P in the true frames + per-block T = P·V slabs
+    {
+        let sp = &mut scratch.sp[..nblk * g * bs];
+        let t = &mut scratch.t[..nblk * g * dv];
+        let rowsum = &mut scratch.rowsum[..nblk * g];
+        let frame = &scratch.frame[..nblk * g];
+        std::thread::scope(|scope| {
+            for (pi, ((sp_c, t_c), rs_c)) in sp.chunks_mut(per * g * bs)
+                .zip(t.chunks_mut(per * g * dv))
+                .zip(rowsum.chunks_mut(per * g))
+                .enumerate()
+            {
+                scope.spawn(move || {
+                    let first = pi * per;
+                    for (bi, ((pblk, tblk), rsrow)) in
+                        sp_c.chunks_mut(g * bs)
+                            .zip(t_c.chunks_mut(g * dv))
+                            .zip(rs_c.chunks_mut(g))
+                            .enumerate()
+                    {
+                        let b = first + bi;
+                        for r in 0..g {
+                            let m_new = frame[b * g + r];
+                            if m_new == f32::NEG_INFINITY {
+                                for x in &mut pblk[r * bs..(r + 1) * bs] {
+                                    *x = 0.0;
+                                }
+                                rsrow[r] = 0.0;
+                                continue;
+                            }
+                            let n_new = exponent_of_max(m_new);
+                            let mut rs = 0f32;
+                            for j in 0..bs {
+                                let sv = pblk[r * bs + j];
+                                let pv = if sv == f32::NEG_INFINITY {
+                                    0.0
+                                } else {
+                                    (sv - m_new).exp()
+                                };
+                                pblk[r * bs + j] = pv;
+                                rs += pv;
+                            }
+                            rsrow[r] = rs;
+                            // S16 is a pure function of the frame —
+                            // fold it unconditionally (a zero-mass
+                            // row is all +0, and 0·S16 == +0 bitwise,
+                            // so the single pass's skip-before-fold
+                            // leaves the same bits)
+                            let s32 =
+                                (LN2 * (n_new as f32 + m_new / LN2)).exp();
+                            let s16 = if cfg.mixed_bf16 {
+                                bf16_round(s32)
+                            } else {
+                                s32
+                            };
+                            for x in &mut pblk[r * bs..(r + 1) * bs] {
+                                *x *= s16;
+                            }
+                        }
+                        // [C2] slab, exact single-pass operand shapes
+                        let base = b * bs;
+                        let vblk = &v.data[base * dv..(base + bs) * dv];
+                        if cfg.mixed_bf16 {
+                            matmul_nn_bf16(&pblk[..g * bs], vblk, g, bs,
+                                           dv, tblk);
+                        } else {
+                            for x in tblk.iter_mut() {
+                                *x = 0.0;
+                            }
+                            for r in 0..g {
+                                for j in 0..bs {
+                                    let pv = pblk[r * bs + j];
+                                    if pv == 0.0 {
+                                        continue;
+                                    }
+                                    let vrow = &vblk[j * dv..(j + 1) * dv];
+                                    let orow =
+                                        &mut tblk[r * dv..(r + 1) * dv];
+                                    for c in 0..dv {
+                                        orow[c] += pv * vrow[c];
+                                    }
+                                }
+                            }
+                        }
+                    }
+                });
+            }
+        });
+    }
+
+    // Phase C: serial replay of the scalar [V1] recurrence plus the
+    // per-block O += T adds, in exact single-pass order
+    let mut o = Matrix::zeros(g, dv);
+    let mut st = AmlaState::new(g);
+    for b in 0..nblk {
+        stats.blocks += 1;
+        for r in 0..g {
+            let m_new = scratch.frame[b * g + r];
+            if m_new == f32::NEG_INFINITY {
+                continue;
+            }
+            let n_new = exponent_of_max(m_new);
+            let alpha = if st.m[r].is_finite() {
+                (st.m[r] - m_new).exp()
+            } else {
+                0.0
+            };
+            let rowsum = scratch.rowsum[b * g + r];
+            if st.seen[r] && rowsum == 0.0 {
+                // zero-mass block: exact no-op (see the single pass)
+                continue;
+            }
+            st.l[r] = st.l[r] * alpha + rowsum;
+            let s32 = (LN2 * (n_new as f32 + m_new / LN2)).exp();
+            let (s16, c_new) = if cfg.mixed_bf16 {
+                let s16 = bf16_round(s32);
+                (s16, s16 / s32)
+            } else {
+                (s32, 1.0f32)
+            };
+            if st.seen[r] {
+                let eps = 1.5 * (c_new / st.c[r] - 1.0);
+                // lint:region(add-only)
+                let add = rescale_add(n_new - st.n[r], eps);
+                rescale_row(o.row_mut(r), add);
+                // lint:endregion(add-only)
+                stats.rescale_adds += 1;
+            }
+            st.m[r] = m_new;
+            st.n[r] = n_new;
+            st.c[r] = c_new;
+            st.s16[r] = s16;
+            st.seen[r] = true;
+        }
+        for (x, &tv) in o.data.iter_mut()
+            .zip(&scratch.t[b * g * dv..(b + 1) * g * dv])
+        {
+            *x += tv;
+        }
+    }
+
+    // Last [V]: O <- O / (l_N * S16), bit-identical to the single pass
+    for r in 0..g {
+        if !st.seen[r] {
+            continue;
+        }
+        let denom = st.l[r] * st.s16[r];
+        if denom > 0.0 {
+            let inv = 1.0 / denom;
+            for x in o.row_mut(r) {
+                *x *= inv;
+            }
+        }
+    }
+    (o, st, stats)
 }
 
 #[cfg(test)]
@@ -681,6 +1141,257 @@ mod tests {
             o.data[4 * 16..].iter().map(|x| x.to_bits()).collect();
         let want: Vec<u32> = solo.data.iter().map(|x| x.to_bits()).collect();
         assert_eq!(got, want);
+    }
+
+    #[test]
+    fn prop_split_kv_equals_single_pass() {
+        // Tentpole pin: the frame-replay split path must be
+        // bit-identical — output AND final AmlaState AND stats — to
+        // the single-pass block loop for split counts {1, 2, 3, 7,
+        // workers}, both precisions, and valid-len edges at block
+        // boundaries (low valid with many partitions gives entire
+        // partitions that are fully masked, so the masked-partition
+        // case is exercised under every split count too).
+        run_prop("split_kv_eq_single_pass", 60, |rng| {
+            let seed = rng.next_u64();
+            let nblk = gen_usize(rng, 1, 9);
+            let s2 = nblk * 32;
+            let valid = gen_usize(rng, 1, s2 + 1);
+            let mixed = rng.next_u64() & 1 == 1;
+            let sigma = *gen_choice(rng, &[0.5f32, 1.0, 4.0]);
+            let (q, k, v) = inputs(seed, 4, s2, 32, 16, sigma);
+            let cfg = FlashConfig { block_kv: 32, n1: 4, sq: 1,
+                                    valid_len: valid, mixed_bf16: mixed };
+            let mut scratch = AmlaScratch::new();
+            let (want_o, want_st, want_stats) =
+                amla_attention_with_state(&q, &k, &v, &cfg, &mut scratch);
+            let bits = |d: &[f32]| d.iter().map(|x| x.to_bits())
+                .collect::<Vec<_>>();
+            let mut split = SplitKvScratch::new();
+            for parts in [1usize, 2, 3, 7, 8] {
+                let (got_o, got_st, got_stats) =
+                    amla_attention_split_kv_with_state(&q, &k, &v, &cfg,
+                                                       parts, &mut split);
+                let ctx = format!("seed={seed} nblk={nblk} valid={valid} \
+                                   bf16={mixed} parts={parts}");
+                assert_eq!(bits(&got_o.data), bits(&want_o.data), "{ctx}");
+                assert_eq!(bits(&got_st.m), bits(&want_st.m), "{ctx}");
+                assert_eq!(bits(&got_st.l), bits(&want_st.l), "{ctx}");
+                assert_eq!(got_st.n, want_st.n, "{ctx}");
+                assert_eq!(bits(&got_st.c), bits(&want_st.c), "{ctx}");
+                assert_eq!(bits(&got_st.s16), bits(&want_st.s16), "{ctx}");
+                assert_eq!(got_st.seen, want_st.seen, "{ctx}");
+                assert_eq!(got_stats.blocks, want_stats.blocks, "{ctx}");
+                assert_eq!(got_stats.rescale_adds,
+                           want_stats.rescale_adds, "{ctx}");
+            }
+        });
+    }
+
+    #[test]
+    fn merge_clamp_hops_match_unclamped_reference() {
+        // Satellite pin (Δn clamp saturation): walking Δn in
+        // clamp-sized exact hops must equal a hypothetical single
+        // UNCLAMPED exponent add — including past the ±30 window,
+        // where a lone rescale_add silently saturates.
+        use crate::numerics::fp32::{EXP_ONE, ROUND_EPS};
+        for &dn in &[29i32, 30, 31, 60, -29, -30, -31, -60] {
+            for &eps in &[0.0f32, 1e-3, -2e-3] {
+                // exponent fields that survive the full ±60 walk,
+                // both signs, plus exact zeros (guarded pass-through)
+                let vals = [1.0e-3f32, -7.5, 0.0, 3.1e4, -2.2e-6,
+                            123.456];
+                let mut row = vals;
+                rebase_row(&mut row, dn, eps);
+                let unclamped = dn * EXP_ONE
+                    + ((eps + ROUND_EPS) * EXP_ONE as f32).round() as i32;
+                for (got, &orig) in row.iter().zip(&vals) {
+                    let want = if orig == 0.0 {
+                        orig
+                    } else {
+                        f32::from_bits((orig.to_bits() as i32)
+                            .wrapping_add(unclamped) as u32)
+                    };
+                    assert_eq!(got.to_bits(), want.to_bits(),
+                               "dn={dn} eps={eps} orig={orig}");
+                }
+                if dn.abs() > DELTA_CLAMP_HI {
+                    // ...and the saturated single-add form is wrong
+                    let mut sat = vals;
+                    rescale_row(&mut sat, rescale_add(dn, eps));
+                    assert_ne!(sat[0].to_bits(), row[0].to_bits(),
+                               "dn={dn}: clamp saturation undetected");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn merge_rebases_exactly_across_clamp_sized_frame_gaps() {
+        // Merge-level clamp-boundary pin: partials whose exponent
+        // frames differ by d ∈ {29, 30, 31, 60} (the applied rebase is
+        // Δn = -d: a real merge always scales the smaller-max loser
+        // *down*) must rebase the loser row by exactly 2^-d plus the
+        // ROUND_EPS residue, bitwise, under both operand orders.
+        use crate::numerics::fp32::{EXP_ONE, ROUND_EPS};
+        let (g, dv) = (2usize, 4usize);
+        let residue = (ROUND_EPS * EXP_ONE as f32).round() as i32;
+        let mk = |n: i32, l: f32| {
+            let mut st = AmlaState::new(g);
+            for r in 0..g {
+                st.m[r] = -(n as f32) * LN2;
+                st.n[r] = n;
+                st.l[r] = l;
+                st.seen[r] = true;
+            }
+            st
+        };
+        for &d in &[29i32, 30, 31, 60] {
+            let l_o = Matrix::from_vec(
+                g, dv, (0..g * dv).map(|i| 0.5 + i as f32 * 0.25)
+                    .collect());
+            for &self_wins in &[true, false] {
+                // winner: frame n = 0 with a zero accumulator, so the
+                // merged row is exactly the rebased loser row
+                let (mut st, mut o, ost, oo) = if self_wins {
+                    (mk(0, 2.0), Matrix::zeros(g, dv),
+                     mk(d, 3.0), l_o.clone())
+                } else {
+                    (mk(d, 3.0), l_o.clone(),
+                     mk(0, 2.0), Matrix::zeros(g, dv))
+                };
+                st.merge(&mut o, &ost, &oo);
+                let want_l = 2.0 + 3.0 * (-(d as f32) * LN2).exp();
+                for r in 0..g {
+                    assert_eq!(st.n[r], 0, "d={d}");
+                    assert!((st.l[r] - want_l).abs() < 1e-6,
+                            "d={d} l={}", st.l[r]);
+                    for c in 0..dv {
+                        let lv = l_o.row(r)[c];
+                        let want = f32::from_bits(
+                            (lv.to_bits() as i32)
+                                .wrapping_add(-d * EXP_ONE + residue)
+                                as u32);
+                        assert_eq!(o.row(r)[c].to_bits(), want.to_bits(),
+                                   "d={d} self_wins={self_wins} \
+                                    r={r} c={c}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn prop_masked_partition_merge_is_bitwise_noop() {
+        // Satellite pin: a partition whose rows never saw an unmasked
+        // key (seen = false, m = -inf, l = 0 — exactly what the kernel
+        // produces for a fully-masked KV range) must merge as an exact
+        // bitwise no-op, under either operand order.
+        run_prop("merge_masked_noop", 24, |rng| {
+            let seed = rng.next_u64();
+            let mixed = rng.next_u64() & 1 == 1;
+            let (q, k, v) = inputs(seed, 4, 128, 32, 16, 1.0);
+            let cfg = FlashConfig { block_kv: 64, n1: 4, sq: 1,
+                                    valid_len: 100, mixed_bf16: mixed };
+            let mut scratch = AmlaScratch::new();
+            let (o, st, _) =
+                amla_attention_partial(&q, &k, &v, &cfg, &mut scratch);
+            // the masked partial comes straight from the kernel
+            let mcfg = FlashConfig { valid_len: 0, ..cfg };
+            let (mo, mst, _) =
+                amla_attention_partial(&q, &k, &v, &mcfg, &mut scratch);
+            assert!(mst.seen.iter().all(|&s| !s), "masked partial saw keys");
+            assert!(mo.data.iter().all(|&x| x == 0.0));
+
+            let bits = |d: &[f32]| d.iter().map(|x| x.to_bits())
+                .collect::<Vec<_>>();
+            let assert_same = |got_st: &AmlaState, got_o: &Matrix,
+                               tag: &str| {
+                assert_eq!(bits(&got_o.data), bits(&o.data),
+                           "{tag} seed={seed}");
+                assert_eq!(bits(&got_st.m), bits(&st.m), "{tag} seed={seed}");
+                assert_eq!(bits(&got_st.l), bits(&st.l), "{tag} seed={seed}");
+                assert_eq!(got_st.n, st.n, "{tag} seed={seed}");
+                assert_eq!(bits(&got_st.c), bits(&st.c), "{tag} seed={seed}");
+                assert_eq!(bits(&got_st.s16), bits(&st.s16),
+                           "{tag} seed={seed}");
+                assert_eq!(got_st.seen, st.seen, "{tag} seed={seed}");
+            };
+            // live.merge(masked): exact no-op on the live operand
+            let (mut st_a, mut o_a) = (st.clone(), o.clone());
+            st_a.merge(&mut o_a, &mst, &mo);
+            assert_same(&st_a, &o_a, "live<-masked");
+            // masked.merge(live): bitwise adoption of the live partial
+            let (mut st_b, mut o_b) = (mst.clone(), mo.clone());
+            st_b.merge(&mut o_b, &st, &o);
+            assert_same(&st_b, &o_b, "masked<-live");
+        });
+    }
+
+    #[test]
+    fn prop_merge_tracks_unsplit_loop() {
+        // Accuracy contract of the exported combine: partials over
+        // disjoint KV halves, merged and normalized, track the unsplit
+        // loop (fp32 tightly; bf16 at the compensation's precision).
+        // Bit-identity is the frame-replay path's contract, not
+        // merge's — the ℓ·α + Σp chain does not telescope in floats.
+        run_prop("merge_accuracy", 24, |rng| {
+            let seed = rng.next_u64();
+            let mixed = rng.next_u64() & 1 == 1;
+            let nblk = gen_usize(rng, 2, 5);
+            let s2 = nblk * 32;
+            let valid = gen_usize(rng, 1, s2 + 1);
+            let (q, k, v) = inputs(seed, 4, s2, 32, 16, 1.0);
+            let cfg = FlashConfig { block_kv: 32, n1: 4, sq: 1,
+                                    valid_len: valid, mixed_bf16: mixed };
+            let want = amla_attention(&q, &k, &v, &cfg);
+
+            let cut = gen_usize(rng, 1, nblk) * 32;
+            let mut scratch = AmlaScratch::new();
+            let k_a = Matrix::from_vec(cut, 32, k.data[..cut * 32].to_vec());
+            let v_a = Matrix::from_vec(cut, 16, v.data[..cut * 16].to_vec());
+            let cfg_a = FlashConfig { valid_len: valid.min(cut), ..cfg };
+            let (mut o_a, mut st_a, _) =
+                amla_attention_partial(&q, &k_a, &v_a, &cfg_a, &mut scratch);
+            let k_b = Matrix::from_vec(s2 - cut, 32,
+                                       k.data[cut * 32..].to_vec());
+            let v_b = Matrix::from_vec(s2 - cut, 16,
+                                       v.data[cut * 16..].to_vec());
+            let cfg_b = FlashConfig { valid_len: valid.saturating_sub(cut),
+                                      ..cfg };
+            let (o_b, st_b, _) =
+                amla_attention_partial(&q, &k_b, &v_b, &cfg_b, &mut scratch);
+            st_a.merge(&mut o_a, &st_b, &o_b);
+            amla_normalize(&mut o_a, &st_a);
+            let tol = if mixed { 1e-2 } else { 1e-4 };
+            assert!(rel_frobenius_error(&o_a.data, &want.data) < tol,
+                    "seed={seed} s2={s2} valid={valid} cut={cut} \
+                     bf16={mixed}");
+        });
+    }
+
+    #[test]
+    fn split_scratch_shrink_then_reuse_is_bit_identical() {
+        // Satellite pin: grow-never-shrink scratch dirtied by a large
+        // split call must not leak stale score/P/T slabs into a
+        // smaller one (fewer blocks, fewer rows, smaller dv, fewer
+        // partitions).
+        let mut dirty = SplitKvScratch::new();
+        let (q1, k1, v1) = inputs(31, 8, 512, 48, 32, 1.0);
+        let cfg1 = FlashConfig { block_kv: 64, n1: 8, sq: 1,
+                                 valid_len: 512, mixed_bf16: true };
+        let _ = amla_attention_split_kv(&q1, &k1, &v1, &cfg1, 4, &mut dirty);
+        let (q2, k2, v2) = inputs(32, 4, 128, 32, 16, 1.0);
+        let cfg2 = FlashConfig { block_kv: 64, n1: 4, sq: 1,
+                                 valid_len: 100, mixed_bf16: true };
+        let (a, _) =
+            amla_attention_split_kv(&q2, &k2, &v2, &cfg2, 2, &mut dirty);
+        let mut fresh = SplitKvScratch::new();
+        let (b, _) =
+            amla_attention_split_kv(&q2, &k2, &v2, &cfg2, 2, &mut fresh);
+        let bits = |m: &Matrix| m.data.iter().map(|x| x.to_bits())
+            .collect::<Vec<_>>();
+        assert_eq!(bits(&a), bits(&b));
     }
 
     #[test]

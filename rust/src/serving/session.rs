@@ -92,7 +92,8 @@ use crate::coordinator::engine::{DecodeEngine, LayerExecutor};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::request::{DecodeRequest, DecodeResult, Outcome,
                                   Priority, RequestId};
-use crate::coordinator::scheduler::{finish_run_metrics, init_run, StepCore};
+use crate::coordinator::scheduler::{finish_run_metrics, init_run,
+                                    RunBaseline, StepCore};
 use crate::serving::clock::SimClock;
 use crate::serving::preempt::{select_victim, ResumeLedger};
 
@@ -370,14 +371,16 @@ struct Session<'e, E: LayerExecutor> {
     /// no cue ever reads it there, so a long-lived session does not
     /// grow one counter per request ever served.
     track_emitted: bool,
-    fused0: Option<(u64, u64)>,
+    /// Executor counter snapshot from [`init_run`] — fused and split
+    /// deltas are computed against it at teardown.
+    baseline: RunBaseline,
     draining: bool,
     abort: bool,
 }
 
 impl<'e, E: LayerExecutor> Session<'e, E> {
     fn new(engine: &'e DecodeEngine<E>, cfg: &'e ServeConfig) -> Self {
-        let (batcher, fused0) = init_run(engine, cfg);
+        let (batcher, baseline) = init_run(engine, cfg);
         Self {
             engine,
             cfg,
@@ -392,7 +395,7 @@ impl<'e, E: LayerExecutor> Session<'e, E> {
             cur_len: BTreeMap::new(),
             emitted: BTreeMap::new(),
             track_emitted: true,
-            fused0,
+            baseline,
             draining: false,
             abort: false,
         }
@@ -500,7 +503,7 @@ impl<'e, E: LayerExecutor> Session<'e, E> {
 
         let makespan = clock.now();
         self.metrics.wall_time = clock.elapsed();
-        finish_run_metrics(self.engine, self.fused0, &mut self.metrics);
+        finish_run_metrics(self.engine, self.baseline, &mut self.metrics);
         let mut metrics = std::mem::take(&mut self.metrics);
         self.fill_gauges(&mut metrics);
         Ok(EngineReport {

@@ -1,7 +1,8 @@
 //! Golden-trace regression: one deterministic 4-sequence mixed-bucket
 //! decode trace — every emitted token plus the final step's
 //! residual-stream bits — must be reproduced **exactly** by every
-//! serving configuration (`fuse on/off × workers 1/4`), and must match
+//! serving configuration (`fuse on/off × workers 1/4/8 × split-KV
+//! flash decoding off/on`), and must match
 //! the committed golden file so future kernel rewrites cannot silently
 //! drift the numerics.
 //!
@@ -40,12 +41,13 @@ struct Trace {
     xbits: Vec<Vec<u32>>,
 }
 
-fn run_trace(fuse: bool, workers: usize) -> Trace {
+fn run_trace(fuse: bool, workers: usize, split_kv: usize) -> Trace {
     let dims = MlaDims { d_model: 64, n1: 2, d_head: 16, q_rank: 32,
                          d_latent: 24, d_rope: 8, sq: 1 };
     let exec = HostLayerExecutor::new(dims, 2, Algo::Amla, 32,
                                       vec![64, 128], 7)
-        .with_fuse(fuse);
+        .with_fuse(fuse)
+        .with_split_kv(split_kv);
     let eng = DecodeEngine::new(exec, 1024, 16);
     let prompts = prompts();
     let n = prompts.len();
@@ -124,12 +126,22 @@ fn parse(text: &str) -> Option<Trace> {
 
 #[test]
 fn golden_trace_reproduces_across_all_configs() {
-    let reference = run_trace(false, 1); // unfused serial = the oracle
-    for (fuse, workers) in [(false, 4), (true, 1), (true, 4)] {
-        let got = run_trace(fuse, workers);
+    // unfused serial, split-KV off = the oracle
+    let reference = run_trace(false, 1, 0);
+    // the split-KV axis: threshold 16 forces the flash-decoding route
+    // as soon as a sequence's context crosses 16 rows.  workers=1 keeps
+    // split_parts=1 (the policy never splits without spare slots),
+    // workers=8 against the 4-sequence batch leaves 5 spare slots, so
+    // sequences split into 2 (64-row bucket) and up to 4 (128-row
+    // bucket) partitions — all of it must be bit-identical to the
+    // serial single-pass trace (the frame-replay contract).
+    for (fuse, workers, split_kv) in [(false, 4, 0), (true, 1, 0),
+                                      (true, 4, 0), (false, 1, 16),
+                                      (false, 8, 16), (true, 8, 16)] {
+        let got = run_trace(fuse, workers, split_kv);
         assert_eq!(got, reference,
-                   "fuse={fuse} workers={workers} diverged from the \
-                    unfused serial trace");
+                   "fuse={fuse} workers={workers} split_kv={split_kv} \
+                    diverged from the unfused serial trace");
     }
 
     let path = std::path::Path::new(GOLDEN_PATH);
@@ -147,7 +159,8 @@ fn golden_trace_reproduces_across_all_configs() {
         let header = "\
 # AMLA golden decode trace v1 (4 sequences, mixed 64/128 buckets,\n\
 # 2-layer host model, bf16 kernels).  Pinned bit-for-bit by\n\
-# rust/tests/golden_trace.rs across fuse on/off x workers 1/4.\n\
+# rust/tests/golden_trace.rs across fuse on/off x workers 1/4/8\n\
+# x split-KV flash decoding off/on (threshold 16).\n\
 # Regenerate: AMLA_REGEN_GOLDEN=1 cargo test --test golden_trace\n";
         if let Some(dir) = path.parent() {
             std::fs::create_dir_all(dir).expect("create golden dir");
