@@ -15,8 +15,10 @@ use std::collections::BTreeMap;
 
 use amla::config::{Algo, ServeConfig};
 use amla::coordinator::engine::SeqRuntime;
-use amla::coordinator::{generate_trace, long_context_spec, DecodeEngine,
-                        HostLayerExecutor, LayerExecutor, LenDist,
+use amla::coordinator::{follow_up_request, generate_trace,
+                        long_context_spec, serve, ConversationSpec,
+                        DecodeEngine, DecodeRequest, HostLayerExecutor,
+                        LayerExecutor, LenDist, RequestId, TracedRequest,
                         WorkloadSpec, LONG_CONTEXT_TOKENS};
 use amla::numerics::mla::MlaDims;
 use amla::serving::clock::SimClock;
@@ -99,6 +101,84 @@ fn main() {
             legacy.metrics.prefill_chunks,
             mean_ttft(&chunked), mean_ttft(&legacy));
     }
+
+    // shared-prefix contrast: a 2-conversation x 3-turn follow-up
+    // workload (each turn's prompt is the previous turn's transcript
+    // plus fresh user tokens) served open-loop with the prefix cache
+    // off vs on.  Asserted: bit-identical tokens, >= 1 hit, and
+    // strictly fewer prefill invocations — the cache must be a pure
+    // scheduling optimization.
+    let prefix_cache = {
+        let conv_engine = || {
+            let exec = HostLayerExecutor::new(dims, 2, Algo::Amla, 64,
+                                              vec![64, 128], 3);
+            DecodeEngine::new(exec, 512, 16)
+        };
+        // fixed generation lengths so every follow-up's transcript
+        // covers at least one whole 16-row physical page
+        let cspec = ConversationSpec {
+            gen_len: LenDist::Fixed(12),
+            ..ConversationSpec::default()
+        };
+        let mut conv_trace = Vec::new();
+        let mut id: RequestId = 0;
+        for conv in 0..2u64 {
+            let opening: Vec<u32> =
+                (0..9).map(|i| 2000 * conv as u32 + 23 + i).collect();
+            let mut req = DecodeRequest::new(id, opening, 12);
+            for turn in 0..cspec.turns {
+                conv_trace.push(TracedRequest {
+                    request: req.clone(),
+                    arrival: conv as f64 * 0.1 + turn as f64 * 1.0,
+                });
+                if turn + 1 == cspec.turns {
+                    break;
+                }
+                let res = serve(&conv_engine(), vec![req.clone()], &cfg)
+                    .expect("conversation oracle run failed");
+                id += 1;
+                req = follow_up_request(&cspec, conv, turn + 1, id,
+                                        &req.prompt,
+                                        &res.results[0].tokens);
+            }
+            id += 1;
+        }
+        let run = |prefix: bool| {
+            let mut c = cfg.clone();
+            c.prefix_cache = prefix;
+            let mut clock = SimClock::simulated(sweep_cfg.model.clone());
+            serve_open_loop(&conv_engine(), conv_trace.clone(), &c,
+                            &mut clock)
+                .expect("open-loop prefix-contrast run failed")
+        };
+        let off = run(false);
+        let on = run(true);
+        let tokens = |r: &amla::serving::OpenLoopReport| {
+            let mut t: Vec<_> = r.results.iter()
+                .map(|x| (x.id, x.tokens.clone()))
+                .collect();
+            t.sort_by_key(|(id, _)| *id);
+            t
+        };
+        assert_eq!(tokens(&off), tokens(&on),
+                   "prefix cache changed served tokens");
+        assert_eq!(off.metrics.prefix_hits, 0,
+                   "prefix off must never hit");
+        assert!(on.metrics.prefix_hits >= 1,
+                "conversational workload must hit the prefix cache");
+        assert!(on.metrics.prefill_chunks < off.metrics.prefill_chunks,
+                "prefix hits must cut prefill invocations ({} vs {})",
+                on.metrics.prefill_chunks, off.metrics.prefill_chunks);
+        println!("prefix cache: {} hits ({} shared rows) over {} turns, \
+                  prefill invocations {} -> {}, prompt rows {} -> {}",
+                 on.metrics.prefix_hits, on.metrics.prefix_hit_rows,
+                 conv_trace.len(), off.metrics.prefill_chunks,
+                 on.metrics.prefill_chunks, off.metrics.prompt_tokens,
+                 on.metrics.prompt_tokens);
+        (conv_trace.len(), on.metrics.prefix_hits,
+         on.metrics.prefix_hit_rows, off.metrics.prefill_chunks,
+         on.metrics.prefill_chunks)
+    };
 
     println!("open-loop rate sweep ({n_requests} requests, virtual clock, \
               preempt on{}):", if smoke { ", SMOKE" } else { "" });
@@ -214,6 +294,16 @@ fn main() {
             lc.insert("split_calls".into(), Json::Num(calls as f64));
             lc.insert("split_partitions".into(), Json::Num(parts as f64));
             root.insert("long_context".into(), Json::Obj(lc));
+            let (turns, hits, hit_rows, pc_off, pc_on) = prefix_cache;
+            let mut pc = BTreeMap::new();
+            pc.insert("turns".into(), Json::Num(turns as f64));
+            pc.insert("hits".into(), Json::Num(hits as f64));
+            pc.insert("hit_rows".into(), Json::Num(hit_rows as f64));
+            pc.insert("prefill_chunks_off".into(),
+                      Json::Num(pc_off as f64));
+            pc.insert("prefill_chunks_on".into(),
+                      Json::Num(pc_on as f64));
+            root.insert("prefix_cache".into(), Json::Obj(pc));
         }
         let json = json.to_string();
         std::fs::write("BENCH_serving.json", format!("{json}\n"))

@@ -123,6 +123,15 @@ pub struct ServeConfig {
     /// results to ~1e-4 relative, not bit-identical, so `naive` stays
     /// the default.
     pub decode_path: DecodePath,
+    /// Shared-prefix KV reuse (`--prefix-cache on|off`; off by
+    /// default): completed prompts publish their whole cache pages
+    /// into a [`crate::kvcache::PrefixIndex`], and new requests whose
+    /// prompts extend a published prefix attach those pages instead of
+    /// prefilling them.  A hit is bit-identical to a cold prefill
+    /// (token-for-token and cache-bit-for-cache-bit — contract 9 in
+    /// `docs/ARCHITECTURE.md`), so the default only governs resident
+    /// page retention, never output bits.
+    pub prefix_cache: bool,
 }
 
 impl Default for ServeConfig {
@@ -150,6 +159,7 @@ impl Default for ServeConfig {
             preempt: true,
             split_kv_threshold: 0,
             decode_path: DecodePath::Naive,
+            prefix_cache: false,
         }
     }
 }
@@ -211,6 +221,11 @@ impl ServeConfig {
             self.preempt = parse_bool("preempt", v)?;
         } else if args.has_flag("preempt") {
             self.preempt = true; // bare `--preempt`
+        }
+        if let Some(v) = args.get("prefix-cache") {
+            self.prefix_cache = parse_bool("prefix-cache", v)?;
+        } else if args.has_flag("prefix-cache") {
+            self.prefix_cache = true; // bare `--prefix-cache`
         }
         self.validate()
     }
@@ -313,6 +328,8 @@ pub struct EngineConfig {
     pub open_loop: bool,
     /// Offered arrival rate (req/s) of generated open-loop traces.
     pub rate: f64,
+    /// Shared-prefix KV reuse over the paged pool (`--prefix-cache`).
+    pub prefix_cache: bool,
 }
 
 impl Default for EngineConfig {
@@ -347,6 +364,7 @@ impl EngineConfig {
             preempt: self.preempt.enabled,
             split_kv_threshold: self.batch.split_kv_threshold,
             decode_path: self.model.decode_path,
+            prefix_cache: self.prefix_cache,
         }
     }
 
@@ -380,6 +398,7 @@ impl EngineConfig {
             max_new_tokens: cfg.max_new_tokens,
             open_loop: cfg.open_loop,
             rate: cfg.rate,
+            prefix_cache: cfg.prefix_cache,
         }
     }
 
@@ -486,6 +505,11 @@ impl EngineConfigBuilder {
 
     pub fn rate(mut self, rate: f64) -> Self {
         self.cfg.rate = rate;
+        self
+    }
+
+    pub fn prefix_cache(mut self, on: bool) -> Self {
+        self.cfg.prefix_cache = on;
         self
     }
 
@@ -653,6 +677,7 @@ mod tests {
             .rate(2.5)
             .split_kv_threshold(4096)
             .decode_path(DecodePath::Absorbed)
+            .prefix_cache(true)
             .build()
             .unwrap();
         let flat = built.to_serve();
@@ -661,6 +686,7 @@ mod tests {
         assert_eq!(flat.batch_workers, 5);
         assert_eq!(flat.split_kv_threshold, 4096);
         assert_eq!(flat.decode_path, DecodePath::Absorbed);
+        assert!(flat.prefix_cache);
         assert_eq!(EngineConfig::from_serve(&flat), built,
                    "to_serve/from_serve must be lossless");
         // and the defaults of the two surfaces agree
@@ -692,7 +718,8 @@ mod tests {
                                --max-new-tokens 9 --open-loop --rate 6.5 \
                                --n1 8 --sq 2 --artifacts mydir \
                                --split-kv-threshold 64 \
-                               --decode-path absorbed"))
+                               --decode-path absorbed \
+                               --prefix-cache on"))
             .unwrap()
             .build()
             .unwrap();
@@ -712,6 +739,7 @@ mod tests {
         assert_eq!(built.max_new_tokens, 9);
         assert!(built.open_loop);
         assert_eq!(built.rate, 6.5);
+        assert!(built.prefix_cache);
         // invalid flag values surface as builder errors
         assert!(EngineConfig::builder()
             .apply_args(&args("--prefill-chunk 0"))
@@ -735,6 +763,20 @@ mod tests {
         assert_eq!(cfg.split_kv_threshold, 0, "0 switches splitting off");
         assert!(cfg.apply_args(&args("--decode-path fused")).is_err());
         assert!(cfg.apply_args(&args("--split-kv-threshold x")).is_err());
+    }
+
+    #[test]
+    fn prefix_cache_flag_and_values() {
+        let mut cfg = ServeConfig::default();
+        assert!(!cfg.prefix_cache,
+                "prefix cache defaults off (seed behavior unchanged)");
+        cfg.apply_args(&args("--prefix-cache on")).unwrap();
+        assert!(cfg.prefix_cache);
+        cfg.apply_args(&args("--prefix-cache off")).unwrap();
+        assert!(!cfg.prefix_cache);
+        cfg.apply_args(&args("--prefix-cache")).unwrap(); // bare flag
+        assert!(cfg.prefix_cache);
+        assert!(cfg.apply_args(&args("--prefix-cache maybe")).is_err());
     }
 
     #[test]

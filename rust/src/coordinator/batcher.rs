@@ -138,12 +138,27 @@ impl Batcher {
     /// blocks admission for everyone behind it (see module docs).
     /// Returns how many were admitted.
     pub fn admit(&mut self, now_s: f64) -> usize {
+        self.admit_with(now_s, |_| 0)
+    }
+
+    /// [`Self::admit`] with a per-request row **discount** — the
+    /// prefix-cache seam: rows covered by a shared-prefix reservation
+    /// are not charged against the pool budget (admission charges only
+    /// *unique* pages), and the discounted figure is what gets stamped
+    /// as `admitted_rows`, so every later credit (reap / evict /
+    /// cancel) stays self-consistent without knowing about sharing.
+    /// `discount` may be called repeatedly for the same still-blocked
+    /// head across admit rounds and must be idempotent.
+    pub fn admit_with(&mut self, now_s: f64,
+                      mut discount: impl FnMut(&DecodeRequest) -> usize)
+                      -> usize {
         let mut n = 0;
         while self.active.len() < self.max_batch {
             let Some(rank) = self.head_rank() else { break };
             let need = {
                 let front = self.queues[rank].front().unwrap();
-                Self::rows_needed(&front.req)
+                let raw = Self::rows_needed(&front.req);
+                raw - discount(&front.req).min(raw)
             };
             if need > self.free_rows {
                 break; // head-of-line blocking by design: tiered FIFO
@@ -483,6 +498,29 @@ mod tests {
         assert_eq!(b.stats().cancelled, 1);
         b.admit(0.0);
         assert_eq!(b.active()[0].request.id, 0);
+    }
+
+    #[test]
+    fn admit_with_discount_charges_only_unique_rows() {
+        let mut b = Batcher::new(4, 10);
+        b.enqueue(req(0, 6, 2), 0.0); // raw 8, discounted to 4
+        b.enqueue(req(1, 4, 2), 0.0); // raw 6
+        // 4 rows of request 0 are covered by a shared-prefix reservation
+        let n = b.admit_with(0.0, |r| if r.id == 0 { 4 } else { 0 });
+        assert_eq!(n, 2, "discounted admission must fit both requests");
+        assert_eq!(b.active()[0].admitted_rows, 4,
+                   "admitted_rows must record the discounted charge");
+        assert_eq!(b.active()[1].admitted_rows, 6);
+        // reap credits the discounted figure, never a recomputation
+        b.active_mut()[0].generated.extend([1, 1]);
+        b.reap();
+        b.enqueue(req(2, 2, 2), 0.0); // 4 rows: fits iff exactly 4 returned
+        assert_eq!(b.admit(0.0), 1, "reap must credit the discounted rows");
+        // an over-large discount clamps to the raw requirement
+        let mut b2 = Batcher::new(1, 1);
+        b2.enqueue(req(0, 2, 2), 0.0);
+        assert_eq!(b2.admit_with(0.0, |_| 100), 1);
+        assert_eq!(b2.active()[0].admitted_rows, 0);
     }
 
     #[test]

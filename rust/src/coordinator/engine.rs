@@ -1072,7 +1072,7 @@ impl<E: LayerExecutor> DecodeEngine<E> {
                     Ok(y) => {
                         let job = jobs[i].as_mut().unwrap();
                         let first = ctxs[i] - job.sq;
-                        {
+                        let mut scatter = || -> Result<()> {
                             let mut pool = self.pool.lock().unwrap();
                             for row in first..ctxs[i] {
                                 rts[i].caches[layer].write_row(
@@ -1080,8 +1080,16 @@ impl<E: LayerExecutor> DecodeEngine<E> {
                                     &job.c_buf[row * d.d_latent
                                                ..(row + 1) * d.d_latent],
                                     &job.kr_buf[row * d.d_rope
-                                                ..(row + 1) * d.d_rope]);
+                                                ..(row + 1) * d.d_rope])?;
                             }
+                            Ok(())
+                        };
+                        if let Err(e) =
+                            scatter().context("latent pool exhausted")
+                        {
+                            out[i] = Err(e);
+                            jobs[i] = None;
+                            continue;
                         }
                         for (xi, yi) in job.x.iter_mut().zip(&y) {
                             *xi += yi;
@@ -1168,7 +1176,8 @@ impl<E: LayerExecutor> DecodeEngine<E> {
                 for x in rope.iter_mut() {
                     *x = rng.gaussian() * 0.1;
                 }
-                cache.write_row(&mut pool, row, &lat, &rope);
+                cache.write_row(&mut pool, row, &lat, &rope)
+                    .context("latent pool exhausted")?;
             }
         }
         Ok(())

@@ -115,6 +115,18 @@ pub struct Metrics {
     /// Prompt tokens consumed across all sequences (resume prompts of
     /// preempted requests re-count: recompute re-pays their prefill).
     pub prompt_tokens: u64,
+    /// Requests admitted with a shared-prefix cache hit (`--prefix-cache
+    /// on`): whole cache pages attached from the
+    /// [`crate::kvcache::PrefixIndex`] instead of prefilled.
+    pub prefix_hits: u64,
+    /// Prompt rows served from the prefix cache across all hits — rows
+    /// that skipped prefill entirely (they do **not** count in
+    /// `prompt_tokens`, which meters prefill work actually done).
+    pub prefix_hit_rows: u64,
+    /// Pool pages currently held by the prefix index — a gauge sampled
+    /// when the snapshot is taken; pages shared with live sequences
+    /// count once here regardless of how many sequences attach them.
+    pub prefix_resident_pages: u64,
     /// Requests cancelled by the client mid-flight
     /// ([`crate::serving::RequestHandle::cancel`]) — queued, prefilling,
     /// or decoding; their pool pages and admission budget are credited
@@ -199,6 +211,12 @@ impl Metrics {
              amla_prefill_chunks {}\n\
              # TYPE amla_prompt_tokens counter\n\
              amla_prompt_tokens {}\n\
+             # TYPE amla_prefix_hits counter\n\
+             amla_prefix_hits {}\n\
+             # TYPE amla_prefix_hit_rows counter\n\
+             amla_prefix_hit_rows {}\n\
+             # TYPE amla_prefix_resident_pages gauge\n\
+             amla_prefix_resident_pages {}\n\
              # TYPE amla_requests_cancelled counter\n\
              amla_requests_cancelled {}\n\
              # TYPE amla_streamed_tokens counter\n\
@@ -228,6 +246,9 @@ impl Metrics {
             self.preemptions,
             self.prefill_chunks,
             self.prompt_tokens,
+            self.prefix_hits,
+            self.prefix_hit_rows,
+            self.prefix_resident_pages,
             self.requests_cancelled,
             self.streamed_tokens,
             self.active_sessions,
@@ -275,6 +296,9 @@ mod tests {
         m.preemptions = 2;
         m.prefill_chunks = 5;
         m.prompt_tokens = 17;
+        m.prefix_hits = 6;
+        m.prefix_hit_rows = 48;
+        m.prefix_resident_pages = 12;
         let text = m.render();
         assert!(text.contains("amla_fused_groups 3"));
         assert!(text.contains("amla_fused_jobs 9"));
@@ -283,6 +307,9 @@ mod tests {
         assert!(text.contains("amla_preemptions 2"));
         assert!(text.contains("amla_prefill_chunks 5"));
         assert!(text.contains("amla_prompt_tokens 17"));
+        assert!(text.contains("amla_prefix_hits 6"));
+        assert!(text.contains("amla_prefix_hit_rows 48"));
+        assert!(text.contains("amla_prefix_resident_pages 12"));
     }
 
     #[test]

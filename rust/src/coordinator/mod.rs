@@ -139,6 +139,6 @@ pub use metrics::Metrics;
 pub use request::{DecodeRequest, DecodeResult, Outcome, Priority,
                   RequestId, RequestState};
 pub use scheduler::{serve, ServeReport, StepCore};
-pub use workload::{generate_trace, long_context_spec, requests_of,
-                   ArrivalProcess, LenDist, TracedRequest, WorkloadSpec,
-                   LONG_CONTEXT_TOKENS};
+pub use workload::{follow_up_request, generate_trace, long_context_spec,
+                   requests_of, ArrivalProcess, ConversationSpec, LenDist,
+                   TracedRequest, WorkloadSpec, LONG_CONTEXT_TOKENS};

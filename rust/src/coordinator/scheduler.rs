@@ -45,6 +45,7 @@ use crate::coordinator::engine::{DecodeEngine, LayerExecutor, SeqRuntime};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::request::{DecodeRequest, DecodeResult, RequestId,
                                   RequestState};
+use crate::kvcache::prefix::{PrefixIndex, PrefixMatch};
 use crate::serving::clock::SimClock;
 
 /// Outcome of a full [`serve`] run.
@@ -88,11 +89,127 @@ pub struct StepCore {
     // pins this; rule det-map enforces it).
     runtimes: BTreeMap<RequestId, SeqRuntime>,
     n_layers: usize,
+    /// Shared-prefix KV index (`--prefix-cache on`); `None` keeps the
+    /// whole prefix machinery out of the step path, bit-for-bit.
+    prefix: Option<PrefixIndex>,
+    /// Prefix-cache reservations pinned at admission time and consumed
+    /// when the request's runtime is created: the matched pages carry
+    /// one retained pool reference each, owned here until they transfer
+    /// to the sequence's caches (or are dropped on cancel/reject).
+    reserved: BTreeMap<RequestId, PrefixMatch>,
 }
 
 impl StepCore {
     pub fn new(n_layers: usize) -> Self {
-        Self { runtimes: BTreeMap::new(), n_layers }
+        Self { runtimes: BTreeMap::new(), n_layers,
+               prefix: None, reserved: BTreeMap::new() }
+    }
+
+    /// Enable shared-prefix KV reuse: completed prompts publish their
+    /// whole cache pages into a [`PrefixIndex`], and new requests whose
+    /// prompts extend a published prefix attach those pages instead of
+    /// prefilling them.  Exactness: cache bits are a pure function of
+    /// the absolute token prefix (path-independent since the absorbed
+    /// decode route), so a hit is bit-identical to a cold prefill.
+    pub fn with_prefix(mut self, page_size: usize) -> Self {
+        self.prefix = Some(PrefixIndex::new(page_size, self.n_layers));
+        self
+    }
+
+    /// Pool pages currently held by the prefix index (gauge feed;
+    /// 0 with the cache off).
+    pub fn prefix_resident_pages(&self) -> usize {
+        self.prefix.as_ref().map_or(0, PrefixIndex::resident_pages)
+    }
+
+    /// Admission-time prefix probe: the row discount for `req` — the
+    /// whole-page prefix of its prompt already resident in the index.
+    /// On a hit the matched pages are pinned (retained) into a
+    /// reservation keyed by request id, so index eviction between
+    /// admission and first step cannot invalidate the match.
+    /// Idempotent across repeated admit rounds for a still-blocked
+    /// head: an existing reservation is reused, never re-pinned.
+    pub fn prefix_discount<E: LayerExecutor>(&mut self,
+                                             engine: &DecodeEngine<E>,
+                                             req: &DecodeRequest) -> usize {
+        if self.prefix.is_none() {
+            return 0;
+        }
+        if let Some(m) = self.reserved.get(&req.id) {
+            return m.rows;
+        }
+        let mut pool = engine.pool.lock().unwrap();
+        let idx = self.prefix.as_mut().unwrap();
+        match idx.lookup(&mut pool, &req.prompt) {
+            Some(m) => {
+                let rows = m.rows;
+                self.reserved.insert(req.id, m);
+                rows
+            }
+            None => 0,
+        }
+    }
+
+    /// Drop an unconsumed prefix reservation (queued cancel, rejection
+    /// of a never-fitting head, or a request removed before its first
+    /// step), releasing the pinned page references.  No-op when `id`
+    /// holds no reservation.
+    pub fn drop_reservation<E: LayerExecutor>(&mut self,
+                                              engine: &DecodeEngine<E>,
+                                              id: RequestId) {
+        if let Some(m) = self.reserved.remove(&id) {
+            let mut pool = engine.pool.lock().unwrap();
+            for chain in &m.pages {
+                for &p in chain {
+                    pool.release(p);
+                }
+            }
+        }
+    }
+
+    /// Session teardown: release every pinned reservation and every
+    /// index-resident page back to the pool.  The engine (and its pool)
+    /// outlives the session, so without this a dropped [`StepCore`]
+    /// would strand its published pages forever.
+    pub fn clear_prefix<E: LayerExecutor>(&mut self,
+                                          engine: &DecodeEngine<E>) {
+        let ids: Vec<RequestId> = self.reserved.keys().copied().collect();
+        for id in ids {
+            self.drop_reservation(engine, id);
+        }
+        if let Some(idx) = self.prefix.as_mut() {
+            let mut pool = engine.pool.lock().unwrap();
+            idx.clear(&mut pool);
+        }
+    }
+
+    /// Publish a cleanly finished sequence's whole cache pages into the
+    /// prefix index under the tokens that produced them (`prompt ⧺
+    /// generated`, truncated to the cache length — the last generated
+    /// token is never fed, so it has no cache row).  Aborted sequences
+    /// (engine failure mid-chunk) are skipped: their layer caches can
+    /// hold reserved-but-unwritten rows, and the index must only ever
+    /// serve bits identical to a cold prefill.
+    fn publish_prefix<E: LayerExecutor>(&mut self, engine: &DecodeEngine<E>,
+                                        st: &RequestState) {
+        let Some(idx) = self.prefix.as_mut() else { return };
+        let Some(rt) = self.runtimes.get(&st.request.id) else { return };
+        let len0 = rt.caches.first().map_or(0, |c| c.len());
+        if rt.caches.iter().any(|c| c.len() != len0) {
+            return; // aborted mid-layer: rows inconsistent across layers
+        }
+        let healthy =
+            st.prompt_consumed + st.generated.len().saturating_sub(1);
+        if len0 != healthy || len0 == 0 {
+            return; // aborted mid-chunk: reserved rows never scattered
+        }
+        let mut tokens = st.request.prompt.clone();
+        tokens.extend_from_slice(&st.generated);
+        tokens.truncate(len0);
+        let tables: Vec<Vec<_>> =
+            rt.caches.iter().map(|c| c.pages().to_vec()).collect();
+        let mut pool = engine.pool.lock().unwrap();
+        idx.publish(&mut pool, &tokens, &tables);
     }
 
     /// The prompt-chunk cap this run actually steps with:
@@ -125,10 +242,31 @@ impl StepCore {
                                   batcher: &mut Batcher, cfg: &ServeConfig,
                                   metrics: &mut Metrics,
                                   clock: &mut SimClock) -> usize {
-        for st in batcher.active_mut().iter() {
-            self.runtimes
-                .entry(st.request.id)
-                .or_insert_with(|| SeqRuntime::new(self.n_layers));
+        for st in batcher.active_mut().iter_mut() {
+            let id = st.request.id;
+            if self.runtimes.contains_key(&id) {
+                continue;
+            }
+            let mut rt = SeqRuntime::new(self.n_layers);
+            if let Some(m) = self.reserved.remove(&id) {
+                // prefix-cache hit: attach the reserved whole pages
+                // (transferring the pinned references) and skip their
+                // prefill — only the unique suffix will be fed.  The
+                // match is always shorter than the prompt, so at least
+                // one suffix token still prefills and produces the
+                // first output token.
+                let pool = engine.pool.lock().unwrap();
+                for (layer, cache) in rt.caches.iter_mut().enumerate() {
+                    cache.attach_shared_pages(&pool, &m.pages[layer],
+                                              m.rows);
+                }
+                drop(pool);
+                debug_assert!(m.rows < st.request.prompt.len());
+                st.prompt_consumed = m.rows;
+                metrics.prefix_hits += 1;
+                metrics.prefix_hit_rows += m.rows as u64;
+            }
+            self.runtimes.insert(id, rt);
         }
 
         let chunk = Self::effective_prefill_chunk(engine, cfg);
@@ -142,6 +280,27 @@ impl StepCore {
         let feeds: Vec<Vec<u32>> =
             states.iter().map(|st| st.next_feed_chunk(chunk)).collect();
         let rows: usize = feeds.iter().map(Vec::len).sum();
+
+        // pool pressure: if this step's fresh page demand exceeds the
+        // free list, the prefix index yields LRU entries back to the
+        // allocator first.  Index eviction only drops the *index's*
+        // references, so pages live sequences share stay resident.
+        if let Some(idx) = self.prefix.as_mut() {
+            let mut pool = engine.pool.lock().unwrap();
+            let ps = pool.page_size();
+            let need: usize = ids.iter().zip(&feeds)
+                .map(|(id, feed)| {
+                    let len = self.runtimes[id].caches
+                        .first().map_or(0, |c| c.len());
+                    ((len + feed.len()).div_ceil(ps)
+                     - len.div_ceil(ps)) * self.n_layers
+                })
+                .sum();
+            if pool.stats().free_pages < need {
+                idx.evict_for_pressure(&mut pool, need);
+            }
+        }
+
         // hand the batch exclusive access to its runtimes
         let mut rts: Vec<SeqRuntime> =
             ids.iter().map(|id| self.runtimes.remove(id).unwrap()).collect();
@@ -202,11 +361,15 @@ impl StepCore {
     }
 
     /// Release a departing sequence's runtime: every cache page it
-    /// holds goes back to the pool.  The one page-lifecycle exit point
-    /// shared by reap, evict, and cancel.
+    /// holds goes back to the pool (pages the prefix index also holds
+    /// stay resident under the index's own reference).  The one
+    /// page-lifecycle exit point shared by reap, evict, and cancel —
+    /// it also drops any reservation the request never consumed (e.g.
+    /// cancelled between admission and its first step).
     fn release_runtime<E: LayerExecutor>(&mut self,
                                          engine: &DecodeEngine<E>,
                                          st: &RequestState) {
+        self.drop_reservation(engine, st.request.id);
         if let Some(mut rt) = self.runtimes.remove(&st.request.id) {
             let mut pool = engine.pool.lock().unwrap();
             rt.free(&mut pool);
@@ -216,11 +379,14 @@ impl StepCore {
     /// Remove finished sequences from the active set, release their
     /// cache pages, and return their states (the caller converts them
     /// to [`DecodeResult`]s — directly, or merged across preemptions).
+    /// With the prefix cache on, each cleanly finished sequence first
+    /// publishes its whole cache pages into the index.
     pub fn reap<E: LayerExecutor>(&mut self, engine: &DecodeEngine<E>,
                                   batcher: &mut Batcher)
                                   -> Vec<RequestState> {
         let done = batcher.reap();
         for st in &done {
+            self.publish_prefix(engine, st);
             self.release_runtime(engine, st);
         }
         done
@@ -644,5 +810,222 @@ mod tests {
         let s = report.summary();
         assert!(s.contains("1 requests"));
         assert!(report.metrics.render().contains("amla_tokens_generated 2"));
+    }
+
+    /// Engine whose REAL pool uses 4-row pages (the prefix index keys
+    /// on physical pages, so the tests pin the page size explicitly).
+    fn engine_ps4(pages: usize) -> DecodeEngine<HostLayerExecutor> {
+        let dims = MlaDims { d_model: 48, n1: 2, d_head: 12, q_rank: 24,
+                             d_latent: 16, d_rope: 8, sq: 1 };
+        let exec = HostLayerExecutor::new(dims, 2, Algo::Amla, 32,
+                                          vec![32, 64], 11);
+        DecodeEngine::new(exec, pages, 4)
+    }
+
+    /// Drain one StepCore with the prefix-discount admission closure —
+    /// the same loop shape as the session, minus the session layer.
+    fn drive_to_drain(engine: &DecodeEngine<HostLayerExecutor>,
+                      core: &mut StepCore, batcher: &mut Batcher,
+                      c: &ServeConfig, metrics: &mut Metrics,
+                      clock: &mut SimClock) -> Vec<RequestState> {
+        let mut done = Vec::new();
+        loop {
+            batcher.admit_with(clock.now(),
+                               |req| core.prefix_discount(engine, req));
+            let stepped = core.step(engine, batcher, c, metrics, clock);
+            done.extend(core.reap(engine, batcher));
+            if stepped == 0 && batcher.idle() {
+                break;
+            }
+        }
+        done
+    }
+
+    /// The page bits under `transcript` as the index holds them: one
+    /// `Vec<u32>` of f32 bit patterns per layer, in page order.
+    fn published_bits(core: &mut StepCore,
+                      engine: &DecodeEngine<HostLayerExecutor>,
+                      transcript: &[u32]) -> Vec<Vec<u32>> {
+        // query one token past the transcript so the lookup cap
+        // (matched rows < prompt len) still covers every whole page
+        let mut q = transcript.to_vec();
+        q.push(u32::MAX);
+        let mut pool = engine.pool.lock().unwrap();
+        let m = core.prefix.as_mut().unwrap()
+            .lookup(&mut pool, &q)
+            .expect("transcript must be published");
+        let ps = pool.page_size();
+        let bits = m.pages.iter()
+            .map(|chain| chain.iter()
+                 .flat_map(|&pg| pool.page_rows(pg, ps)
+                           .iter().map(|v| v.to_bits())
+                           .collect::<Vec<u32>>())
+                 .collect())
+            .collect();
+        for chain in &m.pages {
+            for &pg in chain {
+                pool.release(pg);
+            }
+        }
+        bits
+    }
+
+    #[test]
+    fn prefix_hit_tokens_and_cache_bits_equal_cold_prefill() {
+        // The prefix-cache exactness contract at the core seam: warm
+        // (A publishes, follow-up B attaches A's pages and prefills
+        // only its suffix) vs cold (a fresh engine prefills B's whole
+        // prompt).  B's generated tokens AND every cache row under B's
+        // transcript must be bit-identical between the two runs.
+        let mut c = cfg(2, 2);
+        c.page_size = 4;
+        let prompt_a: Vec<u32> = (40..49).collect(); // 9 tokens
+        let gen_a = {
+            let engine = engine_ps4(128);
+            let report = serve(
+                &engine,
+                vec![DecodeRequest::new(0, prompt_a.clone(), 8)],
+                &c).unwrap();
+            report.results[0].tokens.clone()
+        };
+        assert_eq!(gen_a.len(), 8);
+        // B extends A's transcript by 3 fresh tokens: 20-token prompt
+        // whose first 16 rows (4 whole pages) are published by A
+        let mut prompt_b = prompt_a.clone();
+        prompt_b.extend_from_slice(&gen_a);
+        prompt_b.extend([900, 901, 902]);
+
+        let run = |warm: bool, cc: &ServeConfig, fuse: bool| {
+            let engine = engine_ps4(128);
+            engine.executor.set_fuse(fuse);
+            let ps = engine.pool.lock().unwrap().page_size();
+            let mut core = StepCore::new(engine.executor.n_layers())
+                .with_prefix(ps);
+            let mut batcher = Batcher::new(cc.max_batch, 4096);
+            let mut metrics = Metrics::default();
+            let mut clock = SimClock::simulated(
+                crate::serving::clock::StepCostModel::default());
+            if warm {
+                batcher.enqueue(
+                    DecodeRequest::new(0, prompt_a.clone(), 8), 0.0);
+                let done = drive_to_drain(&engine, &mut core, &mut batcher,
+                                          cc, &mut metrics, &mut clock);
+                assert_eq!(done[0].generated, gen_a);
+                assert_eq!(metrics.prefix_hits, 0, "first run is cold");
+            }
+            batcher.enqueue(
+                DecodeRequest::new(1, prompt_b.clone(), 6), 0.0);
+            let done = drive_to_drain(&engine, &mut core, &mut batcher,
+                                      cc, &mut metrics, &mut clock);
+            let st = done.iter().find(|st| st.request.id == 1).unwrap();
+            let gen_b = st.generated.clone();
+            assert_eq!(gen_b.len(), 6);
+            if warm {
+                assert_eq!(metrics.prefix_hits, 1, "B must hit A's pages");
+                assert_eq!(metrics.prefix_hit_rows, 16,
+                           "4 whole pages of 4 rows attach");
+            } else {
+                assert_eq!(metrics.prefix_hits, 0);
+            }
+            // B's own publish covers its whole transcript: 20 + 6 - 1
+            // = 25 rows -> 6 whole pages per layer
+            let mut transcript = prompt_b.clone();
+            transcript.extend_from_slice(&gen_b);
+            transcript.truncate(25);
+            let bits = published_bits(&mut core, &engine, &transcript);
+            assert_eq!(bits[0].len(),
+                       6 * c.page_size * (16 + 8)); // pages*rows*width
+            core.clear_prefix(&engine);
+            assert_eq!(engine.pool.lock().unwrap().stats().allocated_pages,
+                       0, "teardown must drain the pool");
+            (gen_b, bits)
+        };
+        // the contract must hold in every serving configuration, and
+        // the (tokens, bits) themselves must be invariant across them
+        let mut reference: Option<(Vec<u32>, Vec<Vec<u32>>)> = None;
+        for fuse in [false, true] {
+            for workers in [1usize, 4] {
+                for chunk in [1usize, 8] {
+                    let mut cc = c.clone();
+                    cc.workers = workers;
+                    cc.batch_workers = workers;
+                    cc.prefill_chunk = chunk;
+                    cc.fuse_buckets = fuse;
+                    let cell = format!(
+                        "fuse={fuse} workers={workers} chunk={chunk}");
+                    let warm = run(true, &cc, fuse);
+                    let cold = run(false, &cc, fuse);
+                    assert_eq!(warm, cold,
+                               "{cell}: prefix hit diverged from cold \
+                                prefill (tokens or cache bits)");
+                    match &reference {
+                        Some(r) => assert_eq!(&warm, r,
+                            "{cell}: diverged from the reference cell"),
+                        None => reference = Some(warm),
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pressure_eviction_yields_index_pages_to_the_allocator() {
+        // Fill most of a small REAL pool with published prefix pages,
+        // then serve a request that needs more fresh pages than the
+        // free list holds: the step path must evict index entries
+        // (never a live sequence's pages) and the request completes.
+        let engine = engine_ps4(12); // 12 real pages of 4 rows, total
+        let mut c = cfg(1, 1);
+        c.page_size = 4;
+        let mut core = StepCore::new(engine.executor.n_layers())
+            .with_prefix(engine.pool.lock().unwrap().page_size());
+        let mut batcher = Batcher::new(c.max_batch, 4096);
+        let mut metrics = Metrics::default();
+        let mut clock = SimClock::simulated(
+            crate::serving::clock::StepCostModel::default());
+        // A: 9-token prompt + 8 generated -> 16 rows = 4 pages/layer,
+        // all 8 pages published and resident after A departs
+        let prompt_a: Vec<u32> = (40..49).collect();
+        batcher.enqueue(DecodeRequest::new(0, prompt_a.clone(), 8), 0.0);
+        let done_a = drive_to_drain(&engine, &mut core, &mut batcher, &c,
+                                    &mut metrics, &mut clock);
+        let mut transcript_a = prompt_a;
+        transcript_a.extend_from_slice(&done_a[0].generated);
+        transcript_a.truncate(16);
+        assert_eq!(core.prefix_resident_pages(), 8);
+        assert_eq!(engine.pool.lock().unwrap().stats().free_pages, 4);
+        // B shares nothing with A and needs 5 + 7 = 12 rows -> 3 pages
+        // per layer = 6 pages; the free list holds 4, so the index
+        // must yield under pressure for B to complete (without the
+        // eviction, B's reserve would exhaust the pool and abort)
+        batcher.enqueue(
+            DecodeRequest::new(1, (500..505).collect(), 7), 0.0);
+        let done = drive_to_drain(&engine, &mut core, &mut batcher, &c,
+                                  &mut metrics, &mut clock);
+        assert_eq!(done[0].generated.len(), 7,
+                   "request must complete once the index yields");
+        // LRU eviction peels A's chain from the deep end: A's prefix
+        // must now match strictly fewer than its 16 published rows
+        let mut q = transcript_a;
+        q.push(u32::MAX);
+        let matched = {
+            let mut pool = engine.pool.lock().unwrap();
+            match core.prefix.as_mut().unwrap().lookup(&mut pool, &q) {
+                Some(m) => {
+                    for ch in &m.pages {
+                        for &pg in ch {
+                            pool.release(pg);
+                        }
+                    }
+                    m.rows
+                }
+                None => 0,
+            }
+        };
+        assert!(matched < 16,
+                "pool pressure must evict A's LRU entries \
+                 ({matched} rows still resident)");
+        core.clear_prefix(&engine);
+        assert_eq!(engine.pool.lock().unwrap().stats().allocated_pages, 0);
     }
 }

@@ -5,7 +5,7 @@
 //! The open-loop harness ([`crate::serving`]) consumes the arrival
 //! times; closed-loop benches strip them via [`requests_of`].
 
-use crate::coordinator::request::DecodeRequest;
+use crate::coordinator::request::{DecodeRequest, RequestId};
 use crate::numerics::Rng;
 
 /// Distribution of a length parameter.
@@ -134,6 +134,58 @@ pub fn generate_trace(spec: &WorkloadSpec) -> Vec<TracedRequest> {
 /// up front).
 pub fn requests_of(trace: &[TracedRequest]) -> Vec<DecodeRequest> {
     trace.iter().map(|t| t.request.clone()).collect()
+}
+
+/// Multi-turn conversational workload: each completed request re-arrives
+/// as a follow-up whose prompt is the full transcript so far — `prompt ⧺
+/// generated ⧺ fresh user-turn tokens`.  This is the shared-prefix
+/// regime the prefix cache (`--prefix-cache on`) exists for: every
+/// follow-up's whole-page prefix is already resident from the previous
+/// turn.  Follow-up prompts can only be formed at serve time (the
+/// generated tokens are not known up front), so this is a per-turn
+/// constructor rather than a pre-generated trace; determinism comes
+/// from keying the RNG on `(seed, conversation, turn)`.
+#[derive(Debug, Clone, Copy)]
+pub struct ConversationSpec {
+    /// Turns per conversation (>= 1; 1 means no follow-ups).
+    pub turns: usize,
+    /// Fresh user tokens appended per follow-up turn.
+    pub turn_len: LenDist,
+    /// Generation budget per follow-up turn.
+    pub gen_len: LenDist,
+    pub seed: u64,
+}
+
+impl Default for ConversationSpec {
+    fn default() -> Self {
+        Self { turns: 3,
+               turn_len: LenDist::Uniform(2, 6),
+               gen_len: LenDist::Geometric { mean: 8.0, cap: 24 },
+               seed: 0xC04F }
+    }
+}
+
+/// Build the follow-up request for turn `turn` (1-based; turn 0 is the
+/// opening request) of conversation `conv`: the previous turn's full
+/// transcript plus freshly sampled user tokens.  Deterministic — the
+/// same `(spec.seed, conv, turn)` always yields the same turn tokens
+/// and generation budget, so conversational traces replay bit-for-bit.
+pub fn follow_up_request(spec: &ConversationSpec, conv: u64, turn: usize,
+                         id: RequestId, prev_prompt: &[u32],
+                         generated: &[u32]) -> DecodeRequest {
+    let key = spec.seed
+        ^ conv.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        ^ (turn as u64).wrapping_mul(0xD1B5_4A32_D192_ED03);
+    let mut rng = Rng::new(key);
+    let n_turn = spec.turn_len.sample(&mut rng);
+    let g_len = spec.gen_len.sample(&mut rng);
+    let mut prompt =
+        Vec::with_capacity(prev_prompt.len() + generated.len() + n_turn);
+    prompt.extend_from_slice(prev_prompt);
+    prompt.extend_from_slice(generated);
+    prompt.extend((0..n_turn as u32)
+        .map(|i| 10_000 + 37 * conv as u32 + 11 * turn as u32 + i));
+    DecodeRequest::new(id, prompt, g_len)
 }
 
 /// Context length of the full long-context scenario: 128k tokens.
@@ -279,6 +331,39 @@ mod tests {
         let again = generate_trace(&spec);
         assert_eq!(trace[0].request.prompt, again[0].request.prompt);
         assert_eq!(trace[0].arrival, again[0].arrival);
+    }
+
+    #[test]
+    fn follow_up_extends_transcript_and_is_deterministic() {
+        let spec = ConversationSpec::default();
+        let prev: Vec<u32> = (100..110).collect();
+        let gen: Vec<u32> = (900..905).collect();
+        let a = follow_up_request(&spec, 3, 1, 42, &prev, &gen);
+        let b = follow_up_request(&spec, 3, 1, 42, &prev, &gen);
+        assert_eq!(a.prompt, b.prompt);
+        assert_eq!(a.max_new_tokens, b.max_new_tokens);
+        // the follow-up prompt is exactly transcript ⧺ new-turn tokens
+        assert!(a.prompt.starts_with(&prev));
+        assert!(a.prompt[prev.len()..].starts_with(&gen));
+        assert!(a.prompt.len() > prev.len() + gen.len());
+        assert!(a.max_new_tokens >= 1);
+    }
+
+    #[test]
+    fn prop_follow_up_turns_are_distinct_per_key() {
+        run_prop("follow_up_keys", 50, |rng| {
+            let spec = ConversationSpec {
+                seed: rng.next_u64(), ..ConversationSpec::default()
+            };
+            let prev = [1u32, 2, 3];
+            let gen = [4u32, 5];
+            let a = follow_up_request(&spec, 0, 1, 0, &prev, &gen);
+            let b = follow_up_request(&spec, 1, 1, 1, &prev, &gen);
+            // different conversations draw different turn tokens (the
+            // suffix differs even when the transcript is shared)
+            assert_ne!(&a.prompt[prev.len() + gen.len()..],
+                       &b.prompt[prev.len() + gen.len()..]);
+        });
     }
 
     #[test]

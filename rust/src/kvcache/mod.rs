@@ -17,7 +17,15 @@
 //! cross-sequence route stacks its gathered operands in a reusable
 //! [`paged::BucketArena`].  See `docs/ARCHITECTURE.md` for where each
 //! primitive sits in a serving step.
+//!
+//! On top of the pool sits [`prefix::PrefixIndex`]: a radix index of
+//! published whole-page prompt prefixes, enabling shared-prefix KV
+//! reuse (system prompts, multi-turn history) with copy-on-write
+//! protection in [`paged::SequenceCache::write_row`] and LRU eviction
+//! that yields pages back under pool pressure.
 
 pub mod paged;
+pub mod prefix;
 
 pub use paged::{BucketArena, PageId, PagePool, PoolStats, SequenceCache};
+pub use prefix::{PrefixIndex, PrefixMatch};

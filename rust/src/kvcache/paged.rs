@@ -230,14 +230,56 @@ impl SequenceCache {
 
     /// Overwrite row `i` (used when the layer executable returns the
     /// updated cache and the new row must be persisted to the pool).
+    ///
+    /// Copy-on-write: if the target page is shared (refcount > 1 —
+    /// prefix sharing via [`PagePool::retain`]), the page is cloned
+    /// into a fresh allocation first and this sequence's block table
+    /// is repointed, so a write through one sequence can never be
+    /// observed through another.  The normal serving flow only writes
+    /// freshly reserved rows (whose pages are unshared by
+    /// construction), so the clone is a defensive invariant, not a
+    /// hot-path cost.
     pub fn write_row(&mut self, pool: &mut PagePool, i: usize,
-                     latent: &[f32], rope: &[f32]) {
+                     latent: &[f32], rope: &[f32]) -> Result<()> {
         assert!(i < self.len);
+        let pi = i / pool.page_size();
+        if pool.refcount(self.pages[pi]) > 1 {
+            let fresh = pool.alloc()?;
+            let old = self.pages[pi];
+            let row = pool.row_width();
+            let ps = pool.page_size();
+            let src = old as usize * ps * row;
+            let dst = fresh as usize * ps * row;
+            pool.data.copy_within(src..src + ps * row, dst);
+            self.pages[pi] = fresh;
+            pool.release(old);
+        }
         let dl = pool.d_latent;
-        let row = pool.row_slice_mut(self.pages[i / pool.page_size()],
+        let row = pool.row_slice_mut(self.pages[pi],
                                      i % pool.page_size());
         row[..dl].copy_from_slice(latent);
         row[dl..].copy_from_slice(rope);
+        Ok(())
+    }
+
+    /// Attach already-allocated whole pages to an empty sequence —
+    /// the prefix-cache hit path: the caller (the coordinator's
+    /// reservation flow) holds one reference per page on the
+    /// sequence's behalf and transfers those references here, so this
+    /// method does **not** retain.  `rows` must cover the attached
+    /// pages exactly (whole pages only — a partially-filled tail page
+    /// is never shared).
+    pub fn attach_shared_pages(&mut self, pool: &PagePool,
+                               pages: &[PageId], rows: usize) {
+        assert!(self.is_empty(),
+                "attach_shared_pages requires an empty cache");
+        assert_eq!(rows, pages.len() * pool.page_size(),
+                   "shared attach must cover whole pages");
+        for &p in pages {
+            assert!(pool.refcount(p) > 0, "attach of free page");
+        }
+        self.pages.extend_from_slice(pages);
+        self.len = rows;
     }
 
     /// Release all pages back to the pool.
@@ -502,9 +544,70 @@ mod tests {
         let mut p = pool();
         let mut seq = SequenceCache::new();
         seq.append(&mut p, &[0.0; 6], &[0.0; 2]).unwrap();
-        seq.write_row(&mut p, 0, &[9.0; 6], &[8.0; 2]);
+        seq.write_row(&mut p, 0, &[9.0; 6], &[8.0; 2]).unwrap();
         let (l, r) = seq.row(&p, 0);
         assert_eq!(l, vec![9.0; 6]);
         assert_eq!(r, vec![8.0; 2]);
+    }
+
+    #[test]
+    fn write_row_clones_shared_page() {
+        let mut p = pool(); // page_size 4
+        let mut a = SequenceCache::new();
+        for i in 0..4 {
+            a.append(&mut p, &[i as f32; 6], &[i as f32; 2]).unwrap();
+        }
+        // share a's full page with b (the prefix-hit attach shape)
+        let page = a.pages()[0];
+        p.retain(page);
+        let mut b = SequenceCache::new();
+        b.attach_shared_pages(&p, &[page], 4);
+        assert_eq!(b.row(&p, 2), a.row(&p, 2), "shared bits visible");
+        // writing through b must clone, leaving a untouched
+        b.write_row(&mut p, 2, &[9.0; 6], &[9.0; 2]).unwrap();
+        assert_ne!(b.pages()[0], page, "COW must repoint the writer");
+        assert_eq!(p.refcount(page), 1, "writer's ref moved off the page");
+        assert_eq!(a.row(&p, 2), (vec![2.0; 6], vec![2.0; 2]),
+                   "sharer must not observe the write");
+        assert_eq!(b.row(&p, 2), (vec![9.0; 6], vec![9.0; 2]));
+        // other rows of the cloned page carried over
+        assert_eq!(b.row(&p, 3), (vec![3.0; 6], vec![3.0; 2]));
+        b.free(&mut p);
+        a.free(&mut p);
+        assert_eq!(p.stats().allocated_pages, 0);
+    }
+
+    #[test]
+    fn write_row_on_unshared_page_does_not_clone() {
+        let mut p = pool();
+        let mut seq = SequenceCache::new();
+        seq.append(&mut p, &[1.0; 6], &[1.0; 2]).unwrap();
+        let page = seq.pages()[0];
+        seq.write_row(&mut p, 0, &[5.0; 6], &[5.0; 2]).unwrap();
+        assert_eq!(seq.pages()[0], page, "unshared write stays in place");
+        assert_eq!(p.stats().allocated_pages, 1);
+    }
+
+    #[test]
+    fn attach_then_grow_allocates_fresh_tail_page() {
+        let mut p = pool(); // page_size 4
+        let mut a = SequenceCache::new();
+        for i in 0..4 {
+            a.append(&mut p, &[i as f32; 6], &[0.0; 2]).unwrap();
+        }
+        let page = a.pages()[0];
+        p.retain(page);
+        let mut b = SequenceCache::new();
+        b.attach_shared_pages(&p, &[page], 4);
+        // appending after a whole-page attach lands on a *new* page
+        // (slot = len % page_size = 0), so the shared page is never
+        // written by normal growth
+        b.append(&mut p, &[7.0; 6], &[7.0; 2]).unwrap();
+        assert_eq!(b.pages().len(), 2);
+        assert_ne!(b.pages()[1], page);
+        assert_eq!(a.row(&p, 3), (vec![3.0; 6], vec![0.0; 2]));
+        b.free(&mut p);
+        a.free(&mut p);
+        assert_eq!(p.stats().allocated_pages, 0);
     }
 }

@@ -1,0 +1,535 @@
+//! Shared-prefix index over the paged latent-KV pool.
+//!
+//! Serving traffic is dominated by shared prefixes — system prompts,
+//! few-shot templates, multi-turn history that resubmits itself.  MLA's
+//! compact latent cache makes *resident* sharing cheap: one page holds
+//! `page_size` rows of `[latent | rope]`, so keeping a popular prefix
+//! warm costs a few pages, not a few hundred KV heads' worth.
+//!
+//! [`PrefixIndex`] maps **whole-page token prefixes** to the pool pages
+//! holding their cache rows.  The structure is a radix trie flattened
+//! into a `BTreeMap` (determinism tier: `HashMap` is banned on the
+//! serving path): the key is the token prefix of length `k *
+//! page_size`, and the entry owns only the *k-th* page per layer.  The
+//! map maintains a **prefix-closure invariant** — whenever a depth-`k`
+//! key is present, every depth `1..k` ancestor key is present too — so
+//! longest-prefix lookup is a simple walk `k = 1, 2, ...` until the key
+//! is missing, and eviction can be restricted to *leaves* (entries no
+//! other entry extends), which keeps every surviving entry's page chain
+//! intact.
+//!
+//! Reference discipline: the index holds **one pool reference per page
+//! it stores** (taken via [`PagePool::retain`] at publish, dropped via
+//! [`PagePool::release`] at evict).  Sessions that hit the index take
+//! their *own* references, so evicting an entry can never free a page a
+//! live sequence still reads — the pool's refcount only hits zero when
+//! both the index and every sharer have let go.  Partially-filled tail
+//! pages are never published (whole pages only), and writes through a
+//! shared page copy-on-write in [`super::paged::SequenceCache::write_row`].
+//!
+//! Recency is tracked with a **monotonic tick counter**, not wall
+//! clock: the serving tier is deterministic (det-wallclock), and LRU
+//! order must be a pure function of the request schedule.
+
+use std::collections::BTreeMap;
+
+use super::paged::{PageId, PagePool};
+
+/// One published whole-page prefix: the per-layer pages holding rows
+/// `[(k-1)*page_size, k*page_size)` of the keyed token prefix, plus
+/// the LRU tick of the last touch.
+#[derive(Debug)]
+struct Entry {
+    /// One page per layer (index = layer).
+    pages: Vec<PageId>,
+    /// Monotonic recency stamp (higher = more recently used).
+    tick: u64,
+}
+
+/// A prefix-cache hit, ready to attach: `rows` whole-page rows across
+/// `pages[layer]` page chains.  The lookup has already [`PagePool::retain`]ed
+/// every page on the caller's behalf — the caller owns those references
+/// and must either transfer them to a `SequenceCache` or release them.
+#[derive(Debug)]
+pub struct PrefixMatch {
+    /// Matched whole-page rows (`pages[0].len() * page_size`).
+    pub rows: usize,
+    /// Per-layer page chains, outer index = layer, inner = page order.
+    pub pages: Vec<Vec<PageId>>,
+}
+
+/// Radix index of published whole-page prompt prefixes → pool pages.
+///
+/// Flat-map trie keyed on the token prefix itself (`Vec<u32>` of length
+/// `k * page_size`), maintaining the prefix-closure invariant described
+/// in the module docs.  All mutation goes through [`Self::publish`],
+/// [`Self::lookup`] (tick touch), and the eviction methods.
+#[derive(Debug)]
+pub struct PrefixIndex {
+    entries: BTreeMap<Vec<u32>, Entry>,
+    page_size: usize,
+    n_layers: usize,
+    tick: u64,
+}
+
+impl PrefixIndex {
+    pub fn new(page_size: usize, n_layers: usize) -> Self {
+        assert!(page_size > 0);
+        assert!(n_layers > 0);
+        Self { entries: BTreeMap::new(), page_size, n_layers, tick: 0 }
+    }
+
+    /// Number of published entries (= whole-page prefix depths held).
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Pool pages the index currently holds references to.
+    pub fn resident_pages(&self) -> usize {
+        self.entries.len() * self.n_layers
+    }
+
+    fn next_tick(&mut self) -> u64 {
+        self.tick += 1;
+        self.tick
+    }
+
+    /// Longest-prefix lookup for `prompt`, capped so that at least one
+    /// prompt token is left to prefill (`matched rows < prompt.len()`):
+    /// the engine's feed contract requires a non-empty first feed, and
+    /// the suffix prefill is what produces the first output token.
+    ///
+    /// On a hit, every matched page is [`PagePool::retain`]ed — the
+    /// returned [`PrefixMatch`] carries owned references that pin the
+    /// pages against index eviction until the caller attaches or
+    /// releases them.  Touches the LRU tick of every matched depth.
+    pub fn lookup(&mut self, pool: &mut PagePool, prompt: &[u32])
+                  -> Option<PrefixMatch> {
+        let ps = self.page_size;
+        if prompt.len() < 2 || ps >= prompt.len() {
+            return None;
+        }
+        let max_k = (prompt.len() - 1) / ps;
+        let mut depth = 0;
+        let mut pages: Vec<Vec<PageId>> =
+            vec![Vec::new(); self.n_layers];
+        let tick = self.next_tick();
+        for k in 1..=max_k {
+            match self.entries.get_mut(&prompt[..k * ps]) {
+                Some(e) => {
+                    e.tick = tick;
+                    for (layer, &p) in e.pages.iter().enumerate() {
+                        pages[layer].push(p);
+                    }
+                    depth = k;
+                }
+                None => break, // prefix closure: deeper keys absent too
+            }
+        }
+        if depth == 0 {
+            return None;
+        }
+        for chain in &pages {
+            for &p in chain {
+                pool.retain(p);
+            }
+        }
+        Some(PrefixMatch { rows: depth * ps, pages })
+    }
+
+    /// Publish the whole-page prefixes of `tokens` whose cache pages
+    /// are `pages[layer]` (a sequence's block table, all layers, page
+    /// order).  Only depths `1..=floor(tokens.len / page_size)` capped
+    /// by the available pages are eligible; depths already present are
+    /// left untouched (first-publish wins — bits are identical either
+    /// way, because cache bits are a pure function of the absolute
+    /// token prefix).  Newly published pages are retained on the
+    /// index's behalf.
+    pub fn publish(&mut self, pool: &mut PagePool, tokens: &[u32],
+                   pages: &[Vec<PageId>]) {
+        assert_eq!(pages.len(), self.n_layers);
+        let ps = self.page_size;
+        let max_k = pages.iter().map(|c| c.len())
+            .chain([tokens.len() / ps])
+            .min()
+            .unwrap_or(0);
+        let tick = self.next_tick();
+        for k in 1..=max_k {
+            let key = &tokens[..k * ps];
+            if self.entries.contains_key(key) {
+                continue;
+            }
+            let layer_pages: Vec<PageId> =
+                pages.iter().map(|c| c[k - 1]).collect();
+            for &p in &layer_pages {
+                pool.retain(p);
+            }
+            self.entries.insert(key.to_vec(),
+                                Entry { pages: layer_pages, tick });
+        }
+    }
+
+    /// True if `key` is a leaf: no other entry extends it.  With the
+    /// prefix-closure invariant, any extension of `key` at depth k+1
+    /// sorts immediately after `key` in the `BTreeMap`, inside the
+    /// half-open range `(key, key ⧺ [u32::MAX...]]` — a range scan of
+    /// at most one element decides it.
+    fn is_leaf(&self, key: &[u32]) -> bool {
+        use std::ops::Bound;
+        let next = self.entries
+            .range::<[u32], _>((Bound::Excluded(key), Bound::Unbounded))
+            .next();
+        match next {
+            Some((k, _)) => !k.starts_with(key),
+            None => true,
+        }
+    }
+
+    /// Evict the least-recently-used leaf entry, releasing its pages
+    /// back toward the pool (a page actually frees only when no
+    /// session still shares it).  Returns `false` when the index is
+    /// empty.  Leaf-only eviction preserves the prefix-closure
+    /// invariant, so repeated calls peel chains from the deep end.
+    pub fn evict_lru(&mut self, pool: &mut PagePool) -> bool {
+        let victim = self.entries.iter()
+            .filter(|(k, _)| self.is_leaf(k))
+            .min_by_key(|(k, e)| (e.tick, k.clone()))
+            .map(|(k, _)| k.clone());
+        match victim {
+            Some(key) => {
+                let e = self.entries.remove(&key).unwrap();
+                for p in e.pages {
+                    pool.release(p);
+                }
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Yield index-held pages to the allocator until the pool has at
+    /// least `need_pages` free pages or the index is drained.  Returns
+    /// the number of entries evicted.  Never frees a page a live
+    /// session holds — eviction only drops the *index's* references.
+    pub fn evict_for_pressure(&mut self, pool: &mut PagePool,
+                              need_pages: usize) -> usize {
+        let mut evicted = 0;
+        while pool.stats().free_pages < need_pages
+            && self.evict_lru(pool)
+        {
+            evicted += 1;
+        }
+        evicted
+    }
+
+    /// Drop every entry, releasing all index-held references.
+    pub fn clear(&mut self, pool: &mut PagePool) {
+        while self.evict_lru(pool) {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvcache::paged::SequenceCache;
+    use crate::util::prop::{gen_usize, run_prop};
+
+    const PS: usize = 4;
+
+    fn pool(pages: usize) -> PagePool {
+        PagePool::new(pages, PS, 6, 2)
+    }
+
+    /// Stand up a sequence whose rows encode `(token, layer)` so bit
+    /// checks can tell pages apart, returning per-layer block tables.
+    fn seed_seq(pool: &mut PagePool, tokens: &[u32], n_layers: usize)
+                -> (Vec<SequenceCache>, Vec<Vec<PageId>>) {
+        let mut caches: Vec<SequenceCache> =
+            (0..n_layers).map(|_| SequenceCache::new()).collect();
+        for (layer, c) in caches.iter_mut().enumerate() {
+            for &t in tokens {
+                let v = t as f32 + layer as f32 * 1000.0;
+                c.append(pool, &[v; 6], &[v; 2]).unwrap();
+            }
+        }
+        let tables: Vec<Vec<PageId>> =
+            caches.iter().map(|c| c.pages().to_vec()).collect();
+        (caches, tables)
+    }
+
+    #[test]
+    fn publish_then_longest_prefix_lookup() {
+        let mut p = pool(32);
+        let mut idx = PrefixIndex::new(PS, 2);
+        let tokens: Vec<u32> = (100..110).collect(); // 10 tokens, 2 pages
+        let (mut caches, tables) = seed_seq(&mut p, &tokens, 2);
+        idx.publish(&mut p, &tokens, &tables);
+        assert_eq!(idx.len(), 2, "depths 1 and 2 published");
+        assert_eq!(idx.resident_pages(), 4);
+
+        // full two-page match for a longer prompt sharing the prefix
+        let prompt: Vec<u32> = (100..112).collect();
+        let m = idx.lookup(&mut p, &prompt).expect("hit");
+        assert_eq!(m.rows, 8);
+        assert_eq!(m.pages[0], tables[0][..2].to_vec());
+        assert_eq!(m.pages[1], tables[1][..2].to_vec());
+        // lookup retained every matched page
+        for chain in &m.pages {
+            for &pg in chain {
+                p.release(pg);
+            }
+        }
+
+        // prompt equal to the published tokens: capped at one page so
+        // the suffix still prefills (matched rows < prompt len)
+        let m = idx.lookup(&mut p, &tokens).expect("capped hit");
+        assert_eq!(m.rows, 4, "never match the whole prompt");
+        for chain in &m.pages {
+            for &pg in chain {
+                p.release(pg);
+            }
+        }
+
+        // diverging prompt: first page only
+        let mut div = tokens.clone();
+        div[5] = 999;
+        div.extend([1, 2, 3]);
+        let m = idx.lookup(&mut p, &div).expect("partial hit");
+        assert_eq!(m.rows, 4);
+        for chain in &m.pages {
+            for &pg in chain {
+                p.release(pg);
+            }
+        }
+
+        // unrelated prompt misses
+        assert!(idx.lookup(&mut p, &[1, 2, 3, 4, 5, 6, 7, 8, 9]).is_none());
+        // too-short prompt misses (nothing would be left to prefill)
+        assert!(idx.lookup(&mut p, &tokens[..4]).is_none());
+
+        idx.clear(&mut p);
+        for c in &mut caches {
+            c.free(&mut p);
+        }
+        assert_eq!(p.stats().allocated_pages, 0);
+    }
+
+    #[test]
+    fn eviction_is_leaf_only_lru_and_never_frees_live_pages() {
+        let mut p = pool(32);
+        let mut idx = PrefixIndex::new(PS, 1);
+        let a: Vec<u32> = (0..8).collect();
+        let b: Vec<u32> = vec![0, 1, 2, 3, 50, 51, 52, 53];
+        let (mut ca, ta) = seed_seq(&mut p, &a, 1);
+        let (mut cb, tb) = seed_seq(&mut p, &b, 1);
+        idx.publish(&mut p, &a, &ta);
+        idx.publish(&mut p, &b, &tb);
+        // depth-1 of b equals depth-1 of a (same first page key); the
+        // first publish won, so b's first page holds only its own ref
+        assert_eq!(idx.len(), 3);
+        // free the source sequences: index refs keep pages resident
+        ca[0].free(&mut p);
+        cb[0].free(&mut p);
+        assert_eq!(p.stats().allocated_pages, 3,
+                   "index keeps published pages resident");
+
+        // a lookup through prefix `a` refreshes its chain; b's deep
+        // page becomes the LRU leaf
+        let long_a: Vec<u32> = (0..12).collect();
+        let m = idx.lookup(&mut p, &long_a).unwrap();
+        assert!(idx.evict_lru(&mut p), "evicts b's leaf");
+        assert_eq!(idx.len(), 2);
+        // the shared depth-1 entry survived (not a leaf while a's
+        // depth-2 extends it)
+        assert!(idx.lookup(&mut p, &b)
+            .map(|m2| {
+                let rows = m2.rows;
+                for ch in &m2.pages { for &pg in ch { p.release(pg); } }
+                rows
+            }) == Some(4));
+
+        // pressure eviction drains leaves but the looked-up match's
+        // retained refs keep those pages allocated
+        let evicted = idx.evict_for_pressure(&mut p, 32);
+        assert_eq!(evicted, 2);
+        assert!(idx.is_empty());
+        assert_eq!(p.stats().allocated_pages, 2,
+                   "live match refs pin pages through eviction");
+        for ch in &m.pages {
+            for &pg in ch {
+                p.release(pg);
+            }
+        }
+        assert_eq!(p.stats().allocated_pages, 0);
+    }
+
+    #[test]
+    fn prop_index_refcount_conservation() {
+        // Randomized publish/lookup/evict: at every step, each page's
+        // pool refcount equals (index holds it) + (live sequences
+        // holding it) + (outstanding lookup matches holding it) —
+        // refcount conservation across the whole subsystem.
+        run_prop("prefix_refcount_conservation", 60, |rng| {
+            let mut p = pool(64);
+            let mut idx = PrefixIndex::new(PS, 2);
+            let mut seqs: Vec<(Vec<u32>, Vec<SequenceCache>)> = Vec::new();
+            let mut matches: Vec<PrefixMatch> = Vec::new();
+            for _ in 0..gen_usize(rng, 5, 40) {
+                match gen_usize(rng, 0, 5) {
+                    0 => {
+                        // new sequence over a (possibly shared) stem
+                        let stem = gen_usize(rng, 0, 3) as u32;
+                        let n = gen_usize(rng, 2, 14);
+                        let tokens: Vec<u32> = (0..n as u32)
+                            .map(|i| stem * 1000 + i)
+                            .collect();
+                        let mut ok = true;
+                        let mut caches = Vec::new();
+                        for layer in 0..2 {
+                            let mut c = SequenceCache::new();
+                            for &t in &tokens {
+                                let v = t as f32 + layer as f32;
+                                if c.append(&mut p, &[v; 6], &[v; 2])
+                                    .is_err() {
+                                    ok = false;
+                                    break;
+                                }
+                            }
+                            caches.push(c);
+                        }
+                        if !ok {
+                            // pool exhausted mid-seed: roll back
+                            for mut c in caches {
+                                c.free(&mut p);
+                            }
+                        } else {
+                            let tables: Vec<Vec<PageId>> = caches
+                                .iter()
+                                .map(|c| c.pages().to_vec())
+                                .collect();
+                            idx.publish(&mut p, &tokens, &tables);
+                            seqs.push((tokens, caches));
+                        }
+                    }
+                    1 if !seqs.is_empty() => {
+                        let i = gen_usize(rng, 0, seqs.len());
+                        let (_, mut caches) = seqs.swap_remove(i);
+                        for c in &mut caches {
+                            c.free(&mut p);
+                        }
+                    }
+                    2 if !seqs.is_empty() => {
+                        let i = gen_usize(rng, 0, seqs.len());
+                        let mut prompt = seqs[i].0.clone();
+                        prompt.extend([77, 78, 79]);
+                        if let Some(m) = idx.lookup(&mut p, &prompt) {
+                            // lookup must be a *prefix* of the prompt
+                            assert!(m.rows <= prompt.len());
+                            matches.push(m);
+                        }
+                    }
+                    3 if !matches.is_empty() => {
+                        let m = matches.swap_remove(0);
+                        for ch in &m.pages {
+                            for &pg in ch {
+                                p.release(pg);
+                            }
+                        }
+                    }
+                    _ => {
+                        idx.evict_lru(&mut p);
+                    }
+                }
+                // conservation: total pool refs == index refs +
+                // sequence refs + outstanding match refs
+                let total_refs: usize = (0..64)
+                    .map(|pg| p.refcount(pg as PageId) as usize)
+                    .sum();
+                let seq_refs: usize = seqs.iter()
+                    .map(|(_, cs)| cs.iter()
+                         .map(|c| c.pages().len()).sum::<usize>())
+                    .sum();
+                let match_refs: usize = matches.iter()
+                    .map(|m| m.pages.iter()
+                         .map(|c| c.len()).sum::<usize>())
+                    .sum();
+                assert_eq!(total_refs,
+                           idx.resident_pages() + seq_refs + match_refs,
+                           "refcount conservation violated");
+            }
+            // teardown drains everything
+            for (_, mut caches) in seqs {
+                for c in &mut caches {
+                    c.free(&mut p);
+                }
+            }
+            for m in matches {
+                for ch in &m.pages {
+                    for &pg in ch {
+                        p.release(pg);
+                    }
+                }
+            }
+            idx.clear(&mut p);
+            assert_eq!(p.stats().allocated_pages, 0);
+        });
+    }
+
+    #[test]
+    fn prop_lookup_is_longest_published_prefix() {
+        run_prop("prefix_longest_match", 40, |rng| {
+            let mut p = pool(64);
+            let mut idx = PrefixIndex::new(PS, 1);
+            // publish a random set of sequences off shared stems
+            let mut published: Vec<Vec<u32>> = Vec::new();
+            let mut caches = Vec::new();
+            for _ in 0..gen_usize(rng, 1, 4) {
+                let stem = gen_usize(rng, 0, 2) as u32;
+                let n = gen_usize(rng, 4, 13);
+                let tokens: Vec<u32> = (0..n as u32)
+                    .map(|i| stem * 500 + i)
+                    .collect();
+                let (mut cs, tables) = seed_seq(&mut p, &tokens, 1);
+                idx.publish(&mut p, &tokens, &tables);
+                published.push(tokens);
+                caches.append(&mut cs);
+            }
+            // reference model: set of published whole-page keys
+            let keys: std::collections::BTreeSet<Vec<u32>> = published
+                .iter()
+                .flat_map(|t| (1..=t.len() / PS)
+                          .map(|k| t[..k * PS].to_vec()))
+                .collect();
+            for _ in 0..gen_usize(rng, 1, 8) {
+                let stem = gen_usize(rng, 0, 2) as u32;
+                let n = gen_usize(rng, 1, 16);
+                let prompt: Vec<u32> = (0..n as u32)
+                    .map(|i| stem * 500 + i)
+                    .collect();
+                let expect = (1..=prompt.len().saturating_sub(1) / PS)
+                    .take_while(|&k| keys.contains(&prompt[..k * PS]))
+                    .last()
+                    .map(|k| k * PS);
+                let got = idx.lookup(&mut p, &prompt).map(|m| {
+                    for ch in &m.pages {
+                        for &pg in ch {
+                            p.release(pg);
+                        }
+                    }
+                    m.rows
+                });
+                assert_eq!(got, expect,
+                           "longest-prefix mismatch for {prompt:?}");
+            }
+            idx.clear(&mut p);
+            for c in caches.iter_mut() {
+                c.free(&mut p);
+            }
+            assert_eq!(p.stats().allocated_pages, 0);
+        });
+    }
+}

@@ -71,10 +71,16 @@ USAGE:
                   [--open-loop] [--rate R] [--starvation-steps S]
                   [--preempt on|off] [--virtual-clock]
                   [--split-kv-threshold N] [--decode-path naive|absorbed]
+                  [--prefix-cache on|off]
                   # --split-kv-threshold N partitions a long decode
                   # step's KV scan across idle batch workers once its
                   # context reaches N rows (0 = off; bit-identical to
                   # the single-pass loop)
+                  # --prefix-cache on publishes finished prompts' whole
+                  # cache pages into a shared-prefix index; later
+                  # requests extending a published prefix attach those
+                  # pages and prefill only their unique suffix
+                  # (bit-identical tokens and cache bits vs off)
                   # --decode-path absorbed scores queries against the
                   # latent cache via the precomputed absorbed weights
                   # (~1e-4 accuracy contract vs naive, not bitwise)
@@ -201,11 +207,13 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         let m = &point.metrics;
         println!("engine gauges @ {:.2} req/s offered: queue depth peak \
                   interactive/batch/background {}/{}/{}, preemptions {}, \
-                  cancelled {}, streamed tokens {}",
+                  cancelled {}, streamed tokens {}, prefix hits {} \
+                  ({} rows, {} resident pages)",
                  point.offered_rate,
                  m.queue_depth_peak[0], m.queue_depth_peak[1],
                  m.queue_depth_peak[2], m.preemptions,
-                 m.requests_cancelled, m.streamed_tokens);
+                 m.requests_cancelled, m.streamed_tokens,
+                 m.prefix_hits, m.prefix_hit_rows, m.prefix_resident_pages);
     }
     println!("{}", report.to_json());
     Ok(())

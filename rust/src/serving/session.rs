@@ -381,11 +381,20 @@ struct Session<'e, E: LayerExecutor> {
 impl<'e, E: LayerExecutor> Session<'e, E> {
     fn new(engine: &'e DecodeEngine<E>, cfg: &'e ServeConfig) -> Self {
         let (batcher, baseline) = init_run(engine, cfg);
+        let mut core = StepCore::new(engine.executor.n_layers());
+        if cfg.prefix_cache {
+            // the index shares whole PHYSICAL pages, so it is keyed on
+            // the engine pool's page size — cfg.page_size only shapes
+            // the admission budget and may differ
+            // lint:allow(panic): pool lock — no holder panics
+            let ps = engine.pool.lock().unwrap().page_size();
+            core = core.with_prefix(ps);
+        }
         Self {
             engine,
             cfg,
             batcher,
-            core: StepCore::new(engine.executor.n_layers()),
+            core,
             ledger: ResumeLedger::default(),
             metrics: Metrics::default(),
             results: Vec::new(),
@@ -444,11 +453,15 @@ impl<'e, E: LayerExecutor> Session<'e, E> {
                 }
             }
 
-            let admitted = self.batcher.admit(now);
+            let admitted = self.batcher
+                .admit_with(now, |req| {
+                    self.core.prefix_discount(self.engine, req)
+                });
             if admitted == 0 && self.batcher.active_len() == 0 {
                 // all rows free yet the head cannot be admitted: it can
                 // never fit — reject it (returning any carried tokens)
                 let Some(req) = self.batcher.pop_blocked() else { break };
+                self.core.drop_reservation(self.engine, req.id);
                 eprintln!("[session] request {} rejected: needs more pool \
                            rows than the pool holds", req.id);
                 let res = self.ledger.reject(req.id);
@@ -481,7 +494,9 @@ impl<'e, E: LayerExecutor> Session<'e, E> {
                     let priority = st.priority;
                     let resume = self.ledger.note_eviction(st);
                     self.batcher.enqueue_with(resume, now, priority);
-                    self.batcher.admit(now);
+                    self.batcher.admit_with(now, |req| {
+                        self.core.prefix_discount(self.engine, req)
+                    });
                 }
             }
 
@@ -498,8 +513,10 @@ impl<'e, E: LayerExecutor> Session<'e, E> {
         }
 
         // anything still in flight (abort / client disappeared) is
-        // cancelled so the pool drains to zero
+        // cancelled so the pool drains to zero; the prefix index then
+        // returns its resident pages — the engine outlives the session
         self.cancel_in_flight();
+        self.core.clear_prefix(self.engine);
 
         let makespan = clock.now();
         self.metrics.wall_time = clock.elapsed();
@@ -622,6 +639,9 @@ impl<'e, E: LayerExecutor> Session<'e, E> {
             return;
         }
         if self.batcher.cancel_queued(id).is_some() {
+            // a queued head may hold a prefix reservation from a failed
+            // admit probe — return those pinned pages to the index
+            self.core.drop_reservation(self.engine, id);
             let res = self.ledger.reject(id);
             self.finish_cancel(res);
             return;
@@ -739,6 +759,7 @@ impl<'e, E: LayerExecutor> Session<'e, E> {
             self.finish_cancel(res);
         }
         while let Some(req) = self.batcher.pop_blocked() {
+            self.core.drop_reservation(self.engine, req.id);
             let res = self.ledger.reject(req.id);
             self.finish_cancel(res);
         }
@@ -764,6 +785,7 @@ impl<'e, E: LayerExecutor> Session<'e, E> {
                               stats.queued_peak_by_class[1] as u64,
                               stats.queued_peak_by_class[2] as u64];
         m.active_sessions = self.batcher.active_len() as u64;
+        m.prefix_resident_pages = self.core.prefix_resident_pages() as u64;
     }
 }
 

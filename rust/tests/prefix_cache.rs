@@ -1,0 +1,203 @@
+//! Prefix-cache serving tier: shared-prefix KV reuse must be a pure
+//! scheduling optimization — `--prefix-cache on` emits **bit-identical
+//! tokens** to `off` for the same conversational workload, while doing
+//! strictly less prefill work and recording hits (contract 9,
+//! `docs/ARCHITECTURE.md`).
+//!
+//! Two vehicles:
+//! * a **static conversational trace** (materialized turn-by-turn from
+//!   the deterministic oracle — generation is a pure function of the
+//!   prompt, pinned by the cross-config identity tests) replayed by
+//!   `serve_open_loop` across `fuse on/off × workers 1/4 ×
+//!   prefill-chunk {1,8}`, on vs off;
+//! * a **live multi-turn session** ([`AmlaEngine`]) where each
+//!   follow-up is built at serve time from the previous turn's actual
+//!   result ([`follow_up_request`]) — the workload the cache exists
+//!   for.
+//!
+//! The companion cache-**bit** identity pin (a prefix hit attaches the
+//! very pages a cold prefill would have written, bit-for-bit) lives in
+//! `coordinator::scheduler` unit tests, where sequence caches are
+//! inspectable mid-flight.
+
+use amla::config::{Algo, EngineConfig, ServeConfig};
+use amla::coordinator::{follow_up_request, serve, ConversationSpec,
+                        DecodeEngine, DecodeRequest, HostLayerExecutor,
+                        RequestId, TracedRequest};
+use amla::numerics::mla::MlaDims;
+use amla::serving::clock::{SimClock, StepCostModel};
+use amla::serving::{serve_open_loop, AmlaEngine};
+
+fn host_executor() -> HostLayerExecutor {
+    let dims = MlaDims { d_model: 48, n1: 2, d_head: 12, q_rank: 24,
+                         d_latent: 16, d_rope: 8, sq: 1 };
+    HostLayerExecutor::new(dims, 2, Algo::Amla, 32, vec![32, 64], 11)
+}
+
+/// Real pool: 512 pages of 8 rows — the prefix index keys on this
+/// physical page size.
+fn engine() -> DecodeEngine<HostLayerExecutor> {
+    DecodeEngine::new(host_executor(), 512, 8)
+}
+
+fn base_cfg() -> ServeConfig {
+    ServeConfig { max_batch: 4, workers: 2, batch_workers: 2,
+                  pool_pages: 64, page_size: 8,
+                  ..ServeConfig::default() }
+}
+
+fn tokens_by_id(results: &[amla::coordinator::DecodeResult])
+                -> Vec<(RequestId, Vec<u32>)> {
+    let mut t: Vec<_> = results.iter()
+        .map(|r| (r.id, r.tokens.clone()))
+        .collect();
+    t.sort_by_key(|(id, _)| *id);
+    t
+}
+
+/// Materialize a 2-conversation × 3-turn trace: each follow-up turn's
+/// prompt is the previous turn's full transcript plus fresh seeded
+/// user tokens.  The per-turn generated tokens come from scratch
+/// closed-loop runs — valid as an oracle because generation is a pure
+/// function of the prompt.  Turn `t` arrives 3 virtual seconds after
+/// turn `t-1` (far beyond its completion), so the previous transcript
+/// is always published before the follow-up is considered.
+fn conversation_trace() -> Vec<TracedRequest> {
+    let spec = ConversationSpec::default(); // 3 turns
+    let c = base_cfg();
+    let mut trace = Vec::new();
+    let mut id: RequestId = 0;
+    for conv in 0..2u64 {
+        let opening: Vec<u32> =
+            (0..9).map(|i| 1000 * conv as u32 + 17 + i).collect();
+        let mut req = DecodeRequest::new(id, opening, 8);
+        for turn in 0..spec.turns {
+            trace.push(TracedRequest {
+                request: req.clone(),
+                arrival: conv as f64 * 0.1 + turn as f64 * 3.0,
+            });
+            if turn + 1 == spec.turns {
+                break;
+            }
+            let eng = engine();
+            let res = serve(&eng, vec![req.clone()], &c).unwrap();
+            id += 1;
+            req = follow_up_request(&spec, conv, turn + 1, id,
+                                    &req.prompt, &res.results[0].tokens);
+        }
+        id += 1;
+    }
+    assert_eq!(trace.len(), 6, "2 conversations x 3 turns");
+    trace
+}
+
+#[test]
+fn prefix_on_is_token_identical_across_the_config_grid() {
+    let trace = conversation_trace();
+    let mut oracle: Option<Vec<(RequestId, Vec<u32>)>> = None;
+    for fuse in [false, true] {
+        for workers in [1usize, 4] {
+            for chunk in [1usize, 8] {
+                let cell = format!(
+                    "fuse={fuse} workers={workers} chunk={chunk}");
+                let run = |prefix: bool| {
+                    let eng = engine();
+                    let mut clock = SimClock::simulated(
+                        StepCostModel::new(0.01, 0.0));
+                    let mut c = base_cfg();
+                    c.workers = workers;
+                    c.batch_workers = workers;
+                    c.fuse_buckets = fuse;
+                    c.prefill_chunk = chunk;
+                    c.prefix_cache = prefix;
+                    let report = serve_open_loop(&eng, trace.clone(), &c,
+                                                 &mut clock).unwrap();
+                    assert_eq!(report.results.len(), 6);
+                    assert_eq!(
+                        eng.pool.lock().unwrap().stats().allocated_pages,
+                        0, "session teardown must drain the pool");
+                    (tokens_by_id(&report.results),
+                     report.metrics.prefix_hits,
+                     report.metrics.prefix_hit_rows,
+                     report.metrics.prompt_tokens,
+                     report.metrics.prefill_chunks)
+                };
+                let (tok_off, hits_off, _, pt_off, pc_off) = run(false);
+                let (tok_on, hits_on, hit_rows, pt_on, pc_on) = run(true);
+                assert_eq!(hits_off, 0, "{cell}: off must never hit");
+                assert_eq!(hits_on, 4,
+                           "{cell}: every follow-up (2 convs x 2) hits");
+                assert!(hit_rows >= 4 * 8,
+                        "{cell}: each hit attaches >= 1 whole page");
+                assert_eq!(tok_on, tok_off,
+                           "{cell}: prefix cache changed served tokens");
+                assert!(pt_on < pt_off,
+                        "{cell}: hits must skip prompt rows \
+                         ({pt_on} vs {pt_off})");
+                assert!(pc_on < pc_off,
+                        "{cell}: hits must save prefill invocations \
+                         ({pc_on} vs {pc_off})");
+                match &oracle {
+                    Some(o) => assert_eq!(&tok_on, o,
+                        "{cell}: diverged from the reference cell"),
+                    None => oracle = Some(tok_off),
+                }
+            }
+        }
+    }
+}
+
+/// Drive true serve-time conversations through the live engine: each
+/// follow-up is constructed from the previous turn's **actual** result.
+fn run_live_conversations(prefix: bool)
+    -> (Vec<(RequestId, Vec<u32>)>, amla::coordinator::Metrics) {
+    let cfg = EngineConfig::builder()
+        .pool_pages(64)
+        .page_size(8)
+        .max_batch(4)
+        .batch_workers(2)
+        .preempt(false)
+        .prefix_cache(prefix)
+        .build()
+        .unwrap();
+    let engine = AmlaEngine::start(cfg, host_executor()).unwrap();
+    let spec = ConversationSpec::default();
+    let mut out = Vec::new();
+    let mut id: RequestId = 0;
+    for conv in 0..2u64 {
+        let opening: Vec<u32> =
+            (0..9).map(|i| 1000 * conv as u32 + 17 + i).collect();
+        let mut req = DecodeRequest::new(id, opening, 8);
+        for turn in 0..spec.turns {
+            let res = engine.submit(req.clone()).unwrap().wait().unwrap();
+            out.push((res.id, res.tokens.clone()));
+            if turn + 1 == spec.turns {
+                break;
+            }
+            id += 1;
+            req = follow_up_request(&spec, conv, turn + 1, id,
+                                    &req.prompt, &res.tokens);
+        }
+        id += 1;
+    }
+    let report = engine.shutdown().unwrap();
+    out.sort_by_key(|(id, _)| *id);
+    (out, report.metrics)
+}
+
+#[test]
+fn live_multi_turn_session_hits_without_changing_tokens() {
+    let (tok_on, m_on) = run_live_conversations(true);
+    let (tok_off, m_off) = run_live_conversations(false);
+    assert_eq!(tok_on, tok_off,
+               "--prefix-cache on changed a live conversation's tokens");
+    assert_eq!(m_off.prefix_hits, 0);
+    assert_eq!(m_on.prefix_hits, 4, "every follow-up must hit");
+    assert!(m_on.prefix_hit_rows >= 4 * 8);
+    assert!(m_on.prompt_tokens < m_off.prompt_tokens,
+            "hits must reduce prompt rows fed");
+    assert!(m_on.prefill_chunks < m_off.prefill_chunks,
+            "hits must reduce prefill invocations \
+             ({} vs {})", m_on.prefill_chunks, m_off.prefill_chunks);
+    assert_eq!(m_on.requests_completed, 6);
+}

@@ -516,6 +516,162 @@ fn live_cancel_mid_flight_credits_budget_and_keeps_serving() {
 }
 
 // ---------------------------------------------------------------------
+// Prefix-cache pool accounting (the shared-page cancellation audit)
+// ---------------------------------------------------------------------
+
+/// The 9-token opening prompt and its deterministic 8-token generation
+/// — the transcript every follow-up below extends.
+fn opening_transcript() -> (Vec<u32>, Vec<u32>) {
+    let prompt: Vec<u32> = (40..49).collect();
+    let eng = engine();
+    let mut c = cfg(false);
+    c.pool_pages = 128;
+    let r = amla::coordinator::serve(
+        &eng, vec![DecodeRequest::new(0, prompt.clone(), 8)], &c).unwrap();
+    (prompt, r.results[0].tokens.clone())
+}
+
+#[test]
+fn prefix_hit_admits_on_unique_rows_and_cancel_credits_the_stamp() {
+    // 20-row/layer budget.  r1's prompt extends r0's published
+    // transcript: raw need 29 rows exceeds the WHOLE budget, so r1 can
+    // only ever admit if admission charges just its unique rows
+    // (29 - 16 shared = 13).  Cancelling r1 after its 3rd token must
+    // credit exactly that discounted stamp: full-budget r2 (20 rows)
+    // then admits and completes.
+    let (prompt_a, gen_a) = opening_transcript();
+    let mut prompt_b = prompt_a.clone();
+    prompt_b.extend_from_slice(&gen_a);
+    prompt_b.extend([900, 901, 902, 903]); // 21 tokens
+    let eng = engine();
+    let mut clock = vclock();
+    let mut c = cfg(false);
+    c.pool_pages = 5; // 20 rows/layer
+    c.prefix_cache = true;
+    let subs = vec![
+        SessionSubmit::new(DecodeRequest::new(0, prompt_a.clone(), 8))
+            .at(0.0),
+        SessionSubmit::new(DecodeRequest::new(1, prompt_b, 8)).at(2.0),
+        SessionSubmit::new(DecodeRequest::new(2, (700..708).collect(), 12))
+            .at(4.0),
+    ];
+    let script = vec![
+        ScriptedCommand::immediately(SessionAction::Submit(subs)),
+        ScriptedCommand::after_tokens(1, 3, SessionAction::Cancel(1)),
+        ScriptedCommand::immediately(SessionAction::Drain),
+    ];
+    let report = run_scripted(&eng, &c, &mut clock, script).unwrap();
+    let r1 = report.results.iter().find(|r| r.id == 1).unwrap();
+    assert_eq!(r1.status, Outcome::Cancelled);
+    assert_eq!(r1.tokens.len(), 3,
+               "cancel must land exactly after the 3rd token");
+    let r2 = report.results.iter().find(|r| r.id == 2).unwrap();
+    assert_eq!(r2.status, Outcome::Completed);
+    assert_eq!(r2.tokens.len(), 12,
+               "full-budget r2 must admit after the exact credit");
+    assert_eq!(report.metrics.prefix_hits, 1);
+    assert_eq!(report.metrics.prefix_hit_rows, 16,
+               "two whole 8-row pages attach");
+    assert_eq!(report.metrics.requests_cancelled, 1);
+    assert_eq!(eng.pool.lock().unwrap().stats().allocated_pages, 0,
+               "shared-page cancel leaked pool pages");
+}
+
+#[test]
+fn cancel_of_queued_follow_up_releases_its_reservation() {
+    // r2's admission probe pins the matched pages into a reservation
+    // while it is pool-blocked behind the full-budget filler r1;
+    // cancelling it while QUEUED must release those pinned references
+    // (the pool must fully drain) and credit nothing — nothing was
+    // admitted.
+    let (prompt_a, gen_a) = opening_transcript();
+    let mut prompt_b = prompt_a.clone();
+    prompt_b.extend_from_slice(&gen_a);
+    prompt_b.extend([900, 901, 902, 903]);
+    let eng = engine();
+    let mut clock = vclock();
+    let mut c = cfg(false);
+    c.pool_pages = 5; // 20 rows/layer
+    c.prefix_cache = true;
+    let subs = vec![
+        SessionSubmit::new(DecodeRequest::new(0, prompt_a.clone(), 8))
+            .at(0.0),
+        SessionSubmit::new(DecodeRequest::new(1, (700..708).collect(), 12))
+            .at(0.5),
+        SessionSubmit::new(DecodeRequest::new(2, prompt_b, 8)).at(0.55),
+    ];
+    let script = vec![
+        ScriptedCommand::immediately(SessionAction::Submit(subs)),
+        // r1's 5th token lands after r2 queued and was probed
+        ScriptedCommand::after_tokens(1, 5, SessionAction::Cancel(2)),
+        ScriptedCommand::immediately(SessionAction::Drain),
+    ];
+    let report = run_scripted(&eng, &c, &mut clock, script).unwrap();
+    let r2 = report.results.iter().find(|r| r.id == 2).unwrap();
+    assert_eq!(r2.status, Outcome::Cancelled);
+    assert!(r2.tokens.is_empty(), "r2 must be cancelled while queued");
+    let r1 = report.results.iter().find(|r| r.id == 1).unwrap();
+    assert_eq!(r1.status, Outcome::Completed);
+    assert_eq!(r1.tokens.len(), 12);
+    assert_eq!(report.metrics.prefix_hits, 0,
+               "a queued reservation is not a hit until it attaches");
+    assert_eq!(report.metrics.requests_cancelled, 1);
+    assert_eq!(eng.pool.lock().unwrap().stats().allocated_pages, 0,
+               "queued-cancel leaked reservation-pinned pages");
+}
+
+#[test]
+fn preempting_a_prefix_hit_resumes_bit_identical_and_rehits() {
+    // 48-row/layer budget.  r1 (raw 61 rows, discounted 45) admits
+    // only via its prefix hit and leaves 3 free rows; Interactive r2
+    // (10 rows) starves behind it and evicts it.  The recompute resume
+    // must re-probe the index (second hit), and r1's tokens must be
+    // bit-identical to an unconstrained prefix-off run.
+    let (prompt_a, gen_a) = opening_transcript();
+    let mut prompt_b = prompt_a.clone();
+    prompt_b.extend_from_slice(&gen_a);
+    prompt_b.extend([900, 901, 902, 903]); // 21 tokens
+    let run = |pool_pages: usize, prefix: bool| {
+        let eng = engine();
+        let mut clock = vclock();
+        let mut c = cfg(true); // preempt on, starvation 2
+        c.pool_pages = pool_pages;
+        c.prefix_cache = prefix;
+        let subs = vec![
+            SessionSubmit::new(DecodeRequest::new(0, prompt_a.clone(), 8))
+                .at(0.0)
+                .priority(Priority::Background),
+            SessionSubmit::new(DecodeRequest::new(1, prompt_b.clone(), 40))
+                .at(1.0)
+                .priority(Priority::Background),
+            SessionSubmit::new(DecodeRequest::new(2, (800..804).collect(),
+                                                  6))
+                .at(1.1)
+                .priority(Priority::Interactive),
+        ];
+        let report = run_scripted(&eng, &c, &mut clock,
+                                  submit_all(subs)).unwrap();
+        assert_eq!(eng.pool.lock().unwrap().stats().allocated_pages, 0,
+                   "pool must drain after the session");
+        report
+    };
+    let constrained = run(12, true);
+    assert!(constrained.metrics.preemptions > 0,
+            "starved r2 must evict the prefix-hit resident");
+    assert_eq!(constrained.metrics.prefix_hits, 2,
+               "initial attach plus recompute-resume re-attach");
+    for r in &constrained.results {
+        assert_eq!(r.status, Outcome::Completed);
+    }
+    let relaxed = run(128, false);
+    assert_eq!(relaxed.metrics.preemptions, 0);
+    assert_eq!(relaxed.metrics.prefix_hits, 0);
+    assert_eq!(tokens_by_id(&constrained.results),
+               tokens_by_id(&relaxed.results),
+               "shared-page preemption broke recompute bit-identity");
+}
+
+// ---------------------------------------------------------------------
 // Wrapper equivalence (serve == scripted closed-loop session)
 // ---------------------------------------------------------------------
 
