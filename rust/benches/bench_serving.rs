@@ -22,7 +22,8 @@ use amla::coordinator::{follow_up_request, generate_trace,
                         WorkloadSpec, LONG_CONTEXT_TOKENS};
 use amla::numerics::mla::MlaDims;
 use amla::serving::clock::SimClock;
-use amla::serving::{serve_open_loop, sweep, StepCostModel, SweepConfig};
+use amla::serving::{chaos_sweep, serve_open_loop, sweep, ChaosSweepConfig,
+                    FlashCrowdSpec, StepCostModel, SweepConfig};
 use amla::util::json::Json;
 
 fn main() {
@@ -282,6 +283,54 @@ fn main() {
         (ctx, gen, calls, parts)
     };
 
+    // survivable-envelope chaos sweep: the flash-crowd scenario (an
+    // Interactive base load plus a Batch spike at each multiplier)
+    // served with degrade shedding, priority aging, the prefix cache,
+    // and split-KV enabled — the full elastic config, deterministic
+    // under the virtual clock.  Asserted: the whole curve replays
+    // byte-identically, and degrade never drops base traffic.
+    let chaos = {
+        let mults: Vec<f64> = if smoke {
+            vec![1.0, 10.0]
+        } else {
+            vec![1.0, 2.0, 5.0, 10.0, 25.0, 50.0, 100.0]
+        };
+        let mut chaos_cfg = cfg.clone();
+        chaos_cfg.shed_policy = amla::config::ShedPolicy::Degrade;
+        chaos_cfg.shed_queue_depth = 16;
+        chaos_cfg.age_steps = 32;
+        chaos_cfg.prefix_cache = true;
+        chaos_cfg.split_kv_threshold = 16;
+        let base = FlashCrowdSpec {
+            base_requests: if smoke { 8 } else { 16 },
+            spike_requests: if smoke { 12 } else { 32 },
+            ..FlashCrowdSpec::default()
+        };
+        let base_total = base.base_requests as u64;
+        let ccfg = ChaosSweepConfig { multipliers: mults,
+                                      slo_ttft_p99_s: 0.5,
+                                      model: sweep_cfg.model.clone(),
+                                      base };
+        let t0 = std::time::Instant::now();
+        let report = chaos_sweep(&engine, &chaos_cfg, &ccfg)
+            .expect("chaos sweep failed");
+        let replay = chaos_sweep(&engine, &chaos_cfg, &ccfg)
+            .expect("chaos sweep replay failed");
+        assert_eq!(report.to_json().to_string(),
+                   replay.to_json().to_string(),
+                   "chaos sweep must replay byte-identically");
+        for p in &report.points {
+            assert_eq!(p.base_completed, base_total,
+                       "degrade shedding dropped base traffic at {}x",
+                       p.multiplier);
+            assert!(p.ttft_p99_interactive.is_finite());
+        }
+        println!("{}", report.render_table());
+        println!("(chaos sweep wall time, both passes: {:.2?})",
+                 t0.elapsed());
+        report
+    };
+
     // perf-trajectory baseline: BENCH_serving.json at the repo root
     // (opt-in so routine bench runs do not dirty the tree)
     if std::env::var("AMLA_BENCH_RECORD").is_ok() {
@@ -304,6 +353,7 @@ fn main() {
             pc.insert("prefill_chunks_on".into(),
                       Json::Num(pc_on as f64));
             root.insert("prefix_cache".into(), Json::Obj(pc));
+            root.insert("chaos".into(), chaos.to_json());
         }
         let json = json.to_string();
         std::fs::write("BENCH_serving.json", format!("{json}\n"))

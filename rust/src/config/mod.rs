@@ -28,6 +28,7 @@ use std::collections::BTreeMap;
 
 use anyhow::{anyhow, bail, Result};
 
+pub use crate::coordinator::batcher::{ElasticPolicy, ShedPolicy};
 pub use crate::numerics::mla::DecodePath;
 
 /// Which attention algorithm the engine serves.
@@ -132,6 +133,29 @@ pub struct ServeConfig {
     /// `docs/ARCHITECTURE.md`), so the default only governs resident
     /// page retention, never output bits.
     pub prefix_cache: bool,
+    /// Load-shedding policy under queue overflow (`--shed-policy
+    /// off|reject|degrade`; off by default — queues grow without
+    /// bound, the pre-elastic behavior).  `reject` drops overflow;
+    /// `degrade` demotes it to the Background class.  Shedding
+    /// decisions are a deterministic function of `(seed, config)` —
+    /// contract 10 in `docs/ARCHITECTURE.md`.
+    pub shed_policy: ShedPolicy,
+    /// Total-queue-depth threshold that triggers shedding
+    /// (`--shed-queue-depth`; must be positive when a shed policy is
+    /// enabled).
+    pub shed_queue_depth: usize,
+    /// Pool-row cap the Interactive class may hold in the active set
+    /// (`--budget-interactive`; 0 = unlimited).
+    pub budget_interactive: usize,
+    /// Pool-row cap for the Batch class (`--budget-batch`; 0 = off).
+    pub budget_batch: usize,
+    /// Pool-row cap for the Background class (`--budget-background`;
+    /// 0 = off).
+    pub budget_background: usize,
+    /// Priority-aging horizon (`--age-steps`): queued Background
+    /// requests older than this many global steps are boosted to the
+    /// Batch class; 0 (the default) disables aging.
+    pub age_steps: u64,
 }
 
 impl Default for ServeConfig {
@@ -160,6 +184,12 @@ impl Default for ServeConfig {
             split_kv_threshold: 0,
             decode_path: DecodePath::Naive,
             prefix_cache: false,
+            shed_policy: ShedPolicy::Off,
+            shed_queue_depth: 0,
+            budget_interactive: 0,
+            budget_batch: 0,
+            budget_background: 0,
+            age_steps: 0,
         }
     }
 }
@@ -207,6 +237,17 @@ impl ServeConfig {
         }
         num_field!("rate", self.rate);
         num_field!("starvation-steps", self.starvation_steps);
+        num_field!("shed-queue-depth", self.shed_queue_depth);
+        num_field!("budget-interactive", self.budget_interactive);
+        num_field!("budget-batch", self.budget_batch);
+        num_field!("budget-background", self.budget_background);
+        num_field!("age-steps", self.age_steps);
+        if let Some(v) = args.get("shed-policy") {
+            self.shed_policy = ShedPolicy::parse(v).ok_or_else(|| {
+                anyhow!("--shed-policy: expected off|reject|degrade, \
+                         got `{v}`")
+            })?;
+        }
         if let Some(v) = args.get("fuse-buckets") {
             self.fuse_buckets = parse_bool("fuse-buckets", v)?;
         } else if args.has_flag("fuse-buckets") {
@@ -249,7 +290,25 @@ impl ServeConfig {
         if !(self.rate > 0.0 && self.rate.is_finite()) {
             bail!("rate must be a positive, finite req/s value");
         }
+        if self.shed_policy != ShedPolicy::Off && self.shed_queue_depth == 0 {
+            bail!("shed_queue_depth must be positive when a shed policy \
+                   is enabled (--shed-policy {} without \
+                   --shed-queue-depth would silently never shed)",
+                  self.shed_policy.as_str());
+        }
         Ok(())
+    }
+
+    /// The elastic admission knobs in the form
+    /// [`crate::coordinator::Batcher::set_elastic`] consumes.
+    pub fn elastic(&self) -> ElasticPolicy {
+        ElasticPolicy {
+            class_budgets: [self.budget_interactive, self.budget_batch,
+                            self.budget_background],
+            shed: self.shed_policy,
+            shed_queue_depth: self.shed_queue_depth,
+            age_steps: self.age_steps,
+        }
     }
 }
 
@@ -330,6 +389,10 @@ pub struct EngineConfig {
     pub rate: f64,
     /// Shared-prefix KV reuse over the paged pool (`--prefix-cache`).
     pub prefix_cache: bool,
+    /// Elastic admission: per-class token budgets, load shedding,
+    /// priority aging (all off by default — see
+    /// [`crate::coordinator::batcher::ElasticPolicy`]).
+    pub elastic: ElasticPolicy,
 }
 
 impl Default for EngineConfig {
@@ -365,6 +428,12 @@ impl EngineConfig {
             split_kv_threshold: self.batch.split_kv_threshold,
             decode_path: self.model.decode_path,
             prefix_cache: self.prefix_cache,
+            shed_policy: self.elastic.shed,
+            shed_queue_depth: self.elastic.shed_queue_depth,
+            budget_interactive: self.elastic.class_budgets[0],
+            budget_batch: self.elastic.class_budgets[1],
+            budget_background: self.elastic.class_budgets[2],
+            age_steps: self.elastic.age_steps,
         }
     }
 
@@ -399,6 +468,7 @@ impl EngineConfig {
             open_loop: cfg.open_loop,
             rate: cfg.rate,
             prefix_cache: cfg.prefix_cache,
+            elastic: cfg.elastic(),
         }
     }
 
@@ -510,6 +580,28 @@ impl EngineConfigBuilder {
 
     pub fn prefix_cache(mut self, on: bool) -> Self {
         self.cfg.prefix_cache = on;
+        self
+    }
+
+    pub fn shed_policy(mut self, policy: ShedPolicy) -> Self {
+        self.cfg.elastic.shed = policy;
+        self
+    }
+
+    pub fn shed_queue_depth(mut self, depth: usize) -> Self {
+        self.cfg.elastic.shed_queue_depth = depth;
+        self
+    }
+
+    /// Pool-row caps per priority class
+    /// (`[interactive, batch, background]`; 0 = unlimited).
+    pub fn class_budgets(mut self, budgets: [usize; 3]) -> Self {
+        self.cfg.elastic.class_budgets = budgets;
+        self
+    }
+
+    pub fn age_steps(mut self, steps: u64) -> Self {
+        self.cfg.elastic.age_steps = steps;
         self
     }
 
@@ -678,6 +770,10 @@ mod tests {
             .split_kv_threshold(4096)
             .decode_path(DecodePath::Absorbed)
             .prefix_cache(true)
+            .shed_policy(ShedPolicy::Degrade)
+            .shed_queue_depth(48)
+            .class_budgets([128, 64, 32])
+            .age_steps(11)
             .build()
             .unwrap();
         let flat = built.to_serve();
@@ -687,6 +783,13 @@ mod tests {
         assert_eq!(flat.split_kv_threshold, 4096);
         assert_eq!(flat.decode_path, DecodePath::Absorbed);
         assert!(flat.prefix_cache);
+        assert_eq!(flat.shed_policy, ShedPolicy::Degrade);
+        assert_eq!(flat.shed_queue_depth, 48);
+        assert_eq!(flat.budget_interactive, 128);
+        assert_eq!(flat.budget_batch, 64);
+        assert_eq!(flat.budget_background, 32);
+        assert_eq!(flat.age_steps, 11);
+        assert_eq!(flat.elastic(), built.elastic);
         assert_eq!(EngineConfig::from_serve(&flat), built,
                    "to_serve/from_serve must be lossless");
         // and the defaults of the two surfaces agree
@@ -704,6 +807,16 @@ mod tests {
         assert!(EngineConfig::builder().max_batch(0).build().is_err());
         assert!(EngineConfig::builder().sq(3).build().is_err());
         assert!(EngineConfig::builder().rate(0.0).build().is_err());
+        assert!(EngineConfig::builder()
+                    .shed_policy(ShedPolicy::Reject)
+                    .build()
+                    .is_err(),
+                "a shed policy without a threshold never sheds");
+        assert!(EngineConfig::builder()
+                    .shed_policy(ShedPolicy::Reject)
+                    .shed_queue_depth(8)
+                    .build()
+                    .is_ok());
         assert!(EngineConfig::builder().build().is_ok(),
                 "defaults must validate");
     }
@@ -719,7 +832,10 @@ mod tests {
                                --n1 8 --sq 2 --artifacts mydir \
                                --split-kv-threshold 64 \
                                --decode-path absorbed \
-                               --prefix-cache on"))
+                               --prefix-cache on \
+                               --shed-policy reject --shed-queue-depth 24 \
+                               --budget-interactive 96 --budget-batch 48 \
+                               --budget-background 16 --age-steps 6"))
             .unwrap()
             .build()
             .unwrap();
@@ -740,6 +856,10 @@ mod tests {
         assert!(built.open_loop);
         assert_eq!(built.rate, 6.5);
         assert!(built.prefix_cache);
+        assert_eq!(built.elastic,
+                   ElasticPolicy { class_budgets: [96, 48, 16],
+                                   shed: ShedPolicy::Reject,
+                                   shed_queue_depth: 24, age_steps: 6 });
         // invalid flag values surface as builder errors
         assert!(EngineConfig::builder()
             .apply_args(&args("--prefill-chunk 0"))
@@ -777,6 +897,33 @@ mod tests {
         cfg.apply_args(&args("--prefix-cache")).unwrap(); // bare flag
         assert!(cfg.prefix_cache);
         assert!(cfg.apply_args(&args("--prefix-cache maybe")).is_err());
+    }
+
+    #[test]
+    fn elastic_flags_parse_and_default_off() {
+        let cfg = ServeConfig::default();
+        assert_eq!(cfg.shed_policy, ShedPolicy::Off,
+                   "shedding defaults off (seed behavior unchanged)");
+        assert_eq!(cfg.shed_queue_depth, 0);
+        assert_eq!([cfg.budget_interactive, cfg.budget_batch,
+                    cfg.budget_background], [0, 0, 0]);
+        assert_eq!(cfg.age_steps, 0);
+        assert_eq!(cfg.elastic(), ElasticPolicy::default());
+        let mut cfg = ServeConfig::default();
+        cfg.apply_args(&args("--shed-policy degrade --shed-queue-depth 32 \
+                              --budget-background 64 --age-steps 12"))
+            .unwrap();
+        assert_eq!(cfg.shed_policy, ShedPolicy::Degrade);
+        assert_eq!(cfg.shed_queue_depth, 32);
+        assert_eq!(cfg.budget_background, 64);
+        assert_eq!(cfg.age_steps, 12);
+        cfg.apply_args(&args("--shed-policy off")).unwrap();
+        assert_eq!(cfg.shed_policy, ShedPolicy::Off);
+        assert!(cfg.apply_args(&args("--shed-policy sometimes")).is_err());
+        assert!(cfg.apply_args(&args("--age-steps x")).is_err());
+        // a policy without a threshold is a config error, not a no-op
+        let mut cfg = ServeConfig::default();
+        assert!(cfg.apply_args(&args("--shed-policy reject")).is_err());
     }
 
     #[test]

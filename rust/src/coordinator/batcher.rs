@@ -27,11 +27,99 @@
 //! timestamps are clock seconds from the serving clock
 //! ([`crate::serving::clock::SimClock`]), so the batcher works
 //! identically under wall and virtual time.
+//!
+//! ## Elastic admission (chaos knobs)
+//!
+//! Three opt-in [`ElasticPolicy`] mechanisms harden the tiered queue
+//! against adversarial traffic; all default to **off**, in which case
+//! every code path below is bit-identical to the pre-elastic batcher:
+//!
+//! - **Per-class token budgets** (`class_budgets`): a cap on the pool
+//!   rows a class may hold in the active set.  A head whose class is at
+//!   its cap is *skipped* (the scan falls through to the next class)
+//!   rather than head-of-line blocking — a capped class must never
+//!   deadlock the classes below it.  A *pool*-blocked head still blocks
+//!   everyone, exactly as before.
+//! - **Load shedding** ([`Batcher::shed`]): when the total queued count
+//!   exceeds `shed_queue_depth`, the excess is shed.  Victims are the
+//!   **youngest entries of the lowest class** — they have the least
+//!   sunk queue investment and the weakest SLO claim, so the oldest
+//!   waiters and the Interactive tier survive longest.  `reject`
+//!   removes them (the session loop rejects via the resume ledger);
+//!   `degrade` demotes Interactive/Batch victims to the Background
+//!   queue instead, bounding upper-class queue delay without dropping
+//!   work.
+//! - **Priority aging** ([`Batcher::age_queued`]): a queued Background
+//!   entry older than `age_steps` global steps is promoted to the
+//!   Batch queue (once), so Background traffic cannot starve forever
+//!   under a sustained Interactive flood.
+//!
+//! All three are deterministic functions of the queue state and the
+//! global step counter — no clocks, no maps — which is what lets chaos
+//! scenarios pin shedding decisions bit-for-bit (contract 10).
 
 use std::collections::VecDeque;
 
 use crate::coordinator::request::{DecodeRequest, Priority, RequestId,
                                   RequestState};
+
+/// What to do with queue overflow past the shed threshold.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub enum ShedPolicy {
+    /// Never shed (the default; queues grow without bound).
+    #[default]
+    Off,
+    /// Drop the excess: victims are rejected with carried tokens.
+    Reject,
+    /// Demote the excess to the Background class instead of dropping.
+    Degrade,
+}
+
+impl ShedPolicy {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ShedPolicy::Off => "off",
+            ShedPolicy::Reject => "reject",
+            ShedPolicy::Degrade => "degrade",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "off" => Some(ShedPolicy::Off),
+            "reject" => Some(ShedPolicy::Reject),
+            "degrade" => Some(ShedPolicy::Degrade),
+            _ => None,
+        }
+    }
+}
+
+/// Elastic admission knobs (see module docs).  `Default` disables all
+/// three mechanisms, preserving the pre-elastic batcher bit-for-bit.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ElasticPolicy {
+    /// Max pool rows each class may hold in the active set
+    /// (`[interactive, batch, background]`); 0 = unlimited.
+    pub class_budgets: [usize; 3],
+    /// Overflow policy applied when total queue depth exceeds
+    /// `shed_queue_depth`.
+    pub shed: ShedPolicy,
+    /// Total-queue-depth threshold beyond which [`Batcher::shed`]
+    /// activates; 0 disables shedding regardless of policy.
+    pub shed_queue_depth: usize,
+    /// Background → Batch promotion horizon in global steps; 0 = off.
+    pub age_steps: u64,
+}
+
+/// One round of shedding: requests to reject plus the count demoted.
+#[derive(Debug, Default)]
+pub struct ShedBatch {
+    /// Victims removed under [`ShedPolicy::Reject`]; the caller owns
+    /// their rejection accounting (resume-ledger + result record).
+    pub rejected: Vec<DecodeRequest>,
+    /// Victims demoted to Background under [`ShedPolicy::Degrade`].
+    pub degraded: u64,
+}
 
 /// Occupancy/throughput counters.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
@@ -87,6 +175,12 @@ pub struct Batcher {
     queues: [VecDeque<Queued>; 3],
     active: Vec<RequestState>,
     stats: BatcherStats,
+    /// Elastic admission knobs (default: all off).
+    elastic: ElasticPolicy,
+    /// Pool rows currently charged to the active set per class — the
+    /// per-class token-budget ledger.  Mirrors `admitted_rows` exactly:
+    /// charged on admit, credited on reap/evict/cancel.
+    class_rows: [usize; 3],
 }
 
 impl Batcher {
@@ -94,7 +188,22 @@ impl Batcher {
         Self { max_batch, free_rows: pool_rows, total_rows: pool_rows,
                queues: [VecDeque::new(), VecDeque::new(), VecDeque::new()],
                active: Vec::new(),
-               stats: BatcherStats::default() }
+               stats: BatcherStats::default(),
+               elastic: ElasticPolicy::default(),
+               class_rows: [0; 3] }
+    }
+
+    /// Install the elastic admission knobs (call before serving; the
+    /// default-constructed policy is all-off).
+    pub fn set_elastic(&mut self, elastic: ElasticPolicy) {
+        self.elastic = elastic;
+    }
+
+    /// Pool rows currently charged to the active set per class
+    /// (`[interactive, batch, background]`) — the per-class budget
+    /// ledger; must drain to `[0, 0, 0]` at idle.
+    pub fn class_rows(&self) -> [usize; 3] {
+        self.class_rows
     }
 
     /// Enqueue `req` in the default class as of clock time `now_s` (its
@@ -153,28 +262,123 @@ impl Batcher {
                       mut discount: impl FnMut(&DecodeRequest) -> usize)
                       -> usize {
         let mut n = 0;
-        while self.active.len() < self.max_batch {
-            let Some(rank) = self.head_rank() else { break };
-            let need = {
-                let front = self.queues[rank].front().unwrap();
+        'admit: while self.active.len() < self.max_batch {
+            // The effective head is the front of the highest-priority
+            // non-empty queue whose class is under its token budget; a
+            // budget-capped class is skipped (never head-of-line blocks
+            // the classes below it), a *pool*-blocked head still blocks
+            // everyone.  With budgets off this is exactly the old scan.
+            for rank in 0..self.queues.len() {
+                let Some(front) = self.queues[rank].front() else {
+                    continue;
+                };
                 let raw = Self::rows_needed(&front.req);
-                raw - discount(&front.req).min(raw)
-            };
-            if need > self.free_rows {
-                break; // head-of-line blocking by design: tiered FIFO
+                let need = raw - discount(&front.req).min(raw);
+                let cap = self.elastic.class_budgets[rank];
+                if cap > 0 && self.class_rows[rank] + need > cap {
+                    continue; // class at its token budget: skip it
+                }
+                if need > self.free_rows {
+                    break 'admit; // head-of-line blocking by design
+                }
+                let q = self.queues[rank].pop_front().unwrap();
+                self.free_rows -= need;
+                self.class_rows[rank] += need;
+                let mut st = RequestState::new(q.req);
+                st.enqueued_s = q.enqueued_s;
+                st.started_s = Some(now_s);
+                st.admitted_rows = need;
+                st.priority = q.priority;
+                self.active.push(st);
+                self.stats.admitted += 1;
+                n += 1;
+                continue 'admit;
             }
-            let q = self.queues[rank].pop_front().unwrap();
-            self.free_rows -= need;
-            let mut st = RequestState::new(q.req);
-            st.enqueued_s = q.enqueued_s;
-            st.started_s = Some(now_s);
-            st.admitted_rows = need;
-            st.priority = q.priority;
-            self.active.push(st);
-            self.stats.admitted += 1;
-            n += 1;
+            break; // every queue empty or budget-capped
         }
         n
+    }
+
+    /// Promote queued Background entries older than the aging horizon
+    /// to the Batch queue (front-of-queue entries are the oldest, so
+    /// the scan stops at the first young one).  Returns the number of
+    /// boosts, which the session loop accumulates into
+    /// `amla_priority_boosts`.  No-op when `age_steps` is 0.
+    pub fn age_queued(&mut self) -> u64 {
+        let horizon = self.elastic.age_steps;
+        if horizon == 0 {
+            return 0;
+        }
+        let bg = Priority::Background.rank();
+        let batch = Priority::Batch.rank();
+        let mut boosts = 0;
+        while let Some(front) = self.queues[bg].front() {
+            if self.stats.steps - front.enqueued_step <= horizon {
+                break;
+            }
+            let mut q = self.queues[bg].pop_front().unwrap();
+            q.priority = Priority::Batch;
+            self.queues[batch].push_back(q);
+            self.stats.queued_peak_by_class[batch] =
+                self.stats.queued_peak_by_class[batch]
+                    .max(self.queues[batch].len());
+            boosts += 1;
+        }
+        boosts
+    }
+
+    /// Shed queue overflow past `shed_queue_depth` (see module docs).
+    /// Victims are popped from the **back** of the lowest-priority
+    /// non-empty queue: youngest of the least-important class first.
+    /// Under `degrade`, only Interactive/Batch entries are eligible
+    /// (Background has nowhere lower to go) and the demoted entries
+    /// keep their enqueue stamps, so queue-delay accounting is
+    /// continuous across the demotion.  Deterministic: pure function
+    /// of queue contents and the policy.
+    pub fn shed(&mut self) -> ShedBatch {
+        let mut out = ShedBatch::default();
+        let threshold = self.elastic.shed_queue_depth;
+        if threshold == 0 || self.elastic.shed == ShedPolicy::Off {
+            return out;
+        }
+        let total = self.queue_len();
+        if total <= threshold {
+            return out;
+        }
+        let mut excess = total - threshold;
+        match self.elastic.shed {
+            ShedPolicy::Off => {}
+            ShedPolicy::Reject => {
+                for rank in (0..self.queues.len()).rev() {
+                    while excess > 0 {
+                        let Some(q) = self.queues[rank].pop_back() else {
+                            break;
+                        };
+                        out.rejected.push(q.req);
+                        excess -= 1;
+                    }
+                }
+            }
+            ShedPolicy::Degrade => {
+                let bg = Priority::Background.rank();
+                for rank in (0..bg).rev() {
+                    while excess > 0 {
+                        let Some(mut q) = self.queues[rank].pop_back()
+                        else {
+                            break;
+                        };
+                        q.priority = Priority::Background;
+                        self.queues[bg].push_back(q);
+                        self.stats.queued_peak_by_class[bg] =
+                            self.stats.queued_peak_by_class[bg]
+                                .max(self.queues[bg].len());
+                        out.degraded += 1;
+                        excess -= 1;
+                    }
+                }
+            }
+        }
+        out
     }
 
     /// Current active sequences (mutable for the step loop).
@@ -216,10 +420,17 @@ impl Batcher {
 
     /// Whether the effective head request could be admitted into an
     /// *empty* pool — false means no amount of eviction will ever fit
-    /// it and it must be rejected instead.
+    /// it and it must be rejected instead.  A head whose requirement
+    /// exceeds its own class token budget can likewise never be
+    /// admitted (the per-class ledger starts each admission from the
+    /// rows already held, never below zero), so it is equally
+    /// reject-worthy.
     pub fn head_can_ever_fit(&self) -> bool {
-        self.head()
-            .is_some_and(|q| Self::rows_needed(&q.req) <= self.total_rows)
+        let Some(rank) = self.head_rank() else { return false };
+        // guarded: head_rank() just saw a non-empty queue at this rank
+        let need = Self::rows_needed(&self.queues[rank].front().unwrap().req);
+        let cap = self.elastic.class_budgets[rank];
+        need <= self.total_rows && (cap == 0 || need <= cap)
     }
 
     /// The effective head request, if any (victim-selection input for
@@ -246,6 +457,7 @@ impl Batcher {
                 // credit exactly what admission deducted — the request's
                 // max_new_tokens may have shrunk on abort
                 self.free_rows += st.admitted_rows;
+                self.class_rows[st.priority.rank()] -= st.admitted_rows;
                 self.stats.completed += 1;
                 done.push(st);
             } else {
@@ -264,6 +476,7 @@ impl Batcher {
     fn remove_active(&mut self, idx: usize) -> RequestState {
         let st = self.active.swap_remove(idx);
         self.free_rows += st.admitted_rows;
+        self.class_rows[st.priority.rank()] -= st.admitted_rows;
         st
     }
 
@@ -521,6 +734,141 @@ mod tests {
         b2.enqueue(req(0, 2, 2), 0.0);
         assert_eq!(b2.admit_with(0.0, |_| 100), 1);
         assert_eq!(b2.active()[0].admitted_rows, 0);
+    }
+
+    #[test]
+    fn class_budget_caps_rows_without_blocking_lower_classes() {
+        let mut b = Batcher::new(8, 1000);
+        b.set_elastic(ElasticPolicy {
+            class_budgets: [8, 0, 0], ..ElasticPolicy::default()
+        });
+        b.enqueue_with(req(0, 4, 4), 0.0, Priority::Interactive); // 8 rows
+        b.enqueue_with(req(1, 4, 4), 0.0, Priority::Interactive); // capped
+        b.enqueue_with(req(2, 2, 2), 0.0, Priority::Batch);
+        // the capped Interactive head must NOT head-of-line block Batch
+        assert_eq!(b.admit(0.0), 2);
+        assert_eq!(b.class_rows(), [8, 4, 0]);
+        assert_eq!(b.queue_depths(), [1, 0, 0]);
+        // finishing the first Interactive frees its class budget
+        b.active_mut()[0].generated.extend([1, 1, 1, 1]);
+        b.reap();
+        assert_eq!(b.class_rows(), [0, 4, 0]);
+        assert_eq!(b.admit(0.0), 1);
+        assert_eq!(b.class_rows(), [8, 4, 0]);
+    }
+
+    #[test]
+    fn class_rows_credit_on_evict_and_cancel() {
+        let mut b = Batcher::new(4, 1000);
+        b.enqueue_with(req(0, 2, 2), 0.0, Priority::Interactive);
+        b.enqueue_with(req(1, 2, 2), 0.0, Priority::Background);
+        b.admit(0.0);
+        assert_eq!(b.class_rows(), [4, 0, 4]);
+        let victim = b.active().iter()
+            .position(|s| s.priority == Priority::Background).unwrap();
+        b.evict(victim);
+        assert_eq!(b.class_rows(), [4, 0, 0]);
+        b.cancel_active(0);
+        assert_eq!(b.class_rows(), [0, 0, 0]);
+    }
+
+    #[test]
+    fn aging_boosts_old_background_entries_once() {
+        let mut b = Batcher::new(1, 1000);
+        b.set_elastic(ElasticPolicy {
+            age_steps: 2, ..ElasticPolicy::default()
+        });
+        b.enqueue_with(req(0, 2, 1), 0.0, Priority::Interactive);
+        b.admit(0.0); // occupy the only slot
+        b.enqueue_with(req(1, 2, 1), 0.0, Priority::Background);
+        for _ in 0..3 {
+            b.note_step();
+        }
+        b.enqueue_with(req(2, 2, 1), 0.0, Priority::Background); // young
+        assert_eq!(b.age_queued(), 1, "only the over-horizon entry boosts");
+        assert_eq!(b.queue_depths(), [0, 1, 1]);
+        assert_eq!(b.age_queued(), 0, "a boost is applied exactly once");
+        // the boosted entry admits as Batch ahead of Background
+        b.active_mut()[0].generated.push(1);
+        b.reap();
+        b.admit(0.0);
+        assert_eq!(b.active()[0].request.id, 1);
+        assert_eq!(b.active()[0].priority, Priority::Batch);
+    }
+
+    #[test]
+    fn aging_off_is_a_noop() {
+        let mut b = Batcher::new(1, 1000);
+        b.enqueue_with(req(0, 2, 1), 0.0, Priority::Background);
+        for _ in 0..100 {
+            b.note_step();
+        }
+        assert_eq!(b.age_queued(), 0);
+        assert_eq!(b.queue_depths(), [0, 0, 1]);
+    }
+
+    #[test]
+    fn shed_reject_pops_youngest_of_lowest_class() {
+        let mut b = Batcher::new(1, 1000);
+        b.set_elastic(ElasticPolicy {
+            shed: ShedPolicy::Reject, shed_queue_depth: 2,
+            ..ElasticPolicy::default()
+        });
+        b.enqueue_with(req(0, 2, 1), 0.0, Priority::Interactive);
+        b.enqueue_with(req(1, 2, 1), 0.0, Priority::Background);
+        b.enqueue_with(req(2, 2, 1), 0.0, Priority::Background);
+        b.enqueue_with(req(3, 2, 1), 0.0, Priority::Background);
+        let shed = b.shed();
+        // 4 queued, threshold 2 → shed 2: youngest Background first
+        assert_eq!(shed.degraded, 0);
+        let ids: Vec<u64> = shed.rejected.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![3, 2]);
+        assert_eq!(b.queue_len(), 2);
+        assert!(b.shed().rejected.is_empty(), "at threshold: no more sheds");
+    }
+
+    #[test]
+    fn shed_degrade_demotes_upper_classes_to_background() {
+        let mut b = Batcher::new(1, 1000);
+        b.set_elastic(ElasticPolicy {
+            shed: ShedPolicy::Degrade, shed_queue_depth: 1,
+            ..ElasticPolicy::default()
+        });
+        b.enqueue_with(req(0, 2, 1), 0.0, Priority::Interactive);
+        b.enqueue_with(req(1, 2, 1), 0.5, Priority::Interactive);
+        b.enqueue_with(req(2, 2, 1), 0.0, Priority::Batch);
+        let shed = b.shed();
+        // 3 queued, threshold 1 → 2 victims: Batch back first, then the
+        // youngest Interactive; total depth is unchanged (degrade moves,
+        // never drops), and enqueue stamps survive the demotion
+        assert!(shed.rejected.is_empty());
+        assert_eq!(shed.degraded, 2);
+        assert_eq!(b.queue_depths(), [1, 0, 2]);
+        assert_eq!(b.queue_len(), 3);
+        b.admit(0.0); // slot admits the surviving Interactive head
+        assert_eq!(b.active()[0].request.id, 0);
+        // demoted entries keep their enqueue time for queue-delay math
+        b.active_mut()[0].generated.push(1);
+        b.reap();
+        b.admit(2.0);
+        let st = &b.active()[0];
+        assert_eq!(st.priority, Priority::Background);
+        assert_eq!(st.request.id, 2);
+        assert_eq!(st.enqueued_s, 0.0);
+    }
+
+    #[test]
+    fn shed_disabled_without_threshold() {
+        let mut b = Batcher::new(1, 1000);
+        b.set_elastic(ElasticPolicy {
+            shed: ShedPolicy::Reject, shed_queue_depth: 0,
+            ..ElasticPolicy::default()
+        });
+        for i in 0..10 {
+            b.enqueue(req(i, 2, 1), 0.0);
+        }
+        assert!(b.shed().rejected.is_empty());
+        assert_eq!(b.queue_len(), 10);
     }
 
     #[test]

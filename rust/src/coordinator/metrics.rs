@@ -146,6 +146,23 @@ pub struct Metrics {
     /// Live in-flight sessions (admitted, unfinished) at snapshot time —
     /// like `queue_depth`, zero once the run has drained.
     pub active_sessions: u64,
+    /// Queued requests shed under `--shed-policy reject`: popped from the
+    /// back of the lowest class and rejected with their carried tokens
+    /// ([`crate::serving::preempt::ResumeLedger::reject`]).
+    pub shed_rejected: u64,
+    /// Queued requests shed under `--shed-policy degrade`: demoted from
+    /// Interactive/Batch to the Background queue instead of rejected.
+    /// Rendered both as `amla_shed_requests{policy="degrade"}` and as the
+    /// total `amla_degraded_requests`.
+    pub shed_degraded: u64,
+    /// Background → Batch priority boosts applied by queue aging
+    /// (`--age-steps`): a queued Background request older than the
+    /// starvation horizon is promoted once.
+    pub priority_boosts: u64,
+    /// Peak *total* admission-queue depth (all classes summed) observed
+    /// at any admission point during the run — the spike amplitude a
+    /// flash crowd actually pushed into the queues.
+    pub spike_peak_queue_depth: u64,
 }
 
 impl Metrics {
@@ -230,7 +247,16 @@ impl Metrics {
              # TYPE amla_queue_depth_peak gauge\n\
              amla_queue_depth_peak{{class=\"interactive\"}} {}\n\
              amla_queue_depth_peak{{class=\"batch\"}} {}\n\
-             amla_queue_depth_peak{{class=\"background\"}} {}\n",
+             amla_queue_depth_peak{{class=\"background\"}} {}\n\
+             # TYPE amla_shed_requests counter\n\
+             amla_shed_requests{{policy=\"reject\"}} {}\n\
+             amla_shed_requests{{policy=\"degrade\"}} {}\n\
+             # TYPE amla_degraded_requests counter\n\
+             amla_degraded_requests {}\n\
+             # TYPE amla_priority_boosts counter\n\
+             amla_priority_boosts {}\n\
+             # TYPE amla_spike_peak_queue_depth gauge\n\
+             amla_spike_peak_queue_depth {}\n",
             self.requests_completed, self.tokens_generated, self.steps,
             self.step_latency.quantile_us(0.5),
             self.step_latency.quantile_us(0.99),
@@ -254,7 +280,9 @@ impl Metrics {
             self.active_sessions,
             self.queue_depth[0], self.queue_depth[1], self.queue_depth[2],
             self.queue_depth_peak[0], self.queue_depth_peak[1],
-            self.queue_depth_peak[2])
+            self.queue_depth_peak[2],
+            self.shed_rejected, self.shed_degraded, self.shed_degraded,
+            self.priority_boosts, self.spike_peak_queue_depth)
     }
 }
 
@@ -332,6 +360,26 @@ mod tests {
         assert!(text.contains("amla_queue_depth_peak{class=\"batch\"} 8"));
         assert!(text.contains(
             "amla_queue_depth_peak{class=\"background\"} 9"));
+    }
+
+    #[test]
+    fn elastic_counters_rendered_deterministically() {
+        let mut m = Metrics::default();
+        m.shed_rejected = 5;
+        m.shed_degraded = 3;
+        m.priority_boosts = 7;
+        m.spike_peak_queue_depth = 42;
+        let text = m.render();
+        assert!(text.contains("amla_shed_requests{policy=\"reject\"} 5"));
+        assert!(text.contains("amla_shed_requests{policy=\"degrade\"} 3"));
+        assert!(text.contains("amla_degraded_requests 3"));
+        assert!(text.contains("amla_priority_boosts 7"));
+        assert!(text.contains("amla_spike_peak_queue_depth 42"));
+        // The render is a pure function of the counters: no maps, no
+        // clocks — two calls must be byte-identical (the det-map lint
+        // keeps HashMap out of this module; this pins the output side).
+        assert_eq!(text, m.render());
+        assert_eq!(m.clone().render(), text);
     }
 
     #[test]

@@ -132,7 +132,8 @@ pub mod request;
 pub mod scheduler;
 pub mod workload;
 
-pub use batcher::{Batcher, BatcherStats};
+pub use batcher::{Batcher, BatcherStats, ElasticPolicy, ShedBatch,
+                  ShedPolicy};
 pub use engine::{DecodeEngine, HostLayerExecutor, LayerExecutor,
                  PjrtLayerExecutor, StepJob, StepTrace};
 pub use metrics::Metrics;

@@ -4,6 +4,7 @@
 //! amla serve      [--algo amla|base] [--requests N] [--max-batch B] ...
 //!                 [--open-loop] [--rate R] [--preempt on|off]
 //! amla sweep      [--rates R1,R2,...] [--requests N] ...
+//! amla chaos      [--multipliers M1,M2,...] [--slo-ttft-p99 S] ...
 //! amla reproduce  [--exp roofline|accuracy|perf|ablation|pipeline|all]
 //! amla simulate   [--sq 1|2] [--sk N] [--algo amla|base]
 //! amla accuracy   [--samples N] [--context S2]
@@ -21,7 +22,8 @@ use amla::coordinator::{generate_trace, serve, DecodeEngine, DecodeRequest,
 use amla::numerics::mla::MlaDims;
 use amla::report;
 use amla::serving::clock::{SimClock, StepCostModel};
-use amla::serving::{serve_open_loop, sweep, SweepConfig};
+use amla::serving::{chaos_sweep, serve_open_loop, sweep, ChaosSweepConfig,
+                    FlashCrowdSpec, SweepConfig};
 use amla::simulator::{simulate_910, simulate_flashmla, FlashMlaModel,
                       KernelConfig};
 
@@ -37,6 +39,7 @@ fn run() -> Result<()> {
     match args.positional.first().map(String::as_str) {
         Some("serve") => cmd_serve(&args),
         Some("sweep") => cmd_sweep(&args),
+        Some("chaos") => cmd_chaos(&args),
         Some("reproduce") => cmd_reproduce(&args),
         Some("simulate") => cmd_simulate(&args),
         Some("accuracy") => cmd_accuracy(&args),
@@ -95,6 +98,21 @@ USAGE:
                   # open-loop rate sweep on the host substrate with a
                   # deterministic virtual clock: TTFT/TPOT/queue-delay
                   # percentiles vs offered rate + saturation throughput
+  amla chaos      [--multipliers M1,M2,...] [--slo-ttft-p99 S]
+                  [--requests N] [--spike-requests N] [--rate R] [--seed S]
+                  [--max-batch B] [--shed-policy off|reject|degrade]
+                  [--shed-queue-depth D] [--age-steps A]
+                  [--budget-interactive R] [--budget-batch R]
+                  [--budget-background R] [--prefix-cache on|off]
+                  [--split-kv-threshold N]
+                  # survivable-envelope sweep: replay a flash-crowd
+                  # scenario (Interactive base + Batch spike) at each
+                  # spike multiplier on the seeded virtual clock and
+                  # report the max spike sustained at the Interactive
+                  # TTFT p99 SLO; the elastic knobs (shedding, class
+                  # budgets, priority aging) shape the envelope and the
+                  # whole run is a deterministic function of
+                  # (seed, config)
   amla reproduce  [--exp roofline|accuracy|perf|ablation|pipeline|all]
                   [--samples N] [--context S2]
   amla simulate   [--sq 1|2] [--sk N] [--algo amla|base] [--batch B]
@@ -215,6 +233,57 @@ fn cmd_sweep(args: &Args) -> Result<()> {
                  m.requests_cancelled, m.streamed_tokens,
                  m.prefix_hits, m.prefix_hit_rows, m.prefix_resident_pages);
     }
+    println!("{}", report.to_json());
+    Ok(())
+}
+
+/// Survivable-envelope chaos sweep on the host substrate: flash-crowd
+/// scenarios replayed per spike multiplier under the deterministic
+/// virtual clock; the elastic knobs arrive via the normal EngineConfig
+/// flags (`--shed-policy`, `--shed-queue-depth`, `--budget-*`,
+/// `--age-steps`).
+fn cmd_chaos(args: &Args) -> Result<()> {
+    let engine_cfg = EngineConfig::builder().apply_args(args)?.build()?;
+    let cfg = engine_cfg.to_serve();
+    let parse_f64 = |key: &str, t: &str| {
+        t.trim()
+            .parse::<f64>()
+            .map_err(|_| anyhow::anyhow!("--{key}: bad number `{t}`"))
+    };
+    let defaults = ChaosSweepConfig::default();
+    let multipliers: Vec<f64> = match args.get("multipliers") {
+        None => defaults.multipliers,
+        Some(s) => s
+            .split(',')
+            .map(|t| parse_f64("multipliers", t))
+            .collect::<Result<_>>()?,
+    };
+    let slo = match args.get("slo-ttft-p99") {
+        None => defaults.slo_ttft_p99_s,
+        Some(s) => parse_f64("slo-ttft-p99", s)?,
+    };
+    let base = FlashCrowdSpec {
+        base_requests: args.get_usize("requests", 12)?,
+        spike_requests: args.get_usize("spike-requests", 24)?,
+        base_rate: cfg.rate,
+        seed: args.get_usize("seed", 0xC4A05)? as u64,
+        ..FlashCrowdSpec::default()
+    };
+
+    let dims = MlaDims { d_model: 64, n1: 2, d_head: 16, q_rank: 32,
+                         d_latent: 24, d_rope: 8, sq: 1 };
+    let exec = HostLayerExecutor::new(dims, 2, cfg.algo, 32,
+                                      vec![64, 128], 7);
+    let engine = DecodeEngine::new(exec, cfg.pool_pages, cfg.page_size);
+    eprintln!("[chaos] {} base + {} spike requests, {} multipliers, \
+               shed {} (depth {}), age {} steps, SLO p99 <= {slo}s",
+              base.base_requests, base.spike_requests, multipliers.len(),
+              cfg.shed_policy.as_str(), cfg.shed_queue_depth,
+              cfg.age_steps);
+    let ccfg = ChaosSweepConfig { multipliers, slo_ttft_p99_s: slo,
+                                  model: StepCostModel::default(), base };
+    let report = chaos_sweep(&engine, &cfg, &ccfg)?;
+    println!("{}", report.render_table());
     println!("{}", report.to_json());
     Ok(())
 }

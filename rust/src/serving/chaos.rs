@@ -1,0 +1,795 @@
+//! Chaos scenarios: adversarial traffic for the serving engine, plus
+//! the survivable-envelope sweep behind `amla chaos`.
+//!
+//! Every scenario here is a **deterministic script** over the one
+//! session loop ([`crate::serving::session::run_scripted`]) on the
+//! seeded virtual clock: flash crowds layered on the bursty arrival
+//! process, cancel storms at exact step cues, adversarial mixes of
+//! long-context and Interactive chat traffic, pool-pressure churn with
+//! the prefix cache on, and (live-engine) slow-consumer floods.  The
+//! generators are pure functions of their spec — same seed, same
+//! script, same bits — which is what turns "the engine survives X"
+//! into a pinned regression (`rust/tests/chaos_scenarios.rs`) instead
+//! of an anecdote.
+//!
+//! ## Contract 10 — chaos determinism
+//!
+//! Under any chaos scenario:
+//!
+//! 1. every request the engine *does* serve emits tokens bit-identical
+//!    to an unloaded run of that request alone
+//!    ([`unloaded_reference`]);
+//! 2. shedding/degradation/aging decisions are a deterministic
+//!    function of `(seed, config)` — byte-identical across
+//!    `--batch-workers 1/4` and fuse on/off;
+//! 3. pool pages, admission budget, and per-class row ledgers return
+//!    exactly to zero once the storm drains.
+//!
+//! The elastic knobs the scenarios exercise (per-class token budgets,
+//! `--shed-policy reject|degrade`, `--age-steps` priority aging) live
+//! in [`crate::coordinator::batcher`] and default off; see
+//! `docs/ARCHITECTURE.md` ("Adversarial scenarios & elasticity").
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::config::{EngineConfig, ServeConfig};
+use crate::coordinator::engine::{DecodeEngine, LayerExecutor};
+use crate::coordinator::metrics::quantile_sorted;
+use crate::coordinator::request::{DecodeRequest, Outcome, Priority,
+                                  RequestId};
+use crate::coordinator::workload::{generate_trace, ArrivalProcess, LenDist,
+                                   WorkloadSpec};
+use crate::serving::clock::{SimClock, StepCostModel};
+use crate::serving::session::{run_scripted, AmlaEngine, EngineReport,
+                              ScriptedCommand, SessionAction, SessionSubmit,
+                              SubmitOptions};
+use crate::util::json::Json;
+
+/// Spike-traffic request ids start here, so a report can split
+/// Interactive base traffic from the crowd without carrying priorities
+/// through [`crate::coordinator::request::DecodeResult`].
+pub const SPIKE_ID_BASE: RequestId = 1_000_000;
+
+/// The victim id used by [`repeat_evict_crowd`].
+pub const VICTIM_ID: RequestId = 999_999;
+
+/// A named, fully scripted adversarial scenario.  Run it with
+/// [`run_chaos`]; recover its submissions with [`scripted_requests`].
+#[derive(Debug, Clone)]
+pub struct ChaosScenario {
+    pub name: String,
+    pub script: Vec<ScriptedCommand>,
+}
+
+/// Flash-crowd parameters: a steady Interactive base load plus a
+/// `spike_multiplier`× burst of Batch-class traffic starting at
+/// `spike_start`, both on the bursty (interrupted-Poisson) arrival
+/// process.
+#[derive(Debug, Clone)]
+pub struct FlashCrowdSpec {
+    pub base_requests: usize,
+    /// Base offered rate (req/s).
+    pub base_rate: f64,
+    /// Spike rate = `base_rate * spike_multiplier` (the 10–100× axis).
+    pub spike_multiplier: f64,
+    pub spike_requests: usize,
+    /// Clock time (s) the spike's first arrival is shifted to.
+    pub spike_start: f64,
+    pub prompt_len: LenDist,
+    pub gen_len: LenDist,
+    pub seed: u64,
+}
+
+impl Default for FlashCrowdSpec {
+    fn default() -> Self {
+        Self {
+            base_requests: 12,
+            base_rate: 4.0,
+            spike_multiplier: 10.0,
+            spike_requests: 24,
+            spike_start: 0.5,
+            prompt_len: LenDist::Uniform(2, 4),
+            gen_len: LenDist::Fixed(4),
+            seed: 0xC4A05,
+        }
+    }
+}
+
+/// Build a flash-crowd scenario: base Interactive chat at `base_rate`
+/// on [`ArrivalProcess::Bursty`], overlaid from `spike_start` with a
+/// crowd of Batch requests arriving `spike_multiplier`× faster (ids
+/// offset by [`SPIKE_ID_BASE`]).  All arrivals are explicit stamps, so
+/// the whole storm is one submission batch released by the open-loop
+/// clock — bit-reproducible.
+pub fn flash_crowd(spec: &FlashCrowdSpec) -> ChaosScenario {
+    let burst = ArrivalProcess::Bursty { burst_mean: 4.0, duty: 0.5 };
+    let base = generate_trace(&WorkloadSpec {
+        requests: spec.base_requests,
+        rate: spec.base_rate,
+        arrivals: burst,
+        prompt_len: spec.prompt_len,
+        gen_len: spec.gen_len,
+        seed: spec.seed,
+    });
+    let crowd = generate_trace(&WorkloadSpec {
+        requests: spec.spike_requests,
+        rate: spec.base_rate * spec.spike_multiplier,
+        arrivals: burst,
+        prompt_len: spec.prompt_len,
+        gen_len: spec.gen_len,
+        seed: spec.seed ^ 0x5B1C,
+    });
+    let mut subs: Vec<SessionSubmit> = base.into_iter()
+        .map(|t| SessionSubmit::new(t.request)
+            .at(t.arrival)
+            .priority(Priority::Interactive))
+        .collect();
+    subs.extend(crowd.into_iter().map(|t| {
+        let mut req = t.request;
+        req.id += SPIKE_ID_BASE;
+        SessionSubmit::new(req)
+            .at(spec.spike_start + t.arrival)
+            .priority(Priority::Batch)
+    }));
+    ChaosScenario {
+        name: format!("flash-crowd-x{}", spec.spike_multiplier),
+        script: vec![
+            ScriptedCommand::immediately(SessionAction::Submit(subs)),
+            ScriptedCommand::immediately(SessionAction::Drain),
+        ],
+    }
+}
+
+/// Cancel-storm parameters: `requests` submitted up front, all but
+/// `survivors` cancelled in one step-window at `cancel_at_step`.
+#[derive(Debug, Clone)]
+pub struct CancelStormSpec {
+    pub requests: usize,
+    /// Global step at which the storm of cancels lands (mid-prefill /
+    /// mid-decode for the active set, pre-admission for the queued
+    /// tail).
+    pub cancel_at_step: u64,
+    /// Requests spared by the storm (the highest ids survive).
+    pub survivors: usize,
+    pub prompt_len: LenDist,
+    pub gen_len: LenDist,
+    pub seed: u64,
+}
+
+impl Default for CancelStormSpec {
+    fn default() -> Self {
+        Self {
+            requests: 16,
+            cancel_at_step: 3,
+            survivors: 2,
+            prompt_len: LenDist::Uniform(3, 9),
+            gen_len: LenDist::Fixed(8),
+            seed: 0xCA4CE1,
+        }
+    }
+}
+
+/// Build a cancel storm: every request enqueued at t=0 (closed-loop),
+/// then a mass cancellation of all but the last `survivors` ids inside
+/// one step-window.  With a small `max_batch` the storm hits queued,
+/// mid-prefill, and mid-decode requests alike — the cancellation
+/// accounting contract at adversarial scale.
+pub fn cancel_storm(spec: &CancelStormSpec) -> ChaosScenario {
+    let trace = generate_trace(&WorkloadSpec {
+        requests: spec.requests,
+        rate: 1.0,
+        arrivals: ArrivalProcess::Poisson,
+        prompt_len: spec.prompt_len,
+        gen_len: spec.gen_len,
+        seed: spec.seed,
+    });
+    let subs: Vec<SessionSubmit> = trace.into_iter()
+        .map(|t| SessionSubmit::new(t.request))
+        .collect();
+    let doomed = spec.requests.saturating_sub(spec.survivors);
+    let mut script = vec![
+        ScriptedCommand::immediately(SessionAction::Submit(subs)),
+    ];
+    for id in 0..doomed as RequestId {
+        script.push(ScriptedCommand::after_steps(
+            spec.cancel_at_step, SessionAction::Cancel(id)));
+    }
+    script.push(ScriptedCommand::immediately(SessionAction::Drain));
+    ChaosScenario { name: format!("cancel-storm-{}", spec.requests),
+                    script }
+}
+
+/// Long-context + Interactive chat mix parameters.  `context` is the
+/// long prompt length — tests run it scaled down (the serving path
+/// genuinely prefills it); the 128k-class measurement lives in
+/// `bench_serving`, which pairs this scenario with
+/// `DecodeEngine::warm_synthetic_context` for the unloaded
+/// long-context decode reference.
+#[derive(Debug, Clone)]
+pub struct LongContextMixSpec {
+    pub long_requests: usize,
+    /// Prompt tokens per long request
+    /// ([`crate::coordinator::workload::LONG_CONTEXT_TOKENS`]-class in
+    /// the bench, far smaller in tests).
+    pub context: usize,
+    pub long_gen: usize,
+    pub chat_requests: usize,
+    pub chat_rate: f64,
+    pub seed: u64,
+}
+
+impl Default for LongContextMixSpec {
+    fn default() -> Self {
+        Self { long_requests: 2, context: 96, long_gen: 8,
+               chat_requests: 10, chat_rate: 8.0, seed: 0x10C7 }
+    }
+}
+
+/// Build the adversarial mix: a few Background requests with very long
+/// prompts (the head-of-line hazard) interleaved with an Interactive
+/// chat stream.  The long prompts prefill in chunks while chat traffic
+/// arrives around them; with split-KV enabled their decode block loops
+/// partition across workers.
+pub fn long_context_mix(spec: &LongContextMixSpec) -> ChaosScenario {
+    let long = generate_trace(&WorkloadSpec {
+        requests: spec.long_requests,
+        rate: 1.0,
+        arrivals: ArrivalProcess::Poisson,
+        prompt_len: LenDist::Fixed(spec.context),
+        gen_len: LenDist::Fixed(spec.long_gen),
+        seed: spec.seed,
+    });
+    let chat = generate_trace(&WorkloadSpec {
+        requests: spec.chat_requests,
+        rate: spec.chat_rate,
+        arrivals: ArrivalProcess::Bursty { burst_mean: 3.0, duty: 0.5 },
+        prompt_len: LenDist::Uniform(2, 4),
+        gen_len: LenDist::Fixed(4),
+        seed: spec.seed ^ 0xC4A7,
+    });
+    let mut subs: Vec<SessionSubmit> = long.into_iter()
+        .map(|t| SessionSubmit::new(t.request)
+            .at(t.arrival)
+            .priority(Priority::Background))
+        .collect();
+    subs.extend(chat.into_iter().map(|t| {
+        let mut req = t.request;
+        req.id += SPIKE_ID_BASE;
+        SessionSubmit::new(req)
+            .at(t.arrival)
+            .priority(Priority::Interactive)
+    }));
+    ChaosScenario {
+        name: format!("long-context-mix-{}", spec.context),
+        script: vec![
+            ScriptedCommand::immediately(SessionAction::Submit(subs)),
+            ScriptedCommand::immediately(SessionAction::Drain),
+        ],
+    }
+}
+
+/// Pool-churn parameters: `waves` waves of shared-prefix requests
+/// sized against a near-full pool, with a cancellation inside every
+/// wave to keep pages churning.
+#[derive(Debug, Clone)]
+pub struct PoolChurnSpec {
+    pub waves: usize,
+    pub per_wave: usize,
+    /// Shared prompt prefix length (whole prefix-cache pages when the
+    /// engine page size divides it).
+    pub prefix_len: usize,
+    pub gen_len: usize,
+    /// Arrival gap between waves (s).
+    pub wave_gap: f64,
+    pub seed: u64,
+}
+
+impl Default for PoolChurnSpec {
+    fn default() -> Self {
+        Self { waves: 3, per_wave: 4, prefix_len: 16, gen_len: 6,
+               wave_gap: 0.6, seed: 0xC0FF }
+    }
+}
+
+/// Build pool-pressure churn for `--prefix-cache on`: every request
+/// shares one `prefix_len`-token prompt prefix plus a unique suffix,
+/// arriving in waves that keep occupancy near 100%; one request per
+/// wave is cancelled mid-flight so pages and prefix refcounts churn
+/// constantly.  Later waves hit the pages published by earlier ones —
+/// contract 9 (prefix hit ≡ cold prefill) under sustained pressure.
+pub fn pool_churn(spec: &PoolChurnSpec) -> ChaosScenario {
+    let shared: Vec<u32> = (0..spec.prefix_len)
+        .map(|i| 7 + spec.seed as u32 % 97 + i as u32)
+        .collect();
+    let mut subs = Vec::new();
+    let mut cancels = Vec::new();
+    for w in 0..spec.waves {
+        let arrival = w as f64 * spec.wave_gap;
+        for k in 0..spec.per_wave {
+            let id = (w * spec.per_wave + k) as RequestId;
+            let mut prompt = shared.clone();
+            prompt.extend([1000 + id as u32 * 3, 1001 + id as u32 * 3]);
+            subs.push(SessionSubmit::new(
+                    DecodeRequest::new(id, prompt, spec.gen_len))
+                .at(arrival)
+                .priority(if k % 2 == 0 { Priority::Interactive }
+                          else { Priority::Batch }));
+            if k == spec.per_wave - 1 {
+                // the last request of each wave is cancelled once the
+                // wave is demonstrably in flight (its first request has
+                // decoded two tokens): constant mid-flight page churn,
+                // regardless of the clock's step-cost model
+                cancels.push(ScriptedCommand::after_tokens(
+                    (w * spec.per_wave) as RequestId, 2,
+                    SessionAction::Cancel(id)));
+            }
+        }
+    }
+    let mut script = vec![
+        ScriptedCommand::immediately(SessionAction::Submit(subs)),
+    ];
+    script.extend(cancels);
+    script.push(ScriptedCommand::immediately(SessionAction::Drain));
+    ChaosScenario { name: format!("pool-churn-{}w", spec.waves), script }
+}
+
+/// Repeated-preemption parameters for [`repeat_evict_crowd`].
+#[derive(Debug, Clone)]
+pub struct RepeatEvictSpec {
+    /// Interactive waves; each one should force the Background victim
+    /// out once (pool sizing is the caller's contract).
+    pub waves: usize,
+    /// Arrival gap between waves (s) — long enough for a wave to drain
+    /// and the victim to be re-admitted before the next wave lands.
+    pub wave_gap: f64,
+    pub victim_prompt: usize,
+    pub victim_gen: usize,
+    pub wave_prompt: usize,
+    pub wave_gen: usize,
+}
+
+impl Default for RepeatEvictSpec {
+    fn default() -> Self {
+        Self { waves: 6, wave_gap: 0.12, victim_prompt: 4, victim_gen: 40,
+               wave_prompt: 2, wave_gen: 4 }
+    }
+}
+
+/// Build a flash crowd that evicts the **same victim repeatedly**: one
+/// long Background request ([`VICTIM_ID`]) admitted at t=0, then
+/// Interactive waves arriving every `wave_gap` seconds.  Sized against
+/// a pool that cannot hold the victim plus a wave, each wave starves,
+/// the preemptor evicts the Background victim (the only eligible
+/// lower-priority resident), and the victim re-admits by recompute
+/// after the wave drains — the `ResumeLedger` merge audit across ≥3
+/// evictions (satellite of contract 3).
+pub fn repeat_evict_crowd(spec: &RepeatEvictSpec) -> ChaosScenario {
+    let mut subs = vec![
+        SessionSubmit::new(DecodeRequest::new(
+                VICTIM_ID,
+                (0..spec.victim_prompt).map(|i| 11 + i as u32).collect(),
+                spec.victim_gen))
+            .at(0.0)
+            .priority(Priority::Background),
+    ];
+    for w in 0..spec.waves {
+        let arrival = 0.05 + w as f64 * spec.wave_gap;
+        let id = (w as RequestId + 1) * 10;
+        subs.push(SessionSubmit::new(DecodeRequest::new(
+                id,
+                (0..spec.wave_prompt).map(|i| 300 + id as u32 + i as u32)
+                    .collect(),
+                spec.wave_gen))
+            .at(arrival)
+            .priority(Priority::Interactive));
+    }
+    ChaosScenario {
+        name: format!("repeat-evict-{}w", spec.waves),
+        script: vec![
+            ScriptedCommand::immediately(SessionAction::Submit(subs)),
+            ScriptedCommand::immediately(SessionAction::Drain),
+        ],
+    }
+}
+
+/// Run a scenario to completion on a fresh seeded virtual clock.
+pub fn run_chaos<E: LayerExecutor>(engine: &DecodeEngine<E>,
+                                   cfg: &ServeConfig,
+                                   scenario: &ChaosScenario,
+                                   model: StepCostModel)
+                                   -> Result<EngineReport> {
+    let mut clock = SimClock::simulated(model);
+    run_scripted(engine, cfg, &mut clock, scenario.script.clone())
+}
+
+/// Every request a script submits, in submission order — the input set
+/// for unloaded-reference verification.
+pub fn scripted_requests(script: &[ScriptedCommand])
+                         -> Vec<(DecodeRequest, Priority)> {
+    let mut out = Vec::new();
+    for cmd in script {
+        if let SessionAction::Submit(subs) = &cmd.action {
+            for s in subs {
+                out.push((s.request.clone(), s.priority));
+            }
+        }
+    }
+    out
+}
+
+/// Tokens of `request` run **alone** on an idle engine — the
+/// contract-10 reference: a chaos run must emit bit-identical tokens
+/// for every request it serves to completion.
+pub fn unloaded_reference<E: LayerExecutor>(engine: &DecodeEngine<E>,
+                                            cfg: &ServeConfig,
+                                            request: DecodeRequest,
+                                            model: StepCostModel)
+                                            -> Result<Vec<u32>> {
+    let mut clock = SimClock::simulated(model);
+    let script = vec![
+        ScriptedCommand::immediately(SessionAction::Submit(vec![
+            SessionSubmit::new(request),
+        ])),
+        ScriptedCommand::immediately(SessionAction::Drain),
+    ];
+    let report = run_scripted(engine, cfg, &mut clock, script)?;
+    Ok(report.results.into_iter().next()
+        .map(|r| r.tokens)
+        .unwrap_or_default())
+}
+
+/// Verify contract 10's served-bits clause for a finished chaos run:
+/// every **completed** request's tokens must equal its unloaded
+/// reference bit-for-bit.  Returns the ids that diverged (empty =
+/// contract holds).  Cancelled/rejected requests are skipped — the
+/// contract is about what the engine *does* serve.
+pub fn diverged_from_unloaded<E: LayerExecutor>(
+    engine: &DecodeEngine<E>, cfg: &ServeConfig, report: &EngineReport,
+    script: &[ScriptedCommand], model: StepCostModel)
+    -> Result<Vec<RequestId>> {
+    let requests: BTreeMap<RequestId, DecodeRequest> =
+        scripted_requests(script).into_iter()
+            .map(|(r, _)| (r.id, r))
+            .collect();
+    let mut diverged = Vec::new();
+    for res in &report.results {
+        if res.status != Outcome::Completed {
+            continue;
+        }
+        let Some(req) = requests.get(&res.id) else { continue };
+        let reference = unloaded_reference(engine, cfg, req.clone(),
+                                           model.clone())?;
+        if res.tokens != reference {
+            diverged.push(res.id);
+        }
+    }
+    Ok(diverged)
+}
+
+/// Live-engine slow-consumer flood: `streams` requests submitted with
+/// capacity-1 token buffers; every `drain_every`-th handle drains one
+/// token (the adversarially slow consumer), the rest are abandoned
+/// outright.  The engine must stay command-responsive throughout — a
+/// metrics snapshot is taken mid-flood to prove it — and shutdown
+/// disconnects the stalled buffers instead of deadlocking, so every
+/// request still reaches the final report.  Returns that report.
+pub fn slow_consumer_flood<E>(config: EngineConfig, executor: E,
+                              streams: usize, drain_every: usize)
+                              -> Result<EngineReport>
+where
+    E: LayerExecutor + 'static,
+{
+    let model = StepCostModel::new(0.001, 0.0);
+    let engine = AmlaEngine::start_with_clock(config, executor,
+                                              SimClock::simulated(model))?;
+    let mut kept = Vec::new();
+    for i in 0..streams {
+        let req = DecodeRequest::new(i as RequestId,
+                                     vec![5 + (i % 11) as u32], 4);
+        let handle = engine.submit_with(
+            req,
+            SubmitOptions::default()
+                .priority(Priority::Batch)
+                .stream_capacity(1))?;
+        if drain_every > 0 && i % drain_every == 0 {
+            kept.push(handle);
+        }
+        // other handles drop here: abandoned consumers — their streams
+        // disconnect and must not leak result slots or wedge the loop
+    }
+    // the engine is stalled on hundreds of full buffers; commands must
+    // still be processed (the command-responsive stall contract)
+    let _mid = engine.metrics()?;
+    for h in &mut kept {
+        let _ = h.next_token(); // one adversarially slow sip each
+    }
+    engine.shutdown()
+}
+
+// ---------------------------------------------------------------------
+// Survivable envelope: the `amla chaos` sweep
+// ---------------------------------------------------------------------
+
+/// `amla chaos` sweep parameters.
+#[derive(Debug, Clone)]
+pub struct ChaosSweepConfig {
+    /// Spike multipliers to probe (the 10–100× axis), sorted ascending
+    /// internally.
+    pub multipliers: Vec<f64>,
+    /// Interactive TTFT p99 SLO (s): a multiplier is survived when the
+    /// base traffic's p99 stays at or under it and every base request
+    /// completes.
+    pub slo_ttft_p99_s: f64,
+    /// Virtual-clock step-cost model (cloned fresh per point).
+    pub model: StepCostModel,
+    /// The base flash-crowd shape; `spike_multiplier` is overridden per
+    /// point.
+    pub base: FlashCrowdSpec,
+}
+
+impl Default for ChaosSweepConfig {
+    fn default() -> Self {
+        Self { multipliers: vec![1.0, 2.0, 5.0, 10.0, 25.0, 50.0, 100.0],
+               slo_ttft_p99_s: 0.5,
+               model: StepCostModel::default(),
+               base: FlashCrowdSpec::default() }
+    }
+}
+
+/// One spike-multiplier measurement.
+#[derive(Debug, Clone)]
+pub struct ChaosPoint {
+    pub multiplier: f64,
+    /// TTFT p99 over the Interactive base traffic that completed.
+    pub ttft_p99_interactive: f64,
+    /// Base (Interactive) requests that completed.
+    pub base_completed: u64,
+    /// Spike requests that completed.
+    pub spike_completed: u64,
+    pub shed_rejected: u64,
+    pub shed_degraded: u64,
+    pub priority_boosts: u64,
+    pub spike_peak_queue_depth: u64,
+    pub preemptions: u64,
+    /// SLO verdict (see [`ChaosSweepConfig::slo_ttft_p99_s`]).
+    pub survived: bool,
+}
+
+/// The survivable-envelope report: per-multiplier points plus the max
+/// spike multiplier sustained at the Interactive p99 SLO.
+#[derive(Debug, Clone)]
+pub struct ChaosReport {
+    /// Points in ascending multiplier order.
+    pub points: Vec<ChaosPoint>,
+    pub slo_ttft_p99_s: f64,
+    /// Largest survived multiplier, if any point survived.
+    pub envelope: Option<f64>,
+}
+
+impl ChaosReport {
+    /// Render as a [`Json`] tree (serialize with `.to_string()`).
+    pub fn to_json(&self) -> Json {
+        let point = |p: &ChaosPoint| {
+            let mut m = BTreeMap::new();
+            m.insert("multiplier".into(), Json::Num(p.multiplier));
+            m.insert("ttft_p99_interactive_s".into(),
+                     Json::Num(p.ttft_p99_interactive));
+            m.insert("base_completed".into(),
+                     Json::Num(p.base_completed as f64));
+            m.insert("spike_completed".into(),
+                     Json::Num(p.spike_completed as f64));
+            m.insert("shed_rejected".into(),
+                     Json::Num(p.shed_rejected as f64));
+            m.insert("shed_degraded".into(),
+                     Json::Num(p.shed_degraded as f64));
+            m.insert("priority_boosts".into(),
+                     Json::Num(p.priority_boosts as f64));
+            m.insert("spike_peak_queue_depth".into(),
+                     Json::Num(p.spike_peak_queue_depth as f64));
+            m.insert("preemptions".into(),
+                     Json::Num(p.preemptions as f64));
+            m.insert("survived".into(), Json::Bool(p.survived));
+            Json::Obj(m)
+        };
+        let mut root = BTreeMap::new();
+        root.insert("bench".into(), Json::Str("serving".into()));
+        root.insert("metric".into(),
+                    Json::Str("chaos_survivable_envelope".into()));
+        root.insert("slo_ttft_p99_s".into(),
+                    Json::Num(self.slo_ttft_p99_s));
+        root.insert("max_survived_multiplier".into(),
+                    self.envelope.map_or(Json::Null, Json::Num));
+        root.insert("points".into(),
+                    Json::Arr(self.points.iter().map(point).collect()));
+        Json::Obj(root)
+    }
+
+    /// Human-readable table.
+    pub fn render_table(&self) -> String {
+        let mut out = String::from(
+            "spike(x)  ttft p99 (s)  base done  spike done  shed  \
+             degraded  boosts  peak queue  verdict\n");
+        for p in &self.points {
+            out.push_str(&format!(
+                "{:>8.1}  {:>12.3}  {:>9}  {:>10}  {:>4}  {:>8}  \
+                 {:>6}  {:>10}  {}\n",
+                p.multiplier, p.ttft_p99_interactive, p.base_completed,
+                p.spike_completed, p.shed_rejected, p.shed_degraded,
+                p.priority_boosts, p.spike_peak_queue_depth,
+                if p.survived { "ok" } else { "BLOWN" }));
+        }
+        out.push_str(&format!(
+            "survivable envelope @ p99 <= {:.3}s: {}\n",
+            self.slo_ttft_p99_s,
+            match self.envelope {
+                Some(m) => format!("{m:.1}x spike"),
+                None => "none (every multiplier blew the SLO)".into(),
+            }));
+        out
+    }
+}
+
+/// Probe the survivable envelope: run the flash-crowd scenario at each
+/// multiplier on a fresh virtual clock and report the max spike the
+/// Interactive tier sustains at its TTFT p99 SLO.  The engine's pool
+/// drains completely between points, so one engine serves the whole
+/// sweep.
+pub fn chaos_sweep<E: LayerExecutor>(engine: &DecodeEngine<E>,
+                                     cfg: &ServeConfig,
+                                     ccfg: &ChaosSweepConfig)
+                                     -> Result<ChaosReport> {
+    let mut mults = ccfg.multipliers.clone();
+    anyhow::ensure!(!mults.is_empty(), "chaos sweep needs >= 1 multiplier");
+    for &m in &mults {
+        anyhow::ensure!(m > 0.0 && m.is_finite(),
+                        "multipliers must be positive and finite, got {m}");
+    }
+    // validated finite above, so total_cmp is a plain ascending sort
+    mults.sort_by(f64::total_cmp);
+    let base_total = ccfg.base.base_requests as u64;
+    let mut points = Vec::with_capacity(mults.len());
+    for &mult in &mults {
+        let mut spec = ccfg.base.clone();
+        spec.spike_multiplier = mult;
+        let scenario = flash_crowd(&spec);
+        let report = run_chaos(engine, cfg, &scenario, ccfg.model.clone())?;
+        let mut ttfts: Vec<f64> = report.results.iter()
+            .filter(|r| r.id < SPIKE_ID_BASE
+                        && r.status == Outcome::Completed)
+            .map(|r| r.ttft)
+            .collect();
+        ttfts.sort_by(f64::total_cmp);
+        let base_completed = ttfts.len() as u64;
+        let spike_completed = report.results.iter()
+            .filter(|r| r.id >= SPIKE_ID_BASE
+                        && r.status == Outcome::Completed)
+            .count() as u64;
+        let p99 = quantile_sorted(&ttfts, 0.99);
+        let survived = base_completed == base_total
+            && p99 <= ccfg.slo_ttft_p99_s;
+        points.push(ChaosPoint {
+            multiplier: mult,
+            ttft_p99_interactive: p99,
+            base_completed,
+            spike_completed,
+            shed_rejected: report.metrics.shed_rejected,
+            shed_degraded: report.metrics.shed_degraded,
+            priority_boosts: report.metrics.priority_boosts,
+            spike_peak_queue_depth: report.metrics.spike_peak_queue_depth,
+            preemptions: report.metrics.preemptions,
+            survived,
+        });
+    }
+    let envelope = points.iter()
+        .filter(|p| p.survived)
+        .map(|p| p.multiplier)
+        .fold(None, |acc: Option<f64>, m| {
+            Some(acc.map_or(m, |a| a.max(m)))
+        });
+    Ok(ChaosReport { points, slo_ttft_p99_s: ccfg.slo_ttft_p99_s,
+                     envelope })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generators_are_pure_functions_of_their_spec() {
+        let spec = FlashCrowdSpec::default();
+        let a = flash_crowd(&spec);
+        let b = flash_crowd(&spec);
+        let reqs_a = scripted_requests(&a.script);
+        let reqs_b = scripted_requests(&b.script);
+        assert_eq!(reqs_a.len(), reqs_b.len());
+        for ((ra, pa), (rb, pb)) in reqs_a.iter().zip(&reqs_b) {
+            assert_eq!(ra.id, rb.id);
+            assert_eq!(ra.prompt, rb.prompt);
+            assert_eq!(ra.max_new_tokens, rb.max_new_tokens);
+            assert_eq!(pa, pb);
+        }
+        // base Interactive + spike Batch, ids split at SPIKE_ID_BASE
+        assert_eq!(reqs_a.len(),
+                   spec.base_requests + spec.spike_requests);
+        for (r, p) in &reqs_a {
+            if r.id < SPIKE_ID_BASE {
+                assert_eq!(*p, Priority::Interactive);
+            } else {
+                assert_eq!(*p, Priority::Batch);
+            }
+        }
+    }
+
+    #[test]
+    fn cancel_storm_cancels_all_but_survivors() {
+        let spec = CancelStormSpec { requests: 8, survivors: 3,
+                                     ..CancelStormSpec::default() };
+        let s = cancel_storm(&spec);
+        let cancels = s.script.iter()
+            .filter(|c| matches!(c.action, SessionAction::Cancel(_)))
+            .count();
+        assert_eq!(cancels, 5);
+        assert_eq!(scripted_requests(&s.script).len(), 8);
+        assert!(matches!(s.script.last().unwrap().action,
+                         SessionAction::Drain));
+    }
+
+    #[test]
+    fn pool_churn_shares_a_prefix_and_cancels_per_wave() {
+        let spec = PoolChurnSpec::default();
+        let s = pool_churn(&spec);
+        let reqs = scripted_requests(&s.script);
+        assert_eq!(reqs.len(), spec.waves * spec.per_wave);
+        let prefix = &reqs[0].0.prompt[..spec.prefix_len];
+        for (r, _) in &reqs {
+            assert_eq!(&r.prompt[..spec.prefix_len], prefix,
+                       "wave request {} lost the shared prefix", r.id);
+        }
+        let cancels = s.script.iter()
+            .filter(|c| matches!(c.action, SessionAction::Cancel(_)))
+            .count();
+        assert_eq!(cancels, spec.waves);
+    }
+
+    #[test]
+    fn repeat_evict_targets_one_background_victim() {
+        let s = repeat_evict_crowd(&RepeatEvictSpec::default());
+        let reqs = scripted_requests(&s.script);
+        let background: Vec<_> = reqs.iter()
+            .filter(|(_, p)| *p == Priority::Background)
+            .collect();
+        assert_eq!(background.len(), 1);
+        assert_eq!(background[0].0.id, VICTIM_ID);
+    }
+
+    #[test]
+    fn chaos_report_json_and_table_render() {
+        let report = ChaosReport {
+            points: vec![ChaosPoint {
+                multiplier: 10.0,
+                ttft_p99_interactive: 0.12,
+                base_completed: 12,
+                spike_completed: 20,
+                shed_rejected: 4,
+                shed_degraded: 0,
+                priority_boosts: 2,
+                spike_peak_queue_depth: 31,
+                preemptions: 1,
+                survived: true,
+            }],
+            slo_ttft_p99_s: 0.5,
+            envelope: Some(10.0),
+        };
+        let text = report.to_json().to_string();
+        let parsed = Json::parse(&text).expect("valid JSON");
+        assert_eq!(parsed.req_str("metric").unwrap(),
+                   "chaos_survivable_envelope");
+        assert_eq!(parsed.req("max_survived_multiplier").unwrap()
+                       .as_f64().unwrap(), 10.0);
+        let table = report.render_table();
+        assert!(table.contains("survivable envelope"));
+        assert!(table.contains("10.0x spike"));
+    }
+}

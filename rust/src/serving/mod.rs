@@ -78,6 +78,7 @@
 //! `preemption_is_bit_identical_to_unpreempted_run` below and the
 //! open-loop golden trace.
 
+pub mod chaos;
 pub mod clock;
 pub mod preempt;
 pub mod session;
@@ -93,6 +94,13 @@ use crate::coordinator::request::{DecodeResult, RequestId};
 use crate::coordinator::workload::TracedRequest;
 use clock::SimClock;
 
+pub use chaos::{cancel_storm, chaos_sweep, diverged_from_unloaded,
+                flash_crowd, long_context_mix, pool_churn,
+                repeat_evict_crowd, run_chaos, scripted_requests,
+                slow_consumer_flood, unloaded_reference, CancelStormSpec,
+                ChaosPoint, ChaosReport, ChaosScenario, ChaosSweepConfig,
+                FlashCrowdSpec, LongContextMixSpec, PoolChurnSpec,
+                RepeatEvictSpec, SPIKE_ID_BASE, VICTIM_ID};
 pub use clock::StepCostModel;
 pub use session::{run_scripted, AmlaEngine, EngineReport, RequestHandle,
                   ScriptedCommand, SessionAction, SessionCue, SessionSubmit,

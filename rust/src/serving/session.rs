@@ -380,7 +380,8 @@ struct Session<'e, E: LayerExecutor> {
 
 impl<'e, E: LayerExecutor> Session<'e, E> {
     fn new(engine: &'e DecodeEngine<E>, cfg: &'e ServeConfig) -> Self {
-        let (batcher, baseline) = init_run(engine, cfg);
+        let (mut batcher, baseline) = init_run(engine, cfg);
+        batcher.set_elastic(cfg.elastic());
         let mut core = StepCore::new(engine.executor.n_layers());
         if cfg.prefix_cache {
             // the index shares whole PHYSICAL pages, so it is keyed on
@@ -434,6 +435,26 @@ impl<'e, E: LayerExecutor> Session<'e, E> {
                 self.batcher.enqueue_with(p.request, p.arrival, p.priority);
             }
 
+            // Elastic knobs fire here — one fixed point per loop
+            // iteration, after arrival release and before admission —
+            // so aging and shedding decisions are a pure function of
+            // (seed, config): contract 10.  All three are no-ops at
+            // their default-off settings.
+            self.metrics.priority_boosts += self.batcher.age_queued();
+            let depth = self.batcher.queue_len() as u64;
+            self.metrics.spike_peak_queue_depth =
+                self.metrics.spike_peak_queue_depth.max(depth);
+            let shed = self.batcher.shed();
+            self.metrics.shed_degraded += shed.degraded;
+            for req in shed.rejected {
+                // a shed victim may hold a prefix reservation from a
+                // failed admit probe — return those pinned pages
+                self.core.drop_reservation(self.engine, req.id);
+                let res = self.ledger.reject(req.id);
+                self.metrics.shed_rejected += 1;
+                self.record(res);
+            }
+
             if self.batcher.idle() {
                 if let Some(p) = self.pending.front() {
                     // engine drained before the next arrival: jump to it
@@ -463,7 +484,8 @@ impl<'e, E: LayerExecutor> Session<'e, E> {
                 let Some(req) = self.batcher.pop_blocked() else { break };
                 self.core.drop_reservation(self.engine, req.id);
                 eprintln!("[session] request {} rejected: needs more pool \
-                           rows than the pool holds", req.id);
+                           rows than the pool (or its class budget) \
+                           allows", req.id);
                 let res = self.ledger.reject(req.id);
                 self.record(res);
                 continue;

@@ -1,0 +1,543 @@
+//! Chaos scenario tier: the engine must *survive* adversarial traffic —
+//! flash crowds, cancel storms, slow-consumer floods, long-context +
+//! chat mixes, pool churn — and survive it **deterministically**.
+//!
+//! Contract 10 (`docs/ARCHITECTURE.md`), pinned here end to end:
+//!
+//! 1. every request served under chaos emits tokens bit-identical to an
+//!    unloaded run of that request alone;
+//! 2. shedding / degradation / aging decisions are a pure function of
+//!    `(seed, config)` — byte-identical across `--batch-workers 1/4`
+//!    and fuse on/off;
+//! 3. pool pages and admission budget return exactly to zero after the
+//!    storm (proven black-box: a follow-up request sized to the *whole*
+//!    pool budget must admit and complete).
+//!
+//! Every scenario runs with `--prefix-cache on` and
+//! `--split-kv-threshold 16` (the acceptance matrix), on the seeded
+//! virtual clock.
+
+use amla::config::{Algo, ServeConfig, ShedPolicy};
+use amla::coordinator::engine::HostLayerExecutor;
+use amla::coordinator::{DecodeEngine, DecodeRequest, DecodeResult,
+                        LenDist, Outcome, Priority, RequestId};
+use amla::numerics::mla::MlaDims;
+use amla::serving::clock::{SimClock, StepCostModel};
+use amla::serving::{cancel_storm, chaos_sweep, diverged_from_unloaded,
+                    flash_crowd, long_context_mix, pool_churn,
+                    repeat_evict_crowd, run_chaos, run_scripted,
+                    slow_consumer_flood, CancelStormSpec, ChaosSweepConfig,
+                    EngineReport, FlashCrowdSpec, LongContextMixSpec,
+                    PoolChurnSpec, RepeatEvictSpec, ScriptedCommand,
+                    SessionAction, SessionSubmit, SPIKE_ID_BASE, VICTIM_ID};
+use amla::util::json::Json;
+
+fn engine() -> DecodeEngine<HostLayerExecutor> {
+    let dims = MlaDims { d_model: 48, n1: 2, d_head: 12, q_rank: 24,
+                         d_latent: 16, d_rope: 8, sq: 1 };
+    let exec = HostLayerExecutor::new(dims, 2, Algo::Amla, 32,
+                                      vec![32, 64], 11);
+    DecodeEngine::new(exec, 512, 8)
+}
+
+fn model() -> StepCostModel {
+    StepCostModel::new(0.01, 0.0)
+}
+
+/// The acceptance-matrix base config: prefix cache ON, split-KV
+/// threshold 16, preemption on.  `pool_pages` shapes the admission
+/// budget: rows/layer = pool_pages × page_size / n_layers = 4 × pages.
+fn cfg(pool_pages: usize, workers: usize, fuse: bool) -> ServeConfig {
+    ServeConfig { max_batch: 4, workers, batch_workers: workers,
+                  fuse_buckets: fuse, pool_pages, page_size: 8,
+                  preempt: true, starvation_steps: 4,
+                  prefix_cache: true, split_kv_threshold: 16,
+                  ..ServeConfig::default() }
+}
+
+fn tokens_by_id(results: &[DecodeResult]) -> Vec<(RequestId, Vec<u32>)> {
+    let mut t: Vec<_> = results.iter()
+        .map(|r| (r.id, r.tokens.clone()))
+        .collect();
+    t.sort_by_key(|(id, _)| *id);
+    t
+}
+
+fn assert_pool_drained(eng: &DecodeEngine<HostLayerExecutor>, tag: &str) {
+    assert_eq!(eng.pool.lock().unwrap().stats().allocated_pages, 0,
+               "{tag}: pool pages leaked after the storm");
+}
+
+/// The deterministic signature contract 10 pins across the worker/fuse
+/// grid: per-request tokens, completion order, virtual makespan bits,
+/// and every elastic decision counter.
+type ChaosSignature = (Vec<(RequestId, Vec<u32>)>, Vec<RequestId>, u64,
+                       [u64; 6]);
+
+fn signature(report: &EngineReport) -> ChaosSignature {
+    (tokens_by_id(&report.results),
+     report.completion_order.clone(),
+     report.makespan.to_bits(),
+     [report.metrics.shed_rejected,
+      report.metrics.shed_degraded,
+      report.metrics.priority_boosts,
+      report.metrics.spike_peak_queue_depth,
+      report.metrics.preemptions,
+      report.metrics.requests_cancelled])
+}
+
+fn crowd_spec() -> FlashCrowdSpec {
+    FlashCrowdSpec { base_requests: 10, base_rate: 20.0,
+                     spike_multiplier: 15.0, spike_requests: 20,
+                     spike_start: 0.2,
+                     prompt_len: LenDist::Uniform(2, 4),
+                     gen_len: LenDist::Fixed(4),
+                     seed: 0xC4A05 }
+}
+
+#[test]
+fn flash_crowd_with_degrade_is_bit_identical_across_grid() {
+    // a 15x Batch-class spike on top of Interactive chat, shed policy
+    // degrade: nothing is dropped, overflow is demoted to Background,
+    // and the whole storm — tokens, order, makespan, every shed
+    // decision — reproduces bit-for-bit across workers 1/4 x fuse
+    let scenario = flash_crowd(&crowd_spec());
+    let run = |workers: usize, fuse: bool| {
+        let eng = engine();
+        let mut c = cfg(24, workers, fuse); // 96-row budget
+        c.shed_policy = ShedPolicy::Degrade;
+        c.shed_queue_depth = 8;
+        c.age_steps = 10;
+        let report = run_chaos(&eng, &c, &scenario, model())
+            .expect("chaos run failed");
+        assert_pool_drained(&eng, "flash-crowd degrade");
+        signature(&report)
+    };
+    let reference = run(1, false);
+    for (workers, fuse) in [(1, true), (4, false), (4, true)] {
+        assert_eq!(run(workers, fuse), reference,
+                   "workers={workers} fuse={fuse}: chaos run diverged");
+    }
+    // degrade never drops work: all 30 requests complete, and the
+    // Interactive tier is never demoted while Batch overflow exists
+    let (tokens, _, _, counters) = reference;
+    assert_eq!(tokens.len(), 30, "degrade must not drop requests");
+    for (id, toks) in &tokens {
+        assert_eq!(toks.len(), 4, "request {id} did not finish its gen");
+    }
+    assert!(counters[1] > 0, "the spike must trigger degradation");
+    assert_eq!(counters[0], 0, "degrade must never reject");
+    assert!(counters[3] > 8, "peak queue depth must exceed the shed \
+                              threshold during the spike");
+}
+
+#[test]
+fn flash_crowd_with_reject_sheds_deterministically() {
+    // same crowd, shed policy reject: the youngest spike entries are
+    // rejected; the rejected SET is part of the deterministic signature,
+    // the Interactive tier survives intact, and every request that WAS
+    // served emits unloaded-identical tokens (contract 10, clause 1)
+    let scenario = flash_crowd(&crowd_spec());
+    let run = |workers: usize, fuse: bool| {
+        let eng = engine();
+        let mut c = cfg(24, workers, fuse);
+        c.shed_policy = ShedPolicy::Reject;
+        c.shed_queue_depth = 6;
+        let report = run_chaos(&eng, &c, &scenario, model())
+            .expect("chaos run failed");
+        assert_pool_drained(&eng, "flash-crowd reject");
+        (report, eng, c)
+    };
+    let (reference, eng, c) = run(1, false);
+    let ref_sig = signature(&reference);
+    for (workers, fuse) in [(1, true), (4, false), (4, true)] {
+        let (report, _eng, _c) = run(workers, fuse);
+        assert_eq!(signature(&report), ref_sig,
+                   "workers={workers} fuse={fuse}: shed decisions \
+                    diverged");
+    }
+    assert!(reference.metrics.shed_rejected > 0,
+            "the spike must overflow the shed threshold");
+    assert_eq!(reference.results.len(), 30,
+               "every request needs a terminal result");
+    let mut completed = 0;
+    for r in &reference.results {
+        match r.status {
+            Outcome::Completed => completed += 1,
+            Outcome::Rejected => {
+                assert!(r.id >= SPIKE_ID_BASE,
+                        "Interactive request {} was shed while Batch \
+                         overflow existed", r.id);
+                assert!(r.tokens.is_empty(),
+                        "a queue-shed victim never decoded");
+            }
+            Outcome::Cancelled => panic!("no cancels in this scenario"),
+        }
+    }
+    assert_eq!(completed as u64, reference.metrics.requests_completed);
+    assert_eq!(completed + reference.metrics.shed_rejected as usize, 30);
+    // clause 1: served tokens are bit-identical to unloaded runs
+    let diverged = diverged_from_unloaded(&eng, &c, &reference,
+                                          &scenario.script, model())
+        .expect("reference runs failed");
+    assert!(diverged.is_empty(),
+            "requests {diverged:?} diverged from their unloaded runs");
+}
+
+#[test]
+fn cancel_storm_returns_pool_and_budget_to_zero() {
+    // satellite 1: cancel every request (queued tails, mid-chunk
+    // prefills, mid-decode actives) inside one step-window, then prove
+    // the budget is exactly whole again by admitting a request sized to
+    // the entire 48-row pool budget
+    let spec = CancelStormSpec { requests: 12, cancel_at_step: 3,
+                                 survivors: 2,
+                                 prompt_len: LenDist::Uniform(3, 9),
+                                 gen_len: LenDist::Fixed(8),
+                                 seed: 0xCA4CE1 };
+    let mut script = cancel_storm(&spec).script;
+    let drain = script.pop().expect("generator always ends with Drain");
+    // full-budget probe: 40 prompt + 8 gen = 48 rows = the whole budget
+    let probe = DecodeRequest::new(9000,
+                                   (0..40).map(|i| 700 + i).collect(), 8);
+    script.push(ScriptedCommand::after_steps(
+        spec.cancel_at_step + 1,
+        SessionAction::Submit(vec![SessionSubmit::new(probe)])));
+    script.push(drain);
+
+    let run = |workers: usize, fuse: bool| {
+        let eng = engine();
+        let mut c = cfg(12, workers, fuse); // 48-row budget
+        c.prefill_chunk = 2; // 3..9-token prompts are mid-prefill at step 3
+        let report = run_scripted(&eng, &c,
+                                  &mut SimClock::simulated(model()),
+                                  script.clone())
+            .expect("cancel storm failed");
+        assert_pool_drained(&eng, "cancel storm");
+        (signature(&report), report)
+    };
+    let (ref_sig, report) = run(1, false);
+    for (workers, fuse) in [(1, true), (4, false), (4, true)] {
+        assert_eq!(run(workers, fuse).0, ref_sig,
+                   "workers={workers} fuse={fuse}: cancel storm diverged");
+    }
+    assert_eq!(report.results.len(), 13);
+    let storm_cancelled = report.results.iter()
+        .filter(|r| r.status == Outcome::Cancelled)
+        .count();
+    assert_eq!(storm_cancelled, 10, "all but the survivors cancel");
+    let probe_result = report.results.iter().find(|r| r.id == 9000)
+        .expect("probe result missing");
+    assert_eq!(probe_result.status, Outcome::Completed,
+               "the full-budget probe must admit — a single leaked row \
+                would block it");
+    assert_eq!(probe_result.tokens.len(), 8);
+    for id in [10, 11] {
+        let r = report.results.iter().find(|r| r.id == id)
+            .expect("survivor result missing");
+        assert_eq!(r.status, Outcome::Completed,
+                   "survivor {id} must finish untouched");
+        assert_eq!(r.tokens.len(), 8);
+    }
+}
+
+#[test]
+fn cancel_storm_drops_prefix_pinned_reservations() {
+    // satellite 1, prefix edge: a QUEUED request holding a prefix-cache
+    // reservation (pinned by a failed admission probe) is cancelled —
+    // the pinned pages must return, proven again by a full-budget probe
+    let shared: Vec<u32> = (0..16).map(|i| 40 + i).collect(); // 2 pages
+    let script = vec![
+        // opener publishes the shared 16-token prefix on completion
+        ScriptedCommand::immediately(SessionAction::Submit(vec![
+            SessionSubmit::new(DecodeRequest::new(0, shared.clone(), 2)),
+        ])),
+        // once it is done: two fillers crowd the pool (32 + 14 rows of
+        // the 48 budget), then a follow-up extending the shared prefix
+        // queues behind them and pins a reservation at its admit probe
+        ScriptedCommand::after_steps(8, SessionAction::Submit(vec![
+            SessionSubmit::new(DecodeRequest::new(
+                1, vec![201, 202], 30)),                  // 32 rows
+            SessionSubmit::new(DecodeRequest::new(
+                2, vec![203, 204], 12)),                  // 14 rows
+            SessionSubmit::new(DecodeRequest::new(
+                3, [shared.as_slice(), &[205, 206]].concat(), 4)),
+        ])),
+        // the storm: every live request cancelled in one step-window —
+        // request 3 still queued with its reservation, 1 and 2 mid-decode
+        ScriptedCommand::after_steps(12, SessionAction::Cancel(3)),
+        ScriptedCommand::after_steps(12, SessionAction::Cancel(1)),
+        ScriptedCommand::after_steps(12, SessionAction::Cancel(2)),
+        // full-budget probe: admits only if every row (including the
+        // pinned reservation) was credited back
+        ScriptedCommand::after_steps(14, SessionAction::Submit(vec![
+            SessionSubmit::new(DecodeRequest::new(
+                4, (0..40).map(|i| 900 + i).collect(), 8)),
+        ])),
+        ScriptedCommand::immediately(SessionAction::Drain),
+    ];
+    let eng = engine();
+    let c = cfg(12, 2, true); // 48-row budget, prefix cache on
+    let report = run_scripted(&eng, &c, &mut SimClock::simulated(model()),
+                              script)
+        .expect("prefix-pin storm failed");
+    assert_pool_drained(&eng, "prefix-pin cancel storm");
+    let by_id: std::collections::BTreeMap<RequestId, &DecodeResult> =
+        report.results.iter().map(|r| (r.id, r)).collect();
+    assert_eq!(by_id[&0].status, Outcome::Completed, "opener");
+    for id in [1, 2, 3] {
+        assert_eq!(by_id[&id].status, Outcome::Cancelled,
+                   "request {id} must be storm-cancelled");
+    }
+    assert_eq!(by_id[&4].status, Outcome::Completed,
+               "full-budget probe blocked — a pinned prefix reservation \
+                leaked");
+    assert_eq!(by_id[&4].tokens.len(), 8);
+}
+
+#[test]
+fn slow_consumer_flood_completes_every_request() {
+    // satellite 2 (chaos tier): 150 capacity-1 streams, 15 drained one
+    // token each, 135 abandoned outright — the engine must not wedge on
+    // the stalled buffers, must answer a mid-flood metrics snapshot
+    // (asserted inside the helper), and every request must still reach
+    // a Completed terminal result at shutdown
+    let dims = MlaDims { d_model: 48, n1: 2, d_head: 12, q_rank: 24,
+                         d_latent: 16, d_rope: 8, sq: 1 };
+    let exec = HostLayerExecutor::new(dims, 2, Algo::Amla, 32,
+                                      vec![32, 64], 11);
+    let config = amla::config::EngineConfig::builder()
+        .pool_pages(64)
+        .page_size(8)
+        .max_batch(8)
+        .batch_workers(2)
+        .build()
+        .expect("valid engine config");
+    let report = slow_consumer_flood(config, exec, 150, 10)
+        .expect("flood run failed");
+    assert_eq!(report.results.len(), 150, "requests lost in the flood");
+    assert_eq!(report.metrics.requests_completed, 150);
+    for r in &report.results {
+        assert_eq!(r.status, Outcome::Completed,
+                   "request {} did not complete", r.id);
+        assert_eq!(r.tokens.len(), 4,
+                   "request {} lost tokens to a stalled stream", r.id);
+    }
+    assert_eq!(report.completion_order.len(), 150);
+}
+
+#[test]
+fn repeated_preemption_of_one_victim_is_bit_identical() {
+    // satellite 3: a flash crowd that evicts the SAME Background victim
+    // at least three times; the ResumeLedger's merged result — tokens,
+    // TTFT, queue delay — must be bit-identical to the unconstrained
+    // (never-preempted) run of the same scenario
+    let scenario = repeat_evict_crowd(&RepeatEvictSpec::default());
+    let run = |pool_pages: usize| {
+        let eng = engine();
+        let report = run_chaos(&eng, &cfg(pool_pages, 2, true), &scenario,
+                               model())
+            .expect("repeat-evict run failed");
+        assert_pool_drained(&eng, "repeat evict");
+        report
+    };
+    // 48-row budget: the 44-row victim and a 6-row wave cannot coexist
+    let constrained = run(12);
+    assert!(constrained.metrics.preemptions >= 3,
+            "need >= 3 evictions of the one eligible victim, got {}",
+            constrained.metrics.preemptions);
+    assert_eq!(constrained.batcher.preempted,
+               constrained.metrics.preemptions);
+    let unconstrained = run(128);
+    assert_eq!(unconstrained.metrics.preemptions, 0,
+               "the wide pool must never preempt");
+    assert_eq!(tokens_by_id(&constrained.results),
+               tokens_by_id(&unconstrained.results),
+               "merged token streams diverged across >= 3 evictions");
+    let victim = |r: &EngineReport| {
+        r.results.iter().find(|x| x.id == VICTIM_ID)
+            .map(|x| (x.ttft.to_bits(), x.queue_delay.to_bits(),
+                      x.status))
+            .expect("victim result missing")
+    };
+    // TTFT and queue delay stem from the victim's FIRST admission —
+    // the ledger must carry them across every eviction untouched
+    assert_eq!(victim(&constrained), victim(&unconstrained),
+               "ledger merge corrupted the victim's TTFT/queue-delay");
+}
+
+#[test]
+fn long_context_mix_survives_split_kv_and_prefix_cache() {
+    // 96-token prompts (Background) prefilling in chunks while bursty
+    // Interactive chat flows around them; split-KV partitions the long
+    // decode block loops.  Grid-identical, unloaded-identical, drained.
+    let spec = LongContextMixSpec { long_requests: 2, context: 96,
+                                    long_gen: 6, chat_requests: 8,
+                                    chat_rate: 10.0, seed: 0x10C7 };
+    let scenario = long_context_mix(&spec);
+    // wider shape buckets than the default harness: a 96-token context
+    // plus its generation must fit the largest bucket
+    let long_engine = || {
+        let dims = MlaDims { d_model: 48, n1: 2, d_head: 12, q_rank: 24,
+                             d_latent: 16, d_rope: 8, sq: 1 };
+        let exec = HostLayerExecutor::new(dims, 2, Algo::Amla, 32,
+                                          vec![64, 128], 11);
+        DecodeEngine::new(exec, 512, 8)
+    };
+    let run = |workers: usize, fuse: bool| {
+        let eng = long_engine();
+        let c = cfg(64, workers, fuse); // 256-row budget
+        let report = run_chaos(&eng, &c, &scenario, model())
+            .expect("long-context mix failed");
+        assert_pool_drained(&eng, "long-context mix");
+        (report, eng, c)
+    };
+    let (reference, eng, c) = run(1, false);
+    let ref_sig = signature(&reference);
+    for (workers, fuse) in [(4, false), (4, true)] {
+        assert_eq!(signature(&run(workers, fuse).0), ref_sig,
+                   "workers={workers} fuse={fuse}: mix diverged");
+    }
+    assert_eq!(reference.results.len(), 10);
+    for r in &reference.results {
+        assert_eq!(r.status, Outcome::Completed, "request {} lost", r.id);
+    }
+    let diverged = diverged_from_unloaded(&eng, &c, &reference,
+                                          &scenario.script, model())
+        .expect("reference runs failed");
+    assert!(diverged.is_empty(),
+            "requests {diverged:?} diverged from their unloaded runs");
+}
+
+#[test]
+fn pool_churn_with_prefix_cache_drains_and_reuses_pages() {
+    // shared-prefix waves against an 80-row budget with a cancel per
+    // wave: prefix pages are published, hit, pinned, and released under
+    // constant churn; later waves must actually HIT the prefix cache,
+    // and the pool must drain to zero regardless
+    let spec = PoolChurnSpec { waves: 3, per_wave: 4, prefix_len: 16,
+                               gen_len: 6, wave_gap: 0.4, seed: 0xC0FF };
+    let scenario = pool_churn(&spec);
+    let run = |workers: usize, fuse: bool| {
+        let eng = engine();
+        let report = run_chaos(&eng, &cfg(20, workers, fuse), &scenario,
+                               model())
+            .expect("pool churn failed");
+        assert_pool_drained(&eng, "pool churn");
+        report
+    };
+    let reference = run(1, false);
+    let ref_sig = signature(&reference);
+    for (workers, fuse) in [(1, true), (4, false), (4, true)] {
+        assert_eq!(signature(&run(workers, fuse)), ref_sig,
+                   "workers={workers} fuse={fuse}: churn diverged");
+    }
+    assert_eq!(reference.results.len(), 12,
+               "every churn request needs a terminal result");
+    assert!(reference.metrics.prefix_hits > 0,
+            "later waves must hit the shared prefix");
+    for r in &reference.results {
+        assert!(r.status == Outcome::Completed
+                    || r.status == Outcome::Cancelled,
+                "request {} ended {:?}", r.id, r.status);
+    }
+}
+
+#[test]
+fn aging_rescues_background_from_a_batch_flood() {
+    // a Background request behind a sustained Batch flood: without
+    // aging it finishes dead last; with age_steps=6 it is promoted into
+    // the Batch FIFO after ~6 steps of starvation and overtakes the
+    // flood's tail — and the boost decision is grid-deterministic
+    let mut subs = vec![
+        SessionSubmit::new(DecodeRequest::new(500, vec![3, 4], 4))
+            .at(0.0)
+            .priority(Priority::Background),
+    ];
+    for i in 0..12u64 {
+        subs.push(SessionSubmit::new(
+                DecodeRequest::new(i, vec![10 + i as u32, 11], 4))
+            .at(i as f64 * 0.04)
+            .priority(Priority::Batch));
+    }
+    let script = vec![
+        ScriptedCommand::immediately(SessionAction::Submit(subs)),
+        ScriptedCommand::immediately(SessionAction::Drain),
+    ];
+    let run = |workers: usize, age_steps: u64| {
+        let eng = engine();
+        let mut c = cfg(64, workers, true);
+        c.max_batch = 1; // serialize so the flood genuinely starves
+        c.age_steps = age_steps;
+        let report = run_scripted(&eng, &c,
+                                  &mut SimClock::simulated(model()),
+                                  script.clone())
+            .expect("aging run failed");
+        assert_pool_drained(&eng, "aging flood");
+        report
+    };
+    let aged = run(1, 6);
+    assert_eq!(aged.metrics.priority_boosts, 1,
+               "exactly one Background entry crosses the horizon");
+    let pos = |r: &EngineReport, id: RequestId| {
+        r.completion_order.iter().position(|&x| x == id)
+            .expect("request 500 missing from completion order")
+    };
+    assert!(pos(&aged, 500) < 12,
+            "the boosted request must overtake the flood's tail \
+             (finished {} of 13)", pos(&aged, 500) + 1);
+    let unaged = run(1, 0);
+    assert_eq!(unaged.metrics.priority_boosts, 0);
+    assert_eq!(pos(&unaged, 500), 12,
+               "without aging, Background waits out the whole flood");
+    // grid determinism of the boost decision
+    assert_eq!(signature(&run(4, 6)), signature(&aged),
+               "aging decisions diverged across workers");
+    // aging reschedules, never rewrites: token streams match
+    assert_eq!(tokens_by_id(&aged.results), tokens_by_id(&unaged.results),
+               "aging changed decoded tokens");
+}
+
+#[test]
+fn chaos_sweep_emits_a_deterministic_envelope() {
+    // the `amla chaos` sweep: one engine, ascending spike multipliers,
+    // JSON report byte-identical across repeat runs (the BENCH_serving
+    // reproducibility requirement)
+    let ccfg = ChaosSweepConfig {
+        multipliers: vec![8.0, 1.0, 25.0], // unsorted on purpose
+        slo_ttft_p99_s: 0.5,
+        model: model(),
+        base: FlashCrowdSpec { base_requests: 6, base_rate: 15.0,
+                               spike_requests: 10, spike_start: 0.2,
+                               prompt_len: LenDist::Uniform(2, 3),
+                               gen_len: LenDist::Fixed(3),
+                               seed: 0x51EE7,
+                               ..FlashCrowdSpec::default() },
+    };
+    let sweep = |_: usize| {
+        let eng = engine();
+        let mut c = cfg(24, 2, true);
+        c.shed_policy = ShedPolicy::Degrade;
+        c.shed_queue_depth = 8;
+        let report = chaos_sweep(&eng, &c, &ccfg).expect("sweep failed");
+        assert_pool_drained(&eng, "chaos sweep");
+        report
+    };
+    let a = sweep(0);
+    let b = sweep(1);
+    assert_eq!(a.to_json().to_string(), b.to_json().to_string(),
+               "chaos sweep is not reproducible");
+    let mults: Vec<f64> = a.points.iter().map(|p| p.multiplier).collect();
+    assert_eq!(mults, vec![1.0, 8.0, 25.0], "points must sort ascending");
+    for p in &a.points {
+        assert_eq!(p.base_completed, 6,
+                   "degrade must never drop Interactive traffic \
+                    (multiplier {})", p.multiplier);
+    }
+    let parsed = Json::parse(&a.to_json().to_string())
+        .expect("sweep JSON must parse");
+    assert_eq!(parsed.req_str("metric").unwrap(),
+               "chaos_survivable_envelope");
+    let table = a.render_table();
+    assert!(table.contains("survivable envelope"));
+}

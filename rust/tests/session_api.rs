@@ -515,6 +515,63 @@ fn live_cancel_mid_flight_credits_budget_and_keeps_serving() {
     assert_eq!(report.batcher.cancelled, 1);
 }
 
+#[test]
+fn five_hundred_stalled_streams_stay_command_responsive() {
+    // The slow-consumer flood regression: 500 capacity-1 streams, ten
+    // of them kept by adversarially slow consumers (zero drained up
+    // front), the other 490 abandoned outright.  The engine stalls on
+    // the first kept stream's second token — from inside that stall it
+    // must still answer metrics, process a cancel, and honor shutdown;
+    // abandoned handles must not leak result slots (every one of the
+    // 500 requests reaches the final report exactly once).
+    let engine = AmlaEngine::start(live_config(64), host_executor())
+        .unwrap();
+    let mut kept = Vec::new();
+    for i in 0..500u64 {
+        let h = engine
+            .submit_with(DecodeRequest::new(i, vec![3 + (i % 13) as u32], 3),
+                         SubmitOptions::default().stream_capacity(1))
+            .unwrap();
+        if i % 50 == 0 {
+            kept.push(h);
+        }
+        // the other handles drop here: abandoned consumers
+    }
+    // metrics answered from inside the stalled flood
+    let snap = engine.metrics().unwrap();
+    assert!(snap.requests_completed < 500,
+            "snapshot must land mid-flood");
+    let in_system: u64 = snap.queue_depth.iter().sum::<u64>()
+        + snap.active_sessions;
+    assert!(in_system > 0, "the flood must still be in the system");
+    // cancel a deep-queued request from inside the stall
+    let mut doomed = kept.pop().unwrap();
+    doomed.cancel();
+    let res = doomed.wait().unwrap();
+    assert_eq!(res.status, Outcome::Cancelled,
+               "cancel must be processed while the engine is stalled");
+    assert!(res.tokens.is_empty(), "request 450 was cancelled queued");
+    // one adversarially slow sip from the stream holding the stall
+    assert!(kept[0].next_token().is_some(),
+            "stalled stream must still deliver on demand");
+    // shutdown drains: stalled buffers disconnect instead of wedging
+    let report = engine.shutdown().unwrap();
+    assert_eq!(report.results.len(), 500,
+               "every request must reach the final report");
+    assert_eq!(report.completion_order.len(), 500);
+    assert_eq!(report.metrics.requests_cancelled, 1);
+    assert_eq!(report.metrics.requests_completed, 499);
+    for r in &report.results {
+        if r.id == 450 {
+            continue;
+        }
+        assert_eq!(r.status, Outcome::Completed,
+                   "request {} lost to the flood", r.id);
+        assert_eq!(r.tokens.len(), 3,
+                   "request {} lost tokens to a stalled stream", r.id);
+    }
+}
+
 // ---------------------------------------------------------------------
 // Prefix-cache pool accounting (the shared-page cancellation audit)
 // ---------------------------------------------------------------------
