@@ -4,7 +4,9 @@
 //!
 //! Semantics match the shell version exactly on the committed tree —
 //! one line per `pub fn|struct|enum|trait|type <name>` declaration in
-//! `rust/src/serving` + `rust/src/coordinator`, formatted
+//! `rust/src/serving` + `rust/src/coordinator` +
+//! `rust/src/analysis` (the checker's own public surface — `lint_repo`
+//! / `audit_repo` and friends are API too), formatted
 //! `<path>:pub <kind> <name>`, byte-lexicographically sorted,
 //! duplicates kept, `pub(crate)` excluded — but the scan here is
 //! comment- and string-aware (the lexer skips both), so a doc comment
@@ -19,8 +21,8 @@ use super::lexer::{lex, Tok};
 use super::rules::Finding;
 
 /// Directories whose public items the surface file pins.
-pub const SURFACE_DIRS: [&str; 2] =
-    ["rust/src/serving", "rust/src/coordinator"];
+pub const SURFACE_DIRS: [&str; 3] =
+    ["rust/src/serving", "rust/src/coordinator", "rust/src/analysis"];
 
 /// The committed listing, relative to the repo root.
 pub const SURFACE_FILE: &str = "docs/api_surface.txt";
@@ -28,7 +30,7 @@ pub const SURFACE_FILE: &str = "docs/api_surface.txt";
 const KINDS: [&str; 5] = ["fn", "struct", "enum", "trait", "type"];
 
 const HEADER: [&str; 6] = [
-    "# Public API surface of rust/src/serving + rust/src/coordinator.",
+    "# Public API surface of rust/src/{serving,coordinator,analysis}.",
     "# Checked in CI by the `amla lint` api-surface pass (and by the",
     "# tier-1 `lint_clean` test): an accidental rename/removal (or an",
     "# unreviewed addition) fails loudly.  Regenerate with:",

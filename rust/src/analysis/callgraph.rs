@@ -1,0 +1,132 @@
+//! Crate-wide call graph over the per-file item tables.
+//!
+//! Resolution is *name-based*: a call token `foo(` resolves to every
+//! non-test crate function named `foo`, regardless of receiver type or
+//! path.  That over-approximates (a `std` method shadowing a crate fn
+//! name pulls the crate fn into the graph), which is the safe
+//! direction for every audit pass — the add-only pass scans more
+//! functions than strictly reachable, never fewer.  Macros never
+//! resolve (`name!(` has the `!` between name and paren), and
+//! definitions never self-match (`fn name(` is excluded at the token
+//! level).
+
+use std::collections::{BTreeMap, VecDeque};
+
+use super::parser::{is_call_at, parse, FileAst, FnItem};
+
+/// A function's identity: `(file index, fn index)` into the crate.
+pub(crate) type FnKey = (usize, usize);
+
+/// Every parsed file plus the crate-wide integer const environment.
+pub(crate) struct CrateIndex {
+    pub(crate) files: Vec<FileAst>,
+    pub(crate) consts: BTreeMap<String, i64>,
+}
+
+impl CrateIndex {
+    /// Parse `(path, source)` pairs into a crate index.
+    pub(crate) fn build(sources: &[(String, String)]) -> CrateIndex {
+        let files: Vec<FileAst> = sources.iter()
+            .map(|(p, s)| parse(p, s))
+            .collect();
+        let consts = super::parser::eval_const_env(&files);
+        CrateIndex { files, consts }
+    }
+
+    pub(crate) fn fn_item(&self, key: FnKey) -> &FnItem {
+        &self.files[key.0].fns[key.1]
+    }
+
+    pub(crate) fn file_of(&self, key: FnKey) -> &FileAst {
+        &self.files[key.0]
+    }
+
+    /// `Type::name` when the fn sits in an impl block, else `name`.
+    pub(crate) fn qual_name(&self, key: FnKey) -> String {
+        let f = self.fn_item(key);
+        match &f.qual {
+            Some(q) => format!("{q}::{}", f.name),
+            None => f.name.clone(),
+        }
+    }
+
+    /// Name → every *non-test* fn with a body carrying that name.
+    pub(crate) fn by_name(&self) -> BTreeMap<&str, Vec<FnKey>> {
+        let mut map: BTreeMap<&str, Vec<FnKey>> = BTreeMap::new();
+        for (fi, file) in self.files.iter().enumerate() {
+            for (gi, f) in file.fns.iter().enumerate() {
+                if !f.is_test && f.body.is_some() {
+                    map.entry(f.name.as_str()).or_default().push((fi, gi));
+                }
+            }
+        }
+        map
+    }
+
+    /// Call sites inside a fn body as `(token index, callee name)`.
+    pub(crate) fn body_calls(&self, key: FnKey) -> Vec<(usize, String)> {
+        let file = &self.files[key.0];
+        let Some((open, close)) = file.fns[key.1].body else {
+            return Vec::new();
+        };
+        let mut out = Vec::new();
+        for k in open + 1..close {
+            if let Some(name) = is_call_at(&file.toks, k) {
+                out.push((k, name.to_string()));
+            }
+        }
+        out
+    }
+
+    /// BFS closure over the call graph from `seeds`, returning each
+    /// reached fn with the caller it was first reached through
+    /// (`None` for seeds) — the breadcrumb trail for diagnostics.
+    pub(crate) fn reachable_from(
+        &self,
+        seeds: &[FnKey],
+        by_name: &BTreeMap<&str, Vec<FnKey>>,
+    ) -> BTreeMap<FnKey, Option<FnKey>> {
+        let mut parent: BTreeMap<FnKey, Option<FnKey>> = BTreeMap::new();
+        let mut queue: VecDeque<FnKey> = VecDeque::new();
+        for &s in seeds {
+            if !parent.contains_key(&s) {
+                parent.insert(s, None);
+                queue.push_back(s);
+            }
+        }
+        while let Some(key) = queue.pop_front() {
+            for (_, callee) in self.body_calls(key) {
+                for &target in
+                    by_name.get(callee.as_str()).map_or(&[][..], Vec::as_slice)
+                {
+                    if !parent.contains_key(&target) {
+                        parent.insert(target, Some(key));
+                        queue.push_back(target);
+                    }
+                }
+            }
+        }
+        parent
+    }
+
+    /// Render the breadcrumb chain `seed -> ... -> key` for messages.
+    pub(crate) fn breadcrumb(
+        &self,
+        parent: &BTreeMap<FnKey, Option<FnKey>>,
+        key: FnKey,
+    ) -> String {
+        let mut chain = vec![self.qual_name(key)];
+        let mut cur = key;
+        let mut hops = 0;
+        while let Some(Some(p)) = parent.get(&cur) {
+            chain.push(self.qual_name(*p));
+            cur = *p;
+            hops += 1;
+            if hops > 64 {
+                break;
+            }
+        }
+        chain.reverse();
+        chain.join(" -> ")
+    }
+}

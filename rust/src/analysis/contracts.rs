@@ -1,0 +1,115 @@
+//! Contract coverage cross-check (`audit-contract`).
+//!
+//! `docs/ARCHITECTURE.md` carries the repo's contracts index — the
+//! numbered bit-identity / accounting / liveness guarantees every PR
+//! must keep.  Each contract is only as good as the test that pins it,
+//! and nothing previously tied the two together: a contract could be
+//! reworded, renumbered, or silently dropped from the test suite.
+//!
+//! This pass closes the loop: every `### N. Title` entry under
+//! `## Contracts index` must be claimed by at least one
+//! `// contract:N` marker in the sources or integration tests, and
+//! every marker must reference a contract that actually exists.
+//! Marker grammar: `// contract:8` or `// contract:2,3` (a list pins
+//! several contracts at once); anything after whitespace is free-form
+//! commentary.
+
+use std::collections::BTreeSet;
+
+use super::flow::{consume_allow, mk};
+use super::parser::FileAst;
+use super::rules::Finding;
+
+const ARCH: &str = "docs/ARCHITECTURE.md";
+
+/// Run the coverage cross-check: `md` is the ARCHITECTURE.md text,
+/// `src`/`tests` the parsed source and integration-test files.
+pub(crate) fn pass_contracts(
+    md: &str,
+    src: &[FileAst],
+    tests: &[FileAst],
+    findings: &mut Vec<Finding>,
+    used: &mut BTreeSet<(String, usize)>,
+) {
+    // ---- parse the contracts index ---------------------------------
+    let mut contracts: Vec<(u32, String, usize)> = Vec::new();
+    let mut in_index = false;
+    for (i, line) in md.lines().enumerate() {
+        if line.starts_with("## ") {
+            in_index = line.trim_start_matches('#').trim()
+                == "Contracts index";
+            continue;
+        }
+        if in_index && line.starts_with("### ") {
+            let rest = line[4..].trim();
+            if let Some((num, title)) = rest.split_once('.') {
+                if let Ok(n) = num.trim().parse::<u32>() {
+                    contracts.push((n, title.trim().to_string(), i));
+                }
+            }
+        }
+    }
+    if contracts.is_empty() {
+        findings.push(Finding {
+            path: ARCH.to_string(),
+            line: 0,
+            rule: "audit-contract",
+            message: "no `## Contracts index` section with `### N. Title` \
+                      entries found — the coverage cross-check has nothing \
+                      to pin".to_string(),
+        });
+        return;
+    }
+
+    // ---- collect and validate `// contract:N` markers --------------
+    let mut covered: BTreeSet<u32> = BTreeSet::new();
+    for f in src.iter().chain(tests.iter()) {
+        for (line, raw) in &f.contract_marks {
+            let Some(head) = raw.split_whitespace().next() else {
+                if !consume_allow(f, *line, "audit-contract", used) {
+                    findings.push(mk(&f.path, *line, "audit-contract",
+                        "malformed `// contract:` marker — expected \
+                         `// contract:N` or `// contract:N,M`".to_string()));
+                }
+                continue;
+            };
+            for part in head.split(',') {
+                match part.parse::<u32>() {
+                    Ok(n) => {
+                        if contracts.iter().any(|c| c.0 == n) {
+                            covered.insert(n);
+                        } else if !consume_allow(f, *line, "audit-contract",
+                                                 used) {
+                            findings.push(mk(&f.path, *line,
+                                             "audit-contract", format!(
+                                "`// contract:{n}` references a contract \
+                                 that is not in the {ARCH} contracts index \
+                                 — stale marker or missing contract \
+                                 entry")));
+                        }
+                    }
+                    Err(_) => {
+                        if !consume_allow(f, *line, "audit-contract", used) {
+                            findings.push(mk(&f.path, *line,
+                                             "audit-contract", format!(
+                                "malformed `// contract:` marker \
+                                 (`{part}` is not a contract number) — \
+                                 expected `// contract:N` or \
+                                 `// contract:N,M`")));
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    // ---- every contract needs at least one pin ---------------------
+    for (n, title, line) in &contracts {
+        if !covered.contains(n) {
+            findings.push(mk(ARCH, *line, "audit-contract", format!(
+                "contract {n} ({title}) has no test carrying a \
+                 `// contract:{n}` marker — pin it with a marker on its \
+                 test or retire the contract from the index")));
+        }
+    }
+}

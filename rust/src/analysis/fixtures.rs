@@ -5,7 +5,8 @@
 //! own source when `lint_repo` walks `rust/src/analysis/`.
 
 use super::api_surface::extract_decls;
-use super::rules::lint_source;
+use super::flow::audit_sources;
+use super::rules::{lint_source, Finding};
 
 const DET: &str = "rust/src/serving/worker.rs";
 const NON_DET: &str = "rust/src/roofline/model.rs";
@@ -373,4 +374,290 @@ fn findings_carry_one_based_lines_and_render_paths() {
     let shown = found[0].to_string();
     assert!(shown.starts_with("rust/src/serving/worker.rs:1: [det-wallclock]"),
             "unexpected rendering: {shown}");
+}
+
+// ==================================================== amla audit passes
+//
+// The flow-aware passes get the same treatment as the line rules: every
+// pass has at least one must-fire and one must-not-fire fixture, run
+// through `audit_sources` exactly as `audit_repo` would (raw-string
+// sources, so this file never trips the auditor on itself).
+
+fn audit(src: &[(&str, &str)], tests: &[(&str, &str)], md: Option<&str>)
+         -> Vec<Finding> {
+    let src: Vec<(String, String)> = src.iter()
+        .map(|&(p, s)| (p.to_string(), s.to_string())).collect();
+    let tests: Vec<(String, String)> = tests.iter()
+        .map(|&(p, s)| (p.to_string(), s.to_string())).collect();
+    audit_sources(&src, &tests, md)
+}
+
+fn audit_fires(src: &[(&str, &str)], rule: &'static str) -> bool {
+    audit(src, &[], None).iter().any(|f| f.rule == rule)
+}
+
+fn audit_clean(src: &[(&str, &str)]) {
+    let found = audit(src, &[], None);
+    assert!(found.is_empty(), "expected no audit findings, got: {found:?}");
+}
+
+// --------------------------------------------------------- audit-add-only
+
+#[test]
+fn audit_add_only_fires_on_transitive_multiply() {
+    // the acceptance case: a multiply hidden two calls away from the
+    // audited region must still fail the build
+    let src = &[(NUMERICS, r#"
+fn smooth(eps: f32) -> f32 { eps * 0.5 }
+fn adjust(d: i32, eps: f32) -> i32 { let _ = smooth(eps); d }
+fn apply(row: &mut [f32], d: i32, eps: f32) {
+    // lint:region(add-only)
+    let add = rescale_add(adjust(d, eps), 0.0);
+    rescale_row(row, add);
+    // lint:endregion(add-only)
+}
+"#)];
+    assert!(audit_fires(src, "audit-add-only"));
+}
+
+#[test]
+fn audit_add_only_silent_on_clean_transitive_chain() {
+    let src = &[(NUMERICS, r#"
+fn widen(d: i32) -> i32 { d + 1 }
+fn apply(row: &mut [f32], d: i32, eps: f32) {
+    // lint:region(add-only)
+    let add = rescale_add(widen(d), eps);
+    rescale_row(row, add);
+    // lint:endregion(add-only)
+}
+"#)];
+    audit_clean(src);
+}
+
+#[test]
+fn audit_add_only_fires_on_division_inside_region() {
+    // the per-line lint only rejects `*` on region lines; the audit
+    // closes the `/` gap
+    let src = &[(NUMERICS, r#"
+fn apply(row: &mut [f32], d: i32, eps: f32) {
+    // lint:region(add-only)
+    let add = rescale_add(d, eps / 2.0);
+    rescale_row(row, add);
+    // lint:endregion(add-only)
+}
+"#)];
+    assert!(audit_fires(src, "audit-add-only"));
+}
+
+#[test]
+fn audit_add_only_allow_suppresses_and_marker_is_consumed() {
+    let src = &[(NUMERICS, r#"
+fn residual(eps: f32) -> f32 {
+    // lint:allow(audit-add-only): fixture — compensation residue term
+    eps * (1.0 + eps)
+}
+fn apply(row: &mut [f32], d: i32, eps: f32) {
+    // lint:region(add-only)
+    let add = rescale_add(d, residual(eps));
+    rescale_row(row, add);
+    // lint:endregion(add-only)
+}
+"#)];
+    audit_clean(src);
+}
+
+// ------------------------------------------------------------ audit-clamp
+
+#[test]
+fn audit_clamp_fires_on_out_of_window_and_unprovable_args() {
+    // out-of-window Δn literal at a rescale call-site
+    let src = &[(NUMERICS, r#"
+fn too_big(row: &mut [f32]) {
+    rescale_row(row, 64 << 23);
+}
+"#)];
+    assert!(audit_fires(src, "audit-clamp"));
+    // an argument the interval analysis cannot pin down at all
+    let src2 = &[(NUMERICS, r#"
+fn opaque(row: &mut [f32], d: i32) {
+    rescale_row(row, d << 23);
+}
+"#)];
+    assert!(audit_fires(src2, "audit-clamp"));
+}
+
+#[test]
+fn audit_clamp_accepts_safe_add_and_in_window_consts() {
+    let src = &[(NUMERICS, r#"
+const DELTA_CLAMP: i32 = -30;
+const DELTA_CLAMP_HI: i32 = 30;
+fn ok(row: &mut [f32], x: f32) -> f32 {
+    let add = rescale_add(7, 0.25);
+    rescale_row(row, add);
+    rescale_row(row, DELTA_CLAMP << 23);
+    mul_pow2_by_add(x, DELTA_CLAMP_HI)
+}
+"#)];
+    audit_clean(src);
+}
+
+#[test]
+fn audit_clamp_fires_when_rescale_add_does_not_saturate() {
+    let src = &[(NUMERICS, r#"
+const DELTA_CLAMP: i32 = -30;
+const DELTA_CLAMP_HI: i32 = 30;
+fn rescale_add(delta_n: i32, eps: f32) -> i32 {
+    (delta_n << 23) + (eps + eps) as i32
+}
+"#)];
+    assert!(audit_fires(src, "audit-clamp"));
+}
+
+#[test]
+fn audit_clamp_accepts_saturating_rescale_add() {
+    let src = &[(NUMERICS, r#"
+const DELTA_CLAMP: i32 = -30;
+const DELTA_CLAMP_HI: i32 = 30;
+fn rescale_add(delta_n: i32, eps: f32) -> i32 {
+    let dn = delta_n.clamp(DELTA_CLAMP, DELTA_CLAMP_HI);
+    (dn << 23) + residual(eps)
+}
+"#)];
+    audit_clean(src);
+}
+
+// ------------------------------------------------------------- audit-lock
+
+#[test]
+fn audit_lock_fires_on_send_under_live_guard() {
+    let src = &[(SESSION, r#"
+fn pump(q: &Mutex<Vec<u32>>, tx: &Sender<u32>) {
+    let slot = q.lock().unwrap();
+    tx.send(slot.len() as u32).unwrap();
+}
+"#)];
+    assert!(audit_fires(src, "audit-lock"));
+}
+
+#[test]
+fn audit_lock_silent_on_temp_guard_and_early_drop() {
+    let src = &[(SESSION, r#"
+fn peek(q: &Mutex<Vec<u32>>, tx: &Sender<u32>) {
+    let head = q.lock().unwrap().len() as u32;
+    tx.send(head).unwrap();
+}
+fn staged(q: &Mutex<Vec<u32>>, tx: &Sender<u32>) {
+    let slot = q.lock().unwrap();
+    let head = slot.len() as u32;
+    drop(slot);
+    tx.send(head).unwrap();
+}
+"#)];
+    audit_clean(src);
+}
+
+#[test]
+fn audit_lock_fires_on_lock_order_inversion() {
+    let src = &[(SESSION, r#"
+fn forward(a: &Mutex<u32>, b: &Mutex<u32>) -> u32 {
+    let ga = a.lock().unwrap();
+    let gb = b.lock().unwrap();
+    *ga + *gb
+}
+fn backward(a: &Mutex<u32>, b: &Mutex<u32>) -> u32 {
+    let gb = b.lock().unwrap();
+    let ga = a.lock().unwrap();
+    *ga + *gb
+}
+"#)];
+    assert!(audit_fires(src, "audit-lock"));
+}
+
+#[test]
+fn audit_lock_silent_on_consistent_lock_order() {
+    let src = &[(SESSION, r#"
+fn one(a: &Mutex<u32>, b: &Mutex<u32>) -> u32 {
+    let ga = a.lock().unwrap();
+    let gb = b.lock().unwrap();
+    *ga + *gb
+}
+fn two(a: &Mutex<u32>, b: &Mutex<u32>) -> u32 {
+    let ga = a.lock().unwrap();
+    let gb = b.lock().unwrap();
+    *ga - *gb
+}
+"#)];
+    audit_clean(src);
+}
+
+#[test]
+fn audit_lock_join_requires_thread_context() {
+    // Path::join lexes identically to JoinHandle::join (string args
+    // are invisible) — only files with thread idents treat it as
+    // blocking
+    let path_join = &[(SESSION, r#"
+fn save(dir: &Path, q: &Mutex<u32>) -> PathBuf {
+    let g = q.lock().unwrap();
+    let p = dir.join(name_for(*g));
+    p
+}
+"#)];
+    audit_clean(path_join);
+    let thread_join = &[(SESSION, r#"
+fn wait(h: JoinHandle<u32>, q: &Mutex<u32>) {
+    let g = q.lock().unwrap();
+    let _ = h.join();
+    let _ = *g;
+}
+"#)];
+    assert!(audit_fires(thread_join, "audit-lock"));
+}
+
+// ----------------------------------------------------------- audit-marker
+
+#[test]
+fn audit_marker_fires_on_stale_audit_allow() {
+    let src = &[(NUMERICS, r#"
+fn f(row: &mut [f32]) {
+    // lint:allow(audit-clamp): leftover — arg is saturated now
+    let add = rescale_add(3, 0.5);
+    rescale_row(row, add);
+}
+"#)];
+    assert!(audit_fires(src, "audit-marker"));
+}
+
+// --------------------------------------------------------- audit-contract
+
+#[test]
+fn audit_contract_fires_on_uncovered_and_stale_markers() {
+    let md = "## Contracts index\n\n### 1. Bit-identity replay\n\n\
+              ### 2. Engine liveness\n";
+    let tests: &[(&str, &str)] = &[("rust/tests/pin.rs",
+        "// contract:1 decode replay pin\nfn t() {}\n\
+         // contract:99 retired long ago\nfn u() {}\n")];
+    let found = audit(&[], tests, Some(md));
+    assert!(found.iter().any(|f| f.rule == "audit-contract"
+                && f.path == "docs/ARCHITECTURE.md"),
+            "uncovered contract 2 must fire: {found:?}");
+    assert!(found.iter().any(|f| f.rule == "audit-contract"
+                && f.path == "rust/tests/pin.rs"),
+            "stale contract:99 marker must fire: {found:?}");
+}
+
+#[test]
+fn audit_contract_clean_when_fully_covered() {
+    let md = "## Contracts index\n\n### 1. Bit-identity replay\n\n\
+              ### 2. Engine liveness\n";
+    let tests: &[(&str, &str)] = &[("rust/tests/pin.rs",
+        "// contract:1,2 both pinned here\nfn t() {}\n")];
+    let found = audit(&[], tests, Some(md));
+    assert!(found.is_empty(), "expected clean coverage, got: {found:?}");
+}
+
+#[test]
+fn audit_contract_fires_on_missing_index() {
+    let found = audit(&[], &[], Some("# no contracts here\n"));
+    assert!(found.iter().any(|f| f.rule == "audit-contract" && f.line == 0),
+            "empty index must be a file-level finding: {found:?}");
 }

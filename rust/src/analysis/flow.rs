@@ -1,0 +1,926 @@
+//! The flow-aware audit passes behind `amla audit`.
+//!
+//! Four analyses over the [`super::callgraph::CrateIndex`]:
+//!
+//! * **audit-add-only** — interprocedural MUL-by-ADD purity: every
+//!   function reachable (through the call graph) from inside a
+//!   `lint:region(add-only)` block must be free of binary `*`/`/`.
+//!   The per-line lint rule only sees the region's own lines; this
+//!   pass closes the helper-extraction escape hatch.
+//! * **audit-clamp** — Δn interval check: every `rescale_element` /
+//!   `rescale_row` / `mul_pow2_by_add` call-site outside the rescale
+//!   primitives must pass an exponent-field delta that is either a
+//!   compile-time constant inside the `DELTA_CLAMP..=DELTA_CLAMP_HI`
+//!   window or the result of `rescale_add` (which saturates
+//!   internally — and whose body this pass verifies actually clamps).
+//! * **audit-lock** — blocking-under-lock: in `serving/` and
+//!   `coordinator/`, no `MutexGuard` may be live across a channel
+//!   `send`/`recv`, a thread `join`, or a call into a function that
+//!   may (transitively) block; plus a crate-wide lock-order cycle
+//!   check over the named mutexes.
+//! * **audit-marker** — stale `lint:allow(audit-*)` markers (the
+//!   audit twin of the lint `marker` rule; not suppressible).
+//!
+//! The contract-coverage pass lives in [`super::contracts`]; this
+//! module runs it and owns the shared allow-marker ledger.
+//!
+//! All passes over-approximate in the safe direction: name-based call
+//! resolution can pull extra functions into a closure, never drop one.
+//! Each suppression is a `lint:allow(audit-<pass>): <reason>` comment
+//! on the flagged line, and unused ones are themselves findings.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::callgraph::{CrateIndex, FnKey};
+use super::lexer::Tok;
+use super::parser::{is_call_at, parse, FileAst, Sp};
+use super::rules::{Finding, RESCALE_FNS, UNARY_CONTEXT_KEYWORDS};
+
+/// `(path, allow-marker line)` pairs consumed by some finding site.
+type UsedAllows = BTreeSet<(String, usize)>;
+
+pub(crate) fn mk(path: &str, line0: usize, rule: &'static str,
+                 message: String) -> Finding {
+    Finding { path: path.to_string(), line: line0 + 1, rule, message }
+}
+
+/// Consume a `lint:allow(<rule>)` marker governing 0-based `line`.
+pub(crate) fn consume_allow(file: &FileAst, line: usize, rule: &str,
+                            used: &mut UsedAllows) -> bool {
+    match file.allow_on(line, rule) {
+        Some(i) => {
+            used.insert((file.path.clone(), file.allows[i].line));
+            true
+        }
+        None => false,
+    }
+}
+
+/// Run every audit pass over in-memory sources: `src` is the
+/// crate-under-audit (`rust/src`), `tests` the integration-test files
+/// (contract markers only), `arch_md` the contracts-index document.
+pub(crate) fn audit_sources(
+    src: &[(String, String)],
+    tests: &[(String, String)],
+    arch_md: Option<&str>,
+) -> Vec<Finding> {
+    let ci = CrateIndex::build(src);
+    let test_files: Vec<FileAst> =
+        tests.iter().map(|(p, s)| parse(p, s)).collect();
+    let by_name = ci.by_name();
+    let mut findings = Vec::new();
+    let mut used: UsedAllows = BTreeSet::new();
+
+    pass_add_only(&ci, &by_name, &mut findings, &mut used);
+    pass_clamp(&ci, &mut findings, &mut used);
+    pass_locks(&ci, &by_name, &mut findings, &mut used);
+    if let Some(md) = arch_md {
+        super::contracts::pass_contracts(md, &ci.files, &test_files,
+                                         &mut findings, &mut used);
+    }
+
+    for f in ci.files.iter().chain(test_files.iter()) {
+        for a in &f.allows {
+            if !used.contains(&(f.path.clone(), a.line)) {
+                findings.push(mk(&f.path, a.line, "audit-marker", format!(
+                    "stale lint:allow({}) marker — its target line no longer \
+                     triggers the audit rule; remove the marker", a.rule)));
+            }
+        }
+    }
+
+    findings.sort_by(|a, b| {
+        a.path.cmp(&b.path)
+            .then(a.line.cmp(&b.line))
+            .then(a.rule.cmp(b.rule))
+            .then(a.message.cmp(&b.message))
+    });
+    findings.dedup();
+    findings
+}
+
+/// `toks[k]` is a binary operator's right position: the token before
+/// it is an operand (same heuristic as the lint add-only rule).
+fn operand_before(toks: &[Sp], k: usize) -> bool {
+    match k.checked_sub(1).map(|j| &toks[j].tok) {
+        Some(Tok::Ident(w)) => !UNARY_CONTEXT_KEYWORDS.contains(&w.as_str()),
+        Some(Tok::Punct(c)) => matches!(c, ')' | ']'),
+        None => false,
+    }
+}
+
+fn raw_ptr_after(toks: &[Sp], k: usize) -> bool {
+    matches!(toks.get(k + 1).map(|s| &s.tok),
+             Some(Tok::Ident(w)) if w == "const" || w == "mut")
+}
+
+// ------------------------------------------------------------------
+// pass 1: interprocedural add-only purity
+// ------------------------------------------------------------------
+
+fn pass_add_only(
+    ci: &CrateIndex,
+    by_name: &BTreeMap<&str, Vec<FnKey>>,
+    findings: &mut Vec<Finding>,
+    used: &mut UsedAllows,
+) {
+    // seeds: every crate fn called from a non-test add-only region line
+    let mut seeds: Vec<FnKey> = Vec::new();
+    for file in &ci.files {
+        for (k, sp) in file.toks.iter().enumerate() {
+            if sp.line >= file.test_start || !file.in_region(sp.line) {
+                continue;
+            }
+            if let Some(name) = is_call_at(&file.toks, k) {
+                if let Some(ts) = by_name.get(name) {
+                    seeds.extend(ts.iter().copied());
+                }
+            }
+        }
+    }
+    let parent = ci.reachable_from(&seeds, by_name);
+
+    for &key in parent.keys() {
+        let file = ci.file_of(key);
+        let Some((open, close)) = ci.fn_item(key).body else { continue };
+        for k in open + 1..close {
+            let line = file.toks[k].line;
+            let is_mul = file.toks[k].tok.is_punct('*');
+            let is_div = file.toks[k].tok.is_punct('/');
+            if !is_mul && !is_div
+                || file.in_region(line) // region lines are the lint's beat
+                || !operand_before(&file.toks, k)
+                || (is_mul && raw_ptr_after(&file.toks, k))
+                || consume_allow(file, line, "audit-add-only", used)
+            {
+                continue;
+            }
+            findings.push(mk(&file.path, line, "audit-add-only", format!(
+                "{} in `{}`, which is reachable from a \
+                 lint:region(add-only) block (call chain: {}) — everything \
+                 the add-only region calls must stay MUL-free (Lemma 3.1)",
+                if is_mul { "multiplication" } else { "division" },
+                ci.qual_name(key), ci.breadcrumb(&parent, key))));
+        }
+    }
+
+    // direct `/` on region lines (the lint rule only rejects `*` there)
+    for file in &ci.files {
+        for (k, sp) in file.toks.iter().enumerate() {
+            if sp.line >= file.test_start
+                || !file.in_region(sp.line)
+                || !sp.tok.is_punct('/')
+                || !operand_before(&file.toks, k)
+                || consume_allow(file, sp.line, "audit-add-only", used)
+            {
+                continue;
+            }
+            findings.push(mk(&file.path, sp.line, "audit-add-only",
+                "division inside a lint:region(add-only) block — the AMLA \
+                 rescale must stay MUL-free (Lemma 3.1: exponent-field adds \
+                 only)".to_string()));
+        }
+    }
+}
+
+// ------------------------------------------------------------------
+// pass 2: Δn clamp interval check
+// ------------------------------------------------------------------
+
+/// Abstract value of an integer expression in the clamp domain.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum AbsVal {
+    /// Compile-time constant.
+    Known(i64),
+    /// Result of `rescale_add(..)` — saturated by construction (the
+    /// pass separately verifies `rescale_add`'s body really clamps).
+    SafeAdd,
+    Top,
+}
+
+fn eval_abs(
+    toks: &[Tok],
+    abs_env: &BTreeMap<String, AbsVal>,
+    int_env: &BTreeMap<String, i64>,
+) -> AbsVal {
+    if toks.len() == 1 {
+        if let Tok::Ident(w) = &toks[0] {
+            if let Some(v) = abs_env.get(w) {
+                return *v;
+            }
+        }
+    }
+    if let Some(v) = super::parser::eval_int(toks, int_env) {
+        return AbsVal::Known(v);
+    }
+    if toks.len() >= 2 {
+        if let Tok::Ident(w) = &toks[0] {
+            if w == "rescale_add" && toks[1].is_punct('(') {
+                return AbsVal::SafeAdd;
+            }
+        }
+    }
+    AbsVal::Top
+}
+
+/// The `want`-th (0-based) top-level argument of the call group
+/// opening at token `open`, as raw tokens.
+fn nth_arg_tokens(file: &FileAst, open: usize, want: usize)
+                  -> Option<Vec<Tok>> {
+    let close = *file.close.get(open)?;
+    if close == usize::MAX {
+        return None;
+    }
+    let mut args: Vec<Vec<Tok>> = vec![Vec::new()];
+    let mut k = open + 1;
+    while k < close {
+        match &file.toks[k].tok {
+            Tok::Punct(',') => args.push(Vec::new()),
+            Tok::Punct('(' | '[' | '{') => {
+                let e = file.close[k].min(close);
+                let cur = args.last_mut().unwrap();
+                for t in &file.toks[k..=e] {
+                    cur.push(t.tok.clone());
+                }
+                k = e;
+            }
+            t => args.last_mut().unwrap().push(t.clone()),
+        }
+        k += 1;
+    }
+    args.into_iter().nth(want).filter(|a| !a.is_empty())
+}
+
+/// Flow-insensitive `let` environment of a fn body: name → abstract
+/// value, with conflicting rebinds joined to `Top`.
+fn local_env(
+    file: &FileAst,
+    open: usize,
+    close: usize,
+    consts: &BTreeMap<String, i64>,
+) -> (BTreeMap<String, AbsVal>, BTreeMap<String, i64>) {
+    let mut abs: BTreeMap<String, AbsVal> = BTreeMap::new();
+    let mut int_env = consts.clone();
+    let toks = &file.toks;
+    let mut k = open + 1;
+    while k < close {
+        if !toks[k].tok.is_ident("let") {
+            k += 1;
+            continue;
+        }
+        let mut j = k + 1;
+        if j < close && toks[j].tok.is_ident("mut") {
+            j += 1;
+        }
+        let name = match (j < close).then(|| &toks[j].tok) {
+            Some(Tok::Ident(w))
+                if !w.starts_with(|c: char| c.is_ascii_digit()) => w.clone(),
+            _ => {
+                k += 1;
+                continue;
+            }
+        };
+        // find the binding `=` (stop at `{`/`;`: patterns, let-else)
+        let mut m = j + 1;
+        let mut eq = None;
+        while m < close {
+            match &toks[m].tok {
+                Tok::Punct('(' | '[') => {
+                    m = file.close[m].min(close);
+                }
+                Tok::Punct('=') => {
+                    eq = Some(m);
+                    break;
+                }
+                Tok::Punct(';' | '{') => break,
+                _ => {}
+            }
+            m += 1;
+        }
+        let Some(eq) = eq else {
+            k += 1;
+            continue;
+        };
+        let mut m2 = eq + 1;
+        let mut rhs: Vec<Tok> = Vec::new();
+        while m2 < close {
+            match &toks[m2].tok {
+                Tok::Punct(';') => break,
+                Tok::Punct('(' | '[' | '{') => {
+                    let e = file.close[m2].min(close);
+                    for t in &toks[m2..=e] {
+                        rhs.push(t.tok.clone());
+                    }
+                    m2 = e + 1;
+                }
+                t => {
+                    rhs.push(t.clone());
+                    m2 += 1;
+                }
+            }
+        }
+        let val = eval_abs(&rhs, &abs, &int_env);
+        match abs.get(&name) {
+            Some(&old) if old != val => {
+                abs.insert(name.clone(), AbsVal::Top);
+                int_env.remove(&name);
+            }
+            _ => {
+                if let AbsVal::Known(v) = val {
+                    int_env.insert(name.clone(), v);
+                }
+                abs.insert(name, val);
+            }
+        }
+        k = m2.max(k + 1);
+    }
+    (abs, int_env)
+}
+
+fn pass_clamp(ci: &CrateIndex, findings: &mut Vec<Finding>,
+              used: &mut UsedAllows) {
+    let lo = ci.consts.get("DELTA_CLAMP").copied().unwrap_or(-30);
+    let hi = ci.consts.get("DELTA_CLAMP_HI").copied().unwrap_or(30);
+    for file in &ci.files {
+        for f in &file.fns {
+            if f.is_test {
+                continue;
+            }
+            if RESCALE_FNS.contains(&f.name.as_str()) {
+                // the primitives are the trusted base — except
+                // `rescale_add`, which must prove it saturates
+                if f.name == "rescale_add" {
+                    check_rescale_add_body(ci, file, f, lo, hi,
+                                           findings, used);
+                }
+                continue;
+            }
+            let Some((open, close)) = f.body else { continue };
+            let (abs_env, int_env) = local_env(file, open, close, &ci.consts);
+            for k in open + 1..close {
+                let Some(name) = is_call_at(&file.toks, k) else { continue };
+                let (w_lo, w_hi) = match name {
+                    "rescale_element" | "rescale_row" => (lo << 23, hi << 23),
+                    "mul_pow2_by_add" => (lo, hi),
+                    _ => continue,
+                };
+                let line = file.toks[k].line;
+                let Some(arg) = nth_arg_tokens(file, k + 1, 1) else {
+                    continue;
+                };
+                let verdict = eval_abs(&arg, &abs_env, &int_env);
+                let problem = match verdict {
+                    AbsVal::SafeAdd => None,
+                    AbsVal::Known(v) if w_lo <= v && v <= w_hi => None,
+                    AbsVal::Known(v) => Some(format!(
+                        "Δn argument of `{name}` evaluates to {v}, outside \
+                         the clamp window [{w_lo}, {w_hi}] \
+                         (DELTA_CLAMP={lo}, DELTA_CLAMP_HI={hi})")),
+                    AbsVal::Top => Some(format!(
+                        "cannot prove the Δn argument of `{name}` is \
+                         saturated — derive it from `rescale_add(..)` or a \
+                         constant inside [{w_lo}, {w_hi}], or justify with \
+                         lint:allow(audit-clamp)")),
+                };
+                if let Some(msg) = problem {
+                    if !consume_allow(file, line, "audit-clamp", used) {
+                        findings.push(mk(&file.path, line, "audit-clamp",
+                                         msg));
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// `rescale_add` must bind `delta_n.clamp(DELTA_CLAMP, DELTA_CLAMP_HI)`
+/// and shift that binding into the exponent field (`<< 23`).
+fn check_rescale_add_body(
+    ci: &CrateIndex,
+    file: &FileAst,
+    f: &super::parser::FnItem,
+    lo: i64,
+    hi: i64,
+    findings: &mut Vec<Finding>,
+    used: &mut UsedAllows,
+) {
+    let Some((open, close)) = f.body else { return };
+    let toks = &file.toks;
+    let mut clamped_name: Option<String> = None;
+    for k in open + 1..close {
+        if !toks[k].tok.is_ident("clamp")
+            || k == 0
+            || !toks[k - 1].tok.is_punct('.')
+            || !toks.get(k + 1).is_some_and(|t| t.tok.is_punct('('))
+        {
+            continue;
+        }
+        let a = nth_arg_tokens(file, k + 1, 0)
+            .and_then(|a| super::parser::eval_int(&a, &ci.consts));
+        let b = nth_arg_tokens(file, k + 1, 1)
+            .and_then(|b| super::parser::eval_int(&b, &ci.consts));
+        if a != Some(lo) || b != Some(hi) {
+            continue;
+        }
+        // the `let <name>` this clamp binds: walk back to the
+        // statement's `let`
+        let mut j = k;
+        while j > open {
+            j -= 1;
+            match &toks[j].tok {
+                Tok::Punct(';' | '{' | '}') => break,
+                Tok::Ident(w) if w == "let" => {
+                    if let Some(Tok::Ident(n)) =
+                        toks.get(j + 1).map(|s| &s.tok)
+                    {
+                        clamped_name = Some(n.clone());
+                    }
+                    break;
+                }
+                _ => {}
+            }
+        }
+        if clamped_name.is_some() {
+            break;
+        }
+    }
+    let shifted = clamped_name.as_ref().is_some_and(|n| {
+        (open + 1..close.saturating_sub(3)).any(|k| {
+            toks[k].tok.is_ident(n)
+                && toks[k + 1].tok.is_punct('<')
+                && toks[k + 2].tok.is_punct('<')
+                && matches!(&toks[k + 3].tok, Tok::Ident(w)
+                            if super::parser::parse_int_literal(w) == Some(23))
+        })
+    });
+    if !shifted && !consume_allow(file, f.line, "audit-clamp", used) {
+        findings.push(mk(&file.path, f.line, "audit-clamp", format!(
+            "`rescale_add` does not provably saturate Δn — it must bind \
+             `delta_n.clamp(DELTA_CLAMP, DELTA_CLAMP_HI)` (= clamp({lo}, \
+             {hi})) and shift that binding by `<< 23` into the exponent \
+             field (Lemma 3.1 precondition)")));
+    }
+}
+
+// ------------------------------------------------------------------
+// pass 3: blocking-under-lock + lock-order
+// ------------------------------------------------------------------
+
+/// Description of a directly-blocking token at `k`, if any.  `.join(`
+/// only counts in files with thread context (`JoinHandle`/`thread`
+/// idents) — string arguments are invisible to the lexer, so
+/// `Path::join("...")` and `JoinHandle::join()` lex identically.
+fn block_seed_at(file: &FileAst, k: usize) -> Option<&'static str> {
+    let toks = &file.toks;
+    let next_paren =
+        toks.get(k + 1).is_some_and(|t| t.tok.is_punct('('));
+    if !next_paren {
+        return None;
+    }
+    let after_dot = k > 0 && toks[k - 1].tok.is_punct('.');
+    match &toks[k].tok {
+        Tok::Ident(w) if w == "send" && after_dot =>
+            Some("channel `send`"),
+        Tok::Ident(w) if w == "recv" && after_dot =>
+            Some("channel `recv`"),
+        Tok::Ident(w) if w == "recv_timeout" =>
+            Some("channel `recv_timeout`"),
+        Tok::Ident(w) if w == "join" && after_dot
+            && file.has_thread_ctx => Some("thread `join`"),
+        _ => None,
+    }
+}
+
+/// A live named-guard range: token span `[start, end)` in `file_idx`
+/// where the binding `name` (labelled by the lock it holds) is live.
+struct GuardSpan {
+    file_idx: usize,
+    label: String,
+    name: String,
+    /// 0-based line of the binding, for diagnostics and edge records.
+    line: usize,
+    start: usize,
+    end: usize,
+}
+
+/// The identifier naming the locked object left of the `.` at `dot`
+/// (jumping over index/call groups), e.g. `states` for
+/// `self.states[0].lock()`.
+fn label_before(file: &FileAst, dot: usize, floor: usize) -> String {
+    let mut j = dot;
+    while j > floor {
+        j -= 1;
+        match &file.toks[j].tok {
+            Tok::Punct(')' | ']') if file.opener[j] != usize::MAX
+                && file.opener[j] > floor => {
+                j = file.opener[j];
+            }
+            Tok::Ident(w) => return w.clone(),
+            _ => break,
+        }
+    }
+    "lock".to_string()
+}
+
+/// Does the RHS token range `[lo, hi)` evaluate to a `MutexGuard`?
+/// Strips trailing `.unwrap()`/`.expect(..)` groups, then accepts a
+/// final `.lock()`/`.try_lock()` (label = receiver ident) or a call
+/// to a crate fn whose signature returns a `MutexGuard` (label = fn
+/// name).  Everything else — e.g. a further method call like
+/// `.lock().unwrap().page_size()` — is a temporary, not a guard.
+fn guard_rhs(
+    ci: &CrateIndex,
+    by_name: &BTreeMap<&str, Vec<FnKey>>,
+    file: &FileAst,
+    lo: usize,
+    hi: usize,
+) -> Option<String> {
+    let mut end = hi;
+    loop {
+        if end <= lo + 1 {
+            return None;
+        }
+        let last = end - 1;
+        if !file.toks[last].tok.is_punct(')') {
+            return None;
+        }
+        let o = file.opener[last];
+        if o == usize::MAX || o <= lo {
+            return None;
+        }
+        let Tok::Ident(w) = &file.toks[o - 1].tok else { return None };
+        let after_dot = o >= 2 && file.toks[o - 2].tok.is_punct('.');
+        if (w == "unwrap" || w == "expect") && after_dot {
+            end = o - 2;
+            continue;
+        }
+        if (w == "lock" || w == "try_lock") && after_dot {
+            return Some(label_before(file, o - 2, lo));
+        }
+        if by_name.get(w.as_str()).is_some_and(
+            |ts| ts.iter().any(|&t| ci.fn_item(t).returns_guard))
+        {
+            return Some(w.clone());
+        }
+        return None;
+    }
+}
+
+/// Collect the named guard spans of one fn body.
+fn guard_spans(
+    ci: &CrateIndex,
+    by_name: &BTreeMap<&str, Vec<FnKey>>,
+    file_idx: usize,
+    file: &FileAst,
+    open: usize,
+    close: usize,
+    out: &mut Vec<GuardSpan>,
+) {
+    let toks = &file.toks;
+    let mut k = open + 1;
+    while k < close {
+        if !toks[k].tok.is_ident("let") {
+            k += 1;
+            continue;
+        }
+        // `if let Ok(name) = <rhs> {` / `while let Ok(name) = <rhs> {`
+        let is_cond_let = k > open
+            && matches!(&toks[k - 1].tok, Tok::Ident(w)
+                        if w == "if" || w == "while");
+        if is_cond_let
+            && toks.get(k + 1).is_some_and(|t| t.tok.is_ident("Ok"))
+            && toks.get(k + 2).is_some_and(|t| t.tok.is_punct('('))
+            && toks.get(k + 4).is_some_and(|t| t.tok.is_punct(')'))
+            && toks.get(k + 5).is_some_and(|t| t.tok.is_punct('='))
+        {
+            if let Some(Tok::Ident(name)) = toks.get(k + 3).map(|s| &s.tok) {
+                // RHS runs to the block `{` at top level
+                let mut m = k + 6;
+                while m < close {
+                    match &toks[m].tok {
+                        Tok::Punct('(' | '[') => {
+                            m = file.close[m].min(close);
+                        }
+                        Tok::Punct('{') => break,
+                        _ => {}
+                    }
+                    m += 1;
+                }
+                if m < close && toks[m].tok.is_punct('{') {
+                    if let Some(label) =
+                        guard_rhs(ci, by_name, file, k + 6, m)
+                    {
+                        let end = file.close[m].min(close);
+                        out.push(GuardSpan {
+                            file_idx,
+                            label,
+                            name: name.clone(),
+                            line: toks[k].line,
+                            start: m + 1,
+                            end,
+                        });
+                    }
+                    k = m + 1;
+                    continue;
+                }
+            }
+        }
+        // plain `let [mut] name = <rhs>;`
+        let mut j = k + 1;
+        if j < close && toks[j].tok.is_ident("mut") {
+            j += 1;
+        }
+        let name = match (j < close).then(|| &toks[j].tok) {
+            Some(Tok::Ident(w)) => w.clone(),
+            _ => {
+                k += 1;
+                continue;
+            }
+        };
+        let mut m = j + 1;
+        let mut eq = None;
+        while m < close {
+            match &toks[m].tok {
+                Tok::Punct('(' | '[') => {
+                    m = file.close[m].min(close);
+                }
+                Tok::Punct('=') => {
+                    eq = Some(m);
+                    break;
+                }
+                Tok::Punct(';' | '{') => break,
+                _ => {}
+            }
+            m += 1;
+        }
+        let Some(eq) = eq else {
+            k += 1;
+            continue;
+        };
+        // the terminating `;` at statement level
+        let mut m2 = eq + 1;
+        while m2 < close {
+            match &toks[m2].tok {
+                Tok::Punct(';') => break,
+                Tok::Punct('(' | '[' | '{') => {
+                    m2 = file.close[m2].min(close);
+                }
+                _ => {}
+            }
+            m2 += 1;
+        }
+        if m2 >= close {
+            k += 1;
+            continue;
+        }
+        if let Some(label) = guard_rhs(ci, by_name, file, eq + 1, m2) {
+            let brace = file.brace_of[k];
+            let scope_end = if brace == usize::MAX {
+                close
+            } else {
+                file.close[brace].min(close)
+            };
+            // early `drop(name)` shortens the span
+            let mut end = scope_end;
+            for d in m2 + 1..scope_end.saturating_sub(3) {
+                if toks[d].tok.is_ident("drop")
+                    && toks[d + 1].tok.is_punct('(')
+                    && toks[d + 2].tok.is_ident(&name)
+                    && toks[d + 3].tok.is_punct(')')
+                {
+                    end = d;
+                    break;
+                }
+            }
+            out.push(GuardSpan {
+                file_idx,
+                label,
+                name,
+                line: toks[k].line,
+                start: m2 + 1,
+                end,
+            });
+        }
+        k = m2 + 1;
+    }
+}
+
+fn in_lock_scope(path: &str) -> bool {
+    path.contains("rust/src/serving/") || path.contains("rust/src/coordinator/")
+}
+
+fn pass_locks(
+    ci: &CrateIndex,
+    by_name: &BTreeMap<&str, Vec<FnKey>>,
+    findings: &mut Vec<Finding>,
+    used: &mut UsedAllows,
+) {
+    // -- may-block closure -------------------------------------------
+    let mut may_block: BTreeSet<FnKey> = BTreeSet::new();
+    for (fi, file) in ci.files.iter().enumerate() {
+        for (gi, f) in file.fns.iter().enumerate() {
+            if f.is_test {
+                continue;
+            }
+            let Some((open, close)) = f.body else { continue };
+            if (open + 1..close).any(|k| block_seed_at(file, k).is_some()) {
+                may_block.insert((fi, gi));
+            }
+        }
+    }
+    loop {
+        let mut grew = false;
+        for (fi, file) in ci.files.iter().enumerate() {
+            for (gi, f) in file.fns.iter().enumerate() {
+                let key = (fi, gi);
+                if f.is_test || f.body.is_none() || may_block.contains(&key) {
+                    continue;
+                }
+                let hits = ci.body_calls(key).iter().any(|(_, callee)| {
+                    if callee == "join" && !file.has_thread_ctx {
+                        return false;
+                    }
+                    by_name.get(callee.as_str()).is_some_and(
+                        |ts| ts.iter().any(|t| may_block.contains(t)))
+                });
+                if hits {
+                    may_block.insert(key);
+                    grew = true;
+                }
+            }
+        }
+        if !grew {
+            break;
+        }
+    }
+
+    // -- per-fn direct lock labels, then transitive closure ----------
+    let mut lockset: BTreeMap<FnKey, BTreeSet<String>> = BTreeMap::new();
+    for (fi, file) in ci.files.iter().enumerate() {
+        for (gi, f) in file.fns.iter().enumerate() {
+            if f.is_test {
+                continue;
+            }
+            let Some((open, close)) = f.body else { continue };
+            let mut labels = BTreeSet::new();
+            for k in open + 1..close {
+                if direct_lock_at(file, k) {
+                    labels.insert(label_before(file, k - 1, open));
+                }
+            }
+            lockset.insert((fi, gi), labels);
+        }
+    }
+    loop {
+        let mut additions: Vec<(FnKey, BTreeSet<String>)> = Vec::new();
+        for (&key, have) in &lockset {
+            let mut add = BTreeSet::new();
+            for (_, callee) in ci.body_calls(key) {
+                if let Some(ts) = by_name.get(callee.as_str()) {
+                    for t in ts {
+                        if let Some(s) = lockset.get(t) {
+                            add.extend(
+                                s.difference(have).cloned());
+                        }
+                    }
+                }
+            }
+            if !add.is_empty() {
+                additions.push((key, add));
+            }
+        }
+        if additions.is_empty() {
+            break;
+        }
+        for (key, add) in additions {
+            lockset.entry(key).or_default().extend(add);
+        }
+    }
+
+    // -- guard spans -------------------------------------------------
+    let mut spans: Vec<GuardSpan> = Vec::new();
+    for (fi, file) in ci.files.iter().enumerate() {
+        for f in &file.fns {
+            if f.is_test {
+                continue;
+            }
+            let Some((open, close)) = f.body else { continue };
+            guard_spans(ci, by_name, fi, file, open, close, &mut spans);
+        }
+    }
+
+    // -- blocking while a guard is live (serving/ + coordinator/) ----
+    for sp in &spans {
+        let file = &ci.files[sp.file_idx];
+        if !in_lock_scope(&file.path) {
+            continue;
+        }
+        for k in sp.start..sp.end {
+            let line = file.toks[k].line;
+            if let Some(op) = block_seed_at(file, k) {
+                if !consume_allow(file, line, "audit-lock", used) {
+                    findings.push(mk(&file.path, line, "audit-lock", format!(
+                        "{op} while MutexGuard `{}` (lock `{}`, taken on \
+                         line {}) is live — blocking under a held lock can \
+                         deadlock the engine; shrink the guard scope or \
+                         justify with lint:allow(audit-lock)",
+                        sp.name, sp.label, sp.line + 1)));
+                }
+                continue;
+            }
+            let Some(callee) = is_call_at(&file.toks, k) else { continue };
+            if callee == "join" && !file.has_thread_ctx {
+                continue;
+            }
+            let blocking_target = by_name.get(callee)
+                .and_then(|ts| ts.iter().copied()
+                          .find(|t| may_block.contains(t)));
+            if let Some(t) = blocking_target {
+                if !consume_allow(file, line, "audit-lock", used) {
+                    findings.push(mk(&file.path, line, "audit-lock", format!(
+                        "call to `{}`, which may block (channel/join \
+                         reachable through it), while MutexGuard `{}` \
+                         (lock `{}`, taken on line {}) is live — shrink the \
+                         guard scope or justify with lint:allow(audit-lock)",
+                        ci.qual_name(t), sp.name, sp.label, sp.line + 1)));
+                }
+            }
+        }
+    }
+
+    // -- lock-order edges + cycle check (crate-wide) -----------------
+    let mut edges: BTreeSet<(String, String, usize, usize)> = BTreeSet::new();
+    for sp in &spans {
+        let file = &ci.files[sp.file_idx];
+        for k in sp.start..sp.end {
+            if direct_lock_at(file, k) {
+                let inner = label_before(file, k - 1, sp.start);
+                edges.insert((sp.label.clone(), inner,
+                              sp.file_idx, file.toks[k].line));
+            }
+            if let Some(callee) = is_call_at(&file.toks, k) {
+                if let Some(ts) = by_name.get(callee) {
+                    for t in ts {
+                        let Some(inner_set) = lockset.get(t) else {
+                            continue;
+                        };
+                        for inner in inner_set {
+                            edges.insert((sp.label.clone(), inner.clone(),
+                                          sp.file_idx, file.toks[k].line));
+                        }
+                    }
+                }
+            }
+        }
+    }
+    let mut adj: BTreeMap<&str, BTreeSet<&str>> = BTreeMap::new();
+    for (from, to, _, _) in &edges {
+        adj.entry(from.as_str()).or_default().insert(to.as_str());
+    }
+    for (from, to, fi, line) in &edges {
+        let cyclic = from == to || reaches(&adj, to, from);
+        if !cyclic {
+            continue;
+        }
+        let file = &ci.files[*fi];
+        if consume_allow(file, *line, "audit-lock", used) {
+            continue;
+        }
+        let msg = if from == to {
+            format!("lock `{from}` acquired while a guard on `{from}` is \
+                     already live — self-deadlock")
+        } else {
+            format!("lock-order cycle: `{from}` is held here while \
+                     acquiring `{to}`, but elsewhere `{to}` is held while \
+                     (transitively) acquiring `{from}` — pick one global \
+                     order")
+        };
+        findings.push(mk(&file.path, *line, "audit-lock", msg));
+    }
+}
+
+fn direct_lock_at(file: &FileAst, k: usize) -> bool {
+    k > 0
+        && file.toks[k - 1].tok.is_punct('.')
+        && matches!(&file.toks[k].tok, Tok::Ident(w)
+                    if w == "lock" || w == "try_lock")
+        && file.toks.get(k + 1).is_some_and(|t| t.tok.is_punct('('))
+}
+
+fn reaches(adj: &BTreeMap<&str, BTreeSet<&str>>, from: &str, to: &str)
+           -> bool {
+    let mut seen: BTreeSet<&str> = BTreeSet::new();
+    let mut stack = vec![from];
+    while let Some(n) = stack.pop() {
+        if n == to {
+            return true;
+        }
+        if !seen.insert(n) {
+            continue;
+        }
+        if let Some(next) = adj.get(n) {
+            stack.extend(next.iter().copied());
+        }
+    }
+    false
+}

@@ -1,29 +1,47 @@
-//! `amla lint` — the in-process invariant checker.
+//! `amla lint` + `amla audit` — the in-process invariant checkers.
 //!
 //! The repo's contracts — the deterministic virtual-clock tier, the
 //! paper's MUL-by-ADD rescale purity (Lemma 3.1), engine-thread
 //! liveness, the pinned public API surface — were enforced by tests
 //! plus two ad-hoc CI greps.  This module turns them into machine
-//! checks: a hand-rolled lexer ([`lexer`]) feeds repo-specific rules
-//! ([`rules`]) plus an in-process `docs/api_surface.txt` diff
-//! ([`api_surface`]).  Escapes are audited, not silent: every
-//! suppression is a `lint:allow(<rule>): <reason>` comment the linter
-//! itself validates (unknown rules, missing reasons, and stale markers
-//! are errors).
+//! checks at two depths:
 //!
-//! Entry points: `amla lint` (CLI subcommand), `cargo run --bin
-//! amla-lint` (CI), and the tier-1 `lint_clean` test, which runs
-//! [`lint_repo`] on every `cargo test`.
+//! * **`amla lint`** — per-line rules: a hand-rolled lexer
+//!   ([`lexer`]) feeds repo-specific rules ([`rules`]) plus an
+//!   in-process `docs/api_surface.txt` diff ([`api_surface`]).
+//! * **`amla audit`** — flow-aware passes over a token-tree parser
+//!   ([`parser`]) and crate-wide call graph ([`callgraph`]):
+//!   interprocedural add-only purity, Δn clamp interval analysis,
+//!   blocking-under-lock / lock-order detection ([`flow`]), and the
+//!   ARCHITECTURE.md contract-coverage cross-check ([`contracts`]).
 //!
-//! Scope: the rules walk `rust/src` only — vendored dependencies,
-//! benches, integration tests, and examples are out of scope (the
+//! Escapes are audited, not silent: every suppression is a
+//! `lint:allow(<rule>): <reason>` comment the checkers themselves
+//! validate (unknown rules, missing reasons, and stale markers are
+//! errors — audit markers are tracked by the audit, lint markers by
+//! the lint).
+//!
+//! Entry points: `amla lint` / `amla audit` (CLI subcommands), the
+//! standalone `amla-lint` / `amla-audit` binaries (CI), and the
+//! tier-1 `lint_clean` test pair, which runs [`lint_repo`] and
+//! [`audit_repo`] on every `cargo test`.
+//!
+//! Scope: the source rules walk `rust/src` only — vendored
+//! dependencies, benches, and examples are out of scope (the
 //! deterministic paths and the rescale core all live under
-//! `rust/src`); the api-surface pass covers `rust/src/serving` +
-//! `rust/src/coordinator`, matching the committed listing.
+//! `rust/src`); the audit additionally reads `rust/tests` for
+//! `// contract:N` markers; the api-surface pass covers
+//! `rust/src/serving` + `rust/src/coordinator` + `rust/src/analysis`,
+//! matching the committed listing.
 
 pub mod api_surface;
 pub mod lexer;
 pub mod rules;
+
+pub(crate) mod callgraph;
+pub(crate) mod contracts;
+pub(crate) mod flow;
+pub(crate) mod parser;
 
 #[cfg(test)]
 mod fixtures;
@@ -101,4 +119,62 @@ pub fn run_cli(root: &Path, write_api: bool) -> Result<()> {
         eprintln!("{f}");
     }
     bail!("amla-lint: {} finding(s)", findings.len())
+}
+
+/// Run the flow-aware audit passes (interprocedural add-only purity,
+/// Δn clamp intervals, blocking-under-lock + lock-order, contract
+/// coverage) over `rust/src`, `rust/tests`, and
+/// `docs/ARCHITECTURE.md`.  Returns all findings (empty = clean).
+pub fn audit_repo(root: &Path) -> Result<Vec<Finding>> {
+    let mut files = Vec::new();
+    walk_rs(&root.join(LINT_ROOT), &mut files)?;
+    let mut src = Vec::new();
+    for p in &files {
+        src.push((rel_path(root, p), fs::read_to_string(p)?));
+    }
+    let mut tests = Vec::new();
+    let tests_dir = root.join("rust/tests");
+    if tests_dir.is_dir() {
+        let mut test_paths = Vec::new();
+        walk_rs(&tests_dir, &mut test_paths)?;
+        for p in &test_paths {
+            tests.push((rel_path(root, p), fs::read_to_string(p)?));
+        }
+    }
+    let arch = fs::read_to_string(root.join("docs/ARCHITECTURE.md")).ok();
+    let mut findings = flow::audit_sources(&src, &tests, arch.as_deref());
+    if arch.is_none() {
+        findings.push(Finding {
+            path: "docs/ARCHITECTURE.md".to_string(),
+            line: 0,
+            rule: "audit-contract",
+            message: "docs/ARCHITECTURE.md not found — contract coverage \
+                      cannot be checked".to_string(),
+        });
+    }
+    Ok(findings)
+}
+
+/// CLI entry shared by `amla audit` and the standalone `amla-audit`
+/// binary.  With `github`, findings are additionally emitted in
+/// GitHub-annotations format so CI surfaces them inline on the diff.
+/// Errors (non-zero exit) when any finding survives.
+pub fn run_audit_cli(root: &Path, github: bool) -> Result<()> {
+    if !root.join(LINT_ROOT).is_dir() {
+        bail!("`{}` has no {LINT_ROOT}/ tree — run from the repo root or \
+               pass --root", root.display());
+    }
+    let findings = audit_repo(root)?;
+    if findings.is_empty() {
+        println!("amla-audit: tree is clean");
+        return Ok(());
+    }
+    for f in &findings {
+        eprintln!("{f}");
+        if github {
+            println!("::error file={},line={}::[{}] {}",
+                     f.path, f.line.max(1), f.rule, f.message);
+        }
+    }
+    bail!("amla-audit: {} finding(s)", findings.len())
 }

@@ -1,0 +1,598 @@
+//! Token-tree parser for `amla audit`: per-file item tables over the
+//! [`super::lexer`] token stream.
+//!
+//! Where `amla lint` matches one line at a time, the audit passes need
+//! *structure*: which tokens form a function body, which `{` closes
+//! where, which `const` binds which value, where the add-only regions
+//! and audit markers sit.  This module produces exactly that — a
+//! [`FileAst`] per source file — without a full Rust grammar: bracket
+//! matching over the flattened token stream, `fn`/`impl`/`const` item
+//! extraction, and a small integer const-expr evaluator.  The model is
+//! deliberately lenient (unknown shapes parse to "no item"), because
+//! every consumer is a *checker* that must never crash on valid Rust.
+//!
+//! Test layout convention (same as `rules.rs`): everything from the
+//! first `#[cfg(test)]` line to end of file is test code; functions
+//! there (or carrying a `#[test]` attribute) are excluded from call
+//! resolution so fixtures and pinning tests never widen the audited
+//! call graph.
+
+use super::lexer::{lex, Tok};
+use super::rules::{is_cfg_test_line, parse_marker, Marker};
+
+/// A code token with its 0-based source line.
+#[derive(Debug, Clone)]
+pub(crate) struct Sp {
+    pub(crate) line: usize,
+    pub(crate) tok: Tok,
+}
+
+/// One `fn` item: name, enclosing impl type (when any), body token
+/// range, and the flags the audit passes branch on.
+#[derive(Debug, Clone)]
+pub(crate) struct FnItem {
+    pub(crate) name: String,
+    /// Type name of the enclosing `impl` block, for diagnostics.
+    pub(crate) qual: Option<String>,
+    /// 0-based line of the `fn` keyword.
+    pub(crate) line: usize,
+    /// Token indices of the body `{` and its matching `}` (`None` for
+    /// bodiless trait-method declarations).
+    pub(crate) body: Option<(usize, usize)>,
+    /// Test code: defined after the `#[cfg(test)]` fold or carrying a
+    /// `#[test]` attribute.
+    pub(crate) is_test: bool,
+    /// Signature mentions `MutexGuard` in return position — the lock
+    /// pass treats calls to such functions as lock acquisitions.
+    pub(crate) returns_guard: bool,
+}
+
+/// A `lint:allow(audit-*)` marker: the line it sits on, the code line
+/// it governs, and the audit rule it suppresses.
+#[derive(Debug, Clone)]
+pub(crate) struct AllowMark {
+    pub(crate) line: usize,
+    pub(crate) target: usize,
+    pub(crate) rule: String,
+}
+
+/// One parsed source file.
+#[derive(Debug)]
+pub(crate) struct FileAst {
+    pub(crate) path: String,
+    /// Flattened code tokens with line numbers.
+    pub(crate) toks: Vec<Sp>,
+    /// For each opener token index, the index of its matching closer
+    /// (`usize::MAX` elsewhere).
+    pub(crate) close: Vec<usize>,
+    /// For each closer token index, the index of its matching opener
+    /// (`usize::MAX` elsewhere).
+    pub(crate) opener: Vec<usize>,
+    /// For each token, the index of the innermost enclosing `{`
+    /// (`usize::MAX` at module level).
+    pub(crate) brace_of: Vec<usize>,
+    pub(crate) fns: Vec<FnItem>,
+    /// `const NAME: _ = <expr>;` items as raw expression tokens.
+    pub(crate) consts: Vec<(String, Vec<Tok>)>,
+    /// `lint:region(add-only)` line ranges (0-based, inclusive).
+    pub(crate) regions: Vec<(usize, usize)>,
+    /// `lint:allow(audit-*)` markers.
+    pub(crate) allows: Vec<AllowMark>,
+    /// `// contract:<list>` markers: line and the raw text after the
+    /// `contract:` prefix.
+    pub(crate) contract_marks: Vec<(usize, String)>,
+    /// 0-based line of the first `#[cfg(test)]` (`usize::MAX` if none).
+    pub(crate) test_start: usize,
+    /// File mentions `JoinHandle` or `thread` in code position — used
+    /// to tell thread joins from `Path::join`/`[str]::join` (string
+    /// arguments are invisible to the lexer, so `.join(...)` alone is
+    /// ambiguous).
+    pub(crate) has_thread_ctx: bool,
+}
+
+impl FileAst {
+    /// The allow marker (if any) suppressing `rule` on 0-based `line`.
+    pub(crate) fn allow_on(&self, line: usize, rule: &str) -> Option<usize> {
+        self.allows.iter()
+            .position(|a| a.target == line && a.rule == rule)
+    }
+
+    /// True when 0-based `line` sits inside an add-only region.
+    pub(crate) fn in_region(&self, line: usize) -> bool {
+        self.regions.iter().any(|&(s, e)| s <= line && line <= e)
+    }
+
+    /// The function whose body contains token index `k`, innermost
+    /// first (bodies nest only via nested fns, which are rare enough
+    /// that the smallest containing body wins).
+    pub(crate) fn fn_of_token(&self, k: usize) -> Option<usize> {
+        let mut best: Option<(usize, usize)> = None; // (span, idx)
+        for (i, f) in self.fns.iter().enumerate() {
+            if let Some((o, c)) = f.body {
+                if o <= k && k <= c {
+                    let span = c - o;
+                    if span < best.map_or(usize::MAX, |(s, _)| s) {
+                        best = Some((span, i));
+                    }
+                }
+            }
+        }
+        best.map(|(_, i)| i)
+    }
+}
+
+/// Identifiers that are never call names even when followed by `(`.
+const NON_CALL_KEYWORDS: [&str; 24] = [
+    "as", "async", "await", "box", "break", "const", "continue", "crate",
+    "dyn", "else", "enum", "fn", "for", "if", "impl", "in", "let", "loop",
+    "match", "mod", "move", "return", "while", "where",
+];
+
+/// True when `toks[k]` starts a call: an identifier directly followed
+/// by `(` that is not a keyword, a macro (`name!(` never matches — the
+/// `!` sits between), or a definition (`fn name(`).
+pub(crate) fn is_call_at(toks: &[Sp], k: usize) -> Option<&str> {
+    let Tok::Ident(name) = &toks[k].tok else { return None };
+    if NON_CALL_KEYWORDS.contains(&name.as_str())
+        || name.starts_with(|c: char| c.is_ascii_digit())
+        || !toks.get(k + 1).is_some_and(|t| t.tok.is_punct('(')) {
+        return None;
+    }
+    if k > 0 && toks[k - 1].tok.is_ident("fn") {
+        return None;
+    }
+    Some(name)
+}
+
+/// Parse one source file into its item tables.
+pub(crate) fn parse(path: &str, source: &str) -> FileAst {
+    let lines = lex(source);
+    let mut toks = Vec::new();
+    for (i, l) in lines.iter().enumerate() {
+        for t in &l.tokens {
+            toks.push(Sp { line: i, tok: t.clone() });
+        }
+    }
+    let n = toks.len();
+
+    // ---- markers ---------------------------------------------------
+    let mut regions = Vec::new();
+    let mut open_regions = Vec::new();
+    let mut allows = Vec::new();
+    let mut contract_marks = Vec::new();
+    for (idx, l) in lines.iter().enumerate() {
+        for comment in &l.comments {
+            match parse_marker(comment) {
+                Marker::Allow { rule } if rule.starts_with("audit-") => {
+                    let target = if l.tokens.is_empty() {
+                        lines.iter().enumerate().skip(idx + 1)
+                            .find(|(_, x)| !x.tokens.is_empty())
+                            .map(|(j, _)| j)
+                    } else {
+                        Some(idx)
+                    };
+                    if let Some(t) = target {
+                        allows.push(AllowMark { line: idx, target: t, rule });
+                    }
+                }
+                Marker::Region { name } if name == "add-only" => {
+                    open_regions.push(idx);
+                }
+                Marker::EndRegion { name } if name == "add-only" => {
+                    if let Some(s) = open_regions.pop() {
+                        regions.push((s, idx));
+                    }
+                }
+                _ => {}
+            }
+            let body = comment.trim_start_matches(['/', '!']).trim_start();
+            if let Some(rest) = body.strip_prefix("contract:") {
+                contract_marks.push((idx, rest.trim().to_string()));
+            }
+        }
+    }
+    let test_start =
+        lines.iter().position(is_cfg_test_line).unwrap_or(usize::MAX);
+
+    // ---- bracket matching + enclosing-brace map --------------------
+    let mut close = vec![usize::MAX; n];
+    let mut opener = vec![usize::MAX; n];
+    let mut brace_of = vec![usize::MAX; n];
+    let mut stack: Vec<(char, usize)> = Vec::new();
+    let mut braces: Vec<usize> = Vec::new();
+    for (k, sp) in toks.iter().enumerate() {
+        brace_of[k] = braces.last().copied().unwrap_or(usize::MAX);
+        match sp.tok {
+            Tok::Punct(c @ ('(' | '[' | '{')) => {
+                stack.push((c, k));
+                if c == '{' {
+                    braces.push(k);
+                }
+            }
+            Tok::Punct(')' | ']' | '}') => {
+                if let Some((oc, ok)) = stack.pop() {
+                    close[ok] = k;
+                    opener[k] = ok;
+                    if oc == '{' {
+                        braces.pop();
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+
+    // ---- impl spans (for fn qualifiers) ----------------------------
+    // `impl` opens a block only in item position: at file start or
+    // after `}` / `;` / `]` (attribute close).  Return-position and
+    // argument-position `impl Trait` never follow those.
+    let mut impls: Vec<(usize, usize, String)> = Vec::new();
+    for (k, sp) in toks.iter().enumerate() {
+        if !sp.tok.is_ident("impl") {
+            continue;
+        }
+        let item_pos = k == 0
+            || matches!(&toks[k - 1].tok,
+                        Tok::Punct('}') | Tok::Punct(';') | Tok::Punct(']'));
+        if !item_pos {
+            continue;
+        }
+        let mut j = k + 1;
+        let mut qual = None;
+        while j < n {
+            match &toks[j].tok {
+                Tok::Punct('(') | Tok::Punct('[') => {
+                    j = close[j].min(n - 1) + 1;
+                }
+                Tok::Punct('{') => {
+                    if close[j] != usize::MAX {
+                        impls.push((j, close[j],
+                                    qual.unwrap_or_else(|| "impl".into())));
+                    }
+                    break;
+                }
+                Tok::Punct(';') => break,
+                Tok::Ident(w) => {
+                    if w != "for" && w != "where" {
+                        qual = Some(w.clone());
+                    }
+                    j += 1;
+                }
+                _ => j += 1,
+            }
+        }
+    }
+
+    // ---- fn items --------------------------------------------------
+    let mut fns = Vec::new();
+    for (k, sp) in toks.iter().enumerate() {
+        if !sp.tok.is_ident("fn") || k + 1 >= n {
+            continue;
+        }
+        let Tok::Ident(name) = &toks[k + 1].tok else { continue };
+        // walk to the body `{` (skipping arg/where groups) or a `;`
+        let mut j = k + 2;
+        let mut body = None;
+        let mut returns_guard = false;
+        while j < n {
+            match &toks[j].tok {
+                Tok::Punct('(') | Tok::Punct('[') => {
+                    j = close[j].min(n - 1) + 1;
+                }
+                Tok::Punct('{') => {
+                    if close[j] != usize::MAX {
+                        body = Some((j, close[j]));
+                    }
+                    break;
+                }
+                Tok::Punct(';') => break,
+                Tok::Ident(w) => {
+                    if w == "MutexGuard" {
+                        returns_guard = true;
+                    }
+                    j += 1;
+                }
+                _ => j += 1,
+            }
+        }
+        let qual = impls.iter()
+            .filter(|&&(o, c, _)| o <= k && k <= c)
+            .min_by_key(|&&(o, c, _)| c - o)
+            .map(|(_, _, q)| q.clone());
+        let is_test = sp.line >= test_start || has_test_attr(&toks, &opener, k);
+        fns.push(FnItem {
+            name: name.clone(),
+            qual,
+            line: sp.line,
+            body,
+            is_test,
+            returns_guard,
+        });
+    }
+
+    // ---- const items -----------------------------------------------
+    let mut consts = Vec::new();
+    for (k, sp) in toks.iter().enumerate() {
+        if !sp.tok.is_ident("const")
+            || (k > 0 && toks[k - 1].tok.is_punct('*')) // `*const T`
+            || k + 2 >= n {
+            continue;
+        }
+        let Tok::Ident(name) = &toks[k + 1].tok else { continue };
+        if name == "fn" || !toks[k + 2].tok.is_punct(':') {
+            continue;
+        }
+        // skip the type annotation to the `=` (or give up at `;`)
+        let mut j = k + 3;
+        let mut eq = None;
+        while j < n {
+            match &toks[j].tok {
+                Tok::Punct('(') | Tok::Punct('[') | Tok::Punct('{') => {
+                    j = close[j].min(n - 1) + 1;
+                }
+                Tok::Punct('=') => {
+                    eq = Some(j);
+                    break;
+                }
+                Tok::Punct(';') => break,
+                _ => j += 1,
+            }
+        }
+        let Some(eq) = eq else { continue };
+        let mut expr = Vec::new();
+        let mut m = eq + 1;
+        while m < n {
+            match &toks[m].tok {
+                Tok::Punct(';') => break,
+                Tok::Punct('(') | Tok::Punct('[') | Tok::Punct('{') => {
+                    let end = close[m].min(n - 1);
+                    for t in &toks[m..=end] {
+                        expr.push(t.tok.clone());
+                    }
+                    m = end + 1;
+                }
+                t => {
+                    expr.push(t.clone());
+                    m += 1;
+                }
+            }
+        }
+        consts.push((name.clone(), expr));
+    }
+
+    let has_thread_ctx = toks.iter().any(|t| {
+        t.tok.is_ident("JoinHandle") || t.tok.is_ident("thread")
+    });
+
+    FileAst {
+        path: path.to_string(),
+        toks,
+        close,
+        opener,
+        brace_of,
+        fns,
+        consts,
+        regions,
+        allows,
+        contract_marks,
+        test_start,
+        has_thread_ctx,
+    }
+}
+
+/// True when the item at token `k` carries a `#[test]` attribute:
+/// walking back over `pub`/`unsafe`/`(crate)` and attribute groups.
+fn has_test_attr(toks: &[Sp], opener: &[usize], k: usize) -> bool {
+    let mut j = k;
+    while j > 0 {
+        j -= 1;
+        match &toks[j].tok {
+            Tok::Ident(w) if matches!(
+                w.as_str(), "pub" | "unsafe" | "async" | "crate") => {}
+            Tok::Punct(')') if opener[j] != usize::MAX => {
+                // the `(crate)` of `pub(crate)`
+                j = opener[j];
+            }
+            Tok::Punct(']') if opener[j] != usize::MAX => {
+                let o = opener[j];
+                if o == 0 || !toks[o - 1].tok.is_punct('#') {
+                    return false;
+                }
+                let is_test = toks[o + 1..j].len() == 1
+                    && toks[o + 1].tok.is_ident("test");
+                if is_test {
+                    return true;
+                }
+                j = o.saturating_sub(1);
+                if j == 0 {
+                    return false;
+                }
+                // `j -= 1` at loop head lands on the token before `#`
+            }
+            _ => return false,
+        }
+    }
+    false
+}
+
+// ------------------------------------------------------------------
+// integer const-expr evaluation
+// ------------------------------------------------------------------
+
+/// Evaluate every integer `const` across the crate to a value,
+/// resolving cross-const references by fixpoint iteration (e.g.
+/// `EXP_ONE = 1 << 23`, `HI_FIELD = DELTA_CLAMP_HI << 23`).
+pub(crate) fn eval_const_env(
+    files: &[FileAst],
+) -> std::collections::BTreeMap<String, i64> {
+    let mut env = std::collections::BTreeMap::new();
+    for _ in 0..4 {
+        let mut changed = false;
+        for f in files {
+            for (name, expr) in &f.consts {
+                if env.contains_key(name) {
+                    continue;
+                }
+                if let Some(v) = eval_int(expr, &env) {
+                    env.insert(name.clone(), v);
+                    changed = true;
+                }
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+    env
+}
+
+/// Evaluate a constant integer expression over raw tokens.  Handles
+/// literals (decimal/hex, `_` separators, type suffixes), known const
+/// names, unary minus, parens, `as` casts (ignored), and the binary
+/// operators `+ - * / % << >>` with Rust precedence.  Returns `None`
+/// for anything else (floats, unknown names, method calls).
+pub(crate) fn eval_int(
+    toks: &[Tok],
+    env: &std::collections::BTreeMap<String, i64>,
+) -> Option<i64> {
+    let mut pos = 0usize;
+    let v = parse_shift(toks, &mut pos, env)?;
+    if pos == toks.len() { Some(v) } else { None }
+}
+
+fn parse_shift(toks: &[Tok], pos: &mut usize,
+               env: &std::collections::BTreeMap<String, i64>) -> Option<i64> {
+    let mut lhs = parse_add(toks, pos, env)?;
+    loop {
+        let (shl, shr) = peek2(toks, *pos);
+        if shl {
+            *pos += 2;
+            let rhs = parse_add(toks, pos, env)?;
+            lhs = lhs.checked_shl(u32::try_from(rhs).ok()?)?;
+        } else if shr {
+            *pos += 2;
+            let rhs = parse_add(toks, pos, env)?;
+            lhs = lhs.checked_shr(u32::try_from(rhs).ok()?)?;
+        } else {
+            return Some(lhs);
+        }
+    }
+}
+
+/// `(is_shl, is_shr)` at `pos` — shifts lex as two adjacent puncts.
+fn peek2(toks: &[Tok], pos: usize) -> (bool, bool) {
+    if pos + 1 >= toks.len() {
+        return (false, false);
+    }
+    (toks[pos].is_punct('<') && toks[pos + 1].is_punct('<'),
+     toks[pos].is_punct('>') && toks[pos + 1].is_punct('>'))
+}
+
+fn parse_add(toks: &[Tok], pos: &mut usize,
+             env: &std::collections::BTreeMap<String, i64>) -> Option<i64> {
+    let mut lhs = parse_mul(toks, pos, env)?;
+    while *pos < toks.len() {
+        if toks[*pos].is_punct('+') {
+            *pos += 1;
+            lhs = lhs.checked_add(parse_mul(toks, pos, env)?)?;
+        } else if toks[*pos].is_punct('-') {
+            *pos += 1;
+            lhs = lhs.checked_sub(parse_mul(toks, pos, env)?)?;
+        } else {
+            break;
+        }
+    }
+    Some(lhs)
+}
+
+fn parse_mul(toks: &[Tok], pos: &mut usize,
+             env: &std::collections::BTreeMap<String, i64>) -> Option<i64> {
+    let mut lhs = parse_unary(toks, pos, env)?;
+    while *pos < toks.len() {
+        let op = match &toks[*pos] {
+            Tok::Punct(c @ ('*' | '/' | '%')) => *c,
+            _ => break,
+        };
+        *pos += 1;
+        let rhs = parse_unary(toks, pos, env)?;
+        lhs = match op {
+            '*' => lhs.checked_mul(rhs)?,
+            '/' => lhs.checked_div(rhs)?,
+            _ => lhs.checked_rem(rhs)?,
+        };
+    }
+    Some(lhs)
+}
+
+fn parse_unary(toks: &[Tok], pos: &mut usize,
+               env: &std::collections::BTreeMap<String, i64>) -> Option<i64> {
+    if *pos < toks.len() && toks[*pos].is_punct('-') {
+        *pos += 1;
+        return parse_unary(toks, pos, env)?.checked_neg();
+    }
+    parse_atom(toks, pos, env)
+}
+
+fn parse_atom(toks: &[Tok], pos: &mut usize,
+              env: &std::collections::BTreeMap<String, i64>) -> Option<i64> {
+    let v = match toks.get(*pos)? {
+        Tok::Punct('(') => {
+            *pos += 1;
+            let v = parse_shift(toks, pos, env)?;
+            if !toks.get(*pos)?.is_punct(')') {
+                return None;
+            }
+            *pos += 1;
+            v
+        }
+        Tok::Ident(w) => {
+            *pos += 1;
+            if w.starts_with(|c: char| c.is_ascii_digit()) {
+                parse_int_literal(w)?
+            } else {
+                *env.get(w)?
+            }
+        }
+        _ => return None,
+    };
+    // `as i32` casts are identity at this abstraction
+    if toks.get(*pos).is_some_and(|t| t.is_ident("as"))
+        && matches!(toks.get(*pos + 1), Some(Tok::Ident(_))) {
+        *pos += 2;
+    }
+    Some(v)
+}
+
+/// Parse a Rust integer literal token (decimal or `0x`/`0o`/`0b`,
+/// underscores, optional type suffix).  Floats return `None`.
+pub(crate) fn parse_int_literal(w: &str) -> Option<i64> {
+    if w.contains('.') {
+        return None;
+    }
+    let s = w.replace('_', "");
+    let (radix, digits) = if let Some(hex) = s.strip_prefix("0x") {
+        (16, hex.to_string())
+    } else if let Some(oct) = s.strip_prefix("0o") {
+        (8, oct.to_string())
+    } else if let Some(bin) = s.strip_prefix("0b") {
+        (2, bin.to_string())
+    } else {
+        (10, s)
+    };
+    // strip a type suffix (`23i32`, `0xFFu8`): cut at the first char
+    // that is not a digit of the radix
+    let end = digits.char_indices()
+        .find(|(_, c)| !c.is_digit(radix))
+        .map_or(digits.len(), |(i, _)| i);
+    if end == 0 {
+        return None;
+    }
+    let suffix = &digits[end..];
+    if !suffix.is_empty()
+        && !matches!(suffix, "i8" | "i16" | "i32" | "i64" | "i128" | "isize"
+                             | "u8" | "u16" | "u32" | "u64" | "u128" | "usize")
+    {
+        return None;
+    }
+    i64::from_str_radix(&digits[..end], radix).ok()
+}

@@ -50,14 +50,21 @@ pub const DET_PATHS: [&str; 4] =
 /// Rules a `lint:allow` marker may suppress.
 const SUPPRESSIBLE: [&str; 4] = ["det-wallclock", "det-map", "panic", "escape"];
 
+/// Audit rules (`amla audit`) a `lint:allow` marker may suppress.  The
+/// lint pass skips these silently — the audit pass owns their usage
+/// and staleness tracking (stale audit allows surface as
+/// `audit-marker` findings there).
+pub(crate) const AUDIT_SUPPRESSIBLE: [&str; 4] =
+    ["audit-add-only", "audit-clamp", "audit-lock", "audit-contract"];
+
 /// The rescale primitives whose every call-site must sit inside an
 /// add-only region.
-const RESCALE_FNS: [&str; 4] =
+pub(crate) const RESCALE_FNS: [&str; 4] =
     ["rescale_element", "rescale_add", "rescale_row", "mul_pow2_by_add"];
 
 /// Identifiers after which a `*` is a unary/deref/type context, not a
 /// binary multiply.
-const UNARY_CONTEXT_KEYWORDS: [&str; 20] = [
+pub(crate) const UNARY_CONTEXT_KEYWORDS: [&str; 20] = [
     "as", "break", "const", "continue", "dyn", "else", "fn", "if", "impl",
     "in", "let", "match", "mod", "move", "mut", "pub", "ref", "return",
     "use", "where",
@@ -95,7 +102,7 @@ struct Allow {
     used: bool,
 }
 
-enum Marker {
+pub(crate) enum Marker {
     None,
     Allow { rule: String },
     Region { name: String },
@@ -103,7 +110,7 @@ enum Marker {
     Malformed { what: &'static str },
 }
 
-fn parse_marker(comment: &str) -> Marker {
+pub(crate) fn parse_marker(comment: &str) -> Marker {
     // doc-comment slashes and `//!` bangs are part of the captured
     // comment text; a marker must lead the remaining content
     let body = comment.trim_start_matches(['/', '!']).trim_start();
@@ -150,7 +157,7 @@ fn take_allow(allows: &mut [Allow], target: usize, rule: &str) -> bool {
     hit
 }
 
-fn is_cfg_test_line(l: &LexedLine) -> bool {
+pub(crate) fn is_cfg_test_line(l: &LexedLine) -> bool {
     let t = &l.tokens;
     t.len() == 7
         && t[0].is_punct('#')
@@ -241,10 +248,17 @@ pub fn lint_source(path: &str, source: &str) -> Vec<Finding> {
                                           what.to_string()));
                 }
                 Marker::Allow { rule } => {
+                    if AUDIT_SUPPRESSIBLE.contains(&rule.as_str()) {
+                        // `amla audit` owns these markers (including
+                        // staleness tracking); the lint pass must not
+                        // double-report them.
+                        continue;
+                    }
                     if !SUPPRESSIBLE.contains(&rule.as_str()) {
                         findings.push(finding(path, idx, "marker", format!(
                             "`{rule}` is not a suppressible rule \
-                             (suppressible: {})", SUPPRESSIBLE.join(", "))));
+                             (suppressible: {}, {})", SUPPRESSIBLE.join(", "),
+                            AUDIT_SUPPRESSIBLE.join(", "))));
                         continue;
                     }
                     let target = if line.tokens.is_empty() {

@@ -1,0 +1,34 @@
+//! `amla-audit` — standalone entry for the flow-aware auditor.
+//!
+//! A thin argv shim over [`amla::analysis::run_audit_cli`] so CI can
+//! run the deep checks as one step
+//! (`cargo run --release --bin amla-audit -- --github`) without
+//! dragging in the full `amla` CLI surface.  `amla audit` is the same
+//! code behind the main binary.
+//!
+//! ```text
+//! amla-audit [--root DIR] [--github]
+//! ```
+//!
+//! Exits non-zero when any finding survives.  `--github` additionally
+//! prints each finding as a `::error file=..,line=..::` annotation so
+//! GitHub renders it inline on the diff.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use amla::config::Args;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let args = Args::from_env();
+    let root = args.get("root").map(String::as_str).unwrap_or(".");
+    amla::analysis::run_audit_cli(Path::new(root), args.has_flag("github"))
+}

@@ -54,6 +54,7 @@ fn run() -> Result<()> {
         }
         Some("artifacts") => cmd_artifacts(&args),
         Some("lint") => cmd_lint(&args),
+        Some("audit") => cmd_audit(&args),
         other => {
             if let Some(cmd) = other {
                 eprintln!("unknown command `{cmd}`\n");
@@ -127,6 +128,15 @@ USAGE:
                   # core, SAFETY/panic audits, allow-escape audit, and
                   # the docs/api_surface.txt diff (--write-api-surface
                   # regenerates it); exits non-zero on any finding
+  amla audit      [--root DIR] [--github]
+                  # flow-aware static analysis over the crate call
+                  # graph: interprocedural MUL-by-ADD purity (every fn
+                  # reachable from an add-only region stays */ free),
+                  # Δn clamp interval proofs on the rescale call-sites,
+                  # blocking-under-lock + lock-order deadlock checks in
+                  # serving/coordinator, and the ARCHITECTURE.md
+                  # contract-coverage cross-check (--github emits CI
+                  # annotations); exits non-zero on any finding
 ";
 
 fn cmd_serve(args: &Args) -> Result<()> {
@@ -372,4 +382,10 @@ fn cmd_lint(args: &Args) -> Result<()> {
     let root = args.get("root").map(String::as_str).unwrap_or(".");
     amla::analysis::run_cli(std::path::Path::new(root),
                             args.has_flag("write-api-surface"))
+}
+
+fn cmd_audit(args: &Args) -> Result<()> {
+    let root = args.get("root").map(String::as_str).unwrap_or(".");
+    amla::analysis::run_audit_cli(std::path::Path::new(root),
+                                  args.has_flag("github"))
 }

@@ -324,9 +324,10 @@ pub fn amla_attention_partial(q: &Matrix, k: &Matrix, v: &Matrix,
             if st.seen[r] {
                 // the MUL-by-ADD: rescale Õ row in place in "GM"
                 let eps = 1.5 * (c_new / st.c[r] - 1.0);
+                let row = o.row_mut(r);
                 // lint:region(add-only)
                 let add = rescale_add(n_new - st.n[r], eps);
-                rescale_row(o.row_mut(r), add);
+                rescale_row(row, add);
                 // lint:endregion(add-only)
                 stats.rescale_adds += 1;
             }
@@ -529,9 +530,10 @@ pub fn amla_attention_batched(q: &[f32], g: usize, seqs: &[BatchedKv],
 
             if st.seen[r] {
                 let eps = 1.5 * (c_new / st.c[r] - 1.0);
+                let row = o.row_mut(r);
                 // lint:region(add-only)
                 let add = rescale_add(n_new - st.n[r], eps);
-                rescale_row(o.row_mut(r), add);
+                rescale_row(row, add);
                 // lint:endregion(add-only)
                 stats.rescale_adds += 1;
             }
@@ -877,9 +879,10 @@ pub fn amla_attention_split_kv_with_state(q: &Matrix, k: &Matrix,
             };
             if st.seen[r] {
                 let eps = 1.5 * (c_new / st.c[r] - 1.0);
+                let row = o.row_mut(r);
                 // lint:region(add-only)
                 let add = rescale_add(n_new - st.n[r], eps);
-                rescale_row(o.row_mut(r), add);
+                rescale_row(row, add);
                 // lint:endregion(add-only)
                 stats.rescale_adds += 1;
             }
@@ -1143,6 +1146,7 @@ mod tests {
         assert_eq!(got, want);
     }
 
+    // contract:8 split-KV merge exactness via frame replay
     #[test]
     fn prop_split_kv_equals_single_pass() {
         // Tentpole pin: the frame-replay split path must be

@@ -95,6 +95,7 @@ fn crowd_spec() -> FlashCrowdSpec {
                      seed: 0xC4A05 }
 }
 
+// contract:10 chaos survivability — shed decisions bit-identical
 #[test]
 fn flash_crowd_with_degrade_is_bit_identical_across_grid() {
     // a 15x Batch-class spike on top of Interactive chat, shed policy

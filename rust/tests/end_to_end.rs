@@ -154,6 +154,7 @@ fn serve_tokens(algo: Algo, max_batch: usize, batch_workers: usize,
     toks
 }
 
+// contract:5 batched-parallelism exactness (workers 1..N bit-identical)
 #[test]
 fn batched_parallel_bit_identical_to_serial() {
     // The tentpole contract: a mixed-bucket batch served with the

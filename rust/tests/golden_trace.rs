@@ -124,6 +124,7 @@ fn parse(text: &str) -> Option<Trace> {
     Some(Trace { tokens, xbits })
 }
 
+// contract:1 fused-kernel bit-identity across the fuse/worker/split grid
 #[test]
 fn golden_trace_reproduces_across_all_configs() {
     // unfused serial, split-KV off = the oracle

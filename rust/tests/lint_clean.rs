@@ -2,7 +2,10 @@
 //! invariant — determinism markers audited, add-only regions intact
 //! over the rescale core, SAFETY/panic justifications present, no
 //! unaudited `#[allow(...)]`, and `docs/api_surface.txt` in sync —
-//! so `cargo test -q` runs the linter on every push.
+//! plus every `amla-audit` flow-aware pass (interprocedural add-only
+//! purity, Δn clamp intervals, blocking-under-lock + lock-order,
+//! contract coverage), so `cargo test -q` runs both checkers on every
+//! push.
 
 use std::path::Path;
 
@@ -13,6 +16,18 @@ fn lint_tree_is_clean() {
         .expect("lint walk over rust/src failed");
     assert!(findings.is_empty(),
             "amla-lint found {} violation(s):\n{}",
+            findings.len(),
+            findings.iter().map(ToString::to_string)
+                .collect::<Vec<_>>().join("\n"));
+}
+
+#[test]
+fn audit_tree_is_clean() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let findings = amla::analysis::audit_repo(root)
+        .expect("audit walk over rust/src + rust/tests failed");
+    assert!(findings.is_empty(),
+            "amla-audit found {} violation(s):\n{}",
             findings.len(),
             findings.iter().map(ToString::to_string)
                 .collect::<Vec<_>>().join("\n"));

@@ -141,6 +141,8 @@ fn parse(text: &str) -> Option<(Trace, Trace)> {
     Some((off, on))
 }
 
+// contract:3,4 preemption-resume bit-identity + virtual-clock
+// determinism, pinned against the committed open-loop golden
 #[test]
 fn open_loop_golden_reproduces_across_all_configs() {
     // determinism: for each preempt setting, the unfused serial run is
@@ -214,6 +216,7 @@ fn open_loop_golden_reproduces_across_all_configs() {
     }
 }
 
+// contract:2 chunked-prefill bit-identity against the one-shot path
 #[test]
 fn chunked_prefill_reproduces_golden_tokens() {
     // chunked prefill (the default serving path) reschedules prefill

@@ -91,6 +91,7 @@ fn conversation_trace() -> Vec<TracedRequest> {
     trace
 }
 
+// contract:9 prefix-hit ≡ cold-prefill bit-identity across the grid
 #[test]
 fn prefix_on_is_token_identical_across_the_config_grid() {
     let trace = conversation_trace();

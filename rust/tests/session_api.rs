@@ -64,6 +64,7 @@ fn tokens_by_id(results: &[amla::coordinator::DecodeResult])
 // Cancellation accounting (the PR-1 abort-contract audit)
 // ---------------------------------------------------------------------
 
+// contract:7 cancellation accounting — exact credit, pool back to zero
 #[test]
 fn cancel_mid_decode_credits_exact_budget_and_frees_pool() {
     // 48-row/layer budget.  r0 (3 + 40 = 43 rows) decodes; r1 needs
@@ -357,6 +358,7 @@ fn priority_preemption_respects_anti_livelock_guard() {
     assert_eq!(eng.pool.lock().unwrap().stats().allocated_pages, 0);
 }
 
+// contract:6 wrapper bit-identity — one session loop under the hood
 #[test]
 fn uniform_priority_is_bit_identical_to_fifo_wrapper() {
     // A session whose requests all carry one class — any class — must
